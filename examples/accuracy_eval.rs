@@ -1,0 +1,43 @@
+//! Table I experiment: Top-k token agreement between the accelerator's
+//! numerics (exact W4A8 integer GEMV + FXP32 Q15.17 SwiftKV attention with
+//! the 5-bit-LUT exponential) and desktop f32 attention at the same W4A8
+//! weight precision.
+//!
+//! The paper samples 100 sequences of length 512 from PG-19 through
+//! LLaMA2-7B; this reproduction runs seeded synthetic sequences through
+//! the AOT tiny model (same datapath, laptop scale — see DESIGN.md
+//! substitution log).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example accuracy_eval -- \
+//!     [--sequences 50] [--len 64]
+//! ```
+
+use swiftkv::model::{TinyModel, WeightStore};
+use swiftkv::report;
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
+use swiftkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args =
+        Args::parse(&["sequences", "len"], &[]).map_err(|e| anyhow::anyhow!(e))?;
+    if !artifacts_available() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    let sequences = args.get_usize("sequences", 50).unwrap();
+    let len = args.get_usize("len", 64).unwrap();
+
+    let tm = TinyModel::load(&WeightStore::load(&default_artifacts_dir())?)?;
+    println!(
+        "comparing accelerator (INT8×INT4 GEMV + FXP32 SwiftKV + LUT exp) vs \
+         desktop f32 attention over {sequences} sequences × {len} tokens…\n"
+    );
+    let (table, fr) = report::table1(&tm, sequences, len);
+    println!("{table}");
+    println!(
+        "top-1 agreement {:.2} % — the FXP32 datapath (resolution 2^-17 ≈ 7.6e-6) \
+         does not change greedy decoding.",
+        fr[0] * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Regenerate every table and figure of the paper's evaluation section.
+//!
+//! ```sh
+//! cargo run --release --example paper_tables            # all exhibits
+//! cargo run --release --example paper_tables -- fig7b   # one exhibit
+//! ```
+//!
+//! Table I additionally needs the AOT artifacts (`make artifacts`).
+
+use swiftkv::model::{LlmConfig, TinyModel, WeightStore};
+use swiftkv::report;
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
+use swiftkv::sim::ArchConfig;
+
+fn main() -> anyhow::Result<()> {
+    let only = std::env::args().nth(1);
+    let arch = ArchConfig::default();
+    let want = |name: &str| only.as_deref().is_none_or(|o| o == name);
+
+    if want("fig7a") {
+        println!("{}", report::fig7a(&arch));
+    }
+    if want("fig7b") {
+        println!("{}", report::fig7b(&arch));
+    }
+    if want("explut") {
+        println!("{}", report::exp_lut_error());
+    }
+    if want("table1") {
+        if artifacts_available() {
+            let tm = TinyModel::load(&WeightStore::load(&default_artifacts_dir())?)?;
+            let (table, _) = report::table1(&tm, 20, 48);
+            println!("{table}");
+        } else {
+            println!("Table I skipped — run `make artifacts` first\n");
+        }
+    }
+    if want("table2") {
+        println!("{}", report::table2(&arch));
+    }
+    if want("fig8a") {
+        println!("{}", report::fig8a(&arch, &LlmConfig::llama2_7b(), 512));
+    }
+    if want("table3") {
+        println!("{}", report::table3(&arch));
+    }
+    if want("fig8b") {
+        println!("{}", report::fig8b(&arch));
+    }
+    if want("table4") {
+        println!("{}", report::table4(&arch));
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. run the SwiftKV recurrence in pure Rust (Eqs. 5–8) and check it
+//!    against textbook attention;
+//! 2. run the *same* computation through the AOT Pallas kernel — HLO text
+//!    lowered once by `python/compile/aot.py`, executed by the PJRT CPU
+//!    client (no Python at runtime);
+//! 3. run the bit-exact FXP32 (Q15.17 + 5-bit-LUT exp) datapath the
+//!    SwiftKV core implements in hardware;
+//! 4. price the computation on the cycle model (4N-cycle single pass).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use swiftkv::attention::{fxp_swiftkv, native, swiftkv as swiftkv_attn, HeadProblem};
+use swiftkv::fxp::Exp2Lut;
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use swiftkv::sim::{edge_hw, ArchConfig, AttentionAlg};
+use swiftkv::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (rows, n_ctx, d) = (8usize, 512usize, 32usize);
+    let mut rng = Rng::seed_from_u64(1);
+    let q = rng.uniform_vec(rows * d, 1.0);
+    let k = rng.uniform_vec(rows * n_ctx * d, 1.0);
+    let v = rng.uniform_vec(rows * n_ctx * d, 1.0);
+    let lens: Vec<i32> = (1..=rows as i32).map(|i| i * 64).collect();
+
+    // --- 1. pure-Rust SwiftKV vs native -------------------------------
+    let mut max_err = 0f32;
+    for r in 0..rows {
+        let p = HeadProblem::new(
+            &q[r * d..(r + 1) * d],
+            &k[r * n_ctx * d..(r + 1) * n_ctx * d],
+            &v[r * n_ctx * d..(r + 1) * n_ctx * d],
+            d,
+            lens[r] as usize,
+        );
+        let a = swiftkv_attn::attend(&p);
+        let b = native::attend(&p);
+        for (x, y) in a.iter().zip(&b) {
+            max_err = max_err.max((x - y).abs());
+        }
+    }
+    println!("[1] rust SwiftKV vs native softmax: max |Δ| = {max_err:.2e}");
+
+    // --- 2. AOT Pallas kernel through PJRT -----------------------------
+    if artifacts_available() {
+        let eng = Engine::load(&default_artifacts_dir())?;
+        let out = eng.attention(&lens, &q, &k, &v, rows, n_ctx, d)?;
+        let mut max_err = 0f32;
+        for r in 0..rows {
+            let p = HeadProblem::new(
+                &q[r * d..(r + 1) * d],
+                &k[r * n_ctx * d..(r + 1) * n_ctx * d],
+                &v[r * n_ctx * d..(r + 1) * n_ctx * d],
+                d,
+                lens[r] as usize,
+            );
+            let want = native::attend(&p);
+            for (x, y) in out[r * d..(r + 1) * d].iter().zip(&want) {
+                max_err = max_err.max((x - y).abs());
+            }
+        }
+        println!("[2] AOT Pallas kernel (PJRT) vs native: max |Δ| = {max_err:.2e}");
+    } else {
+        println!("[2] skipped — run `make artifacts` first");
+    }
+
+    // --- 3. FXP32 datapath ---------------------------------------------
+    let lut = Exp2Lut::new();
+    let p = HeadProblem::new(&q[..d], &k[..n_ctx * d], &v[..n_ctx * d], d, 512);
+    let fx = fxp_swiftkv::attend(&lut, p.q, p.k, p.v, d, p.len);
+    let fl = native::attend(&p);
+    let err = fx
+        .iter()
+        .zip(&fl)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("[3] FXP32 (Q15.17 + LUT exp) vs f32:    max |Δ| = {err:.2e}");
+    println!(
+        "    exp LUT max relative error: {:.5} % (paper: 0.00586 %)",
+        lut.max_relative_error() * 100.0
+    );
+
+    // --- 4. cycle model ---------------------------------------------------
+    let arch = ArchConfig::default();
+    let c = edge_hw::attention_cycles(&arch, AttentionAlg::SwiftKv, 512, 128);
+    println!(
+        "[4] SwiftKV core, ctx 512, d_head 128: {} cycles ≈ {:.2} µs @ {} MHz (≈ 4N = {})",
+        c.total,
+        c.us(&arch),
+        arch.clock_mhz,
+        4 * 512
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! End-to-end serving driver (the system demo): load the AOT tiny model,
+//! serve a batched decode workload through the coordinator, and report
+//! both wall-clock (CPU PJRT) and modelled SwiftKV-MHA timing.
+//!
+//! This is the run recorded in EXPERIMENTS.md §E9.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_decode -- \
+//!     [--requests 24] [--batch 8] [--gap-ms 5]
+//! ```
+
+use swiftkv::coordinator::{ServeOptions, Server};
+use swiftkv::model::{LlmConfig, WorkloadGen, WorkloadSpec};
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use swiftkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["requests", "batch", "gap-ms", "seed"], &[])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if !artifacts_available() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    let eng = Engine::load(&default_artifacts_dir())?;
+    println!(
+        "engine: tiny model d={} L={} H={} ctx={} — batch variants {:?}",
+        eng.manifest.d_model,
+        eng.manifest.n_layers,
+        eng.manifest.n_heads,
+        eng.manifest.n_ctx,
+        eng.batch_variants()
+    );
+
+    let requests = args.get_usize("requests", 24).unwrap();
+    let batch = args.get_usize("batch", 8).unwrap();
+    let spec = WorkloadSpec {
+        num_requests: requests,
+        vocab: eng.manifest.vocab,
+        prompt_len: (4, 24),
+        gen_len: (8, 48),
+        mean_gap_ms: args.get_f64("gap-ms", 0.0).unwrap(),
+        seed: args.get_usize("seed", 0).unwrap() as u64,
+    };
+    let reqs = WorkloadGen::new(spec).generate();
+    let total_gen: usize = reqs.iter().map(|r| r.gen_len).sum();
+    println!("workload: {requests} requests, {total_gen} tokens to generate, batch {batch}\n");
+
+    let report = Server::new(
+        &eng,
+        ServeOptions {
+            batch: Some(batch),
+            max_iterations: 0,
+            sim_model: LlmConfig::llama2_7b(),
+        },
+    )
+    .serve(reqs)?;
+
+    println!("{}", report.metrics.format_table());
+    println!("sample generations:");
+    for s in report.sessions.iter().take(4) {
+        println!(
+            "  req {:>2}  prompt {:?} → {:?}",
+            s.request.id,
+            &s.request.prompt[..s.request.prompt.len().min(6)],
+            &s.generated[..s.generated.len().min(10)]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+"""AOT compile path: lower the L2 model + L1 kernels to HLO text.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+
+- ``tiny_decode_b{B}.hlo.txt``   — one decode step per batch variant
+- ``swiftkv_attn.hlo.txt``       — attention-only computation (quickstart)
+- ``weights.bin``                — raw little-endian parameter blob
+- ``manifest.json``              — config, artifact signatures, weight table
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.swiftkv import swiftkv_attention
+
+BATCH_VARIANTS = (1, 2, 4, 8)
+ATTN_ROWS = 8          # quickstart artifact: 8 head-rows
+ATTN_CTX = 512
+ATTN_DHEAD = 32
+ALIGN = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constants as ``constant({...})``, which the 0.5.1 text
+    parser silently reads as zeros (it cost us a debugging session: the
+    RoPE cos/sin tables came back as 0 and every position-dependent value
+    downstream was wrong).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    hlo = comp.as_hlo_module()
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return hlo.to_string(opts)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_decode(cfg: M.TinyConfig, params, batch: int) -> str:
+    specs = M.param_specs(cfg)
+    flat = [params[name] for name, _, _ in specs]
+    args = [
+        _spec((batch,), jnp.int32),                                     # tokens
+        _spec((batch,), jnp.int32),                                     # pos
+        _spec((batch, cfg.n_layers, cfg.n_heads, cfg.n_ctx, cfg.d_head),
+              jnp.float32),                                             # kc
+        _spec((batch, cfg.n_layers, cfg.n_heads, cfg.n_ctx, cfg.d_head),
+              jnp.float32),                                             # vc
+        _spec((batch, cfg.d_head // 2), jnp.float32),                   # cos
+        _spec((batch, cfg.d_head // 2), jnp.float32),                   # sin
+    ] + [_spec(p.shape, p.dtype) for p in flat]
+
+    fn = functools.partial(M.decode_step_flat, cfg)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_attention(rows: int, n_ctx: int, d_head: int) -> str:
+    def fn(lens, q, k, v):
+        return swiftkv_attention(q, k, v, lens, block_k=64)
+
+    lowered = jax.jit(fn).lower(
+        _spec((rows,), jnp.int32),
+        _spec((rows, d_head), jnp.float32),
+        _spec((rows, n_ctx, d_head), jnp.float32),
+        _spec((rows, n_ctx, d_head), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def dump_weights(params, specs, path: str):
+    """weights.bin: little-endian arrays at 64-byte alignment, in
+    signature order. Returns the manifest table."""
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, shape, dtype in specs:
+            arr = np.asarray(params[name]).astype(dtype)
+            assert arr.shape == tuple(shape), (name, arr.shape, shape)
+            pad = (-offset) % ALIGN
+            f.write(b"\0" * pad)
+            offset += pad
+            raw = arr.tobytes(order="C")
+            f.write(raw)
+            table.append({
+                "name": name,
+                "dtype": dtype,
+                "shape": list(shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            })
+            offset += len(raw)
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.TinyConfig()
+    params = M.init_params(cfg, seed=args.seed)
+    specs = M.param_specs(cfg)
+
+    artifacts = {}
+    for b in BATCH_VARIANTS:
+        name = f"tiny_decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, params, b)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars")
+        artifacts[f"decode_b{b}"] = {
+            "file": name,
+            "batch": b,
+            "inputs": ["tokens", "pos", "k_cache", "v_cache", "cos", "sin",
+                       "*params"],
+            "outputs": ["logits", "k_cache", "v_cache", "cos", "sin"],
+        }
+
+    attn_name = "swiftkv_attn.hlo.txt"
+    text = lower_attention(ATTN_ROWS, ATTN_CTX, ATTN_DHEAD)
+    with open(os.path.join(args.out_dir, attn_name), "w") as f:
+        f.write(text)
+    print(f"wrote {attn_name}: {len(text)} chars")
+    artifacts["swiftkv_attn"] = {
+        "file": attn_name,
+        "rows": ATTN_ROWS, "n_ctx": ATTN_CTX, "d_head": ATTN_DHEAD,
+        "inputs": ["lens", "q", "k", "v"],
+        "outputs": ["attn"],
+    }
+
+    wpath = os.path.join(args.out_dir, "weights.bin")
+    table = dump_weights(params, specs, wpath)
+    print(f"wrote weights.bin: {sum(t['nbytes'] for t in table)} bytes, "
+          f"{len(table)} arrays")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_head": cfg.d_head,
+            "n_layers": cfg.n_layers, "d_ffn": cfg.d_ffn,
+            "n_ctx": cfg.n_ctx, "rope_base": cfg.rope_base,
+            "block_k": cfg.block_k, "seed": args.seed,
+        },
+        "batch_variants": list(BATCH_VARIANTS),
+        "artifacts": artifacts,
+        "weights": table,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: W4A8 GEMV (INT8 activation x INT4 weight).
+
+Models the GEMV mode of the SKV Processor Array (Fig. 5): the input vector
+is split across processors, each multiplies its chunk against the resident
+weight slice with INT32 accumulation, and partial sums are reduced
+(EM-Add in the SFU) and dequantized on writeback.
+
+On TPU the chunk-per-processor mapping becomes a grid walk over output
+tiles with the full reduction dimension resident per step (decode GEMV is
+memory-bound; one pass over the weights is the optimal schedule). INT4 is
+carried in int8 lanes (values in [-8, 7]) — the packing is a storage
+detail the Rust quant module handles bit-exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_OUT = 128
+
+
+def _gemv_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref):
+    x = x_ref[0, :].astype(jnp.int32)          # [din]
+    w = w_ref[...].astype(jnp.int32)           # [din, block_out]
+    acc = jax.lax.dot_general(
+        x[None, :], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)[0]   # [block_out] INT32 partial
+    o_ref[0, :] = acc.astype(jnp.float32) * xs_ref[0, 0] * ws_ref[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_out",))
+def gemv_w4a8_batched(x_q: jax.Array, x_scale: jax.Array,
+                      w_q: jax.Array, w_scale: jax.Array, *,
+                      block_out: int = DEFAULT_BLOCK_OUT) -> jax.Array:
+    """Batched quantized GEMV.
+
+    x_q: [B, din] int8; x_scale: [B] f32 per-row activation scales;
+    w_q: [din, dout] int8 (int4 values); w_scale: [dout] f32.
+    Returns [B, dout] f32. Grid = (batch row, output tile).
+    """
+    bsz, din = x_q.shape
+    dout = w_q.shape[1]
+    while dout % block_out != 0:
+        block_out //= 2          # fall back to the largest dividing tile
+        if block_out == 0:
+            raise ValueError(f"no power-of-two tile divides dout {dout}")
+    nb = dout // block_out
+
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=(bsz, nb),
+        in_specs=[
+            pl.BlockSpec((1, din), lambda i, j: (i, 0)),           # x row
+            pl.BlockSpec((din, block_out), lambda i, j: (0, j)),   # w tile
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),             # x_scale
+            pl.BlockSpec((1, block_out), lambda i, j: (0, j)),     # w_scale
+        ],
+        out_specs=pl.BlockSpec((1, block_out), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dout), jnp.float32),
+        interpret=True,
+    )(x_q, w_q, x_scale.reshape(-1, 1), w_scale.reshape(1, -1))
+
+
+def gemv_w4a8(x_q: jax.Array, x_scale: jax.Array,
+              w_q: jax.Array, w_scale: jax.Array, *,
+              block_out: int = DEFAULT_BLOCK_OUT) -> jax.Array:
+    """Single-vector quantized GEMV: x_q [din] -> [dout] f32."""
+    out = gemv_w4a8_batched(x_q.reshape(1, -1), x_scale.reshape(1),
+                            w_q, w_scale, block_out=block_out)
+    return out[0]

@@ -1,0 +1,174 @@
+"""Pure-jnp oracles for the SwiftKV kernels.
+
+Every Pallas kernel in this package is validated against a reference here
+(pytest + hypothesis, see ``python/tests``). Two attention references are
+provided:
+
+- :func:`native_attention` — the textbook ``softmax(qK^T/sqrt(d))V``
+  (Eq. 4), the ground truth both implementations must match;
+- :func:`swiftkv_attention_scan` — a literal per-token transcription of the
+  SwiftKV recurrence, Eqs. (5)-(8), via ``lax.scan``. This is the
+  *algorithmic* oracle: it proves the single-pass recurrence is exact, and
+  it is what the Rust fixed-point implementation mirrors bit-for-bit
+  (modulo FXP32 quantization).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def native_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array | int | None = None) -> jax.Array:
+    """Textbook decode attention (Eq. 4) for one head.
+
+    q: [d]; k, v: [N, d]; length: number of valid cache rows (<= N).
+    Returns [d].
+    """
+    d = q.shape[-1]
+    s = (k @ q) / jnp.sqrt(jnp.asarray(d, q.dtype))  # [N]
+    if length is not None:
+        pos = jnp.arange(k.shape[0])
+        s = jnp.where(pos < length, s, -jnp.inf)
+    p = jax.nn.softmax(s)
+    return p @ v
+
+
+def native_attention_rows(q: jax.Array, k: jax.Array, v: jax.Array,
+                          lens: jax.Array) -> jax.Array:
+    """Row-batched native attention: q [R, d], k/v [R, N, d], lens [R]."""
+    return jax.vmap(native_attention)(q, k, v, lens)
+
+
+def swiftkv_attention_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                           length: jax.Array | int | None = None) -> jax.Array:
+    """Literal per-token SwiftKV recurrence, Eqs. (5)-(8), for one head.
+
+    Each (k_t, v_t) is consumed exactly once; state is (mu, Z, Y).
+    The two branches of Eqs. (6)/(7) are expressed with ``jnp.where`` so the
+    scan stays traceable; masked (invalid) positions leave the state
+    untouched.
+    """
+    d = q.shape[-1]
+    n = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if length is None:
+        length = n
+
+    def step(carry, xs):
+        mu, z, y = carry
+        k_t, v_t, t = xs
+        s_t = (q @ k_t) * scale                        # Eq. (5)
+        valid = t < length
+        take_beta = s_t <= mu                          # branch select
+        beta = jnp.exp(s_t - mu)                       # Eq. (6)
+        alpha = jnp.exp(mu - s_t)                      # Eq. (7)
+        z_beta = z + beta
+        y_beta = y + beta * v_t
+        z_alpha = alpha * z + 1.0
+        y_alpha = alpha * y + v_t
+        mu_new = jnp.where(take_beta, mu, s_t)
+        z_new = jnp.where(take_beta, z_beta, z_alpha)
+        y_new = jnp.where(take_beta, y_beta, y_alpha)
+        mu_new = jnp.where(valid, mu_new, mu)
+        z_new = jnp.where(valid, z_new, z)
+        y_new = jnp.where(valid, y_new, y)
+        return (mu_new, z_new, y_new), None
+
+    init = (jnp.asarray(-jnp.inf, q.dtype), jnp.asarray(0.0, q.dtype),
+            jnp.zeros_like(q))
+    (mu, z, y), _ = jax.lax.scan(
+        step, init, (k, v, jnp.arange(n)))
+    return y / z                                       # Eq. (8)
+
+
+def swiftkv_attention_scan_rows(q: jax.Array, k: jax.Array, v: jax.Array,
+                                lens: jax.Array) -> jax.Array:
+    """Row-batched scan reference."""
+    return jax.vmap(swiftkv_attention_scan)(q, k, v, lens)
+
+
+# ---------------------------------------------------------------------------
+# RoPE references
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d: int, base: float = 10000.0) -> np.ndarray:
+    """Angular frequencies omega_i = base^{-2(i-1)/d}, i = 1..d/2 (Eq. 1)."""
+    i = np.arange(d // 2, dtype=np.float64)
+    return base ** (-2.0 * i / d)
+
+
+def rope_standard(x: jax.Array, m, base: float = 10000.0) -> jax.Array:
+    """Direct RoPE(x, m) (Eq. 3): rotate consecutive channel pairs.
+
+    x: [..., d]; m: scalar position.
+    """
+    d = x.shape[-1]
+    omega = jnp.asarray(rope_freqs(d, base), x.dtype)
+    theta = m * omega                                   # Eq. (2)
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+    x_even = x[..., 0::2]
+    x_odd = x[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_even * sin + x_odd * cos
+    return jnp.stack([out_even, out_odd], axis=-1).reshape(x.shape)
+
+
+def rope_incremental_step(cos_m: jax.Array, sin_m: jax.Array,
+                          a: jax.Array, b: jax.Array):
+    """One decoder-RoPE recurrence step (the angle-addition core of Eq. 11).
+
+    (cos m*theta, sin m*theta) -> (cos (m+1)*theta, sin (m+1)*theta), with
+    a = cos(theta), b = sin(theta) stored as constants in each SKV unit.
+    """
+    cos_next = cos_m * a - sin_m * b
+    sin_next = cos_m * b + sin_m * a
+    return cos_next, sin_next
+
+
+def rope_apply(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate channel pairs of x [..., d] by cached (cos, sin) [..., d/2]."""
+    x_even = x[..., 0::2]
+    x_odd = x[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_even * sin + x_odd * cos
+    return jnp.stack([out_even, out_odd], axis=-1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# W4A8 GEMV reference
+# ---------------------------------------------------------------------------
+
+def gemv_w4a8(x_q: jax.Array, x_scale: jax.Array,
+              w_q: jax.Array, w_scale: jax.Array) -> jax.Array:
+    """W4A8 GEMV reference: INT8 activation x INT4 weight -> f32.
+
+    x_q: [din] int8; x_scale: scalar f32; w_q: [din, dout] int8 holding
+    int4 values in [-8, 7]; w_scale: [dout] f32 per-output-channel scales.
+    Accumulation in int32 (the INT4xINT8 -> INT32 DSP path of Fig. 5(b)),
+    dequantized on writeback (SFU cast).
+    """
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)     # [dout]
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor INT8 activation quantization."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_int4(w: jax.Array):
+    """Symmetric per-output-channel INT4 weight quantization.
+
+    w: [din, dout] f32 -> (w_q int8 in [-7, 7], w_scale [dout] f32).
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)  # [dout]
+    scale = amax / 7.0
+    q = jnp.clip(jnp.round(w / scale), -7, 7).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

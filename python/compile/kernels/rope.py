@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: decoder-specialized RoPE (Eq. 11).
+
+During decode only the *new* token needs rotating, and the angle
+``(m+1)*theta_i`` is obtained from the cached ``(cos m*theta, sin m*theta)``
+by one angle-addition step with the stored constants ``a_i = cos(theta_i)``,
+``b_i = sin(theta_i)`` — four multiplies per channel pair, no CORDIC, no
+large-angle reduction (§IV-C).
+
+The kernel fuses the recurrence update with the pair rotation and is
+row-batched like the attention kernel: ``R`` rows of ``q``/``k`` (one per
+head x sequence) share per-sequence (cos, sin) state via the index map.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(q_ref, k_ref, cos_ref, sin_ref, a_ref, b_ref,
+                 qo_ref, ko_ref, cos_o_ref, sin_o_ref):
+    cos_m = cos_ref[0, :]
+    sin_m = sin_ref[0, :]
+    a = a_ref[0, :]
+    b = b_ref[0, :]
+    # angle addition: cos/sin((m+1) theta) from cos/sin(m theta)
+    cos_n = cos_m * a - sin_m * b
+    sin_n = cos_m * b + sin_m * a
+    for x_ref, o_ref in ((q_ref, qo_ref), (k_ref, ko_ref)):
+        x = x_ref[0, :]
+        x_even = x[0::2]
+        x_odd = x[1::2]
+        o_even = x_even * cos_n - x_odd * sin_n
+        o_odd = x_even * sin_n + x_odd * cos_n
+        o_ref[0, :] = jnp.stack([o_even, o_odd], axis=-1).reshape(x.shape)
+    cos_o_ref[0, :] = cos_n
+    sin_o_ref[0, :] = sin_n
+
+
+@functools.partial(jax.jit, static_argnames=("heads_per_seq",))
+def rope_decode_step(q: jax.Array, k: jax.Array,
+                     cos_m: jax.Array, sin_m: jax.Array,
+                     a: jax.Array, b: jax.Array, *, heads_per_seq: int = 1):
+    """Rotate new-token q and k rows and advance the (cos, sin) cache.
+
+    q, k: [R, d] with R = B * heads_per_seq rows (head-major within a
+    sequence); cos_m, sin_m: [B, d/2] cached values for position m;
+    a, b: [d/2] the constants cos(theta_i), sin(theta_i).
+
+    Returns (q', k', cos_{m+1}, sin_{m+1}); the rotated k' row is what gets
+    appended to the KV cache (already position-encoded, so cached keys are
+    never re-rotated — the paper's key point).
+    """
+    r, d = q.shape
+    bsz = cos_m.shape[0]
+    if r != bsz * heads_per_seq:
+        raise ValueError(f"rows {r} != batch {bsz} x heads {heads_per_seq}")
+    h = heads_per_seq
+    a2 = a.reshape(1, -1)
+    b2 = b.reshape(1, -1)
+    half = d // 2
+
+    qo, ko, cos_rows, sin_rows = pl.pallas_call(
+        _rope_kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),            # q row
+            pl.BlockSpec((1, d), lambda i: (i, 0)),            # k row
+            pl.BlockSpec((1, half), lambda i: (i // h, 0)),    # cos (shared)
+            pl.BlockSpec((1, half), lambda i: (i // h, 0)),    # sin (shared)
+            pl.BlockSpec((1, half), lambda i: (0, 0)),         # a
+            pl.BlockSpec((1, half), lambda i: (0, 0)),         # b
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, half), lambda i: (i, 0)),
+            pl.BlockSpec((1, half), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d), q.dtype),
+            jax.ShapeDtypeStruct((r, d), k.dtype),
+            jax.ShapeDtypeStruct((r, half), cos_m.dtype),
+            jax.ShapeDtypeStruct((r, half), sin_m.dtype),
+        ],
+        interpret=True,
+    )(q, k, cos_m, sin_m, a2, b2)
+
+    # every head of a sequence computed the same (cos, sin); keep one copy
+    cos_next = cos_rows[::h, :]
+    sin_next = sin_rows[::h, :]
+    return qo, ko, cos_next, sin_next

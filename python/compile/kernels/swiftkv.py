@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: single-pass SwiftKV decode attention.
+
+The FPGA pipeline of Fig. 2/3 maps to TPU-style Pallas as follows
+(DESIGN.md §Hardware-Adaptation):
+
+- the KV cache streams through VMEM in ``(block_k, d)`` tiles — the
+  ``BlockSpec`` grid walk *is* the paper's "pipelined KV-cache reads", and
+  the grid visits every tile exactly once (the single-pass property);
+- the FPGA's update-part registers (mu, Z, Y) become VMEM scratch
+  accumulators carried across grid steps;
+- the per-token compare-and-select of Eqs. (6)/(7) becomes the associative
+  blockwise form of the same recurrence: within a tile the block max plays
+  the role of the incoming ``s_t`` stream's running max, and the
+  ``alpha``-rescale of the carried (Z, Y) is identical to the
+  ``s_t > mu`` branch of Eq. (7). With ``block_k=1`` the kernel degrades
+  to the literal per-token recurrence.
+
+The kernel is row-batched: ``R`` independent (head x sequence) rows are
+processed by grid dimension 0, so the multi-head / multi-request case needs
+no vmap. Per-row valid lengths support ragged batches.
+
+Pallas runs ``interpret=True`` (environment contract: real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT client cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30
+
+
+def _swiftkv_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                    mu_ref, z_ref, y_ref, *, block_k: int, scale: float):
+    """One (row, kv-block) grid step of the single-pass recurrence."""
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():  # reset carried state at the start of each row's scan
+        mu_ref[...] = jnp.full_like(mu_ref, NEG_INF)
+        z_ref[...] = jnp.zeros_like(z_ref)
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    q = q_ref[0, :]                       # [d]
+    k = k_ref[0, :, :]                    # [block_k, d]
+    v = v_ref[0, :, :]                    # [block_k, d]
+
+    # Eq. (5): s_t = q k_t^T / sqrt(d), one tile of the score stream.
+    s = (k @ q) * scale                   # [block_k]
+    t = j * block_k + jax.lax.iota(jnp.int32, block_k)
+    valid = t < lens_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    mu_prev = mu_ref[0, 0]
+    z_prev = z_ref[0, 0]
+    y_prev = y_ref[0, :]
+
+    # Blockwise form of Eqs. (6)-(7): the tile max takes the role of the
+    # incoming score; alpha rescales the carried accumulators when the max
+    # grows, beta-weights fold the tile in. Exactly-once per (k_t, v_t).
+    mu_tile = jnp.max(s)
+    mu_new = jnp.maximum(mu_prev, mu_tile)
+    alpha = jnp.exp(mu_prev - mu_new)               # in (0, 1]
+    p = jnp.where(valid, jnp.exp(s - mu_new), 0.0)  # [block_k]
+    z_new = alpha * z_prev + jnp.sum(p)
+    y_new = alpha * y_prev + p @ v
+
+    mu_ref[0, 0] = mu_new
+    z_ref[0, 0] = z_new
+    y_ref[0, :] = y_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():  # Eq. (8): deferred one-time normalization
+        o_ref[0, :] = y_new / z_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def swiftkv_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      lens: jax.Array, *, block_k: int = DEFAULT_BLOCK_K
+                      ) -> jax.Array:
+    """Single-pass SwiftKV decode attention over row-batched KV caches.
+
+    q: [R, d] queries (one per head x sequence row);
+    k, v: [R, N, d] KV cache; lens: [R] int32 valid lengths (>= 1);
+    returns [R, d] attention outputs.
+    """
+    r, d = q.shape
+    n = k.shape[1]
+    if n % block_k != 0:
+        raise ValueError(f"context capacity {n} not divisible by block_k {block_k}")
+    nb = n // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_swiftkv_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(r, nb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (h,)),          # lens
+            pl.BlockSpec((1, d), lambda h, j: (h, 0)),      # q
+            pl.BlockSpec((1, block_k, d), lambda h, j: (h, j, 0)),  # k
+            pl.BlockSpec((1, block_k, d), lambda h, j: (h, j, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda h, j: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),   # mu
+            pltpu.VMEM((1, 1), jnp.float32),   # Z
+            pltpu.VMEM((1, d), jnp.float32),   # Y
+        ],
+        interpret=True,
+    )(lens, q, k, v)

@@ -1,0 +1,263 @@
+"""Layer-2: the JAX decode model that the AOT path lowers to HLO.
+
+A small multi-head decoder ("tiny" config by default) whose per-layer
+dataflow mirrors the SwiftKV-MHA pipeline of §IV-A exactly:
+
+    RMSNorm -> INT8 quant -> W4A8 GEMV (Q,K,V)        [Processor Array]
+    -> decoder-RoPE on the new token's q,k (Eq. 11)   [RoPE unit]
+    -> KV-cache append -> single-pass SwiftKV attention [SKV units]
+    -> INT8 quant -> W4A8 GEMV (O)                     [Processor Array]
+    -> residual; RMSNorm -> quant -> gate/up GEMV ->
+       SiLU * Hadamard -> quant -> down GEMV -> residual   [SFU + Array]
+
+All three Pallas kernels (attention, RoPE, GEMV) lower into the same HLO
+module; Python never runs at serving time. Weights are *runtime inputs*
+(not baked constants) so the HLO stays small; the Rust runtime feeds them
+once from ``artifacts/weights.bin``.
+
+The fixed-point (FXP32/LUT-exp) datapath is modelled bit-exactly on the
+Rust side; here attention runs in f32, which is the "desktop" numerics the
+paper compares its accelerator against in Table I.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.gemv import gemv_w4a8_batched
+from .kernels.rope import rope_decode_step
+from .kernels.swiftkv import swiftkv_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """A ~3.4M-parameter decoder shaped like the paper's targets
+    (pre-norm, RoPE, SwiGLU) but laptop-sized."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 8
+    d_head: int = 32
+    n_layers: int = 4
+    d_ffn: int = 768
+    n_ctx: int = 256          # KV-cache capacity
+    rope_base: float = 10000.0
+    block_k: int = 64         # attention kernel KV tile
+
+    @property
+    def heads_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+
+# Deterministic parameter order used for both the HLO input signature and
+# the weights.bin layout. Each entry is (name, kind) where kind determines
+# shape/dtype; see param_specs().
+def param_names(cfg: TinyConfig) -> List[str]:
+    names = ["embedding"]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        names += [p + "attn_norm"]
+        for w in ("wq", "wk", "wv", "wo"):
+            names += [p + w + ".q", p + w + ".scale"]
+        names += [p + "mlp_norm"]
+        for w in ("w_gate", "w_up", "w_down"):
+            names += [p + w + ".q", p + w + ".scale"]
+    names += ["final_norm", "lm_head.q", "lm_head.scale"]
+    return names
+
+
+def param_specs(cfg: TinyConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """(name, shape, dtype) for every parameter, in signature order."""
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+
+    def mat(name, din, dout):
+        return [(name + ".q", (din, dout), "int8"),
+                (name + ".scale", (dout,), "float32")]
+
+    specs: List[Tuple[str, Tuple[int, ...], str]] = [
+        ("embedding", (v, d), "float32")]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        specs += [(p + "attn_norm", (d,), "float32")]
+        specs += mat(p + "wq", d, d) + mat(p + "wk", d, d) + \
+            mat(p + "wv", d, d) + mat(p + "wo", d, d)
+        specs += [(p + "mlp_norm", (d,), "float32")]
+        specs += mat(p + "w_gate", d, f) + mat(p + "w_up", d, f) + \
+            mat(p + "w_down", f, d)
+    specs += [("final_norm", (d,), "float32")]
+    specs += mat("lm_head", d, v)
+    return specs
+
+
+def init_params(cfg: TinyConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Seeded synthetic weights, quantized W4A8 at build time."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jax.Array] = {}
+
+    def take():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def qmat(name, din, dout, std):
+        w = jax.random.normal(take(), (din, dout), jnp.float32) * std
+        wq, ws = ref.quantize_int4(w)
+        params[name + ".q"] = wq
+        params[name + ".scale"] = ws
+
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    std = 0.6 / np.sqrt(d)
+    params["embedding"] = jax.random.normal(take(), (v, d), jnp.float32) * 0.6
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        params[p + "attn_norm"] = jnp.ones((d,), jnp.float32)
+        for w, dout in (("wq", d), ("wk", d), ("wv", d), ("wo", d)):
+            qmat(p + w, d, dout, std)
+        params[p + "mlp_norm"] = jnp.ones((d,), jnp.float32)
+        qmat(p + "w_gate", d, f, std)
+        qmat(p + "w_up", d, f, std)
+        qmat(p + "w_down", f, d, 0.6 / np.sqrt(f))
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    qmat("lm_head", d, v, std)
+    return params
+
+
+def rope_constants(cfg: TinyConfig):
+    """a_i = cos(theta_i), b_i = sin(theta_i) — the SKV-unit constants."""
+    omega = jnp.asarray(ref.rope_freqs(cfg.d_head, cfg.rope_base), jnp.float32)
+    return jnp.cos(omega), jnp.sin(omega)
+
+
+def init_state(cfg: TinyConfig, batch: int):
+    """Fresh decode state: zero KV caches and the (cos, sin) recurrence
+    seeds. The cache holds cos/sin for the *last processed* position, so
+    the pos=0 seed is cos(-theta)=a, sin(-theta)=-b (one step before 0)."""
+    a, b = rope_constants(cfg)
+    kc = jnp.zeros((batch, cfg.n_layers, cfg.n_heads, cfg.n_ctx, cfg.d_head),
+                   jnp.float32)
+    vc = jnp.zeros_like(kc)
+    cos = jnp.broadcast_to(a, (batch, cfg.d_head // 2))
+    sin = jnp.broadcast_to(-b, (batch, cfg.d_head // 2))
+    return kc, vc, cos, sin
+
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _quant_rows(x: jax.Array):
+    """Per-row symmetric INT8 quantization (SFU cast), batched."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8)
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _gemv(x: jax.Array, params, name: str) -> jax.Array:
+    """Quantize activations, run the W4A8 GEMV kernel, return f32 [B, dout]."""
+    xq, xs = _quant_rows(x)
+    return gemv_w4a8_batched(xq, xs, params[name + ".q"], params[name + ".scale"])
+
+
+def decode_step(params: Dict[str, jax.Array], cfg: TinyConfig,
+                tokens: jax.Array, pos: jax.Array,
+                kc: jax.Array, vc: jax.Array,
+                cos: jax.Array, sin: jax.Array):
+    """One decode step for a batch of sequences.
+
+    tokens: [B] int32; pos: [B] int32 (0-based position of this token);
+    kc, vc: [B, L, H, N, dh]; cos, sin: [B, dh/2] RoPE recurrence state.
+    Returns (logits [B, vocab], kc', vc', cos', sin').
+    """
+    bsz = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    a_const, b_const = rope_constants(cfg)
+
+    x = params["embedding"][tokens]                     # [B, d]
+    lens = pos + 1                                      # valid cache rows
+    row_lens = jnp.repeat(lens, h)                      # [B*H]
+
+    # Continuous batching: a lane starting a fresh sequence (pos == 0)
+    # resets its RoPE recurrence to the pre-position-0 seed, regardless of
+    # what an earlier occupant of the lane left behind.
+    restart = (pos == 0)[:, None]
+    cos = jnp.where(restart, a_const[None, :], cos)
+    sin = jnp.where(restart, -b_const[None, :], sin)
+
+    cos_next, sin_next = cos, sin
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        xn = rms_norm(x, params[p + "attn_norm"])
+        q = _gemv(xn, params, p + "wq").reshape(bsz * h, dh)
+        k = _gemv(xn, params, p + "wk").reshape(bsz * h, dh)
+        v = _gemv(xn, params, p + "wv").reshape(bsz * h, dh)
+
+        # decoder-specialized RoPE: rotate only the new token's q, k and
+        # advance the cached (cos, sin) one position (Eq. 11)
+        q, k, cos_next, sin_next = rope_decode_step(
+            q, k, cos, sin, a_const, b_const, heads_per_seq=h)
+
+        # append the (already position-encoded) k, v to the cache
+        k_bh = k.reshape(bsz, h, dh)
+        v_bh = v.reshape(bsz, h, dh)
+        upd = jax.vmap(
+            lambda c, kv, s: jax.lax.dynamic_update_slice(c, kv[:, None, :],
+                                                          (0, s, 0)))
+        kc = kc.at[:, l].set(upd(kc[:, l], k_bh, pos))
+        vc = vc.at[:, l].set(upd(vc[:, l], v_bh, pos))
+
+        # single-pass SwiftKV attention over the row-batched cache
+        k_rows = kc[:, l].reshape(bsz * h, cfg.n_ctx, dh)
+        v_rows = vc[:, l].reshape(bsz * h, cfg.n_ctx, dh)
+        attn = swiftkv_attention(q, k_rows, v_rows, row_lens,
+                                 block_k=cfg.block_k)   # [B*H, dh]
+        attn = attn.reshape(bsz, h * dh)
+        x = x + _gemv(attn, params, p + "wo")
+
+        # SwiGLU MLP (SiLU and Hadamard run in the SFU, f32)
+        xn = rms_norm(x, params[p + "mlp_norm"])
+        gate = _gemv(xn, params, p + "w_gate")
+        up = _gemv(xn, params, p + "w_up")
+        act = jax.nn.silu(gate) * up
+        x = x + _gemv(act, params, p + "w_down")
+
+    xn = rms_norm(x, params["final_norm"])
+    logits = _gemv(xn, params, "lm_head")               # [B, vocab]
+    return logits, kc, vc, cos_next, sin_next
+
+
+def decode_step_flat(cfg: TinyConfig, tokens, pos, kc, vc, cos, sin,
+                     *flat_params):
+    """Flattened-signature wrapper used for AOT lowering: parameters arrive
+    as positional arrays in ``param_specs`` order."""
+    names = [s[0] for s in param_specs(cfg)]
+    params = dict(zip(names, flat_params))
+    return decode_step(params, cfg, tokens, pos, kc, vc, cos, sin)
+
+
+def greedy_generate(params: Dict[str, jax.Array], cfg: TinyConfig,
+                    prompt: np.ndarray, steps: int):
+    """Reference greedy decode loop (used by tests to cross-check the Rust
+    serving path). prompt: [T] int32. Returns generated ids [steps]."""
+    kc, vc, cos, sin = init_state(cfg, 1)
+    tok = jnp.asarray(prompt[:1], jnp.int32)
+    out = []
+    t = 0
+    for t_idx in range(len(prompt) + steps - 1):
+        pos = jnp.asarray([t_idx], jnp.int32)
+        logits, kc, vc, cos, sin = decode_step(
+            params, cfg, tok, pos, kc, vc, cos, sin)
+        if t_idx + 1 < len(prompt):
+            tok = jnp.asarray(prompt[t_idx + 1:t_idx + 2], jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(int(tok[0]))
+        t = t_idx
+    return np.asarray(out, np.int32)

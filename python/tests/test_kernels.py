@@ -1,0 +1,240 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, block sizes and cache-fill lengths; every case
+asserts allclose against the references in ``compile.kernels.ref``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.gemv import gemv_w4a8, gemv_w4a8_batched
+from compile.kernels.rope import rope_decode_step
+from compile.kernels.swiftkv import swiftkv_attention
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# SwiftKV attention kernel
+# ---------------------------------------------------------------------------
+
+class TestSwiftKVKernel:
+    @given(
+        rows=st.integers(1, 6),
+        d=st.sampled_from([8, 16, 32, 64]),
+        nb=st.integers(1, 6),
+        block_k=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_native_attention(self, rows, d, nb, block_k, seed):
+        r = rng(seed)
+        n = nb * block_k
+        q = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        lens = jnp.asarray(r.integers(1, n + 1, size=rows), jnp.int32)
+        got = swiftkv_attention(q, k, v, lens, block_k=block_k)
+        want = ref.native_attention_rows(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_scan_reference_equals_native(self, seed):
+        """Eqs. (5)-(8) are an *exact* reformulation of softmax attention."""
+        r = rng(seed)
+        n, d = 96, 16
+        q = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+        got = ref.swiftkv_attention_scan(q, k, v, n)
+        want = ref.native_attention(q, k, v, n)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_block_k_one_is_per_token_recurrence(self):
+        """With block_k=1 the kernel is the literal per-token pipeline."""
+        r = rng(7)
+        rows, n, d = 3, 32, 16
+        q = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        lens = jnp.asarray([1, 15, 32], jnp.int32)
+        got = swiftkv_attention(q, k, v, lens, block_k=1)
+        want = ref.swiftkv_attention_scan_rows(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_block_size_invariance(self):
+        """Single-pass merge must be independent of the KV tiling."""
+        r = rng(11)
+        rows, n, d = 2, 64, 32
+        q = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        lens = jnp.asarray([64, 40], jnp.int32)
+        outs = [swiftkv_attention(q, k, v, lens, block_k=b)
+                for b in (1, 8, 16, 64)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+    def test_length_one(self):
+        """A single valid token attends only to itself: out = v_0."""
+        r = rng(3)
+        rows, n, d = 2, 32, 8
+        q = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        lens = jnp.ones((rows,), jnp.int32)
+        got = swiftkv_attention(q, k, v, lens, block_k=8)
+        np.testing.assert_allclose(got, v[:, 0, :], rtol=1e-5, atol=1e-5)
+
+    def test_large_score_range_stable(self):
+        """Running-max rescaling keeps exp() in (0,1] even for huge scores."""
+        r = rng(5)
+        rows, n, d = 1, 64, 16
+        q = jnp.asarray(r.normal(size=(rows, d)) * 30.0, jnp.float32)
+        k = jnp.asarray(r.normal(size=(rows, n, d)) * 30.0, jnp.float32)
+        v = jnp.asarray(r.normal(size=(rows, n, d)), jnp.float32)
+        lens = jnp.asarray([n], jnp.int32)
+        got = swiftkv_attention(q, k, v, lens, block_k=16)
+        want = ref.native_attention_rows(q, k, v, lens)
+        assert bool(jnp.all(jnp.isfinite(got)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_indivisible_context_rejected(self):
+        q = jnp.zeros((1, 8), jnp.float32)
+        k = jnp.zeros((1, 50, 8), jnp.float32)
+        v = jnp.zeros((1, 50, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            swiftkv_attention(q, k, v, jnp.ones((1,), jnp.int32), block_k=16)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-specialized RoPE kernel
+# ---------------------------------------------------------------------------
+
+class TestRopeKernel:
+    @given(
+        bsz=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 16, 32, 64]),
+        m=st.integers(0, 500),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_direct_rope(self, bsz, h, d, m, seed):
+        r = rng(seed)
+        omega = jnp.asarray(ref.rope_freqs(d), jnp.float32)
+        a, b = jnp.cos(omega), jnp.sin(omega)
+        th = m * omega
+        cos_m = jnp.broadcast_to(jnp.cos(th), (bsz, d // 2))
+        sin_m = jnp.broadcast_to(jnp.sin(th), (bsz, d // 2))
+        q = jnp.asarray(r.normal(size=(bsz * h, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(bsz * h, d)), jnp.float32)
+        qo, ko, cos_n, sin_n = rope_decode_step(q, k, cos_m, sin_m, a, b,
+                                                heads_per_seq=h)
+        np.testing.assert_allclose(qo, ref.rope_standard(q, m + 1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(ko, ref.rope_standard(k, m + 1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            cos_n, jnp.broadcast_to(jnp.cos((m + 1) * omega), (bsz, d // 2)),
+            rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            sin_n, jnp.broadcast_to(jnp.sin((m + 1) * omega), (bsz, d // 2)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_recurrence_drift_over_long_decode(self):
+        """Iterating Eq. (11) 2048 times stays close to direct cos/sin —
+        the incremental RoPE does not accumulate harmful error."""
+        d = 64
+        omega = jnp.asarray(ref.rope_freqs(d), jnp.float64)
+        a, b = jnp.cos(omega), jnp.sin(omega)
+        cos, sin = jnp.cos(-omega), jnp.sin(-omega)
+        cos32 = cos.astype(jnp.float32)
+        sin32 = sin.astype(jnp.float32)
+        a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+        for m in range(2048):
+            cos32, sin32 = ref.rope_incremental_step(cos32, sin32, a32, b32)
+        want_c = jnp.cos(2047 * omega)
+        want_s = jnp.sin(2047 * omega)
+        np.testing.assert_allclose(cos32, want_c, atol=2e-3)
+        np.testing.assert_allclose(sin32, want_s, atol=2e-3)
+
+    def test_rotation_preserves_norm(self):
+        r = rng(9)
+        d = 32
+        omega = jnp.asarray(ref.rope_freqs(d), jnp.float32)
+        a, b = jnp.cos(omega), jnp.sin(omega)
+        cos_m = jnp.cos(13 * omega)[None]
+        sin_m = jnp.sin(13 * omega)[None]
+        q = jnp.asarray(r.normal(size=(1, d)), jnp.float32)
+        qo, _, _, _ = rope_decode_step(q, q, cos_m, sin_m, a, b)
+        np.testing.assert_allclose(jnp.linalg.norm(qo), jnp.linalg.norm(q),
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# W4A8 GEMV kernel
+# ---------------------------------------------------------------------------
+
+class TestGemvKernel:
+    @given(
+        din=st.sampled_from([32, 64, 128, 256]),
+        dout=st.sampled_from([32, 96, 128, 384]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference_exactly(self, din, dout, seed):
+        """INT32 accumulation is exact: kernel == reference bit-for-bit."""
+        r = rng(seed)
+        x = jnp.asarray(r.normal(size=(din,)), jnp.float32)
+        w = jnp.asarray(r.normal(size=(din, dout)), jnp.float32)
+        xq, xs = ref.quantize_int8(x)
+        wq, ws = ref.quantize_int4(w)
+        got = gemv_w4a8(xq, xs, wq, ws)
+        want = ref.gemv_w4a8(xq, xs, wq, ws)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(bsz=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+    def test_batched_rows_independent(self, bsz, seed):
+        r = rng(seed)
+        din, dout = 64, 128
+        x = jnp.asarray(r.normal(size=(bsz, din)), jnp.float32)
+        w = jnp.asarray(r.normal(size=(din, dout)), jnp.float32)
+        wq, ws = ref.quantize_int4(w)
+        xqs = [ref.quantize_int8(x[i]) for i in range(bsz)]
+        xq = jnp.stack([q for q, _ in xqs])
+        xs = jnp.stack([s for _, s in xqs])
+        got = gemv_w4a8_batched(xq, xs, wq, ws)
+        for i in range(bsz):
+            want = ref.gemv_w4a8(xq[i], xs[i], wq, ws)
+            np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_quantized_close_to_f32(self, seed):
+        """W4A8 end-to-end error stays within the usual quant envelope."""
+        r = rng(seed)
+        din, dout = 256, 256
+        x = jnp.asarray(r.normal(size=(din,)), jnp.float32)
+        w = jnp.asarray(r.normal(size=(din, dout)), jnp.float32)
+        xq, xs = ref.quantize_int8(x)
+        wq, ws = ref.quantize_int4(w)
+        got = gemv_w4a8(xq, xs, wq, ws)
+        want = x @ w
+        denom = float(jnp.max(jnp.abs(want))) + 1e-6
+        assert float(jnp.max(jnp.abs(got - want))) / denom < 0.25
+
+    def test_int4_range(self):
+        r = rng(1)
+        w = jnp.asarray(r.normal(size=(64, 64)) * 10, jnp.float32)
+        wq, _ = ref.quantize_int4(w)
+        assert int(jnp.max(wq)) <= 7 and int(jnp.min(wq)) >= -7

@@ -1,0 +1,36 @@
+//! Bench: regenerate Fig. 7(a)/(b) and measure the *software* cost of each
+//! attention algorithm (the cycle model prices the hardware; this bench
+//! also times the actual Rust implementations to validate relative order).
+
+use swiftkv::attention::{flash, native, online, swiftkv as swiftkv_attn};
+use swiftkv::report;
+use swiftkv::sim::ArchConfig;
+use swiftkv::util::bench::Bencher;
+use swiftkv::util::Rng;
+
+fn main() {
+    let arch = ArchConfig::default();
+    println!("{}", report::fig7a(&arch));
+    println!("{}", report::fig7b(&arch));
+
+    // software-side timing of the same algorithms (Rust implementations)
+    let (d, n) = (128usize, 512usize);
+    let mut rng = Rng::seed_from_u64(3);
+    let q = rng.uniform_vec(d, 1.0);
+    let k = rng.uniform_vec(n * d, 1.0);
+    let v = rng.uniform_vec(n * d, 1.0);
+    let p = swiftkv::attention::HeadProblem::new(&q, &k, &v, d, n);
+
+    let mut b = Bencher::new(200, 800);
+    b.bench("attention/native (sw, n=512, d=128)", || native::attend(&p));
+    b.bench("attention/online (sw)", || online::attend(&p));
+    b.bench("attention/flash32 (sw)", || flash::attend(&p, 32));
+    b.bench("attention/swiftkv (sw)", || swiftkv_attn::attend(&p));
+
+    // FXP32 datapath
+    let lut = swiftkv::fxp::Exp2Lut::new();
+    let fp = swiftkv::attention::fxp_swiftkv::FxpHeadProblem::quantize(&q, &k, &v, d, n);
+    b.bench("attention/swiftkv-fxp32 (bit-exact)", || {
+        swiftkv::attention::fxp_swiftkv::attend_fxp(&lut, &fp)
+    });
+}

@@ -1,0 +1,84 @@
+//! Bench: the L3 hot paths (§Perf targets).
+//!
+//! - the FXP32 per-token SwiftKV update (the SKV-core inner loop),
+//! - the f32 per-token update,
+//! - W4A8 GEMV (the tiny model's dominant op),
+//! - one full tiny-model decode step (both numerics modes),
+//! - one PJRT engine decode step (batch 1/8) when artifacts exist.
+
+use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
+use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
+use swiftkv::fxp::Exp2Lut;
+use swiftkv::model::{NumericsMode, TinyModel, WeightStore};
+use swiftkv::quant::{quantize_int8, Int4Matrix, QuantLinear};
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use swiftkv::util::bench::Bencher;
+use swiftkv::util::Rng;
+
+fn main() {
+    let mut b = Bencher::new(200, 1000);
+    let mut rng = Rng::seed_from_u64(5);
+
+    // FXP32 SwiftKV scan — the SKV core inner loop
+    let (d, n) = (128usize, 512usize);
+    let q = rng.uniform_vec(d, 1.0);
+    let k = rng.uniform_vec(n * d, 1.0);
+    let v = rng.uniform_vec(n * d, 1.0);
+    let lut = Exp2Lut::new();
+    let fp = FxpHeadProblem::quantize(&q, &k, &v, d, n);
+    b.bench("hot/fxp_swiftkv_scan n=512 d=128", || attend_fxp(&lut, &fp));
+    let p = HeadProblem::new(&q, &k, &v, d, n);
+    b.bench("hot/f32_swiftkv_scan n=512 d=128", || swiftkv_attn::attend(&p));
+
+    // W4A8 GEMV 256→768 (tiny model's widest projection)
+    let w = rng.uniform_vec(256 * 768, 0.5);
+    let lin = QuantLinear::new(Int4Matrix::quantize(&w, 256, 768));
+    let x = rng.uniform_vec(256, 1.0);
+    b.bench("hot/gemv_w4a8 256x768", || lin.forward(&x));
+    let xq = quantize_int8(&x);
+    b.bench("hot/gemv_w4a8 256x768 (prequant)", || {
+        swiftkv::quant::gemv_w4a8(&xq, &lin.weight)
+    });
+
+    if artifacts_available() {
+        let ws = WeightStore::load(&default_artifacts_dir()).unwrap();
+        let tm = TinyModel::load(&ws).unwrap();
+        let mut st = tm.new_state();
+        let mut i = 0u32;
+        b.bench("hot/tiny_decode_step rust-desktop", || {
+            if st.pos >= tm.n_ctx {
+                st = tm.new_state();
+            }
+            i = (i + 1) % 512;
+            tm.decode_step(&mut st, i, NumericsMode::DesktopF32)
+        });
+        let mut st2 = tm.new_state();
+        b.bench("hot/tiny_decode_step rust-accel", || {
+            if st2.pos >= tm.n_ctx {
+                st2 = tm.new_state();
+            }
+            i = (i + 1) % 512;
+            tm.decode_step(&mut st2, i, NumericsMode::Accelerator)
+        });
+
+        let eng = Engine::load(&default_artifacts_dir()).unwrap();
+        for batch in [1usize, 8] {
+            let mut bs = eng.new_state(batch).unwrap();
+            let tokens = vec![7i32; batch];
+            let mut pos = 0i32;
+            b.bench(&format!("hot/pjrt_decode_step b{batch}"), || {
+                if pos as usize >= eng.manifest.n_ctx {
+                    bs = eng.new_state(batch).unwrap();
+                    pos = 0;
+                }
+                let out = eng
+                    .decode_step(&mut bs, &tokens, &vec![pos; batch])
+                    .unwrap();
+                pos += 1;
+                out
+            });
+        }
+    } else {
+        println!("(artifacts not built — PJRT benches skipped)");
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Table III and Fig. 8(a)/(b) — per-token decode
+//! simulation of the paper's models — and time the simulator itself.
+
+use swiftkv::model::LlmConfig;
+use swiftkv::report;
+use swiftkv::sim::{layer_sched, ArchConfig};
+use swiftkv::util::bench::Bencher;
+
+fn main() {
+    let arch = ArchConfig::default();
+    println!("{}", report::table3(&arch));
+    println!("{}", report::fig8a(&arch, &LlmConfig::llama2_7b(), 512));
+    println!("{}", report::fig8a(&arch, &LlmConfig::chatglm_6b(), 512));
+    println!("{}", report::fig8b(&arch));
+
+    let mut b = Bencher::new(200, 800);
+    let cfg = LlmConfig::llama2_7b();
+    b.bench("sim/simulate_token llama2@512", || {
+        layer_sched::simulate_token(&arch, &cfg, 512)
+    });
+    b.bench("sim/simulate_token llama2@4096", || {
+        layer_sched::simulate_token(&arch, &cfg, 4096)
+    });
+}

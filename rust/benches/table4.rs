@@ -1,0 +1,19 @@
+//! Bench: regenerate Table IV (GOPS / GOPS/W comparison) and Table II
+//! (resource utilization), plus the exp-LUT error exhibit.
+
+use swiftkv::report;
+use swiftkv::sim::{resources, ArchConfig};
+use swiftkv::util::bench::Bencher;
+
+fn main() {
+    let arch = ArchConfig::default();
+    println!("{}", report::table2(&arch));
+    println!("{}", report::table4(&arch));
+    println!("{}", report::exp_lut_error());
+
+    let mut b = Bencher::new(100, 400);
+    b.bench("sim/resource_estimate", || resources::estimate(&arch));
+    b.bench("fxp/exp_lut_error_sweep(131k points)", || {
+        swiftkv::fxp::Exp2Lut::new().max_relative_error()
+    });
+}

@@ -1,0 +1,162 @@
+//! Blockwise Flash-style attention [10] adapted to the decode setting —
+//! the comparison baseline of Fig. 7(a).
+//!
+//! The KV cache is processed in fixed blocks of size `B`. Within a block,
+//! scores are materialized, a block max is taken, and the running
+//! accumulators are rescaled once per block (the GPU-oriented blockwise
+//! softmax). During decode the context rarely ends on a block boundary, so
+//! the final partial block is padded to `B` — the "wait for block" effect
+//! the paper calls out (§I); the cycle model charges for the padded work.
+
+use super::{dot_f32, HeadProblem};
+
+/// Flash-attention accumulator state (block-level online softmax).
+#[derive(Debug, Clone)]
+pub struct FlashState {
+    pub m: f32,
+    pub z: f32,
+    pub acc: Vec<f32>,
+    pub blocks_processed: usize,
+}
+
+impl FlashState {
+    pub fn new(d: usize) -> Self {
+        FlashState {
+            m: f32::NEG_INFINITY,
+            z: 0.0,
+            acc: vec![0.0; d],
+            blocks_processed: 0,
+        }
+    }
+
+    /// Merge one block of (scores, value rows). `values` is `[n, d]`
+    /// row-major with `n == scores.len()`.
+    pub fn merge_block(&mut self, scores: &[f32], values: &[f32], d: usize) {
+        let n = scores.len();
+        debug_assert_eq!(values.len(), n * d);
+        let block_max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let new_m = self.m.max(block_max);
+        if !new_m.is_finite() {
+            // fully-masked (padded) block: nothing to fold in
+            self.blocks_processed += 1;
+            return;
+        }
+        let alpha = if self.m.is_finite() {
+            (self.m - new_m).exp()
+        } else {
+            0.0
+        };
+        let mut z_blk = 0.0f32;
+        let mut y_blk = vec![0.0f32; d];
+        for (t, &s) in scores.iter().enumerate() {
+            if !s.is_finite() {
+                continue; // padding lane
+            }
+            let w = (s - new_m).exp();
+            z_blk += w;
+            for (y, &v) in y_blk.iter_mut().zip(&values[t * d..(t + 1) * d]) {
+                *y += w * v;
+            }
+        }
+        self.z = alpha * self.z + z_blk;
+        for (a, y) in self.acc.iter_mut().zip(&y_blk) {
+            *a = alpha * *a + y;
+        }
+        self.m = new_m;
+        self.blocks_processed += 1;
+    }
+
+    pub fn finalize(&self) -> Vec<f32> {
+        assert!(self.z > 0.0, "finalize with empty state");
+        self.acc.iter().map(|a| a / self.z).collect()
+    }
+}
+
+/// Number of blocks (including the padded final one) for a context length.
+pub fn num_blocks(len: usize, block: usize) -> usize {
+    len.div_ceil(block)
+}
+
+/// Blockwise attention with block size `block`.
+pub fn attend(p: &HeadProblem, block: usize) -> Vec<f32> {
+    assert!(block >= 1);
+    let scale = p.scale();
+    let mut st = FlashState::new(p.d);
+    let mut scores = vec![0.0f32; block];
+    let mut values = vec![0.0f32; block * p.d];
+    for b in 0..num_blocks(p.len, block) {
+        let start = b * block;
+        let n = block.min(p.len - start); // valid rows in this block
+        for i in 0..block {
+            if i < n {
+                scores[i] = dot_f32(p.q, p.key(start + i)) * scale;
+                values[i * p.d..(i + 1) * p.d].copy_from_slice(p.value(start + i));
+            } else {
+                scores[i] = f32::NEG_INFINITY; // decode-boundary padding
+            }
+        }
+        st.merge_block(&scores, &values, p.d);
+    }
+    st.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{assert_close, ProblemData};
+    use crate::attention::{native, swiftkv};
+
+    #[test]
+    fn matches_native_for_all_paper_block_sizes() {
+        for &block in &[8usize, 16, 32] {
+            for seed in 0..4 {
+                let data = ProblemData::random(seed, 16, 100 + seed as usize * 31, 1.0);
+                let p = data.problem();
+                assert_close(
+                    &attend(&p, block),
+                    &native::attend(&p),
+                    1e-5,
+                    &format!("block {block} seed {seed}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partial_final_block_handled() {
+        // len deliberately not a multiple of the block size
+        let data = ProblemData::random(3, 8, 37, 1.0);
+        let p = data.problem();
+        assert_close(&attend(&p, 16), &native::attend(&p), 1e-5, "partial block");
+    }
+
+    #[test]
+    fn block_one_equals_swiftkv_per_token() {
+        let data = ProblemData::random(6, 16, 50, 1.0);
+        let p = data.problem();
+        assert_close(&attend(&p, 1), &swiftkv::attend(&p), 1e-5, "block=1");
+    }
+
+    #[test]
+    fn block_count_includes_padding() {
+        assert_eq!(num_blocks(512, 32), 16);
+        assert_eq!(num_blocks(513, 32), 17);
+        assert_eq!(num_blocks(1, 32), 1);
+        assert_eq!(num_blocks(32, 32), 1);
+    }
+
+    #[test]
+    fn fully_masked_block_is_noop() {
+        let mut st = FlashState::new(2);
+        st.merge_block(&[1.0, 2.0], &[1.0, 0.0, 0.0, 1.0], 2);
+        let before = st.clone();
+        st.merge_block(
+            &[f32::NEG_INFINITY, f32::NEG_INFINITY],
+            &[9.0, 9.0, 9.0, 9.0],
+            2,
+        );
+        assert_eq!(st.m, before.m);
+        assert_eq!(st.z, before.z);
+        assert_eq!(st.acc, before.acc);
+    }
+}

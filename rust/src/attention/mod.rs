@@ -1,0 +1,113 @@
+//! Decode-attention algorithms (Eq. 4) — the paper's algorithmic layer.
+//!
+//! Four implementations over the same `(q, K_cache, V_cache)` problem, all
+//! validated against each other (they compute the *same function*; they
+//! differ in schedule, number of passes and memory traffic — which is what
+//! the cycle model in [`crate::sim`] prices):
+//!
+//! | module | algorithm | passes over KV | score buffer |
+//! |---|---|---|---|
+//! | [`native`] | textbook softmax(qKᵀ/√d)V | 3 (scores, softmax, PV) | N |
+//! | [`flash`] | blockwise Flash-style online softmax | 1 (blocked) | block |
+//! | [`online`] | streaming/online-softmax (two-phase, ITA-style) | 2 | N |
+//! | [`swiftkv`] | SwiftKV single-pass per-token recurrence (Eqs. 5–8) | 1 | none |
+//!
+//! [`fxp_swiftkv`] is the bit-exact FXP32 (Q15.17) + LUT-exp model of the
+//! SwiftKV core datapath (Fig. 3) — the numerics the accelerator actually
+//! produces, used for the Table I accuracy experiment.
+
+pub mod flash;
+pub mod fxp_swiftkv;
+pub mod native;
+pub mod online;
+pub mod swiftkv;
+
+/// A single-head decode-attention problem over a row-major KV cache.
+///
+/// `k` and `v` are `[len, d]` row-major slices (`len * d` elements);
+/// `q` has `d` elements. `len ≥ 1`.
+#[derive(Debug, Clone, Copy)]
+pub struct HeadProblem<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub d: usize,
+    pub len: usize,
+}
+
+impl<'a> HeadProblem<'a> {
+    pub fn new(q: &'a [f32], k: &'a [f32], v: &'a [f32], d: usize, len: usize) -> Self {
+        assert!(d > 0 && len > 0, "empty problem");
+        assert_eq!(q.len(), d);
+        assert!(k.len() >= len * d, "k too short");
+        assert!(v.len() >= len * d, "v too short");
+        HeadProblem { q, k, v, d, len }
+    }
+
+    /// Row `t` of the key cache.
+    #[inline]
+    pub fn key(&self, t: usize) -> &'a [f32] {
+        &self.k[t * self.d..(t + 1) * self.d]
+    }
+
+    /// Row `t` of the value cache.
+    #[inline]
+    pub fn value(&self, t: usize) -> &'a [f32] {
+        &self.v[t * self.d..(t + 1) * self.d]
+    }
+
+    /// `1/√d` — the score scale of Eq. (5).
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.d as f32).sqrt()
+    }
+}
+
+/// f32 dot product (reference arithmetic for the software algorithms).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::HeadProblem;
+    use crate::util::Rng;
+
+    /// Deterministic random problem storage (q, k, v own their data).
+    pub struct ProblemData {
+        pub q: Vec<f32>,
+        pub k: Vec<f32>,
+        pub v: Vec<f32>,
+        pub d: usize,
+        pub len: usize,
+    }
+
+    impl ProblemData {
+        pub fn random(seed: u64, d: usize, len: usize, scale: f32) -> Self {
+            let mut rng = Rng::seed_from_u64(seed);
+            ProblemData {
+                q: rng.uniform_vec(d, scale),
+                k: rng.uniform_vec(d * len, scale),
+                v: rng.uniform_vec(d * len, scale),
+                d,
+                len,
+            }
+        }
+
+        pub fn problem(&self) -> HeadProblem<'_> {
+            HeadProblem::new(&self.q, &self.k, &self.v, self.d, self.len)
+        }
+    }
+
+    pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}: mismatch at {i}: {x} vs {y}"
+            );
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Native (textbook) decode attention — the baseline every speedup in
+//! Fig. 7(b) is normalized against.
+//!
+//! Three sequential phases, with the full score vector materialized:
+//! 1. `s_t = q·k_t/√d` for all `t` (scores written to a buffer),
+//! 2. numerically-stable softmax over the buffer (max scan, exp pass,
+//!    per-element normalization — the N divisions the paper's cycle
+//!    analysis charges this algorithm for),
+//! 3. `out = P·V`.
+
+use super::{dot_f32, HeadProblem};
+
+/// Compute attention natively, returning the output vector.
+pub fn attend(p: &HeadProblem) -> Vec<f32> {
+    let scores = score_pass(p);
+    let probs = softmax_pass(&scores);
+    pv_pass(p, &probs)
+}
+
+/// Phase 1: materialize all attention scores (Eq. 5).
+pub fn score_pass(p: &HeadProblem) -> Vec<f32> {
+    let scale = p.scale();
+    (0..p.len).map(|t| dot_f32(p.q, p.key(t)) * scale).collect()
+}
+
+/// Phase 2: numerically-stable softmax over the materialized scores.
+pub fn softmax_pass(scores: &[f32]) -> Vec<f32> {
+    let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = scores.iter().map(|s| (s - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Phase 3: probability-weighted sum of the value cache.
+pub fn pv_pass(p: &HeadProblem, probs: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; p.d];
+    for (t, &w) in probs.iter().enumerate() {
+        for (o, &v) in out.iter_mut().zip(p.value(t)) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::ProblemData;
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let data = ProblemData::random(1, 16, 33, 1.0);
+        let p = data.problem();
+        let probs = softmax_pass(&score_pass(&p));
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "sum={sum}");
+        assert!(probs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn single_token_returns_value_row() {
+        let data = ProblemData::random(2, 8, 1, 1.0);
+        let p = data.problem();
+        let out = attend(&p);
+        for (o, v) in out.iter().zip(p.value(0)) {
+            assert!((o - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // identical keys → uniform probabilities → mean of value rows
+        let d = 4;
+        let len = 7;
+        let q = vec![0.3f32; d];
+        let k = vec![1.0f32; d * len];
+        let v: Vec<f32> = (0..d * len).map(|i| i as f32).collect();
+        let p = HeadProblem::new(&q, &k, &v, d, len);
+        let out = attend(&p);
+        for (j, o) in out.iter().enumerate() {
+            let mean: f32 =
+                (0..len).map(|t| v[t * d + j]).sum::<f32>() / len as f32;
+            assert!((o - mean).abs() < 1e-4, "col {j}: {o} vs {mean}");
+        }
+    }
+
+    #[test]
+    fn extreme_scores_stable() {
+        let data = ProblemData::random(3, 16, 64, 40.0);
+        let out = attend(&data.problem());
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

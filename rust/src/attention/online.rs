@@ -1,0 +1,102 @@
+//! Streaming / online-softmax attention (two-phase, ITA-style [15], [19]).
+//!
+//! Phase 1 streams the scores once, maintaining the running max `m` and the
+//! online normalizer `Z` (Milakov–Gimelshein). The scores are still
+//! materialized, because phase 2 needs them to form `P·V`.
+//! Phase 2 re-reads the buffer, applies `exp(s_t − m)/Z` and accumulates
+//! the value rows.
+//!
+//! Compared with SwiftKV this performs the same exp work but takes *two*
+//! passes and keeps an N-element score buffer — the gap the cycle model
+//! prices in Fig. 7(b) (2.15× vs 7.16×).
+
+use super::{dot_f32, HeadProblem};
+
+/// Result of the phase-1 stream: running max and normalizer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OnlineNorm {
+    pub max: f32,
+    pub z: f32,
+}
+
+/// Phase 1: one streaming pass computing scores, the running max and the
+/// online normalizer. Returns the materialized scores plus the norm state.
+pub fn stream_pass(p: &HeadProblem) -> (Vec<f32>, OnlineNorm) {
+    let scale = p.scale();
+    let mut scores = Vec::with_capacity(p.len);
+    let mut m = f32::NEG_INFINITY;
+    let mut z = 0.0f32;
+    for t in 0..p.len {
+        let s = dot_f32(p.q, p.key(t)) * scale;
+        // online normalizer update: rescale Z when the max grows
+        if s > m {
+            z = z * (m - s).exp() + 1.0;
+            m = s;
+        } else {
+            z += (s - m).exp();
+        }
+        scores.push(s);
+    }
+    (scores, OnlineNorm { max: m, z })
+}
+
+/// Phase 2: weighted accumulation of the value cache from the buffered
+/// scores and the final norm state.
+pub fn accumulate_pass(p: &HeadProblem, scores: &[f32], norm: OnlineNorm) -> Vec<f32> {
+    let inv_z = 1.0 / norm.z;
+    let mut out = vec![0.0f32; p.d];
+    for (t, &s) in scores.iter().enumerate() {
+        let w = (s - norm.max).exp() * inv_z;
+        for (o, &v) in out.iter_mut().zip(p.value(t)) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+/// Full two-phase streaming attention.
+pub fn attend(p: &HeadProblem) -> Vec<f32> {
+    let (scores, norm) = stream_pass(p);
+    accumulate_pass(p, &scores, norm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{assert_close, ProblemData};
+    use crate::attention::{native, swiftkv};
+
+    #[test]
+    fn matches_native() {
+        for seed in 0..6 {
+            let data = ProblemData::random(seed, 24, 64 + seed as usize * 9, 1.5);
+            let p = data.problem();
+            assert_close(&attend(&p), &native::attend(&p), 1e-5, "online vs native");
+        }
+    }
+
+    #[test]
+    fn online_normalizer_equals_two_pass() {
+        let data = ProblemData::random(77, 16, 128, 3.0);
+        let p = data.problem();
+        let (scores, norm) = stream_pass(&p);
+        let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = scores.iter().map(|s| (s - max).exp()).sum();
+        assert!((norm.max - max).abs() < 1e-6);
+        assert!((norm.z - z).abs() / z < 1e-5, "{} vs {z}", norm.z);
+    }
+
+    #[test]
+    fn agrees_with_swiftkv() {
+        let data = ProblemData::random(4, 32, 200, 1.0);
+        let p = data.problem();
+        assert_close(&attend(&p), &swiftkv::attend(&p), 1e-5, "online vs swiftkv");
+    }
+
+    #[test]
+    fn stable_at_large_magnitudes() {
+        let data = ProblemData::random(8, 16, 64, 50.0);
+        let out = attend(&data.problem());
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,189 @@
+//! SwiftKV single-pass attention — Eqs. (5)–(8) in f32.
+//!
+//! Every `(k_t, v_t)` is consumed exactly once in a uniform per-token
+//! update of the `(μ, Z, Y)` state; no scores are materialized and there
+//! is no second pass. The division is deferred to a single final
+//! normalization (Eq. 8). This is the algorithm the SwiftKV core
+//! executes; [`super::fxp_swiftkv`] is the same recurrence in the
+//! accelerator's Q15.17 arithmetic.
+
+use super::{dot_f32, HeadProblem};
+
+/// Running state of the recurrence: `μ` (running max), `Z` (denominator),
+/// `Y` (unnormalized output).
+#[derive(Debug, Clone)]
+pub struct SwiftKvState {
+    pub mu: f32,
+    pub z: f32,
+    pub y: Vec<f32>,
+    /// Tokens consumed so far (diagnostics / invariant checks).
+    pub consumed: usize,
+}
+
+impl SwiftKvState {
+    /// Initial state: μ = −∞, Z = 0, Y = 0 (§III).
+    pub fn new(d: usize) -> Self {
+        SwiftKvState {
+            mu: f32::NEG_INFINITY,
+            z: 0.0,
+            y: vec![0.0; d],
+            consumed: 0,
+        }
+    }
+
+    /// Consume one `(s_t, v_t)` pair — the compare-and-select + update
+    /// parts of the SwiftKV core (Fig. 3), Eqs. (6)/(7).
+    #[inline]
+    pub fn update(&mut self, s_t: f32, v_t: &[f32]) {
+        debug_assert_eq!(v_t.len(), self.y.len());
+        if self.consumed == 0 {
+            // μ₁ = s₁ branch: β = exp(0) = 1
+            self.mu = s_t;
+            self.z = 1.0;
+            self.y.copy_from_slice(v_t);
+        } else if s_t <= self.mu {
+            // Eq. (6): fold the new token in at weight β ∈ (0, 1]
+            let beta = (s_t - self.mu).exp();
+            self.z += beta;
+            for (y, &v) in self.y.iter_mut().zip(v_t) {
+                *y += beta * v;
+            }
+        } else {
+            // Eq. (7): rescale history by α ∈ (0, 1), new token at weight 1
+            let alpha = (self.mu - s_t).exp();
+            self.z = alpha * self.z + 1.0;
+            for (y, &v) in self.y.iter_mut().zip(v_t) {
+                *y = alpha * *y + v;
+            }
+            self.mu = s_t;
+        }
+        self.consumed += 1;
+    }
+
+    /// Eq. (8): the deferred one-time normalization.
+    pub fn finalize(&self) -> Vec<f32> {
+        assert!(self.consumed > 0, "finalize before any token");
+        self.y.iter().map(|y| y / self.z).collect()
+    }
+}
+
+/// Full single-pass attention over a head problem.
+pub fn attend(p: &HeadProblem) -> Vec<f32> {
+    let scale = p.scale();
+    let mut st = SwiftKvState::new(p.d);
+    for t in 0..p.len {
+        let s_t = dot_f32(p.q, p.key(t)) * scale; // Eq. (5)
+        st.update(s_t, p.value(t));
+    }
+    st.finalize()
+}
+
+/// Incremental decode-style usage: extend an existing state by the KV rows
+/// in `[from, to)` (used by the serving path, where each generated token
+/// appends one row and the state picks up where it left off).
+pub fn extend(st: &mut SwiftKvState, p: &HeadProblem, from: usize, to: usize) {
+    let scale = p.scale();
+    for t in from..to.min(p.len) {
+        let s_t = dot_f32(p.q, p.key(t)) * scale;
+        st.update(s_t, p.value(t));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::native;
+    use crate::attention::testutil::{assert_close, ProblemData};
+
+    #[test]
+    fn matches_native_attention() {
+        for seed in 0..8 {
+            let data = ProblemData::random(seed, 32, 100 + seed as usize * 17, 1.0);
+            let p = data.problem();
+            assert_close(
+                &attend(&p),
+                &native::attend(&p),
+                1e-5,
+                &format!("seed {seed}"),
+            );
+        }
+    }
+
+    #[test]
+    fn rescale_factors_stay_in_unit_interval() {
+        // replicate the recurrence, asserting the §III invariant that every
+        // exp argument is ≤ 0 (so α, β ∈ (0, 1])
+        let data = ProblemData::random(42, 16, 200, 10.0);
+        let p = data.problem();
+        let scale = p.scale();
+        let mut mu = f32::NEG_INFINITY;
+        for t in 0..p.len {
+            let s = crate::attention::dot_f32(p.q, p.key(t)) * scale;
+            if t == 0 {
+                mu = s;
+                continue;
+            }
+            let arg = if s <= mu { s - mu } else { mu - s };
+            assert!(arg <= 0.0, "exp argument positive at t={t}");
+            mu = mu.max(s);
+        }
+    }
+
+    #[test]
+    fn z_positive_and_at_most_len() {
+        let data = ProblemData::random(9, 8, 77, 2.0);
+        let p = data.problem();
+        let scale = p.scale();
+        let mut st = SwiftKvState::new(p.d);
+        for t in 0..p.len {
+            st.update(crate::attention::dot_f32(p.q, p.key(t)) * scale, p.value(t));
+            assert!(st.z > 0.0);
+            // every term exp(s_t − μ) ≤ 1 ⇒ Z ≤ #tokens
+            assert!(st.z <= (t + 1) as f32 + 1e-4);
+        }
+    }
+
+    #[test]
+    fn extend_equals_one_shot() {
+        let data = ProblemData::random(5, 16, 96, 1.0);
+        let p = data.problem();
+        let mut st = SwiftKvState::new(p.d);
+        extend(&mut st, &p, 0, 30);
+        extend(&mut st, &p, 30, 96);
+        assert_close(&st.finalize(), &attend(&p), 1e-6, "extend");
+    }
+
+    #[test]
+    fn output_is_convex_combination() {
+        // each output coordinate lies within [min, max] of the value column
+        let data = ProblemData::random(13, 8, 50, 1.0);
+        let p = data.problem();
+        let out = attend(&p);
+        for j in 0..p.d {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for t in 0..p.len {
+                lo = lo.min(p.value(t)[j]);
+                hi = hi.max(p.value(t)[j]);
+            }
+            assert!(
+                out[j] >= lo - 1e-5 && out[j] <= hi + 1e-5,
+                "coordinate {j} escapes hull"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_score_order_independence() {
+        // shuffling KV rows must not change the output (softmax symmetry)
+        let data = ProblemData::random(21, 8, 40, 1.0);
+        let p = data.problem();
+        let base = attend(&p);
+
+        let mut idx: Vec<usize> = (0..p.len).collect();
+        idx.reverse();
+        let k2: Vec<f32> = idx.iter().flat_map(|&t| p.key(t).to_vec()).collect();
+        let v2: Vec<f32> = idx.iter().flat_map(|&t| p.value(t).to_vec()).collect();
+        let p2 = HeadProblem::new(p.q, &k2, &v2, p.d, p.len);
+        assert_close(&attend(&p2), &base, 1e-5, "reversed order");
+    }
+}

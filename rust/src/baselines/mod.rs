@@ -1,0 +1,210 @@
+//! Baseline accelerator operating points — the comparison rows of
+//! Tables III/IV and Fig. 8(b).
+//!
+//! Each baseline is encoded from its paper's published numbers (platform,
+//! DSP usage, frequency, latency, power); derived columns (token/s,
+//! token/J, GOPS/W) are *recomputed* from the primitives so the comparison
+//! harness exercises the same arithmetic for every row, and so the tests
+//! can check the published derived values against the recomputation.
+
+use crate::model::{LlmConfig, TokenCost};
+
+/// One accelerator operating point as published.
+#[derive(Debug, Clone)]
+pub struct AcceleratorPoint {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub model: &'static str,
+    pub quant: &'static str,
+    pub hbm_gbps: f64,
+    pub freq_mhz: f64,
+    pub dsp: u64,
+    /// Decode latency per token (ms).
+    pub latency_ms: f64,
+    /// System power (W).
+    pub system_power_w: f64,
+    pub source: &'static str,
+}
+
+impl AcceleratorPoint {
+    pub fn tokens_per_s(&self) -> f64 {
+        1000.0 / self.latency_ms
+    }
+
+    pub fn tokens_per_joule(&self) -> f64 {
+        self.tokens_per_s() / self.system_power_w
+    }
+
+    /// Throughput in GOPS for the model it runs (at context 512, the
+    /// paper's setting).
+    pub fn gops(&self) -> f64 {
+        let cfg = config_for(self.model);
+        TokenCost::of(&cfg, 512).gops_at(self.latency_ms / 1000.0)
+    }
+}
+
+fn config_for(model: &str) -> LlmConfig {
+    match model {
+        "Llama-2-7B" => LlmConfig::llama2_7b(),
+        "ChatGLM-6B" => LlmConfig::chatglm_6b(),
+        _ => panic!("unknown model {model}"),
+    }
+}
+
+/// Table III rows: FlightLLM [13] and EdgeLLM [9] under the paper's
+/// "identical experimental settings" (W4A8, 460 GB/s HBM, 225 MHz).
+pub fn table3_baselines() -> Vec<AcceleratorPoint> {
+    vec![
+        AcceleratorPoint {
+            name: "FlightLLM",
+            platform: "U280",
+            model: "Llama-2-7B",
+            quant: "~W4A8",
+            hbm_gbps: 460.0,
+            freq_mhz: 225.0,
+            dsp: 6345,
+            latency_ms: 18.2,
+            system_power_w: 45.0,
+            source: "[13] FPGA'24",
+        },
+        AcceleratorPoint {
+            name: "EdgeLLM",
+            platform: "VCU128",
+            model: "Llama-2-7B",
+            quant: "W4A8",
+            hbm_gbps: 460.0,
+            freq_mhz: 225.0,
+            dsp: 4563,
+            latency_ms: 14.4,
+            system_power_w: 56.8,
+            source: "[9] TCAS-I",
+        },
+        AcceleratorPoint {
+            name: "EdgeLLM",
+            platform: "VCU128",
+            model: "ChatGLM-6B",
+            quant: "W4A8",
+            hbm_gbps: 460.0,
+            freq_mhz: 225.0,
+            dsp: 4563,
+            latency_ms: 11.7,
+            system_power_w: 56.8,
+            source: "[9] TCAS-I",
+        },
+    ]
+}
+
+/// A Table IV row: prior FPGA transformer accelerators (published
+/// throughput/efficiency; models outside our config set, so GOPS and
+/// GOPS/W are carried as published).
+#[derive(Debug, Clone)]
+pub struct ThroughputPoint {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub model: &'static str,
+    pub freq_mhz: f64,
+    pub gops: f64,
+    pub gops_per_w: f64,
+}
+
+/// Table IV comparison rows.
+pub fn table4_baselines() -> Vec<ThroughputPoint> {
+    vec![
+        ThroughputPoint {
+            name: "DFX (MICRO'22)",
+            platform: "Alveo U280",
+            model: "GPT2-1.5B",
+            freq_mhz: 200.0,
+            gops: 184.1,
+            gops_per_w: 4.09,
+        },
+        ThroughputPoint {
+            name: "TCAS-I'23",
+            platform: "ZCU102",
+            model: "Vision Transformer",
+            freq_mhz: 300.0,
+            gops: 726.7,
+            gops_per_w: 28.2,
+        },
+        ThroughputPoint {
+            name: "ASP-DAC'24",
+            platform: "Alveo U280",
+            model: "BERT-base",
+            freq_mhz: 220.0,
+            gops: 757.4,
+            gops_per_w: 25.1,
+        },
+        ThroughputPoint {
+            name: "TCAS-I'25",
+            platform: "Alveo U50",
+            model: "Swin Transformer",
+            freq_mhz: 170.0,
+            gops: 830.3,
+            gops_per_w: 45.12,
+        },
+    ]
+}
+
+/// The attention-latency share baseline of Fig. 8(a): DFX [5] reports
+/// attention at 43.0 % of end-to-end decode latency.
+pub const DFX_ATTENTION_SHARE: f64 = 0.43;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The published derived columns must be recoverable from the
+    /// primitives (Table III's internal consistency).
+    #[test]
+    fn table3_published_derived_columns() {
+        let rows = table3_baselines();
+        // FlightLLM: 55 token/s, 1.22 token/J
+        assert!((rows[0].tokens_per_s() - 55.0).abs() < 1.0);
+        assert!((rows[0].tokens_per_joule() - 1.22).abs() < 0.03);
+        // EdgeLLM llama: 69.4 token/s, 1.22 token/J
+        assert!((rows[1].tokens_per_s() - 69.4).abs() < 0.5);
+        assert!((rows[1].tokens_per_joule() - 1.22).abs() < 0.03);
+        // EdgeLLM chatglm: 85.8 token/s, 1.51 token/J
+        assert!((rows[2].tokens_per_s() - 85.5).abs() < 0.5);
+        assert!((rows[2].tokens_per_joule() - 1.51).abs() < 0.03);
+    }
+
+    #[test]
+    fn our_token_efficiency_gain_matches_headline() {
+        // §V: 1.98× token-efficiency improvement over the best prior work
+        let ours = 81.5 / 33.8; // token/J (Table III, this work, llama2)
+        let best_prior = table3_baselines()
+            .iter()
+            .filter(|r| r.model == "Llama-2-7B")
+            .map(|r| r.tokens_per_joule())
+            .fold(0.0f64, f64::max);
+        let gain = ours / best_prior;
+        assert!((gain - 1.98).abs() < 0.06, "gain {gain:.2} vs paper 1.98×");
+    }
+
+    #[test]
+    fn speed_gain_17_4_pct_over_edgellm() {
+        // §V: generation speed 17.4% higher than EdgeLLM (llama2)
+        let edgellm = table3_baselines()[1].tokens_per_s();
+        let ours = 81.5;
+        let gain = ours / edgellm - 1.0;
+        assert!((gain - 0.174).abs() < 0.01, "gain {:.1}%", gain * 100.0);
+    }
+
+    #[test]
+    fn table4_ours_highest() {
+        // our 1100.3 GOPS / 60.12 GOPS/W top every prior row
+        for r in table4_baselines() {
+            assert!(r.gops < 1100.3, "{}", r.name);
+            assert!(r.gops_per_w < 60.12, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn gops_recomputation_plausible() {
+        // FlightLLM at 18.2 ms on llama2 ≈ 13.5/0.0182 ≈ 740 GOPS
+        let rows = table3_baselines();
+        let g = rows[0].gops();
+        assert!((600.0..850.0).contains(&g), "{g}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Continuous batching over the engine's fixed lanes.
+//!
+//! The PJRT engine compiles one executable per batch variant; the batcher
+//! keeps a lane array of the chosen variant's width, admits queued
+//! requests into free lanes at every iteration boundary, and reports the
+//! per-iteration (token, position) vectors the engine consumes. Lanes are
+//! recycled: a new session simply starts at position 0 (the model resets
+//! the lane's RoPE state on `pos == 0`, and attention masks by length, so
+//! stale cache rows are never read).
+
+use super::session::Session;
+use crate::model::Request;
+use std::collections::VecDeque;
+
+/// What occupies a lane.
+#[derive(Debug, Clone)]
+pub enum LaneState {
+    Idle,
+    Busy(Session),
+}
+
+impl LaneState {
+    pub fn is_idle(&self) -> bool {
+        matches!(self, LaneState::Idle)
+    }
+}
+
+/// The dynamic batcher.
+pub struct Batcher {
+    lanes: Vec<LaneState>,
+    queue: VecDeque<Request>,
+    /// Context capacity per lane (engine's n_ctx).
+    n_ctx: usize,
+    /// Completed sessions, in finish order.
+    pub finished: Vec<Session>,
+    admitted: u64,
+    rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(n_lanes: usize, n_ctx: usize) -> Self {
+        assert!(n_lanes >= 1);
+        Batcher {
+            lanes: (0..n_lanes).map(|_| LaneState::Idle).collect(),
+            queue: VecDeque::new(),
+            n_ctx,
+            finished: Vec::new(),
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Enqueue a request. Requests longer than the context capacity are
+    /// rejected immediately (returned as `Err`).
+    pub fn submit(&mut self, req: Request) -> Result<(), Request> {
+        if req.prompt.len() + req.gen_len > self.n_ctx {
+            self.rejected += 1;
+            return Err(req);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Admit queued requests into idle lanes (continuous batching step).
+    /// Returns the number admitted.
+    pub fn admit(&mut self, iteration: u64) -> usize {
+        let mut n = 0;
+        for lane in self.lanes.iter_mut() {
+            if lane.is_idle() {
+                if let Some(req) = self.queue.pop_front() {
+                    *lane = LaneState::Busy(Session::new(req, iteration));
+                    self.admitted += 1;
+                    n += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        n
+    }
+
+    /// Number of busy lanes.
+    pub fn active(&self) -> usize {
+        self.lanes.iter().filter(|l| !l.is_idle()).count()
+    }
+
+    /// Anything left to do?
+    pub fn is_drained(&self) -> bool {
+        self.queue.is_empty() && self.active() == 0
+    }
+
+    /// Build the engine step inputs: `(tokens, positions, active_mask)`.
+    /// Idle lanes carry `(0, 0)` — harmless, masked by their own restart.
+    pub fn gather_inputs(&self) -> (Vec<i32>, Vec<i32>, Vec<bool>) {
+        let mut tokens = Vec::with_capacity(self.lanes.len());
+        let mut pos = Vec::with_capacity(self.lanes.len());
+        let mut active = Vec::with_capacity(self.lanes.len());
+        for lane in &self.lanes {
+            match lane {
+                LaneState::Idle => {
+                    tokens.push(0);
+                    pos.push(0);
+                    active.push(false);
+                }
+                LaneState::Busy(s) => {
+                    tokens.push(s.next_input() as i32);
+                    pos.push(s.pos as i32);
+                    active.push(true);
+                }
+            }
+        }
+        (tokens, pos, active)
+    }
+
+    /// Apply one step's sampled tokens (`samples[i]` = greedy token of
+    /// lane `i`). Finished sessions are retired and their lanes freed.
+    /// Returns the ids of requests that finished this step.
+    pub fn scatter_outputs(&mut self, samples: &[u32], iteration: u64) -> Vec<u64> {
+        assert_eq!(samples.len(), self.lanes.len());
+        let mut done = Vec::new();
+        for (lane, &tok) in self.lanes.iter_mut().zip(samples) {
+            if let LaneState::Busy(s) = lane {
+                if s.advance(tok, iteration) {
+                    done.push(s.request.id);
+                    let finished = std::mem::replace(lane, LaneState::Idle);
+                    if let LaneState::Busy(s) = finished {
+                        self.finished.push(s);
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    /// (admitted, rejected) counters.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.admitted, self.rejected)
+    }
+
+    /// Occupancy in [0, 1] for this iteration.
+    pub fn occupancy(&self) -> f64 {
+        self.active() as f64 / self.lanes.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt_len: usize, gen_len: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt_len as u32).collect(),
+            gen_len,
+            arrival_ms: 0,
+        }
+    }
+
+    #[test]
+    fn admission_fills_free_lanes() {
+        let mut b = Batcher::new(2, 64);
+        for i in 0..3 {
+            b.submit(req(i, 2, 1)).unwrap();
+        }
+        assert_eq!(b.admit(0), 2);
+        assert_eq!(b.active(), 2);
+        // third request waits
+        assert_eq!(b.admit(0), 0);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut b = Batcher::new(1, 16);
+        assert!(b.submit(req(0, 10, 7)).is_err());
+        assert!(b.submit(req(1, 10, 6)).is_ok());
+        assert_eq!(b.counters(), (0, 1));
+    }
+
+    #[test]
+    fn full_lifecycle_single_lane() {
+        let mut b = Batcher::new(1, 64);
+        b.submit(req(7, 2, 2)).unwrap();
+        b.admit(0);
+        // step 1: feed prompt[0]
+        let (t, p, a) = b.gather_inputs();
+        assert_eq!((t[0], p[0], a[0]), (0, 0, true));
+        assert!(b.scatter_outputs(&[99], 0).is_empty());
+        // step 2: feed prompt[1] → first sample
+        let (t, p, _) = b.gather_inputs();
+        assert_eq!((t[0], p[0]), (1, 1));
+        assert!(b.scatter_outputs(&[42], 1).is_empty());
+        // step 3: feed sampled 42 → finishes
+        let (t, p, _) = b.gather_inputs();
+        assert_eq!((t[0], p[0]), (42, 2));
+        let done = b.scatter_outputs(&[43], 2);
+        assert_eq!(done, vec![7]);
+        assert!(b.is_drained());
+        assert_eq!(b.finished[0].generated, vec![42, 43]);
+    }
+
+    #[test]
+    fn lane_recycled_for_next_request() {
+        let mut b = Batcher::new(1, 64);
+        b.submit(req(0, 1, 1)).unwrap();
+        b.submit(req(1, 1, 1)).unwrap();
+        b.admit(0);
+        b.scatter_outputs(&[5], 0); // finishes request 0
+        assert_eq!(b.active(), 0);
+        assert_eq!(b.admit(1), 1); // request 1 takes the lane
+        let (_, p, _) = b.gather_inputs();
+        assert_eq!(p[0], 0, "recycled lane must restart at position 0");
+    }
+
+    #[test]
+    fn idle_lanes_masked() {
+        let b = Batcher::new(3, 64);
+        let (t, p, a) = b.gather_inputs();
+        assert_eq!(t, vec![0, 0, 0]);
+        assert_eq!(p, vec![0, 0, 0]);
+        assert_eq!(a, vec![false, false, false]);
+    }
+
+    #[test]
+    fn occupancy_tracks_active() {
+        let mut b = Batcher::new(4, 64);
+        for i in 0..2 {
+            b.submit(req(i, 1, 1)).unwrap();
+        }
+        b.admit(0);
+        assert!((b.occupancy() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,125 @@
+//! Serving metrics: wall-clock (CPU PJRT) and modelled-accelerator
+//! (SwiftKV-MHA cycle model) views of the same schedule.
+
+/// Simple percentile summary over a set of samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    pub fn compute(samples: &[f64]) -> Option<Percentiles> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |q: f64| s[((s.len() - 1) as f64 * q).floor() as usize];
+        Some(Percentiles {
+            p50: at(0.50),
+            p90: at(0.90),
+            p99: at(0.99),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            max: *s.last().unwrap(),
+        })
+    }
+}
+
+/// Aggregated serving metrics for one run.
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub total_tokens_generated: usize,
+    pub iterations: u64,
+    /// Wall-clock duration of the serving loop (seconds).
+    pub wall_s: f64,
+    /// Wall-clock per engine step (ms).
+    pub step_ms: Percentiles,
+    /// Request latency (ms, admission → finish), wall-clock.
+    pub request_latency_ms: Percentiles,
+    /// Time-to-first-token (ms, admission → first sample), wall-clock.
+    pub ttft_ms: Percentiles,
+    /// Mean lane occupancy over the run.
+    pub mean_occupancy: f64,
+    /// Tokens/second, wall-clock.
+    pub tokens_per_s: f64,
+    /// Modelled SwiftKV-MHA time for the same schedule (ms): every
+    /// iteration costs one simulated decode step at the batch's maximum
+    /// live context.
+    pub simulated_accel_ms: f64,
+    /// Modelled accelerator tokens/second.
+    pub simulated_tokens_per_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn format_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests                {:>10}\n",
+            self.requests
+        ));
+        out.push_str(&format!(
+            "tokens generated        {:>10}\n",
+            self.total_tokens_generated
+        ));
+        out.push_str(&format!("engine iterations       {:>10}\n", self.iterations));
+        out.push_str(&format!("wall time               {:>10.2} s\n", self.wall_s));
+        out.push_str(&format!(
+            "throughput (wall)       {:>10.1} tok/s\n",
+            self.tokens_per_s
+        ));
+        out.push_str(&format!(
+            "step latency p50/p90    {:>7.2} / {:.2} ms\n",
+            self.step_ms.p50, self.step_ms.p90
+        ));
+        out.push_str(&format!(
+            "request latency p50/p99 {:>7.1} / {:.1} ms\n",
+            self.request_latency_ms.p50, self.request_latency_ms.p99
+        ));
+        out.push_str(&format!(
+            "TTFT p50                {:>10.1} ms\n",
+            self.ttft_ms.p50
+        ));
+        out.push_str(&format!(
+            "mean occupancy          {:>10.2}\n",
+            self.mean_occupancy
+        ));
+        out.push_str(&format!(
+            "simulated accel time    {:>10.2} ms ({:.1} tok/s)\n",
+            self.simulated_accel_ms, self.simulated_tokens_per_s
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::compute(&samples).unwrap();
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p90, 90.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_samples_none() {
+        assert!(Percentiles::compute(&[]).is_none());
+    }
+
+    #[test]
+    fn single_sample() {
+        let p = Percentiles::compute(&[7.0]).unwrap();
+        assert_eq!(p.p50, 7.0);
+        assert_eq!(p.p99, 7.0);
+    }
+}

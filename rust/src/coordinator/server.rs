@@ -1,0 +1,178 @@
+//! The serving loop: queue → batcher → engine step → sample → retire.
+
+use super::batcher::Batcher;
+use super::metrics::{Percentiles, ServeMetrics};
+use super::session::Session;
+use crate::model::{tiny, LlmConfig, Request};
+use crate::runtime::Engine;
+use crate::sim::{layer_sched, ArchConfig};
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Batch variant to run (must be a compiled variant). `None` picks the
+    /// largest available.
+    pub batch: Option<usize>,
+    /// Safety cap on engine iterations (0 = unlimited).
+    pub max_iterations: u64,
+    /// Model config used for the simulated-accelerator metrics.
+    pub sim_model: LlmConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            batch: None,
+            max_iterations: 0,
+            sim_model: LlmConfig::llama2_7b(),
+        }
+    }
+}
+
+/// Result of a serving run.
+pub struct ServeReport {
+    pub sessions: Vec<Session>,
+    pub metrics: ServeMetrics,
+}
+
+/// The decode server.
+pub struct Server<'e> {
+    engine: &'e Engine,
+    opts: ServeOptions,
+}
+
+impl<'e> Server<'e> {
+    pub fn new(engine: &'e Engine, opts: ServeOptions) -> Self {
+        Server { engine, opts }
+    }
+
+    /// Serve a request stream to completion (arrival times are honoured in
+    /// iteration order: a request is only admittable once the wall clock
+    /// passes its `arrival_ms`).
+    pub fn serve(&self, requests: Vec<Request>) -> Result<ServeReport> {
+        let batch = match self.opts.batch {
+            Some(b) => b,
+            None => *self
+                .engine
+                .batch_variants()
+                .last()
+                .ok_or_else(|| anyhow!("no batch variants"))?,
+        };
+        let n_ctx = self.engine.manifest.n_ctx;
+        let vocab = self.engine.manifest.vocab;
+        let mut batcher = Batcher::new(batch, n_ctx);
+        let mut state = self.engine.new_state(batch)?;
+
+        let mut pending: std::collections::VecDeque<Request> = requests.into();
+        let t0 = Instant::now();
+        let mut iteration = 0u64;
+        let mut step_ms: Vec<f64> = Vec::new();
+        let mut occupancy_acc = 0.0;
+        let mut sim_cycles: u64 = 0;
+        let arch = ArchConfig::default();
+        // iteration timestamps for latency accounting
+        let mut iter_end_ms: Vec<f64> = Vec::new();
+
+        loop {
+            // admit every request whose arrival time has passed
+            let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+            while let Some(r) = pending.front() {
+                if r.arrival_ms as f64 <= now_ms {
+                    let r = pending.pop_front().unwrap();
+                    if batcher.submit(r).is_err() {
+                        // rejected (oversized); drop
+                    }
+                } else {
+                    break;
+                }
+            }
+            batcher.admit(iteration);
+            if batcher.is_drained() {
+                if pending.is_empty() {
+                    break;
+                }
+                // idle until the next arrival
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                continue;
+            }
+
+            let (tokens, positions, active) = batcher.gather_inputs();
+            occupancy_acc += batcher.occupancy();
+
+            let ts = Instant::now();
+            let logits = self.engine.decode_step(&mut state, &tokens, &positions)?;
+            step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+
+            // simulated accelerator cost for this step: one decode step at
+            // the largest live context in the batch
+            let max_ctx = positions
+                .iter()
+                .zip(&active)
+                .filter(|(_, a)| **a)
+                .map(|(p, _)| *p as usize + 1)
+                .max()
+                .unwrap_or(1);
+            sim_cycles +=
+                layer_sched::simulate_token(&arch, &self.opts.sim_model, max_ctx).total_cycles;
+
+            // greedy sample per lane
+            let samples: Vec<u32> = (0..batch)
+                .map(|i| tiny::argmax(&logits[i * vocab..(i + 1) * vocab]) as u32)
+                .collect();
+            batcher.scatter_outputs(&samples, iteration);
+            iter_end_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+
+            iteration += 1;
+            if self.opts.max_iterations > 0 && iteration >= self.opts.max_iterations {
+                break;
+            }
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let sessions = batcher.finished;
+        let total_tokens: usize = sessions.iter().map(|s| s.generated.len()).sum();
+        let at_ms = |it: u64| -> f64 {
+            iter_end_ms
+                .get(it as usize)
+                .copied()
+                .unwrap_or(wall_s * 1e3)
+        };
+        let latencies: Vec<f64> = sessions
+            .iter()
+            .filter_map(|s| s.finished_at.map(|f| at_ms(f) - at_ms(s.admitted_at) + 0.0))
+            .collect();
+        let ttfts: Vec<f64> = sessions
+            .iter()
+            .filter_map(|s| s.first_token_at.map(|f| at_ms(f) - at_ms(s.admitted_at)))
+            .collect();
+
+        let sim_ms = arch.cycles_to_ms(sim_cycles);
+        let metrics = ServeMetrics {
+            requests: sessions.len(),
+            total_tokens_generated: total_tokens,
+            iterations: iteration,
+            wall_s,
+            step_ms: Percentiles::compute(&step_ms)
+                .unwrap_or(Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }),
+            request_latency_ms: Percentiles::compute(&latencies)
+                .unwrap_or(Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }),
+            ttft_ms: Percentiles::compute(&ttfts)
+                .unwrap_or(Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }),
+            mean_occupancy: if iteration > 0 {
+                occupancy_acc / iteration as f64
+            } else {
+                0.0
+            },
+            tokens_per_s: total_tokens as f64 / wall_s,
+            simulated_accel_ms: sim_ms,
+            simulated_tokens_per_s: if sim_ms > 0.0 {
+                total_tokens as f64 / (sim_ms / 1e3)
+            } else {
+                0.0
+            },
+        };
+        Ok(ServeReport { sessions, metrics })
+    }
+}

@@ -1,0 +1,157 @@
+//! Per-request decode sessions.
+
+use crate::model::Request;
+
+/// Lifecycle phase of a session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Feeding prompt tokens (one per engine step — decode-path prefill,
+    /// matching the decode-only accelerator).
+    Prefill,
+    /// Sampling new tokens.
+    Decode,
+    /// All tokens generated.
+    Finished,
+}
+
+/// One request being decoded on a lane.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub request: Request,
+    /// Next position to write in the lane's KV cache.
+    pub pos: usize,
+    /// Generated tokens so far.
+    pub generated: Vec<u32>,
+    /// Iteration index at which the session was admitted.
+    pub admitted_at: u64,
+    /// Iteration of first generated token (TTFT accounting).
+    pub first_token_at: Option<u64>,
+    /// Iteration at which the session finished.
+    pub finished_at: Option<u64>,
+}
+
+impl Session {
+    pub fn new(request: Request, admitted_at: u64) -> Self {
+        assert!(!request.prompt.is_empty(), "empty prompt");
+        assert!(request.gen_len >= 1, "gen_len must be ≥ 1");
+        Session {
+            request,
+            pos: 0,
+            generated: Vec::new(),
+            admitted_at,
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn phase(&self) -> SessionPhase {
+        if self.generated.len() >= self.request.gen_len {
+            SessionPhase::Finished
+        } else if self.pos < self.request.prompt.len() {
+            SessionPhase::Prefill
+        } else {
+            SessionPhase::Decode
+        }
+    }
+
+    /// The token to feed at the current position: prompt token during
+    /// prefill, last sampled token during decode.
+    pub fn next_input(&self) -> u32 {
+        if self.pos < self.request.prompt.len() {
+            self.request.prompt[self.pos]
+        } else {
+            *self
+                .generated
+                .last()
+                .expect("decode phase requires a sampled token")
+        }
+    }
+
+    /// Record the outcome of one engine step. During prefill before the
+    /// last prompt token, logits are discarded; otherwise `sampled` is
+    /// appended. Returns `true` if the session just finished.
+    pub fn advance(&mut self, sampled: u32, iteration: u64) -> bool {
+        let prompt_len = self.request.prompt.len();
+        let was_last_prompt_or_decode = self.pos + 1 >= prompt_len;
+        self.pos += 1;
+        if was_last_prompt_or_decode {
+            self.generated.push(sampled);
+            if self.first_token_at.is_none() {
+                self.first_token_at = Some(iteration);
+            }
+            if self.generated.len() >= self.request.gen_len {
+                self.finished_at = Some(iteration);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Total context this session will occupy (capacity check).
+    pub fn max_context(&self) -> usize {
+        self.request.prompt.len() + self.request.gen_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: &[u32], gen_len: usize) -> Request {
+        Request {
+            id: 0,
+            prompt: prompt.to_vec(),
+            gen_len,
+            arrival_ms: 0,
+        }
+    }
+
+    #[test]
+    fn phase_progression() {
+        let mut s = Session::new(req(&[1, 2, 3], 2), 0);
+        assert_eq!(s.phase(), SessionPhase::Prefill);
+        assert_eq!(s.next_input(), 1);
+        assert!(!s.advance(99, 0)); // fed token 1, logits discarded
+        assert_eq!(s.next_input(), 2);
+        assert!(!s.advance(99, 1));
+        assert_eq!(s.next_input(), 3);
+        assert!(!s.advance(42, 2)); // last prompt token → first sample
+        assert_eq!(s.phase(), SessionPhase::Decode);
+        assert_eq!(s.generated, vec![42]);
+        assert_eq!(s.next_input(), 42);
+        assert!(s.advance(43, 3)); // second sample → finished
+        assert_eq!(s.phase(), SessionPhase::Finished);
+        assert_eq!(s.generated, vec![42, 43]);
+        assert_eq!(s.finished_at, Some(3));
+    }
+
+    #[test]
+    fn first_token_recorded_once() {
+        let mut s = Session::new(req(&[7], 3), 5);
+        s.advance(1, 10);
+        s.advance(2, 11);
+        s.advance(3, 12);
+        assert_eq!(s.first_token_at, Some(10));
+        assert_eq!(s.finished_at, Some(12));
+    }
+
+    #[test]
+    fn single_token_prompt_samples_immediately() {
+        let mut s = Session::new(req(&[5], 1), 0);
+        assert_eq!(s.next_input(), 5);
+        assert!(s.advance(9, 0));
+        assert_eq!(s.generated, vec![9]);
+    }
+
+    #[test]
+    fn max_context_accounts_prompt_and_generation() {
+        let s = Session::new(req(&[1, 2, 3, 4], 10), 0);
+        assert_eq!(s.max_context(), 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        Session::new(req(&[], 1), 0);
+    }
+}

@@ -1,0 +1,260 @@
+//! LUT-based exponential — Eqs. (9)–(10) of the paper.
+//!
+//! SwiftKV's rescale factors `α = exp(μ−s)` and `β = exp(s−μ)` always lie
+//! in `(0, 1]` (the argument is ≤ 0), so the hardware computes
+//!
+//! ```text
+//! exp(x) = 2^{x·log₂e} = 2^{n+f},   n ∈ Z⁻, f ∈ (−1, 0]
+//! ```
+//!
+//! where `2^n` is a bit shift and `2^f` comes from a 32-entry lookup table
+//! with linear (secant) interpolation: `f = f₁ + f₂` with `f₁` the 5 most
+//! significant fractional bits (LUT index `i ∈ {0..31}`) and `f₂` the
+//! remaining 12 bits; `LUT[i] = 2^{−i/32}` and
+//!
+//! ```text
+//! 2^f = δᵢ·f₂ + LUT[i]                                   (Eq. 10)
+//! ```
+//!
+//! With secant slopes the worst-case relative interpolation error of
+//! `2^{−x}` over a 1/32 interval is `(ln2/32)²/8 ≈ 5.865e-5 = 0.00586 %` —
+//! exactly the figure the paper reports (§V). The unit tests and exhibit
+//! E8 assert this.
+
+use super::q1517::{Fxp32, FRAC_BITS};
+
+/// Internal LUT precision: Q2.30 (values in (0.5, 1] need 1 integer bit;
+/// 30 fractional bits keep quantization noise ~1e-9, far below the
+/// 5.9e-5 interpolation error so the paper's error figure is preserved).
+const LUT_FRAC: u32 = 30;
+/// Index bits (f₁): 32-entry table.
+const INDEX_BITS: u32 = 5;
+/// Remaining fractional bits (f₂) used for interpolation.
+const F2_BITS: u32 = FRAC_BITS - INDEX_BITS; // 12
+
+/// The 5-bit LUT + secant-slope exponential unit of the SwiftKV core.
+///
+/// One instance models one hardware exp unit; construction precomputes the
+/// ROM contents exactly as synthesis would.
+#[derive(Debug, Clone)]
+pub struct Exp2Lut {
+    /// `LUT[i] = round(2^{−i/32} · 2^30)` for `i ∈ 0..=32` (entry 32 = 0.5
+    /// exists only to form the last secant slope).
+    lut: [i64; 33],
+    /// Secant differences `LUT[i+1] − LUT[i]` (negative), Q2.30.
+    diff: [i64; 32],
+    /// `log₂e` in Q15.17.
+    log2e: i64,
+}
+
+impl Default for Exp2Lut {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Exp2Lut {
+    /// Build the ROM: `LUT[i] = 2^{−i/32}` in Q2.30 plus secant slopes.
+    pub fn new() -> Self {
+        let mut lut = [0i64; 33];
+        for (i, e) in lut.iter_mut().enumerate() {
+            *e = ((-(i as f64) / 32.0).exp2() * (1i64 << LUT_FRAC) as f64).round() as i64;
+        }
+        let mut diff = [0i64; 32];
+        for i in 0..32 {
+            diff[i] = lut[i + 1] - lut[i];
+        }
+        let log2e = (std::f64::consts::LOG2_E * (1i64 << FRAC_BITS) as f64).round() as i64;
+        Exp2Lut { lut, diff, log2e }
+    }
+
+    /// `2^f` for `f ∈ (−1, 0]` given as the magnitude's 17 fractional bits
+    /// (`frac17 = −f · 2^17`). Returns Q2.30. This is Eq. (10) verbatim:
+    /// top 5 bits index the LUT, bottom 12 bits drive the interpolation.
+    #[inline]
+    pub fn pow2_neg_frac_q30(&self, frac17: u32) -> i64 {
+        debug_assert!(frac17 < (1 << FRAC_BITS));
+        let i = (frac17 >> F2_BITS) as usize; // f₁: 5 MSBs
+        let f2 = (frac17 & ((1 << F2_BITS) - 1)) as i64; // f₂: 12 LSBs
+        // δᵢ·f₂ + LUT[i]; δᵢ is diff[i]/2^12, folded into the shift.
+        self.lut[i] + ((self.diff[i] * f2) >> F2_BITS)
+    }
+
+    /// `2^f` for `f ∈ (−1, 0]`, Q15.17 in/out (test/diagnostic entry).
+    #[inline]
+    pub fn pow2_neg_frac(&self, f: Fxp32) -> Fxp32 {
+        debug_assert!(f.raw() <= 0 && f.raw() > -(1 << FRAC_BITS));
+        let frac17 = (-f.raw()) as u32;
+        let q30 = self.pow2_neg_frac_q30(frac17);
+        Fxp32::from_raw(q30_to_q17(q30))
+    }
+
+    /// `exp(x)` for `x ≤ 0` — the full Eq. (9) datapath:
+    /// `u = x·log₂e`, split into integer `n` (bit shift) and fraction `f`
+    /// (LUT + interpolation). Arguments > 0 are clamped to 0 (the SwiftKV
+    /// recurrence never produces them; hardware would flag this).
+    #[inline]
+    pub fn exp_neg(&self, x: Fxp32) -> Fxp32 {
+        if x.raw() >= 0 {
+            return Fxp32::ONE;
+        }
+        // u = x·log2e in Q15.17, computed on the shared multiplier:
+        // (Q17 × Q17) >> 17 with round-to-nearest.
+        let wide = x.raw() as i64 * self.log2e;
+        let u = -((wide + (1 << (FRAC_BITS - 1))) >> FRAC_BITS); // magnitude, ≥ 0
+        let n = (u >> FRAC_BITS) as u32; // integer part → shift amount
+        let frac17 = (u & ((1 << FRAC_BITS) - 1)) as u32;
+        if n >= 31 {
+            return Fxp32::ZERO; // underflow: exp(x) < 2^-31
+        }
+        let q30 = self.pow2_neg_frac_q30(frac17);
+        // combine: (2^f) >> n, then Q2.30 → Q15.17 with rounding
+        Fxp32::from_raw(q30_to_q17(q30 >> n))
+    }
+
+    /// Maximum relative error of the `2^f` approximation over `(−1, 0]`,
+    /// swept at every representable Q15.17 point (exhibit **E8**).
+    pub fn max_relative_error(&self) -> f64 {
+        let mut max_rel = 0.0f64;
+        for frac17 in 0..(1u32 << FRAC_BITS) {
+            let approx = self.pow2_neg_frac_q30(frac17) as f64 / (1i64 << LUT_FRAC) as f64;
+            let exact = (-(frac17 as f64) / (1u32 << FRAC_BITS) as f64).exp2();
+            let rel = ((approx - exact) / exact).abs();
+            if rel > max_rel {
+                max_rel = rel;
+            }
+        }
+        max_rel
+    }
+}
+
+/// Ablation helper: max relative error of a `bits`-bit LUT + secant
+/// interpolation over (−1, 0] (the paper chose 5 bits; §III). Pure f64
+/// construction — used by the `ablation_lut` example and DESIGN.md's
+/// design-choice discussion. Interpolation error scales as `h²/8·(ln2)²`
+/// with `h = 2^-bits`, so each extra index bit buys ~4×.
+pub fn lut_ablation_error(bits: u32) -> f64 {
+    assert!((1..=10).contains(&bits));
+    let entries = 1usize << bits;
+    let lut: Vec<f64> = (0..=entries)
+        .map(|i| (-(i as f64) / entries as f64).exp2())
+        .collect();
+    let mut max_rel = 0.0f64;
+    // sweep at fine resolution between knots
+    let steps = 1usize << 17;
+    for j in 0..steps {
+        let f = j as f64 / steps as f64; // magnitude of the fraction
+        let idx = ((f * entries as f64) as usize).min(entries - 1);
+        let frac = f * entries as f64 - idx as f64;
+        let approx = lut[idx] + (lut[idx + 1] - lut[idx]) * frac;
+        let exact = (-f).exp2();
+        let rel = ((approx - exact) / exact).abs();
+        if rel > max_rel {
+            max_rel = rel;
+        }
+    }
+    max_rel
+}
+
+/// Q2.30 → Q15.17 with round-to-nearest.
+#[inline]
+fn q30_to_q17(q30: i64) -> i32 {
+    ((q30 + (1 << (LUT_FRAC - FRAC_BITS - 1))) >> (LUT_FRAC - FRAC_BITS)) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_endpoints() {
+        let lut = Exp2Lut::new();
+        // 2^0 = 1
+        assert_eq!(lut.pow2_neg_frac(Fxp32::ZERO), Fxp32::ONE);
+        // 2^-0.5 = 0.70710678
+        let half = lut.pow2_neg_frac(Fxp32::from_f64(-0.5)).to_f64();
+        assert!((half - 0.5f64.sqrt()).abs() < 1e-4, "{half}");
+    }
+
+    #[test]
+    fn exp_matches_float_reference() {
+        let lut = Exp2Lut::new();
+        for i in 0..=1000 {
+            let x = -10.0 * i as f64 / 1000.0;
+            let got = lut.exp_neg(Fxp32::from_f64(x)).to_f64();
+            let want = x.exp();
+            assert!(
+                (got - want).abs() < 1e-4 + want * 1e-4,
+                "exp({x}): got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_zero_and_positive_clamp() {
+        let lut = Exp2Lut::new();
+        assert_eq!(lut.exp_neg(Fxp32::ZERO), Fxp32::ONE);
+        assert_eq!(lut.exp_neg(Fxp32::from_f64(3.0)), Fxp32::ONE);
+    }
+
+    #[test]
+    fn exp_underflows_to_zero() {
+        let lut = Exp2Lut::new();
+        assert_eq!(lut.exp_neg(Fxp32::from_f64(-30.0)), Fxp32::ZERO);
+        assert_eq!(lut.exp_neg(Fxp32::from_f64(-1000.0)), Fxp32::ZERO);
+    }
+
+    #[test]
+    fn exp_output_in_unit_interval() {
+        // α, β ∈ (0, 1] — the property §III relies on for fixed point.
+        let lut = Exp2Lut::new();
+        for i in 0..2000 {
+            let x = -20.0 * i as f64 / 2000.0;
+            let y = lut.exp_neg(Fxp32::from_f64(x));
+            assert!(y.raw() >= 0 && y <= Fxp32::ONE, "exp({x}) = {y}");
+        }
+    }
+
+    #[test]
+    fn exp_monotonic_nonincreasing_in_magnitude() {
+        let lut = Exp2Lut::new();
+        let mut prev = Fxp32::ONE;
+        for i in 0..=4000 {
+            let x = -8.0 * i as f64 / 4000.0;
+            let y = lut.exp_neg(Fxp32::from_f64(x));
+            assert!(y <= prev, "non-monotonic at x={x}");
+            prev = y;
+        }
+    }
+
+    /// Ablation: the 5-bit choice is the smallest LUT meeting the 1e-5
+    /// FXP32 resolution target; 4 bits misses it by 4×, 6 bits wastes ROM.
+    #[test]
+    fn lut_width_ablation() {
+        let e4 = super::lut_ablation_error(4);
+        let e5 = super::lut_ablation_error(5);
+        let e6 = super::lut_ablation_error(6);
+        assert!(e4 > 2e-4 && e4 < 3e-4, "{e4}");
+        assert!(e5 > 5e-5 && e5 < 7e-5, "{e5}"); // the paper's 0.00586 %
+        assert!(e6 > 1.2e-5 && e6 < 2e-5, "{e6}");
+        // quadratic scaling: each bit ≈ 4×
+        assert!((e4 / e5 - 4.0).abs() < 0.5);
+        assert!((e5 / e6 - 4.0).abs() < 0.5);
+    }
+
+    /// Exhibit E8: the paper reports a max relative error of 0.00586 %
+    /// for the LUT+interpolation over (−1, 0].
+    #[test]
+    fn max_relative_error_matches_paper() {
+        let lut = Exp2Lut::new();
+        let err = lut.max_relative_error();
+        // (ln2/32)²/8 = 5.865e-5 → 0.005865 %
+        assert!(err < 6.0e-5, "err = {err}");
+        assert!(err > 5.5e-5, "err = {err} suspiciously low — wrong sweep?");
+        let pct = err * 100.0;
+        assert!(
+            (pct - 0.00586).abs() < 0.0002,
+            "paper: 0.00586 %, measured {pct:.5} %"
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! FXP32 **Q15.17** fixed-point arithmetic — the paper's attention datapath.
+//!
+//! SwiftKV runs the whole attention recurrence (Eqs. 5–8) in 32-bit
+//! fixed point with 17 fractional bits so that the multiply–accumulate
+//! units used for low-bit integer GEMV can be reused for high-precision
+//! attention (§III, §IV-B). This module is the *bit-exact software model*
+//! of that datapath:
+//!
+//! - [`q1517::Fxp32`] — saturating Q15.17 scalar arithmetic,
+//! - [`exp2lut::Exp2Lut`] — the shift + 5-bit-LUT + linear-interpolation
+//!   exponential of Eqs. (9)–(10),
+//! - [`vector`] — dot products and AXPY-style vector updates as executed
+//!   by the Public MAC Array.
+
+pub mod exp2lut;
+pub mod q1517;
+pub mod vector;
+
+pub use exp2lut::Exp2Lut;
+pub use q1517::{Fxp32, FRAC_BITS, ONE, RESOLUTION};

@@ -1,0 +1,312 @@
+//! Q15.17 saturating fixed-point scalar.
+//!
+//! Layout: 1 sign bit, 14 integer bits, 17 fractional bits (the paper's
+//! "FXP32, Q15.17"). Resolution is 2⁻¹⁷ ≈ 7.63e-6, which is what gives the
+//! paper its "precision better than 10⁻⁵" claim for attention.
+//!
+//! All arithmetic saturates instead of wrapping: DSP48E2 accumulators are
+//! wider than 32 bits internally and the RTL clamps on writeback, so
+//! saturation (not two's-complement wraparound) is the faithful model.
+
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Number of fractional bits in the Q15.17 format.
+pub const FRAC_BITS: u32 = 17;
+/// The value 1.0 in raw Q15.17 representation.
+pub const ONE: i32 = 1 << FRAC_BITS;
+/// Smallest representable increment (2⁻¹⁷).
+pub const RESOLUTION: f64 = 1.0 / ONE as f64;
+
+/// A Q15.17 fixed-point number stored in an `i32`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Fxp32(pub i32);
+
+impl Fxp32 {
+    pub const ZERO: Fxp32 = Fxp32(0);
+    pub const ONE: Fxp32 = Fxp32(ONE);
+    pub const MAX: Fxp32 = Fxp32(i32::MAX);
+    pub const MIN: Fxp32 = Fxp32(i32::MIN);
+
+    /// Construct from raw Q15.17 bits.
+    #[inline]
+    pub const fn from_raw(raw: i32) -> Self {
+        Fxp32(raw)
+    }
+
+    /// Raw Q15.17 bits.
+    #[inline]
+    pub const fn raw(self) -> i32 {
+        self.0
+    }
+
+    /// Quantize an `f64` to Q15.17 (round-to-nearest, saturating).
+    #[inline]
+    pub fn from_f64(x: f64) -> Self {
+        let scaled = (x * ONE as f64).round();
+        if scaled >= i32::MAX as f64 {
+            Fxp32::MAX
+        } else if scaled <= i32::MIN as f64 {
+            Fxp32::MIN
+        } else {
+            Fxp32(scaled as i32)
+        }
+    }
+
+    /// Quantize an `f32` to Q15.17.
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        Self::from_f64(x as f64)
+    }
+
+    /// Exact conversion back to `f64`.
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 * RESOLUTION
+    }
+
+    /// Lossy conversion to `f32`.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32
+    }
+
+    /// Saturating addition (DSP post-adder with clamp).
+    #[inline]
+    pub fn sat_add(self, rhs: Self) -> Self {
+        Fxp32(self.0.saturating_add(rhs.0))
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sat_sub(self, rhs: Self) -> Self {
+        Fxp32(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Q15.17 × Q15.17 → Q15.17 with round-to-nearest and saturation.
+    ///
+    /// Models the 4-DSP 32×32 fixed-point multiply of §IV-B: the 64-bit
+    /// product is rounded at bit 17 and clamped into 32 bits.
+    #[inline]
+    pub fn sat_mul(self, rhs: Self) -> Self {
+        let wide = self.0 as i64 * rhs.0 as i64;
+        // round-to-nearest at the 17-bit boundary
+        let rounded = (wide + (1i64 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        Fxp32(clamp_i64(rounded))
+    }
+
+    /// Q15.17 ÷ Q15.17 → Q15.17 (iterative divider; round-to-nearest).
+    #[inline]
+    pub fn sat_div(self, rhs: Self) -> Self {
+        if rhs.0 == 0 {
+            return if self.0 >= 0 { Fxp32::MAX } else { Fxp32::MIN };
+        }
+        let num = (self.0 as i64) << FRAC_BITS;
+        let den = rhs.0 as i64;
+        // round-to-nearest division
+        let half = den.abs() / 2;
+        let q = if (num >= 0) == (den > 0) {
+            (num + if num >= 0 { half } else { -half }) / den
+        } else {
+            (num - if num >= 0 { half } else { -half }) / den
+        };
+        Fxp32(clamp_i64(q))
+    }
+
+    /// Absolute value (saturating at `i32::MIN`).
+    #[inline]
+    pub fn abs(self) -> Self {
+        Fxp32(self.0.saturating_abs())
+    }
+
+    /// Max of two values.
+    #[inline]
+    pub fn max(self, rhs: Self) -> Self {
+        if self.0 >= rhs.0 {
+            self
+        } else {
+            rhs
+        }
+    }
+
+    /// Min of two values.
+    #[inline]
+    pub fn min(self, rhs: Self) -> Self {
+        if self.0 <= rhs.0 {
+            self
+        } else {
+            rhs
+        }
+    }
+
+    /// Arithmetic shift right (divide by 2ⁿ with truncation toward −∞),
+    /// the hardware's `2^{-n}` scaling step in Eq. (9).
+    #[inline]
+    pub fn shr(self, n: u32) -> Self {
+        if n >= 31 {
+            Fxp32(self.0 >> 31)
+        } else {
+            Fxp32(self.0 >> n)
+        }
+    }
+
+    /// Saturating shift left (multiply by 2ⁿ).
+    #[inline]
+    pub fn shl(self, n: u32) -> Self {
+        let wide = (self.0 as i64) << n.min(62);
+        Fxp32(clamp_i64(wide))
+    }
+}
+
+#[inline]
+fn clamp_i64(x: i64) -> i32 {
+    if x > i32::MAX as i64 {
+        i32::MAX
+    } else if x < i32::MIN as i64 {
+        i32::MIN
+    } else {
+        x as i32
+    }
+}
+
+impl Add for Fxp32 {
+    type Output = Fxp32;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        self.sat_add(rhs)
+    }
+}
+
+impl Sub for Fxp32 {
+    type Output = Fxp32;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        self.sat_sub(rhs)
+    }
+}
+
+impl Mul for Fxp32 {
+    type Output = Fxp32;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        self.sat_mul(rhs)
+    }
+}
+
+impl Div for Fxp32 {
+    type Output = Fxp32;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        self.sat_div(rhs)
+    }
+}
+
+impl Neg for Fxp32 {
+    type Output = Fxp32;
+    #[inline]
+    fn neg(self) -> Self {
+        Fxp32(self.0.saturating_neg())
+    }
+}
+
+impl fmt::Debug for Fxp32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Fxp32({:.6} raw={})", self.to_f64(), self.0)
+    }
+}
+
+impl fmt::Display for Fxp32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}", self.to_f64())
+    }
+}
+
+impl From<f32> for Fxp32 {
+    fn from(x: f32) -> Self {
+        Fxp32::from_f32(x)
+    }
+}
+
+impl From<f64> for Fxp32 {
+    fn from(x: f64) -> Self {
+        Fxp32::from_f64(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_resolution() {
+        // Q15.17 resolution is 2^-17 < 1e-5: the paper's precision claim.
+        for &x in &[0.0, 1.0, -1.0, 0.5, 3.14159, -2.71828, 100.25, -999.875] {
+            let q = Fxp32::from_f64(x);
+            assert!((q.to_f64() - x).abs() <= RESOLUTION / 2.0 + 1e-12, "x={x}");
+        }
+        assert!(RESOLUTION < 1e-5);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        assert_eq!(Fxp32::from_f64(1.0).raw(), ONE);
+        assert_eq!(Fxp32::from_f64(-1.0).raw(), -ONE);
+        assert_eq!(Fxp32::from_f64(0.5).raw(), ONE / 2);
+        assert_eq!(Fxp32::ZERO.raw(), 0);
+    }
+
+    #[test]
+    fn mul_matches_float() {
+        let cases = [(1.5, 2.0), (-3.25, 0.125), (7.75, -7.75), (0.001, 0.001)];
+        for &(a, b) in &cases {
+            let q = Fxp32::from_f64(a) * Fxp32::from_f64(b);
+            assert!(
+                (q.to_f64() - a * b).abs() < 2.0 * RESOLUTION,
+                "{a}*{b} => {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn div_matches_float() {
+        let cases = [(1.0, 3.0), (-10.0, 7.0), (0.5, 0.25), (100.0, -9.0)];
+        for &(a, b) in &cases {
+            let q = Fxp32::from_f64(a) / Fxp32::from_f64(b);
+            assert!(
+                (q.to_f64() - a / b).abs() < 2.0 * RESOLUTION,
+                "{a}/{b} => {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn div_by_zero_saturates() {
+        assert_eq!(Fxp32::from_f64(1.0) / Fxp32::ZERO, Fxp32::MAX);
+        assert_eq!(Fxp32::from_f64(-1.0) / Fxp32::ZERO, Fxp32::MIN);
+    }
+
+    #[test]
+    fn saturation_add_mul() {
+        let big = Fxp32::from_f64(16000.0);
+        assert_eq!(big + big, Fxp32::MAX);
+        assert_eq!(big * big, Fxp32::MAX);
+        assert_eq!(-big - big, Fxp32::MIN);
+    }
+
+    #[test]
+    fn shifts() {
+        let x = Fxp32::from_f64(4.0);
+        assert_eq!(x.shr(2).to_f64(), 1.0);
+        assert_eq!(x.shl(2).to_f64(), 16.0);
+        assert_eq!(Fxp32::from_f64(12000.0).shl(4), Fxp32::MAX);
+    }
+
+    #[test]
+    fn ordering_matches_value() {
+        let a = Fxp32::from_f64(-3.5);
+        let b = Fxp32::from_f64(2.25);
+        assert!(a < b);
+        assert_eq!(a.max(b), b);
+        assert_eq!(a.min(b), a);
+    }
+}

@@ -1,0 +1,158 @@
+//! Vector operations of the Public MAC Array, in Q15.17.
+//!
+//! The SKV Unit's dot-product part computes `q·kᵗ` with a wide internal
+//! accumulator (DSP cascade), rounding once on writeback — modelled here by
+//! accumulating the 64-bit products and converting a single time. The
+//! update part performs the `Y ← αY + v` / `Y ← Y + βv` AXPY steps of
+//! Eqs. (6)–(7).
+
+use super::q1517::{Fxp32, FRAC_BITS};
+
+/// Dot product with a wide (i64) accumulator and a single rounding on
+/// writeback — the DSP-cascade behaviour of the MAC array.
+#[inline]
+pub fn dot(a: &[Fxp32], b: &[Fxp32]) -> Fxp32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4 independent accumulators let the compiler vectorize the widening
+    // multiply-add chain (§Perf)
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    for i in 0..chunks {
+        let k = 4 * i;
+        a0 += a[k].raw() as i64 * b[k].raw() as i64;
+        a1 += a[k + 1].raw() as i64 * b[k + 1].raw() as i64;
+        a2 += a[k + 2].raw() as i64 * b[k + 2].raw() as i64;
+        a3 += a[k + 3].raw() as i64 * b[k + 3].raw() as i64;
+    }
+    let mut acc: i64 = a0 + a1 + a2 + a3;
+    for i in 4 * chunks..n {
+        acc += a[i].raw() as i64 * b[i].raw() as i64;
+    }
+    // one rounding at the end: Q34 → Q17
+    let rounded = (acc + (1i64 << (FRAC_BITS - 1))) >> FRAC_BITS;
+    Fxp32::from_raw(rounded.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+}
+
+/// `y ← a·y + b·x` elementwise — the combined rescale-and-accumulate of the
+/// update part (covers both branches of Eqs. (6)–(7) with a ∈ {α, 1},
+/// b ∈ {β, 1}).
+#[inline]
+pub fn axpby_inplace(a: Fxp32, y: &mut [Fxp32], b: Fxp32, x: &[Fxp32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = a.sat_mul(*yi).sat_add(b.sat_mul(*xi));
+    }
+}
+
+/// `y ← y + b·x` (the β-branch of Eq. 6 — history untouched, one multiply
+/// per lane; §Perf specialization of `axpby_inplace`).
+#[inline]
+pub fn axpy_inplace(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let braw = b.raw() as i64;
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        let prod = (braw * xi.raw() as i64 + (1i64 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        *yi = yi.sat_add(Fxp32::from_raw(prod.clamp(i32::MIN as i64, i32::MAX as i64) as i32));
+    }
+}
+
+/// `y ← a·y + x` (the α-branch of Eq. 7 — one multiply per lane).
+#[inline]
+pub fn scale_axpy_inplace(a: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let araw = a.raw() as i64;
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        let prod = (araw * yi.raw() as i64 + (1i64 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        *yi = Fxp32::from_raw(prod.clamp(i32::MIN as i64, i32::MAX as i64) as i32).sat_add(*xi);
+    }
+}
+
+/// Scale a vector in place: `y ← a·y`.
+#[inline]
+pub fn scale_inplace(a: Fxp32, y: &mut [Fxp32]) {
+    for yi in y.iter_mut() {
+        *yi = a.sat_mul(*yi);
+    }
+}
+
+/// Elementwise divide by a scalar — the deferred one-time normalization of
+/// Eq. (8). Hardware computes `1/Z` once on the divide unit and multiplies.
+#[inline]
+pub fn div_scalar(y: &[Fxp32], z: Fxp32) -> Vec<Fxp32> {
+    // reciprocal once, then multiply (matches the pipelined divider usage)
+    y.iter().map(|yi| yi.sat_div(z)).collect()
+}
+
+/// Quantize an `f32` slice to Q15.17.
+pub fn quantize(xs: &[f32]) -> Vec<Fxp32> {
+    xs.iter().map(|&x| Fxp32::from_f32(x)).collect()
+}
+
+/// Dequantize a Q15.17 slice to `f32`.
+pub fn dequantize(xs: &[Fxp32]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qv(xs: &[f64]) -> Vec<Fxp32> {
+        xs.iter().map(|&x| Fxp32::from_f64(x)).collect()
+    }
+
+    #[test]
+    fn dot_matches_float() {
+        let a = qv(&[1.0, -2.5, 3.25, 0.125]);
+        let b = qv(&[0.5, 4.0, -1.0, 8.0]);
+        let want = 1.0 * 0.5 - 2.5 * 4.0 + 3.25 * -1.0 + 0.125 * 8.0;
+        let got = dot(&a, &b).to_f64();
+        assert!((got - want).abs() < 1e-4, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn dot_wide_accumulator_no_intermediate_overflow() {
+        // Intermediate sums exceed i32 range but the final value fits.
+        let a: Vec<Fxp32> = (0..128).map(|_| Fxp32::from_f64(100.0)).collect();
+        let mut b: Vec<Fxp32> = (0..128).map(|_| Fxp32::from_f64(100.0)).collect();
+        for x in b.iter_mut().skip(1).step_by(2) {
+            *x = Fxp32::from_f64(-100.0);
+        }
+        // pairs cancel → exact zero
+        assert_eq!(dot(&a, &b), Fxp32::ZERO);
+    }
+
+    #[test]
+    fn axpby_both_branches() {
+        // β-branch: y ← y + βx  (a = 1)
+        let mut y = qv(&[1.0, 2.0]);
+        axpby_inplace(Fxp32::ONE, &mut y, Fxp32::from_f64(0.5), &qv(&[4.0, -4.0]));
+        assert!((y[0].to_f64() - 3.0).abs() < 1e-4);
+        assert!((y[1].to_f64() - 0.0).abs() < 1e-4);
+        // α-branch: y ← αy + x  (b = 1)
+        let mut y = qv(&[4.0, -2.0]);
+        axpby_inplace(Fxp32::from_f64(0.25), &mut y, Fxp32::ONE, &qv(&[1.0, 1.0]));
+        assert!((y[0].to_f64() - 2.0).abs() < 1e-4);
+        assert!((y[1].to_f64() - 0.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn div_scalar_normalizes() {
+        let y = qv(&[2.0, 4.0, -6.0]);
+        let out = div_scalar(&y, Fxp32::from_f64(2.0));
+        let vals: Vec<f64> = out.iter().map(|x| x.to_f64()).collect();
+        assert!((vals[0] - 1.0).abs() < 1e-4);
+        assert!((vals[1] - 2.0).abs() < 1e-4);
+        assert!((vals[2] + 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quantize_roundtrip() {
+        let xs = [0.1f32, -0.9, 3.75, -100.0];
+        let back = dequantize(&quantize(&xs));
+        for (x, y) in xs.iter().zip(back.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! # SwiftKV
+//!
+//! Reproduction of *"SwiftKV: An Edge-Oriented Attention Algorithm and
+//! Multi-Head Accelerator for Fast, Efficient LLM Decoding"* (CS.AR 2026)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1** (build time): Pallas kernels for the single-pass SwiftKV
+//!   attention scan, decoder-RoPE recurrence and W4A8 GEMV
+//!   (`python/compile/kernels/`), checked against a pure-jnp oracle.
+//! - **L2** (build time): a JAX decoder model calling the kernels, lowered
+//!   once to HLO text (`python/compile/aot.py` → `artifacts/`).
+//! - **L3** (this crate): the decode coordinator, the PJRT runtime that
+//!   loads the AOT artifacts, bit-exact fixed-point models of the paper's
+//!   datapath ([`fxp`], [`attention`], [`rope`], [`quant`]), and a
+//!   cycle-level model of the SwiftKV-MHA accelerator ([`sim`]) plus the
+//!   baseline accelerators ([`baselines`]) used by the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod attention;
+pub mod baselines;
+pub mod coordinator;
+pub mod fxp;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod rope;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,123 @@
+//! `swiftkv` — leader binary: exhibit regeneration, accelerator
+//! simulation and the decode serving demo, all from one CLI.
+//!
+//! ```text
+//! swiftkv exhibits [--only fig7a|fig7b|table2|table3|table4|fig8a|fig8b|explut]
+//! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
+//! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0]
+//! swiftkv accuracy [--sequences 20] [--len 48]
+//! ```
+
+use swiftkv::coordinator::{ServeOptions, Server};
+use swiftkv::model::{LlmConfig, TinyModel, WeightStore, WorkloadGen, WorkloadSpec};
+use swiftkv::report;
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use swiftkv::sim::{layer_sched, ArchConfig};
+use swiftkv::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn model_by_name(name: &str) -> Result<LlmConfig, String> {
+    Ok(match name {
+        "llama2-7b" => LlmConfig::llama2_7b(),
+        "chatglm-6b" => LlmConfig::chatglm_6b(),
+        "llama3-8b" => LlmConfig::llama3_8b(),
+        "qwen3-8b" => LlmConfig::qwen3_8b(),
+        "tiny" => LlmConfig::tiny(),
+        other => return Err(format!("unknown model '{other}'")),
+    })
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse(
+        &[
+            "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
+        ],
+        &["help"],
+    )?;
+    let cmd = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("exhibits");
+    let arch = ArchConfig::default();
+
+    match cmd {
+        "exhibits" => {
+            let only = args.get("only");
+            let all: Vec<(&str, String)> = vec![
+                ("fig7a", report::fig7a(&arch)),
+                ("fig7b", report::fig7b(&arch)),
+                ("explut", report::exp_lut_error()),
+                ("table2", report::table2(&arch)),
+                ("fig8a", report::fig8a(&arch, &LlmConfig::llama2_7b(), 512)),
+                ("table3", report::table3(&arch)),
+                ("fig8b", report::fig8b(&arch)),
+                ("table4", report::table4(&arch)),
+            ];
+            for (name, text) in all {
+                if only.is_none_or(|o| o == name) {
+                    println!("{text}");
+                }
+            }
+        }
+        "simulate" => {
+            let cfg = model_by_name(args.get_or("model", "llama2-7b"))?;
+            let ctx = args.get_usize("ctx", 512)?;
+            let sim = layer_sched::simulate_token(&arch, &cfg, ctx);
+            println!(
+                "{} @ ctx {ctx}: {:.2} ms/token, {:.1} token/s ({} cycles)",
+                cfg.name, sim.latency_ms, sim.tokens_per_s, sim.total_cycles
+            );
+            println!("{}", report::fig8a(&arch, &cfg, ctx));
+        }
+        "serve" => {
+            if !artifacts_available() {
+                return Err("artifacts not built — run `make artifacts`".into());
+            }
+            let eng = Engine::load(&default_artifacts_dir()).map_err(|e| e.to_string())?;
+            let spec = WorkloadSpec {
+                num_requests: args.get_usize("requests", 16)?,
+                vocab: eng.manifest.vocab,
+                prompt_len: (4, 24),
+                gen_len: (8, 48),
+                mean_gap_ms: args.get_f64("gap-ms", 0.0)?,
+                seed: args.get_usize("seed", 0)? as u64,
+            };
+            let reqs = WorkloadGen::new(spec).generate();
+            let batch = args.get_usize("batch", 8)?;
+            let report = Server::new(
+                &eng,
+                ServeOptions {
+                    batch: Some(batch),
+                    max_iterations: 0,
+                    sim_model: LlmConfig::llama2_7b(),
+                },
+            )
+            .serve(reqs)
+            .map_err(|e| e.to_string())?;
+            println!("{}", report.metrics.format_table());
+        }
+        "accuracy" => {
+            if !artifacts_available() {
+                return Err("artifacts not built — run `make artifacts`".into());
+            }
+            let ws = WeightStore::load(&default_artifacts_dir()).map_err(|e| e.to_string())?;
+            let tm = TinyModel::load(&ws).map_err(|e| e.to_string())?;
+            let sequences = args.get_usize("sequences", 20)?;
+            let len = args.get_usize("len", 48)?;
+            let (table, _) = report::table1(&tm, sequences, len);
+            println!("{table}");
+        }
+        "help" | "--help" => {
+            println!("subcommands: exhibits | simulate | serve | accuracy");
+        }
+        other => return Err(format!("unknown subcommand '{other}'")),
+    }
+    Ok(())
+}

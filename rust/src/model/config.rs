@@ -1,0 +1,234 @@
+//! Model shape configurations.
+
+/// Decoder-only LLM shapes relevant to the accelerator schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (≠ n_heads under GQA/MQA).
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    /// Number of FFN weight matrices of each shape: gated MLPs (SwiGLU)
+    /// have two `d→ffn` and one `ffn→d`.
+    pub gated_mlp: bool,
+    pub vocab: usize,
+    pub rope_base: f64,
+}
+
+impl LlmConfig {
+    /// LLaMA2-7B — the paper's primary evaluation model.
+    pub fn llama2_7b() -> Self {
+        LlmConfig {
+            name: "Llama-2-7B",
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_head: 128,
+            d_ffn: 11008,
+            gated_mlp: true,
+            vocab: 32000,
+            rope_base: 10000.0,
+        }
+    }
+
+    /// ChatGLM-6B — the paper's second evaluation model (GLM block:
+    /// MQA-free 32-head attention, non-gated 4×d FFN, large vocab).
+    pub fn chatglm_6b() -> Self {
+        LlmConfig {
+            name: "ChatGLM-6B",
+            n_layers: 28,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_head: 128,
+            d_ffn: 16384,
+            gated_mlp: false,
+            vocab: 65024,
+            rope_base: 10000.0,
+        }
+    }
+
+    /// LLaMA3-8B (GQA: 8 KV heads) — listed in §IV-A as a target class.
+    pub fn llama3_8b() -> Self {
+        LlmConfig {
+            name: "Llama-3-8B",
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ffn: 14336,
+            gated_mlp: true,
+            vocab: 128256,
+            rope_base: 500000.0,
+        }
+    }
+
+    /// Qwen3-8B (GQA: 8 KV heads) — listed in §IV-A as a target class.
+    pub fn qwen3_8b() -> Self {
+        LlmConfig {
+            name: "Qwen3-8B",
+            n_layers: 36,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ffn: 12288,
+            gated_mlp: true,
+            vocab: 151936,
+            rope_base: 1000000.0,
+        }
+    }
+
+    /// The tiny AOT-compiled model the PJRT runtime actually serves.
+    pub fn tiny() -> Self {
+        LlmConfig {
+            name: "tiny",
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 8,
+            d_head: 32,
+            d_ffn: 768,
+            gated_mlp: true,
+            vocab: 512,
+            rope_base: 10000.0,
+        }
+    }
+
+    /// All full-size configs the paper references.
+    pub fn paper_models() -> Vec<LlmConfig> {
+        vec![
+            Self::llama2_7b(),
+            Self::chatglm_6b(),
+            Self::llama3_8b(),
+            Self::qwen3_8b(),
+        ]
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let ffn = self.d_ffn as u64;
+        let kv_dim = (self.n_kv_heads * self.d_head) as u64;
+        let attn = d * d // Wq
+            + 2 * d * kv_dim // Wk, Wv
+            + d * d; // Wo
+        let mlp = if self.gated_mlp {
+            2 * d * ffn + ffn * d
+        } else {
+            d * ffn + ffn * d
+        };
+        let norms = 2 * d;
+        let blocks = self.n_layers as u64 * (attn + mlp + norms);
+        let emb = self.vocab as u64 * d;
+        let head = self.vocab as u64 * d;
+        blocks + emb + head + d
+    }
+
+    /// Bytes of INT4 weight storage (plus per-channel f32 scales),
+    /// excluding the f32 embedding table (streamed separately).
+    pub fn weight_bytes_w4(&self) -> u64 {
+        // matrices quantized; norms/embeddings in f32
+        let d = self.d_model as u64;
+        let ffn = self.d_ffn as u64;
+        let kv_dim = (self.n_kv_heads * self.d_head) as u64;
+        let mut mat_params = 0u64;
+        let mut mat_cols = 0u64;
+        let attn_mats: [(u64, u64); 4] = [(d, d), (d, kv_dim), (d, kv_dim), (d, d)];
+        for (i, o) in attn_mats {
+            mat_params += i * o * self.n_layers as u64;
+            mat_cols += o * self.n_layers as u64;
+        }
+        let mlp_mats: Vec<(u64, u64)> = if self.gated_mlp {
+            vec![(d, ffn), (d, ffn), (ffn, d)]
+        } else {
+            vec![(d, ffn), (ffn, d)]
+        };
+        for (i, o) in mlp_mats {
+            mat_params += i * o * self.n_layers as u64;
+            mat_cols += o * self.n_layers as u64;
+        }
+        // lm head
+        mat_params += d * self.vocab as u64;
+        mat_cols += self.vocab as u64;
+        mat_params / 2 + mat_cols * 4
+    }
+
+    /// KV-cache bytes appended per token per layer (INT8 storage — the
+    /// SFU casts FXP32 → INT8 before the HBM write; see DESIGN.md).
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        2 * (self.n_kv_heads * self.d_head) as u64
+    }
+
+    /// Total KV bytes read per decode step at context length `n`.
+    pub fn kv_read_bytes(&self, n: usize) -> u64 {
+        self.n_layers as u64 * self.kv_bytes_per_token_layer() * n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_param_count_near_7b() {
+        let p = LlmConfig::llama2_7b().params();
+        assert!(
+            (6.5e9..7.1e9).contains(&(p as f64)),
+            "llama2-7b params = {p}"
+        );
+    }
+
+    #[test]
+    fn chatglm_param_count_near_6b() {
+        let p = LlmConfig::chatglm_6b().params();
+        assert!(
+            (5.8e9..6.9e9).contains(&(p as f64)),
+            "chatglm-6b params = {p}"
+        );
+    }
+
+    #[test]
+    fn llama3_param_count_near_8b() {
+        let p = LlmConfig::llama3_8b().params();
+        assert!((7.3e9..8.3e9).contains(&(p as f64)), "llama3-8b = {p}");
+    }
+
+    #[test]
+    fn w4_storage_roughly_half_param_count() {
+        let cfg = LlmConfig::llama2_7b();
+        let bytes = cfg.weight_bytes_w4();
+        // ~0.5 byte/param plus scale overhead
+        let per_param = bytes as f64 / cfg.params() as f64;
+        assert!((0.4..0.6).contains(&per_param), "bytes/param = {per_param}");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv() {
+        let mha = LlmConfig::llama2_7b();
+        let gqa = LlmConfig::llama3_8b();
+        assert!(gqa.kv_bytes_per_token_layer() < mha.kv_bytes_per_token_layer());
+        assert_eq!(
+            mha.kv_bytes_per_token_layer(),
+            2 * 32 * 128 // 2 (K+V) × heads × d_head × 1 byte
+        );
+    }
+
+    #[test]
+    fn kv_read_scales_linearly() {
+        let cfg = LlmConfig::llama2_7b();
+        assert_eq!(cfg.kv_read_bytes(1024), 2 * cfg.kv_read_bytes(512));
+    }
+
+    #[test]
+    fn tiny_matches_manifest_shapes() {
+        let t = LlmConfig::tiny();
+        assert_eq!(t.d_model, t.n_heads * t.d_head);
+        assert!(t.params() < 10_000_000);
+    }
+}

@@ -1,0 +1,22 @@
+//! LLM model descriptions and workload generation.
+//!
+//! [`config::LlmConfig`] captures the shapes the accelerator schedules
+//! against (the paper's targets: LLaMA2-7B, ChatGLM-6B, LLaMA3-8B,
+//! Qwen3-8B, plus the tiny AOT model served by the runtime), along with
+//! per-token operation and byte counts used by the throughput/efficiency
+//! exhibits. [`workload`] generates synthetic decode request streams for
+//! the coordinator and benches; [`tiny`] is the pure-Rust forward pass of
+//! the tiny model in both "desktop f32" and "accelerator W4A8+FXP32"
+//! numerics (the Table I experiment).
+
+pub mod config;
+pub mod ops;
+pub mod tiny;
+pub mod weights;
+pub mod workload;
+
+pub use config::LlmConfig;
+pub use ops::TokenCost;
+pub use tiny::{NumericsMode, TinyModel};
+pub use weights::WeightStore;
+pub use workload::{Request, WorkloadGen, WorkloadSpec};

@@ -1,0 +1,110 @@
+//! Per-token operation counting — the basis of the paper's GOPS numbers.
+//!
+//! §V: "for LLaMA2-7B, with a context length of 512, the number of
+//! operations required to generate a single token is 13.5 GOP", i.e.
+//! 2 ops (MAC = mul+add) per weight parameter plus the attention
+//! `qKᵀ`/`PV` work over the live context.
+
+use super::config::LlmConfig;
+
+/// Operation/byte cost of generating one token.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenCost {
+    /// GEMV multiply-adds ×2 (weight ops).
+    pub weight_ops: u64,
+    /// Attention qKᵀ + PV multiply-adds ×2 across heads/layers.
+    pub attention_ops: u64,
+    /// Weight bytes streamed from HBM (W4 packed + scales).
+    pub weight_bytes: u64,
+    /// KV-cache bytes read.
+    pub kv_bytes: u64,
+}
+
+impl TokenCost {
+    /// Cost of one decode step at context length `n`.
+    pub fn of(cfg: &LlmConfig, n: usize) -> TokenCost {
+        let d = cfg.d_model as u64;
+        let ffn = cfg.d_ffn as u64;
+        let kv_dim = (cfg.n_kv_heads * cfg.d_head) as u64;
+        let l = cfg.n_layers as u64;
+
+        let mut mat_ops = 0u64;
+        mat_ops += 2 * (d * d + 2 * d * kv_dim + d * d) * l; // QKVO
+        mat_ops += if cfg.gated_mlp {
+            2 * (2 * d * ffn + ffn * d) * l
+        } else {
+            2 * (d * ffn + ffn * d) * l
+        };
+        mat_ops += 2 * d * cfg.vocab as u64; // lm head
+
+        // per layer: qKᵀ (n·d_head MACs per head) + PV (same) over n tokens
+        let attn = 2 * 2 * (cfg.n_heads as u64) * (cfg.d_head as u64) * n as u64 * l;
+
+        TokenCost {
+            weight_ops: mat_ops,
+            attention_ops: attn,
+            weight_bytes: cfg.weight_bytes_w4(),
+            kv_bytes: cfg.kv_read_bytes(n),
+        }
+    }
+
+    /// Total GOP per token (the paper's 13.5 figure for LLaMA2-7B @512).
+    pub fn total_gop(&self) -> f64 {
+        (self.weight_ops + self.attention_ops) as f64 / 1e9
+    }
+
+    /// Throughput in GOPS for a given per-token latency.
+    pub fn gops_at(&self, token_latency_s: f64) -> f64 {
+        self.total_gop() / token_latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_matches_paper_13_5_gop() {
+        let cost = TokenCost::of(&LlmConfig::llama2_7b(), 512);
+        let gop = cost.total_gop();
+        assert!(
+            (gop - 13.5).abs() < 0.7,
+            "paper: 13.5 GOP/token, model: {gop:.2}"
+        );
+    }
+
+    #[test]
+    fn paper_throughput_composition() {
+        // §V: 13.5 GOP × 81.5 token/s ≈ 1100.3 GOPS
+        let cost = TokenCost::of(&LlmConfig::llama2_7b(), 512);
+        let gops = cost.gops_at(1.0 / 81.5);
+        assert!((gops - 1100.3).abs() < 60.0, "GOPS = {gops:.1}");
+    }
+
+    #[test]
+    fn attention_ops_linear_in_context() {
+        let cfg = LlmConfig::llama2_7b();
+        let a = TokenCost::of(&cfg, 256).attention_ops;
+        let b = TokenCost::of(&cfg, 512).attention_ops;
+        assert_eq!(2 * a, b);
+    }
+
+    #[test]
+    fn weight_ops_independent_of_context() {
+        let cfg = LlmConfig::chatglm_6b();
+        assert_eq!(
+            TokenCost::of(&cfg, 64).weight_ops,
+            TokenCost::of(&cfg, 4096).weight_ops
+        );
+    }
+
+    #[test]
+    fn weight_ops_track_param_count() {
+        for cfg in LlmConfig::paper_models() {
+            let cost = TokenCost::of(&cfg, 1);
+            let ratio = cost.weight_ops as f64 / (2.0 * cfg.params() as f64);
+            // embeddings/norms don't contribute GEMV ops → slightly < 1
+            assert!((0.9..=1.02).contains(&ratio), "{}: {ratio}", cfg.name);
+        }
+    }
+}

@@ -1,0 +1,408 @@
+//! Pure-Rust forward pass of the tiny AOT model, in two numerics modes.
+//!
+//! - [`NumericsMode::DesktopF32`] — "desktop" arithmetic: f32 GEMV over
+//!   dequantized W4A8 weights, f32 softmax attention. This is the
+//!   reference side of the paper's Table I comparison ("desktop results
+//!   using the same W4A8 precision").
+//! - [`NumericsMode::Accelerator`] — the SwiftKV-MHA datapath: exact
+//!   INT8×INT4 integer GEMV, FXP32 (Q15.17) single-pass attention with
+//!   the 5-bit-LUT exponential, decoder-RoPE recurrence.
+//!
+//! Running both modes over the same token stream and comparing Top-k
+//! logits reproduces Table I. The desktop mode additionally cross-checks
+//! the PJRT runtime (same weights, same math → near-identical logits).
+
+use super::weights::WeightStore;
+use crate::attention::{fxp_swiftkv, native, HeadProblem};
+use crate::fxp::Exp2Lut;
+use crate::quant::{gemv_w4a8, quantize_int8, Int4Matrix, QuantLinear};
+use crate::rope::RopeState;
+use anyhow::{bail, Result};
+
+/// Which datapath to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumericsMode {
+    /// f32 GEMV on dequantized weights + f32 softmax attention.
+    DesktopF32,
+    /// Integer GEMV + FXP32 LUT-exp SwiftKV attention.
+    Accelerator,
+}
+
+/// A W4A8 linear layer carried in both representations.
+struct DualLinear {
+    quant: QuantLinear,
+    dequant: Vec<f32>, // row-major [din, dout]
+    din: usize,
+}
+
+impl DualLinear {
+    fn load(ws: &WeightStore, name: &str) -> Result<DualLinear> {
+        let wq = ws.i8_vec(&format!("{name}.q"))?;
+        let scales = ws.f32_vec(&format!("{name}.scale"))?;
+        let shape = ws.shape(&format!("{name}.q"))?;
+        if shape.len() != 2 {
+            bail!("{name}: expected rank-2 weight");
+        }
+        let (din, dout) = (shape[0], shape[1]);
+        let mat = Int4Matrix::from_quantized(&wq, scales.clone(), din, dout);
+        let mut dequant = vec![0.0f32; din * dout];
+        for i in 0..din {
+            for j in 0..dout {
+                dequant[i * dout + j] = wq[i * dout + j] as f32 * scales[j];
+            }
+        }
+        let _ = dout;
+        Ok(DualLinear {
+            quant: QuantLinear::new(mat),
+            dequant,
+            din,
+        })
+    }
+
+    fn forward(&self, x: &[f32], _mode: NumericsMode) -> Vec<f32> {
+        assert_eq!(x.len(), self.din);
+        // Both modes share the *exact* W4A8 integer GEMV (INT8×INT4→INT32
+        // is exact on desktop hardware too — the paper compares "desktop
+        // results using the same W4A8 precision"). The two modes therefore
+        // differ ONLY in the attention datapath, which is precisely the
+        // contribution Table I isolates.
+        let xq = quantize_int8(x);
+        gemv_w4a8(&xq, &self.quant.weight)
+    }
+
+    /// Dequantized f32 weight view (diagnostics / error analysis).
+    #[allow(dead_code)]
+    fn dequant_weights(&self) -> &[f32] {
+        &self.dequant
+    }
+}
+
+struct LayerWeights {
+    attn_norm: Vec<f32>,
+    wq: DualLinear,
+    wk: DualLinear,
+    wv: DualLinear,
+    wo: DualLinear,
+    mlp_norm: Vec<f32>,
+    w_gate: DualLinear,
+    w_up: DualLinear,
+    w_down: DualLinear,
+}
+
+/// The tiny decoder with all weights resident.
+pub struct TinyModel {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub n_ctx: usize,
+    pub rope_base: f64,
+    embedding: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    final_norm: Vec<f32>,
+    lm_head: DualLinear,
+    lut: Exp2Lut,
+}
+
+/// Mutable per-sequence decode state (KV caches + RoPE recurrence).
+pub struct DecodeState {
+    /// `[layer][head][pos][d_head]` flattened K cache.
+    kc: Vec<f32>,
+    vc: Vec<f32>,
+    rope: RopeState,
+    pub pos: usize,
+    n_ctx: usize,
+    n_heads: usize,
+    d_head: usize,
+}
+
+impl DecodeState {
+    fn idx(&self, l: usize, h: usize, t: usize) -> usize {
+        ((l * self.n_heads + h) * self.n_ctx + t) * self.d_head
+    }
+
+    /// Contiguous `[n_ctx, d_head]` cache rows for (layer, head).
+    fn head_cache(&self, l: usize, h: usize) -> std::ops::Range<usize> {
+        let start = self.idx(l, h, 0);
+        start..start + self.n_ctx * self.d_head
+    }
+}
+
+impl TinyModel {
+    /// Load from the artifact weight store.
+    pub fn load(ws: &WeightStore) -> Result<TinyModel> {
+        let m = &ws.manifest;
+        let mut layers = Vec::with_capacity(m.n_layers);
+        for l in 0..m.n_layers {
+            let p = format!("layer{l}");
+            layers.push(LayerWeights {
+                attn_norm: ws.f32_vec(&format!("{p}.attn_norm"))?,
+                wq: DualLinear::load(ws, &format!("{p}.wq"))?,
+                wk: DualLinear::load(ws, &format!("{p}.wk"))?,
+                wv: DualLinear::load(ws, &format!("{p}.wv"))?,
+                wo: DualLinear::load(ws, &format!("{p}.wo"))?,
+                mlp_norm: ws.f32_vec(&format!("{p}.mlp_norm"))?,
+                w_gate: DualLinear::load(ws, &format!("{p}.w_gate"))?,
+                w_up: DualLinear::load(ws, &format!("{p}.w_up"))?,
+                w_down: DualLinear::load(ws, &format!("{p}.w_down"))?,
+            });
+        }
+        Ok(TinyModel {
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            d_head: m.d_head,
+            n_layers: m.n_layers,
+            n_ctx: m.n_ctx,
+            rope_base: m.rope_base,
+            embedding: ws.f32_vec("embedding")?,
+            layers,
+            final_norm: ws.f32_vec("final_norm")?,
+            lm_head: DualLinear::load(ws, "lm_head")?,
+            lut: Exp2Lut::new(),
+        })
+    }
+
+    /// Fresh decode state.
+    pub fn new_state(&self) -> DecodeState {
+        DecodeState {
+            kc: vec![0.0; self.n_layers * self.n_heads * self.n_ctx * self.d_head],
+            vc: vec![0.0; self.n_layers * self.n_heads * self.n_ctx * self.d_head],
+            rope: RopeState::new(self.d_head, self.rope_base),
+            pos: 0,
+            n_ctx: self.n_ctx,
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+        }
+    }
+
+    /// One decode step: append `token` at the state's position, return
+    /// logits over the vocabulary.
+    pub fn decode_step(&self, st: &mut DecodeState, token: u32, mode: NumericsMode) -> Vec<f32> {
+        assert!((token as usize) < self.vocab, "token out of range");
+        assert!(st.pos < self.n_ctx, "context overflow");
+        let d = self.d_model;
+        let (h, dh) = (self.n_heads, self.d_head);
+
+        let mut x = self.embedding[token as usize * d..(token as usize + 1) * d].to_vec();
+        // advance the shared RoPE recurrence once per token
+        st.rope.advance();
+        let (cos, sin) = (st.rope.cos.clone(), st.rope.sin.clone());
+
+        for (l, lw) in self.layers.iter().enumerate() {
+            let xn = rms_norm(&x, &lw.attn_norm);
+            let q = lw.wq.forward(&xn, mode);
+            let k = lw.wk.forward(&xn, mode);
+            let v = lw.wv.forward(&xn, mode);
+
+            let mut attn_out = vec![0.0f32; d];
+            for head in 0..h {
+                let q_h = crate::rope::rope_apply_cached(&q[head * dh..(head + 1) * dh], &cos, &sin);
+                let k_h = crate::rope::rope_apply_cached(&k[head * dh..(head + 1) * dh], &cos, &sin);
+                // append to cache (already position-encoded)
+                let at = st.idx(l, head, st.pos);
+                st.kc[at..at + dh].copy_from_slice(&k_h);
+                st.vc[at..at + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
+
+                let range = st.head_cache(l, head);
+                let k_cache = &st.kc[range.clone()];
+                let v_cache = &st.vc[range];
+                let len = st.pos + 1;
+                let out = match mode {
+                    NumericsMode::DesktopF32 => {
+                        let p = HeadProblem::new(&q_h, k_cache, v_cache, dh, len);
+                        native::attend(&p)
+                    }
+                    NumericsMode::Accelerator => {
+                        fxp_swiftkv::attend(&self.lut, &q_h, k_cache, v_cache, dh, len)
+                    }
+                };
+                attn_out[head * dh..(head + 1) * dh].copy_from_slice(&out);
+            }
+            let o = lw.wo.forward(&attn_out, mode);
+            for (xi, oi) in x.iter_mut().zip(&o) {
+                *xi += oi;
+            }
+
+            let xn = rms_norm(&x, &lw.mlp_norm);
+            let gate = lw.w_gate.forward(&xn, mode);
+            let up = lw.w_up.forward(&xn, mode);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(&up)
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = lw.w_down.forward(&act, mode);
+            for (xi, di) in x.iter_mut().zip(&down) {
+                *xi += di;
+            }
+        }
+
+        st.pos += 1;
+        let xn = rms_norm(&x, &self.final_norm);
+        self.lm_head.forward(&xn, mode)
+    }
+
+    /// Debug access to cache rows (cross-validation against the JAX side).
+    pub fn debug_cache<'a>(
+        &self,
+        st: &'a DecodeState,
+        l: usize,
+        h: usize,
+        t: usize,
+    ) -> (&'a [f32], &'a [f32]) {
+        let at = st.idx(l, h, t);
+        (&st.kc[at..at + self.d_head], &st.vc[at..at + self.d_head])
+    }
+
+    /// Debug access to the RoPE recurrence values.
+    pub fn debug_rope(st: &DecodeState) -> (&[f32], &[f32]) {
+        (&st.rope.cos, &st.rope.sin)
+    }
+
+    /// Greedy generation: feed `prompt`, then generate `steps` tokens.
+    pub fn generate(&self, prompt: &[u32], steps: usize, mode: NumericsMode) -> Vec<u32> {
+        let mut st = self.new_state();
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.decode_step(&mut st, t, mode);
+        }
+        let mut out = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            if st.pos >= self.n_ctx {
+                break;
+            }
+            logits = self.decode_step(&mut st, next, mode);
+        }
+        out
+    }
+}
+
+/// RMS normalization (SFU op).
+pub fn rms_norm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let var = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (var + 1e-5).sqrt();
+    x.iter().zip(g).map(|(v, w)| v * r * w).collect()
+}
+
+/// SiLU activation (SFU op).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Index of the maximum logit (greedy sampling).
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Indices of the top-k logits, descending.
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::WeightStore;
+
+    fn model() -> Option<TinyModel> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| TinyModel::load(&WeightStore::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn decode_produces_finite_logits_both_modes() {
+        let Some(m) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut st = m.new_state();
+            let logits = m.decode_step(&mut st, 7, mode);
+            assert_eq!(logits.len(), m.vocab);
+            assert!(logits.iter().all(|x| x.is_finite()), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn modes_agree_on_top1_short_sequence() {
+        let Some(m) = model() else {
+            return;
+        };
+        let mut sd = m.new_state();
+        let mut sa = m.new_state();
+        for &t in &[1u32, 5, 9, 2] {
+            let ld = m.decode_step(&mut sd, t, NumericsMode::DesktopF32);
+            let la = m.decode_step(&mut sa, t, NumericsMode::Accelerator);
+            assert_eq!(argmax(&ld), argmax(&la), "top-1 diverged at token {t}");
+        }
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let Some(m) = model() else {
+            return;
+        };
+        let a = m.generate(&[1, 2, 3], 8, NumericsMode::Accelerator);
+        let b = m.generate(&[1, 2, 3], 8, NumericsMode::Accelerator);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dump_intermediates_for_cross_check() {
+        // printed with --nocapture; compared against the python dump in
+        // the build log (manual diff aid, asserts only basic sanity)
+        let Some(m) = model() else {
+            return;
+        };
+        let mut st = m.new_state();
+        for (i, &t) in [3u32, 141, 27].iter().enumerate() {
+            let l = m.decode_step(&mut st, t, NumericsMode::DesktopF32);
+            println!("step {i}: logits[:4] = {:?}, argmax = {}", &l[..4], argmax(&l));
+        }
+        let (cos, _sin) = TinyModel::debug_rope(&st);
+        println!("cos[:4] {:?}", &cos[..4]);
+        let (k0, _) = m.debug_cache(&st, 0, 0, 0);
+        let (k1, v1) = m.debug_cache(&st, 0, 0, 1);
+        println!("kc l0 h0 row0[:4] {:?}", &k0[..4]);
+        println!("kc l0 h0 row1[:4] {:?}", &k1[..4]);
+        println!("vc l0 h0 row1[:4] {:?}", &v1[..4]);
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        let xs = vec![0.1f32, 3.0, -1.0, 2.0];
+        assert_eq!(top_k(&xs, 3), vec![1, 3, 0]);
+        assert_eq!(argmax(&xs), 1);
+    }
+
+    #[test]
+    fn rms_norm_unit_scale() {
+        let x = vec![3.0f32, -3.0, 3.0, -3.0];
+        let g = vec![1.0f32; 4];
+        let y = rms_norm(&x, &g);
+        for v in y {
+            assert!((v.abs() - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0 / (1.0 + (-10.0f32).exp())).abs() < 1e-6);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,234 @@
+//! Loader for the AOT weight blob (`artifacts/weights.bin` +
+//! `artifacts/manifest.json`).
+//!
+//! The manifest lists every parameter array with dtype/shape/offset in the
+//! exact order of the HLO input signature; the blob holds the raw
+//! little-endian bytes at 64-byte alignment. Loaded once at startup —
+//! never on the request path.
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One parameter array's metadata.
+#[derive(Debug, Clone)]
+pub struct ArrayMeta {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// The tiny model's configuration as recorded by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct TinyManifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub n_ctx: usize,
+    pub rope_base: f64,
+    pub batch_variants: Vec<usize>,
+    pub artifact_files: Vec<(String, String)>,
+}
+
+/// Weight blob + parsed manifest.
+pub struct WeightStore {
+    blob: Vec<u8>,
+    arrays: Vec<ArrayMeta>,
+    pub manifest: TinyManifest,
+}
+
+impl WeightStore {
+    /// Load from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<WeightStore> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let root = Json::parse(&manifest_text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let model = root.get("model").ok_or_else(|| anyhow!("manifest: no model"))?;
+        let g = |k: &str| -> Result<usize> {
+            model
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest: model.{k} missing"))
+        };
+        let mut artifact_files = Vec::new();
+        if let Some(arts) = root.get("artifacts").and_then(Json::as_obj) {
+            for (k, v) in arts {
+                if let Some(f) = v.get("file").and_then(Json::as_str) {
+                    artifact_files.push((k.clone(), f.to_string()));
+                }
+            }
+        }
+        let manifest = TinyManifest {
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            d_head: g("d_head")?,
+            n_layers: g("n_layers")?,
+            d_ffn: g("d_ffn")?,
+            n_ctx: g("n_ctx")?,
+            rope_base: model
+                .get("rope_base")
+                .and_then(Json::as_f64)
+                .unwrap_or(10000.0),
+            batch_variants: root
+                .get("batch_variants")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            artifact_files,
+        };
+
+        let weights = root
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: no weights table"))?;
+        let mut arrays = Vec::with_capacity(weights.len());
+        for w in weights {
+            let s = |k: &str| -> Result<String> {
+                Ok(w.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("weights entry missing {k}"))?
+                    .to_string())
+            };
+            let u = |k: &str| -> Result<usize> {
+                w.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("weights entry missing {k}"))
+            };
+            arrays.push(ArrayMeta {
+                name: s("name")?,
+                dtype: s("dtype")?,
+                shape: w
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                offset: u("offset")?,
+                nbytes: u("nbytes")?,
+            });
+        }
+
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading weights.bin in {}", dir.display()))?;
+        for a in &arrays {
+            if a.offset + a.nbytes > blob.len() {
+                bail!("array {} overruns blob", a.name);
+            }
+        }
+        Ok(WeightStore {
+            blob,
+            arrays,
+            manifest,
+        })
+    }
+
+    /// Parameter arrays in HLO-signature order.
+    pub fn arrays(&self) -> &[ArrayMeta] {
+        &self.arrays
+    }
+
+    fn meta(&self, name: &str) -> Result<&ArrayMeta> {
+        self.arrays
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("no array '{name}'"))
+    }
+
+    /// Raw bytes of an array.
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let m = self.meta(name)?;
+        Ok(&self.blob[m.offset..m.offset + m.nbytes])
+    }
+
+    /// f32 copy of an array (little-endian decode).
+    pub fn f32_vec(&self, name: &str) -> Result<Vec<f32>> {
+        let m = self.meta(name)?;
+        if m.dtype != "float32" {
+            bail!("array {name} is {}, not float32", m.dtype);
+        }
+        let raw = self.bytes(name)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// i8 copy of an array.
+    pub fn i8_vec(&self, name: &str) -> Result<Vec<i8>> {
+        let m = self.meta(name)?;
+        if m.dtype != "int8" {
+            bail!("array {name} is {}, not int8", m.dtype);
+        }
+        Ok(self.bytes(name)?.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Shape of an array.
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.meta(name)?.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn store() -> Option<WeightStore> {
+        let dir = artifacts_dir();
+        dir.join("manifest.json").exists().then(|| WeightStore::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_manifest_and_blob() {
+        let Some(ws) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(ws.manifest.d_model, ws.manifest.n_heads * ws.manifest.d_head);
+        assert!(!ws.arrays().is_empty());
+        assert!(!ws.manifest.artifact_files.is_empty());
+    }
+
+    #[test]
+    fn embedding_shape_and_content() {
+        let Some(ws) = store() else {
+            return;
+        };
+        let emb = ws.f32_vec("embedding").unwrap();
+        let shape = ws.shape("embedding").unwrap();
+        assert_eq!(shape, &[ws.manifest.vocab, ws.manifest.d_model]);
+        assert_eq!(emb.len(), shape.iter().product::<usize>());
+        assert!(emb.iter().all(|x| x.is_finite()));
+        assert!(emb.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn quantized_weights_in_int4_range() {
+        let Some(ws) = store() else {
+            return;
+        };
+        let wq = ws.i8_vec("layer0.wq.q").unwrap();
+        assert!(wq.iter().all(|&v| (-7..=7).contains(&(v as i32))));
+        let scales = ws.f32_vec("layer0.wq.scale").unwrap();
+        assert!(scales.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let Some(ws) = store() else {
+            return;
+        };
+        assert!(ws.f32_vec("layer0.wq.q").is_err());
+        assert!(ws.i8_vec("embedding").is_err());
+        assert!(ws.bytes("nonexistent").is_err());
+    }
+}

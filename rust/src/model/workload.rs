@@ -1,0 +1,149 @@
+//! Synthetic decode workload generation (requests for the coordinator and
+//! the bench harness; stands in for the paper's PG-19 prompt sampling).
+
+use crate::util::Rng;
+
+/// A decode request: prompt tokens + number of tokens to generate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub gen_len: usize,
+    /// Arrival time in milliseconds from stream start (Poisson process).
+    pub arrival_ms: u64,
+}
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub num_requests: usize,
+    pub vocab: usize,
+    pub prompt_len: (usize, usize),
+    pub gen_len: (usize, usize),
+    /// Mean inter-arrival gap in ms (0 = all arrive at t=0).
+    pub mean_gap_ms: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            num_requests: 16,
+            vocab: 512,
+            prompt_len: (4, 32),
+            gen_len: (8, 64),
+            mean_gap_ms: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Deterministic request-stream generator.
+pub struct WorkloadGen {
+    spec: WorkloadSpec,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        assert!(spec.prompt_len.0 >= 1 && spec.prompt_len.1 >= spec.prompt_len.0);
+        assert!(spec.gen_len.0 >= 1 && spec.gen_len.1 >= spec.gen_len.0);
+        assert!(spec.vocab >= 2);
+        WorkloadGen { spec }
+    }
+
+    /// Generate the full request stream, sorted by arrival time.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::seed_from_u64(self.spec.seed);
+        let mut t_ms = 0f64;
+        (0..self.spec.num_requests)
+            .map(|i| {
+                let plen = rng.gen_range(self.spec.prompt_len.0, self.spec.prompt_len.1 + 1);
+                let glen = rng.gen_range(self.spec.gen_len.0, self.spec.gen_len.1 + 1);
+                let prompt = (0..plen)
+                    .map(|_| rng.gen_range(0, self.spec.vocab) as u32)
+                    .collect();
+                if self.spec.mean_gap_ms > 0.0 {
+                    t_ms += rng.gen_exp(self.spec.mean_gap_ms);
+                }
+                Request {
+                    id: i as u64,
+                    prompt,
+                    gen_len: glen,
+                    arrival_ms: t_ms as u64,
+                }
+            })
+            .collect()
+    }
+
+    /// Total tokens (prompt + generated) in a stream — normalization for
+    /// throughput metrics.
+    pub fn total_tokens(reqs: &[Request]) -> usize {
+        reqs.iter().map(|r| r.prompt.len() + r.gen_len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let spec = WorkloadSpec {
+            seed: 7,
+            ..Default::default()
+        };
+        let a = WorkloadGen::new(spec.clone()).generate();
+        let b = WorkloadGen::new(spec).generate();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let spec = WorkloadSpec {
+            num_requests: 100,
+            prompt_len: (3, 10),
+            gen_len: (5, 9),
+            ..Default::default()
+        };
+        for r in WorkloadGen::new(spec).generate() {
+            assert!((3..=10).contains(&r.prompt.len()));
+            assert!((5..=9).contains(&r.gen_len));
+            assert!(r.prompt.iter().all(|&t| (t as usize) < 512));
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let spec = WorkloadSpec {
+            num_requests: 50,
+            mean_gap_ms: 5.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let reqs = WorkloadGen::new(spec).generate();
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        assert!(reqs.last().unwrap().arrival_ms > 0);
+    }
+
+    #[test]
+    fn zero_gap_means_batch_arrival() {
+        let reqs = WorkloadGen::new(WorkloadSpec::default()).generate();
+        assert!(reqs.iter().all(|r| r.arrival_ms == 0));
+    }
+
+    #[test]
+    fn token_accounting() {
+        let reqs = WorkloadGen::new(WorkloadSpec {
+            num_requests: 5,
+            ..Default::default()
+        })
+        .generate();
+        let total = WorkloadGen::total_tokens(&reqs);
+        assert_eq!(
+            total,
+            reqs.iter().map(|r| r.prompt.len() + r.gen_len).sum::<usize>()
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! W4A8 GEMV on the (modelled) SKV Processor Array.
+//!
+//! `INT8 activation × INT4 weight → INT32` accumulate, dequantized on
+//! writeback — exact integer arithmetic, so results are bit-identical to
+//! the Pallas GEMV kernel for identical quantized inputs.
+
+use super::int4::Int4Matrix;
+use super::int8::QuantizedVec;
+
+/// `y = dequant(Wᵀ x)` for a packed INT4 matrix and an INT8 vector.
+///
+/// Hot path (§Perf): the nibble unpack is fused into the MAC loop — each
+/// packed byte contributes two lanes directly from registers, with four
+/// i32 accumulators so the compiler vectorizes the reduction. This is the
+/// software model of the 128-lane DSP column; see EXPERIMENTS.md §Perf
+/// for the before/after.
+pub fn gemv_w4a8(x: &QuantizedVec, w: &Int4Matrix) -> Vec<f32> {
+    assert_eq!(x.data.len(), w.din, "dimension mismatch");
+    let mut out = vec![0.0f32; w.dout];
+    let stride = w.din.div_ceil(2);
+    let xs = &x.data;
+    for (j, o) in out.iter_mut().enumerate() {
+        let col = &w.packed[j * stride..(j + 1) * stride];
+        let mut acc0 = 0i32;
+        let mut acc1 = 0i32;
+        let mut acc2 = 0i32;
+        let mut acc3 = 0i32;
+        let pairs = w.din / 2;
+        let mut b = 0;
+        // 2 bytes (4 lanes) per step
+        while b + 2 <= pairs {
+            let byte0 = col[b];
+            let byte1 = col[b + 1];
+            let lo0 = (((byte0 & 0x0F) << 4) as i8 >> 4) as i32;
+            let hi0 = ((byte0 >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+            let lo1 = (((byte1 & 0x0F) << 4) as i8 >> 4) as i32;
+            let hi1 = ((byte1 >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+            acc0 += xs[2 * b] as i32 * lo0;
+            acc1 += xs[2 * b + 1] as i32 * hi0;
+            acc2 += xs[2 * b + 2] as i32 * lo1;
+            acc3 += xs[2 * b + 3] as i32 * hi1;
+            b += 2;
+        }
+        while b < pairs {
+            let byte = col[b];
+            let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
+            let hi = ((byte >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+            acc0 += xs[2 * b] as i32 * lo;
+            acc1 += xs[2 * b + 1] as i32 * hi;
+            b += 1;
+        }
+        if w.din % 2 == 1 {
+            let byte = col[pairs];
+            let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
+            acc0 += xs[w.din - 1] as i32 * lo;
+        }
+        let acc = acc0 + acc1 + acc2 + acc3;
+        *o = acc as f32 * x.scale * w.scales[j];
+    }
+    out
+}
+
+/// A quantized linear layer: packed weights + the f32 forward that first
+/// quantizes its activation (the full SFU→Array round trip of Fig. 5(c)).
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    pub weight: Int4Matrix,
+}
+
+impl QuantLinear {
+    pub fn new(weight: Int4Matrix) -> Self {
+        QuantLinear { weight }
+    }
+
+    /// Quantize `x` to INT8 and run the W4A8 GEMV.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let xq = super::int8::quantize_int8(x);
+        gemv_w4a8(&xq, &self.weight)
+    }
+
+    pub fn din(&self) -> usize {
+        self.weight.din
+    }
+
+    pub fn dout(&self) -> usize {
+        self.weight.dout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int8::quantize_int8;
+    use crate::util::Rng;
+
+    fn random_mat(seed: u64, din: usize, dout: usize) -> (Vec<f32>, Int4Matrix) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = rng.uniform_vec(din * dout, 0.5);
+        let m = Int4Matrix::quantize(&w, din, dout);
+        (w, m)
+    }
+
+    #[test]
+    fn matches_exact_integer_reference() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (din, dout) = (64, 32);
+        let (_, m) = random_mat(2, din, dout);
+        let x = rng.uniform_vec(din, 1.0);
+        let xq = quantize_int8(&x);
+
+        let got = gemv_w4a8(&xq, &m);
+        // independent reference through the dequantized matrix
+        let wd = m.dequantize();
+        let xd = xq.dequantize();
+        for j in 0..dout {
+            let want: f32 = (0..din).map(|i| xd[i] * wd[i * dout + j]).sum();
+            assert!(
+                (got[j] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "col {j}: {} vs {want}",
+                got[j]
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_gemv_close_to_f32() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (din, dout) = (256, 128);
+        let (w, m) = random_mat(4, din, dout);
+        let x = rng.uniform_vec(din, 1.0);
+        let got = QuantLinear::new(m).forward(&x);
+        let mut max_ref = 0.0f32;
+        let mut max_err = 0.0f32;
+        for j in 0..dout {
+            let want: f32 = (0..din).map(|i| x[i] * w[i * dout + j]).sum();
+            max_ref = max_ref.max(want.abs());
+            max_err = max_err.max((got[j] - want).abs());
+        }
+        assert!(
+            max_err / max_ref < 0.25,
+            "relative error {max_err}/{max_ref}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (_, m) = random_mat(9, 32, 16);
+        let x = vec![0.123f32; 32];
+        let l = QuantLinear::new(m);
+        assert_eq!(l.forward(&x), l.forward(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dimension_mismatch_panics() {
+        let (_, m) = random_mat(5, 16, 8);
+        let xq = quantize_int8(&[1.0; 8]);
+        gemv_w4a8(&xq, &m);
+    }
+}

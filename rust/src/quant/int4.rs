@@ -1,0 +1,195 @@
+//! INT4 weight quantization with nibble packing.
+//!
+//! Weights are symmetric per-output-channel INT4 in `[-7, 7]` (Q4.0),
+//! stored column-major packed two nibbles per byte — the layout each SKV
+//! Processor's KV-Weight Memory streams to its 128 DSP lanes.
+
+/// A packed INT4 weight matrix `[din, dout]` with per-column scales.
+#[derive(Debug, Clone)]
+pub struct Int4Matrix {
+    /// Packed nibbles, column-major: column `j` occupies
+    /// `packed[j * stride .. j * stride + din.div_ceil(2)]`.
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl Int4Matrix {
+    /// Quantize a row-major f32 matrix `[din, dout]`.
+    pub fn quantize(w: &[f32], din: usize, dout: usize) -> Self {
+        assert_eq!(w.len(), din * dout);
+        let (qcols, scales) = quantize_int4(w, din, dout);
+        let stride = din.div_ceil(2);
+        let mut packed = vec![0u8; stride * dout];
+        for j in 0..dout {
+            pack_int4(&qcols[j * din..(j + 1) * din], &mut packed[j * stride..(j + 1) * stride]);
+        }
+        Int4Matrix {
+            packed,
+            scales,
+            din,
+            dout,
+        }
+    }
+
+    /// Build from pre-quantized int8-held int4 values (row-major `[din,
+    /// dout]`, as stored in `weights.bin`) and per-column scales.
+    pub fn from_quantized(wq: &[i8], scales: Vec<f32>, din: usize, dout: usize) -> Self {
+        assert_eq!(wq.len(), din * dout);
+        assert_eq!(scales.len(), dout);
+        let stride = din.div_ceil(2);
+        let mut packed = vec![0u8; stride * dout];
+        let mut col = vec![0i8; din];
+        for j in 0..dout {
+            for i in 0..din {
+                col[i] = wq[i * dout + j];
+            }
+            pack_int4(&col, &mut packed[j * stride..(j + 1) * stride]);
+        }
+        Int4Matrix {
+            packed,
+            scales,
+            din,
+            dout,
+        }
+    }
+
+    /// Unpack column `j` into int8 lane values.
+    pub fn column(&self, j: usize, out: &mut [i8]) {
+        assert_eq!(out.len(), self.din);
+        let stride = self.din.div_ceil(2);
+        unpack_int4(&self.packed[j * stride..(j + 1) * stride], out);
+    }
+
+    /// Dequantized f32 copy (row-major) — test/diagnostic use.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.din * self.dout];
+        let mut col = vec![0i8; self.din];
+        for j in 0..self.dout {
+            self.column(j, &mut col);
+            for i in 0..self.din {
+                out[i * self.dout + j] = col[i] as f32 * self.scales[j];
+            }
+        }
+        out
+    }
+
+    /// Bytes of packed weight storage (HBM traffic accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+}
+
+/// Symmetric per-output-channel INT4 quantization of a row-major matrix.
+/// Returns column-major quantized values and per-column scales
+/// (matches `ref.quantize_int4` up to layout).
+pub fn quantize_int4(w: &[f32], din: usize, dout: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut q = vec![0i8; din * dout];
+    let mut scales = vec![0.0f32; dout];
+    for j in 0..dout {
+        let amax = (0..din)
+            .map(|i| w[i * dout + j].abs())
+            .fold(0.0f32, f32::max)
+            .max(1e-8);
+        let scale = amax / 7.0;
+        scales[j] = scale;
+        for i in 0..din {
+            q[j * din + i] = (w[i * dout + j] / scale).round().clamp(-7.0, 7.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Pack int4 values (in int8 lanes, range [-8, 7]) two per byte,
+/// low nibble first.
+pub fn pack_int4(vals: &[i8], out: &mut [u8]) {
+    assert_eq!(out.len(), vals.len().div_ceil(2));
+    for (b, pair) in out.iter_mut().zip(vals.chunks(2)) {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() > 1 {
+            (pair[1] as u8) & 0x0F
+        } else {
+            0
+        };
+        *b = lo | (hi << 4);
+    }
+}
+
+/// Unpack nibbles back to sign-extended int8 lane values.
+pub fn unpack_int4(packed: &[u8], out: &mut [i8]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let byte = packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        // sign-extend 4-bit two's complement
+        *o = ((nib << 4) as i8) >> 4;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let vals: Vec<i8> = (-8..8).collect();
+        let mut packed = vec![0u8; 8];
+        pack_int4(&vals, &mut packed);
+        let mut back = vec![0i8; 16];
+        unpack_int4(&packed, &mut back);
+        assert_eq!(vals, back);
+    }
+
+    #[test]
+    fn odd_length_pack() {
+        let vals = vec![3i8, -2, 7];
+        let mut packed = vec![0u8; 2];
+        pack_int4(&vals, &mut packed);
+        let mut back = vec![0i8; 3];
+        unpack_int4(&packed, &mut back);
+        assert_eq!(vals, back);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error() {
+        let mut rng = Rng::seed_from_u64(0);
+        let (din, dout) = (32, 16);
+        let w: Vec<f32> = rng.uniform_vec(din * dout, 0.5);
+        let m = Int4Matrix::quantize(&w, din, dout);
+        let back = m.dequantize();
+        for j in 0..dout {
+            let half_step = m.scales[j] / 2.0;
+            for i in 0..din {
+                let (a, b) = (w[i * dout + j], back[i * dout + j]);
+                assert!((a - b).abs() <= half_step + 1e-6, "({i},{j}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_quantized_matches_quantize() {
+        let mut rng = Rng::seed_from_u64(7);
+        let (din, dout) = (16, 8);
+        let w: Vec<f32> = rng.uniform_vec(din * dout, 1.0);
+        let a = Int4Matrix::quantize(&w, din, dout);
+        // route through the row-major int8 representation
+        let (qcols, scales) = quantize_int4(&w, din, dout);
+        let mut row_major = vec![0i8; din * dout];
+        for j in 0..dout {
+            for i in 0..din {
+                row_major[i * dout + j] = qcols[j * din + i];
+            }
+        }
+        let b = Int4Matrix::from_quantized(&row_major, scales, din, dout);
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(a.scales, b.scales);
+    }
+
+    #[test]
+    fn packed_size_halves_storage() {
+        let w = vec![0.5f32; 128 * 64];
+        let m = Int4Matrix::quantize(&w, 128, 64);
+        assert_eq!(m.packed.len(), 128 * 64 / 2);
+    }
+}

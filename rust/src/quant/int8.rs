@@ -1,0 +1,63 @@
+//! Symmetric INT8 activation quantization (the SFU's FXP32/INT8 cast).
+
+/// An INT8-quantized vector with its dequantization scale.
+#[derive(Debug, Clone)]
+pub struct QuantizedVec {
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+impl QuantizedVec {
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data.iter().map(|&q| q as f32 * self.scale).collect()
+    }
+}
+
+/// Symmetric per-tensor INT8 quantization: `scale = max|x| / 127`,
+/// round-to-nearest, clamp to ±127. Matches `ref.quantize_int8`.
+pub fn quantize_int8(x: &[f32]) -> QuantizedVec {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let scale = amax / 127.0;
+    let data = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    QuantizedVec { data, scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let q = quantize_int8(&x);
+        let back = q.dequantize();
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= q.scale / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn full_range_used() {
+        let x = vec![-4.0f32, 0.0, 4.0];
+        let q = quantize_int8(&x);
+        assert_eq!(q.data, vec![-127, 0, 127]);
+    }
+
+    #[test]
+    fn zero_vector_safe() {
+        let q = quantize_int8(&[0.0, 0.0]);
+        assert_eq!(q.data, vec![0, 0]);
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn values_in_range() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 100.0).collect();
+        let q = quantize_int8(&x);
+        assert!(q.data.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+    }
+}

@@ -1,0 +1,16 @@
+//! W4A8 quantization — the GEMV-mode number formats of Fig. 5.
+//!
+//! Activations are symmetric per-row INT8 (Q8.0); weights are symmetric
+//! per-output-channel INT4 (Q4.0), stored packed two-per-byte the way the
+//! KV-Weight Memory holds them. `INT4 × INT8 → INT32` accumulation is
+//! exact, so the Rust GEMV here is bit-identical to the Pallas kernel
+//! (`python/compile/kernels/gemv.py`) given the same quantized inputs —
+//! an invariant the integration tests check through the PJRT runtime.
+
+pub mod gemv;
+pub mod int4;
+pub mod int8;
+
+pub use gemv::{gemv_w4a8, QuantLinear};
+pub use int4::{pack_int4, quantize_int4, unpack_int4, Int4Matrix};
+pub use int8::{quantize_int8, QuantizedVec};

@@ -1,0 +1,351 @@
+//! Exhibit generators — one function per paper table/figure, each
+//! printing the same rows/series the paper reports (used by
+//! `examples/paper_tables.rs`, the benches and the exhibit tests).
+
+use crate::baselines::{self, AcceleratorPoint};
+use crate::fxp::Exp2Lut;
+use crate::model::{LlmConfig, TokenCost};
+use crate::sim::{edge_hw, layer_sched, power, resources, ArchConfig};
+
+/// Fig. 7(a): attention time (µs) vs context length.
+pub fn fig7a(arch: &ArchConfig) -> String {
+    let contexts = [64, 128, 256, 512, 1024, 2048, 4096];
+    let curves = edge_hw::fig7a_curves(arch, &contexts, 128);
+    let mut out = String::from(
+        "Fig 7(a): decode attention time vs context length (d_head = 128)\n",
+    );
+    out.push_str(&format!("{:>8}", "ctx"));
+    for (label, _) in &curves {
+        out.push_str(&format!("{label:>22}"));
+    }
+    out.push('\n');
+    for (i, &n) in contexts.iter().enumerate() {
+        out.push_str(&format!("{n:>8}"));
+        for (_, pts) in &curves {
+            out.push_str(&format!("{:>19.2} µs", pts[i].1));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 7(b): speedup over native attention at context 512.
+/// Paper: native 1×, Flash(32) 1.46×, Streaming 2.15×, SwiftKV 7.16×.
+pub fn fig7b(arch: &ArchConfig) -> String {
+    let mut out =
+        String::from("Fig 7(b): attention speedup over native (ctx = 512, d_head = 128)\n");
+    out.push_str(&format!(
+        "{:<24}{:>10}{:>12}\n",
+        "algorithm", "speedup", "paper"
+    ));
+    let paper = [1.0, 1.46, 2.15, 7.16];
+    for ((label, s), p) in edge_hw::fig7b_speedups(arch, 512, 128).iter().zip(paper) {
+        out.push_str(&format!("{label:<24}{s:>9.2}x{p:>11.2}x\n"));
+    }
+    out
+}
+
+/// §V: exp-LUT maximum relative error over (−1, 0].
+/// Paper: 0.00586 %.
+pub fn exp_lut_error() -> String {
+    let err = Exp2Lut::new().max_relative_error() * 100.0;
+    format!(
+        "exp LUT (Eq. 9-10) max relative error over (-1, 0]: {err:.5} %  (paper: 0.00586 %)\n"
+    )
+}
+
+/// Table II: FPGA utilization.
+pub fn table2(arch: &ArchConfig) -> String {
+    let r = resources::estimate(arch);
+    let mut out = String::from("Table II: hardware utilization of SwiftKV-MHA on Alveo U55C\n");
+    out.push_str(&format!(
+        "{:<18}{:>9}{:>9}{:>7}{:>7}\n",
+        "Component", "LUT", "FF", "BRAM", "DSP"
+    ));
+    for c in &r.components {
+        out.push_str(&format!(
+            "{:<18}{:>8}K{:>8}K{:>7}{:>7}\n",
+            c.name,
+            c.lut / 1000,
+            c.ff / 1000,
+            c.bram,
+            c.dsp
+        ));
+    }
+    let t = r.total();
+    out.push_str(&format!(
+        "{:<18}{:>8}K{:>8}K{:>7}{:>7}\n",
+        "Total",
+        t.lut / 1000,
+        t.ff / 1000,
+        t.bram,
+        t.dsp
+    ));
+    let (l, f, b, d) = r.utilization_pct();
+    out.push_str(&format!(
+        "{:<18}{:>8.1}%{:>8.1}%{:>6.1}%{:>6.1}%\n",
+        "(device)", l, f, b, d
+    ));
+    out
+}
+
+/// Fig. 8(a): decode latency breakdown per module.
+/// Paper: attention ≈ 3.19 % (13.48× lower share than DFX's 43 %).
+pub fn fig8a(arch: &ArchConfig, cfg: &LlmConfig, n_ctx: usize) -> String {
+    let sim = layer_sched::simulate_token(arch, cfg, n_ctx);
+    let mut out = format!(
+        "Fig 8(a): decode latency breakdown — {} @ ctx {} ({:.2} ms/token)\n",
+        cfg.name, n_ctx, sim.latency_ms
+    );
+    let total: u64 = sim.module_breakdown().iter().map(|(_, c)| c).sum();
+    for (module, cycles) in sim.module_breakdown() {
+        out.push_str(&format!(
+            "{:<22}{:>10} cycles  {:>6.2} %\n",
+            module,
+            cycles,
+            100.0 * cycles as f64 / total as f64
+        ));
+    }
+    let attn = sim.module_share("Attention (SKV)");
+    out.push_str(&format!(
+        "attention share {:.2} % (paper 3.19 %); reduction vs DFX 43 %: {:.2}x (paper 13.48x)\n",
+        attn * 100.0,
+        baselines::DFX_ATTENTION_SHARE / attn
+    ));
+    out
+}
+
+/// One Table III row for our accelerator.
+fn this_work_row(arch: &ArchConfig, cfg: &LlmConfig) -> (f64, f64, f64, f64) {
+    let sim = layer_sched::simulate_token(arch, cfg, 512);
+    let p = power::power(arch, 1.0);
+    let tokens_per_s = sim.tokens_per_s;
+    let tpj = power::tokens_per_joule(tokens_per_s, p.system_w());
+    (sim.latency_ms, tokens_per_s, p.system_w(), tpj)
+}
+
+/// Table III: comparison with FlightLLM/EdgeLLM.
+pub fn table3(arch: &ArchConfig) -> String {
+    let mut out = String::from(
+        "Table III: FPGA transformer accelerators, identical settings (W4A8, 460 GB/s, 225 MHz)\n",
+    );
+    out.push_str(&format!(
+        "{:<22}{:<14}{:>6}{:>13}{:>12}{:>10}{:>10}\n",
+        "work", "model", "DSP", "latency", "tok/s", "power", "tok/J"
+    ));
+    for b in baselines::table3_baselines() {
+        out.push_str(&format!(
+            "{:<22}{:<14}{:>6}{:>10.1} ms{:>12.1}{:>8.1} W{:>10.2}\n",
+            format!("{} ({})", b.name, b.platform),
+            b.model,
+            b.dsp,
+            b.latency_ms,
+            b.tokens_per_s(),
+            b.system_power_w,
+            b.tokens_per_joule()
+        ));
+    }
+    let dsp = resources::estimate(arch).total().dsp;
+    for cfg in [LlmConfig::llama2_7b(), LlmConfig::chatglm_6b()] {
+        let (lat, tps, pw, tpj) = this_work_row(arch, &cfg);
+        out.push_str(&format!(
+            "{:<22}{:<14}{:>6}{:>10.1} ms{:>12.1}{:>8.1} W{:>10.2}\n",
+            "This Work (U55C)", cfg.name, dsp, lat, tps, pw, tpj
+        ));
+    }
+    out.push_str("paper (this work): llama2 12.3 ms / 81.5 tok/s / 33.8 W / 2.41 tok/J; chatglm 10.4 ms / 96.3 tok/s / 2.85 tok/J\n");
+    out
+}
+
+/// Fig. 8(b): attention latency (per token) + token efficiency comparison.
+pub fn fig8b(arch: &ArchConfig) -> String {
+    let cfg = LlmConfig::llama2_7b();
+    let mut out = String::from("Fig 8(b): attention latency and token efficiency\n");
+    let ours = layer_sched::simulate_token(arch, &cfg, 512);
+    let ours_attn_ms = ours.latency_ms * ours.module_share("Attention (SKV)");
+    out.push_str(&format!(
+        "{:<22}{:>16}{:>14}\n",
+        "work", "attn ms/token", "token/J"
+    ));
+    for b in baselines::table3_baselines()
+        .iter()
+        .filter(|b| b.model == "Llama-2-7B")
+    {
+        // prior accelerators: attention ≈ DFX's 43 % share of decode [5]
+        let attn_ms = b.latency_ms * baselines::DFX_ATTENTION_SHARE;
+        out.push_str(&format!(
+            "{:<22}{:>13.2} ms{:>14.2}\n",
+            b.name,
+            attn_ms,
+            b.tokens_per_joule()
+        ));
+    }
+    let p = power::power(arch, 1.0);
+    out.push_str(&format!(
+        "{:<22}{:>13.2} ms{:>14.2}\n",
+        "This Work",
+        ours_attn_ms,
+        power::tokens_per_joule(ours.tokens_per_s, p.system_w())
+    ));
+    let best_prior = baselines::table3_baselines()
+        .iter()
+        .filter(|b| b.model == "Llama-2-7B")
+        .map(|b| b.tokens_per_joule())
+        .fold(0.0f64, f64::max);
+    out.push_str(&format!(
+        "token-efficiency gain over best prior: {:.2}x (paper: 1.98x)\n",
+        power::tokens_per_joule(ours.tokens_per_s, p.system_w()) / best_prior
+    ));
+    out
+}
+
+/// Table IV: throughput/efficiency vs prior FPGA accelerators.
+pub fn table4(arch: &ArchConfig) -> String {
+    let cfg = LlmConfig::llama2_7b();
+    let sim = layer_sched::simulate_token(arch, &cfg, 512);
+    let gops = TokenCost::of(&cfg, 512).gops_at(sim.latency_ms / 1e3);
+    let p = power::power(arch, 1.0);
+    let eff = power::gops_per_watt(gops, p.chip_w());
+
+    let mut out = String::from("Table IV: comparison with existing FPGA-based works\n");
+    out.push_str(&format!(
+        "{:<16}{:<14}{:<20}{:>8}{:>12}{:>14}\n",
+        "work", "platform", "model", "MHz", "GOPS", "GOPS/W"
+    ));
+    for b in baselines::table4_baselines() {
+        out.push_str(&format!(
+            "{:<16}{:<14}{:<20}{:>8.0}{:>12.1}{:>14.2}\n",
+            b.name, b.platform, b.model, b.freq_mhz, b.gops, b.gops_per_w
+        ));
+    }
+    out.push_str(&format!(
+        "{:<16}{:<14}{:<20}{:>8.0}{:>12.1}{:>14.2}\n",
+        "This Work", "Alveo U55C", cfg.name, arch.clock_mhz, gops, eff
+    ));
+    out.push_str("paper (this work): 1100.3 GOPS, 60.12 GOPS/W\n");
+    out
+}
+
+/// Table I: Top-k agreement between accelerator numerics (W4A8 + FXP32
+/// SwiftKV attention + LUT exp) and desktop f32 attention, over seeded
+/// synthetic sequences (PG-19 stand-in; see DESIGN.md substitution log).
+/// Returns (table text, per-k agreement fractions for k = 1, 2, 3, 5).
+pub fn table1(
+    tm: &crate::model::TinyModel,
+    sequences: usize,
+    len: usize,
+) -> (String, [f64; 4]) {
+    use crate::model::tiny::{argmax, top_k};
+    use crate::model::NumericsMode;
+    use crate::util::Rng;
+    let mut rng = Rng::seed_from_u64(7);
+    let ks = [1usize, 2, 3, 5];
+    let mut agree = [0usize; 4];
+    let mut total = 0usize;
+    for _ in 0..sequences {
+        let mut sd = tm.new_state();
+        let mut sa = tm.new_state();
+        let mut tok: u32 = rng.gen_range(0, tm.vocab) as u32;
+        for t in 0..len.min(tm.n_ctx - 1) {
+            let ld = tm.decode_step(&mut sd, tok, NumericsMode::DesktopF32);
+            let la = tm.decode_step(&mut sa, tok, NumericsMode::Accelerator);
+            for (i, &k) in ks.iter().enumerate() {
+                if top_k(&ld, k) == top_k(&la, k) {
+                    agree[i] += 1;
+                }
+            }
+            total += 1;
+            // follow the desktop greedy path; occasionally jump randomly
+            // to cover more of the vocabulary
+            tok = if t % 7 == 6 {
+                rng.gen_range(0, tm.vocab) as u32
+            } else {
+                argmax(&ld) as u32
+            };
+        }
+    }
+    let fr: [f64; 4] = std::array::from_fn(|i| agree[i] as f64 / total as f64);
+    let mut out = String::from(
+        "Table I: token inference accuracy, accelerator vs desktop (same W4A8)\n",
+    );
+    out.push_str(&format!("{:<10}", ""));
+    for k in ks {
+        out.push_str(&format!("{:>9}", format!("Top-{k}")));
+    }
+    out.push('\n');
+    out.push_str(&format!("{:<10}", "Accuracy"));
+    for f in fr {
+        out.push_str(&format!("{:>8.1}%", 100.0 * f));
+    }
+    out.push_str("\npaper:         100%     100%      99%      98%\n");
+    (out, fr)
+}
+
+/// Derived headline numbers (§V prose claims) as machine-checkable values.
+pub struct Headlines {
+    pub swiftkv_speedup: f64,
+    pub attention_share: f64,
+    pub attention_reduction: f64,
+    pub tokens_per_s: f64,
+    pub speed_gain_vs_best_prior: f64,
+    pub token_eff_gain: f64,
+    pub gops: f64,
+    pub gops_per_w: f64,
+}
+
+/// Compute all §V headline numbers from the models.
+pub fn headlines(arch: &ArchConfig) -> Headlines {
+    let cfg = LlmConfig::llama2_7b();
+    let sp = edge_hw::fig7b_speedups(arch, 512, 128);
+    let swiftkv_speedup = sp.iter().find(|(l, _)| l == "SwiftKV").unwrap().1;
+    let sim = layer_sched::simulate_token(arch, &cfg, 512);
+    let share = sim.module_share("Attention (SKV)");
+    let p = power::power(arch, 1.0);
+    let gops = TokenCost::of(&cfg, 512).gops_at(sim.latency_ms / 1e3);
+    let best_prior: &AcceleratorPoint = &baselines::table3_baselines()[1]; // EdgeLLM llama2
+    Headlines {
+        swiftkv_speedup,
+        attention_share: share,
+        attention_reduction: baselines::DFX_ATTENTION_SHARE / share,
+        tokens_per_s: sim.tokens_per_s,
+        speed_gain_vs_best_prior: sim.tokens_per_s / best_prior.tokens_per_s() - 1.0,
+        token_eff_gain: power::tokens_per_joule(sim.tokens_per_s, p.system_w())
+            / best_prior.tokens_per_joule(),
+        gops,
+        gops_per_w: power::gops_per_watt(gops, p.chip_w()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_exhibits_render() {
+        let arch = ArchConfig::default();
+        for s in [
+            fig7a(&arch),
+            fig7b(&arch),
+            exp_lut_error(),
+            table2(&arch),
+            fig8a(&arch, &LlmConfig::llama2_7b(), 512),
+            table3(&arch),
+            fig8b(&arch),
+            table4(&arch),
+        ] {
+            assert!(s.len() > 40, "exhibit too short:\n{s}");
+        }
+    }
+
+    #[test]
+    fn headline_numbers_in_paper_range() {
+        let h = headlines(&ArchConfig::default());
+        assert!((h.swiftkv_speedup - 7.16).abs() < 0.25);
+        assert!((h.attention_reduction - 13.48).abs() < 13.48 * 0.35);
+        assert!((h.tokens_per_s - 81.5).abs() < 8.0);
+        assert!((h.token_eff_gain - 1.98).abs() < 0.35);
+        assert!((h.gops - 1100.3).abs() < 120.0);
+        assert!((h.gops_per_w - 60.12).abs() < 9.0);
+        assert!(h.speed_gain_vs_best_prior > 0.05);
+    }
+}

@@ -1,0 +1,14 @@
+//! Rotary Positional Embedding — standard (Eqs. 1–3) and the paper's
+//! decoder-specialized incremental form (Eq. 11, §IV-C).
+//!
+//! The incremental unit stores `a_i = cos θ_i`, `b_i = sin θ_i` as
+//! constants and advances the cached `(cos mθ_i, sin mθ_i)` by one
+//! angle-addition per generated token: four multipliers, three cycles,
+//! no CORDIC and no large-angle reduction. Only the *new* token's q and k
+//! are rotated; cached keys are already position-encoded.
+
+pub mod incremental;
+pub mod standard;
+
+pub use incremental::RopeState;
+pub use standard::{rope_apply_cached, rope_freqs, rope_standard};

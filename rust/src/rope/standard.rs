@@ -1,0 +1,97 @@
+//! Direct RoPE (Eqs. 1–3) — the reference the incremental unit is
+//! validated against.
+
+/// Angular frequencies `ω_i = base^{−2(i−1)/d}`, `i = 1..d/2` (Eq. 1).
+pub fn rope_freqs(d: usize, base: f64) -> Vec<f64> {
+    assert!(d % 2 == 0, "head dim must be even");
+    (0..d / 2)
+        .map(|i| base.powf(-2.0 * i as f64 / d as f64))
+        .collect()
+}
+
+/// Direct `RoPE(x, m)` (Eq. 3): rotate each consecutive channel pair by
+/// `mθ_i`, computing the trig directly (the "hardware-expensive" path the
+/// paper avoids at decode time).
+pub fn rope_standard(x: &[f32], m: u64, base: f64) -> Vec<f32> {
+    let d = x.len();
+    let freqs = rope_freqs(d, base);
+    let mut out = vec![0.0f32; d];
+    for (i, &w) in freqs.iter().enumerate() {
+        let theta = m as f64 * w;
+        let (sin, cos) = theta.sin_cos();
+        let (c, s) = (cos as f32, sin as f32);
+        let (x0, x1) = (x[2 * i], x[2 * i + 1]);
+        out[2 * i] = x0 * c - x1 * s;
+        out[2 * i + 1] = x0 * s + x1 * c;
+    }
+    out
+}
+
+/// Rotate channel pairs with pre-computed `(cos, sin)` tables — the
+/// rotation half of the incremental unit (Eq. 11's multiply network).
+pub fn rope_apply_cached(x: &[f32], cos: &[f32], sin: &[f32]) -> Vec<f32> {
+    let d = x.len();
+    assert_eq!(cos.len(), d / 2);
+    assert_eq!(sin.len(), d / 2);
+    let mut out = vec![0.0f32; d];
+    for i in 0..d / 2 {
+        let (x0, x1) = (x[2 * i], x[2 * i + 1]);
+        out[2 * i] = x0 * cos[i] - x1 * sin[i];
+        out[2 * i + 1] = x0 * sin[i] + x1 * cos[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        assert_eq!(rope_standard(&x, 0, 10000.0), x);
+    }
+
+    #[test]
+    fn rotation_preserves_pair_norms() {
+        let x: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let y = rope_standard(&x, 1234, 10000.0);
+        for i in 0..16 {
+            let nx = x[2 * i].hypot(x[2 * i + 1]);
+            let ny = y[2 * i].hypot(y[2 * i + 1]);
+            assert!((nx - ny).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relative_position_property() {
+        // ⟨RoPE(q,m), RoPE(k,n)⟩ depends only on m−n (RoPE's raison d'être)
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).cos()).collect();
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).sin()).collect();
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let d1 = dot(&rope_standard(&q, 100, 10000.0), &rope_standard(&k, 90, 10000.0));
+        let d2 = dot(&rope_standard(&q, 20, 10000.0), &rope_standard(&k, 10, 10000.0));
+        assert!((d1 - d2).abs() < 1e-3, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn cached_apply_matches_direct() {
+        let d = 16;
+        let m = 77u64;
+        let freqs = rope_freqs(d, 10000.0);
+        let cos: Vec<f32> = freqs.iter().map(|w| ((m as f64) * w).cos() as f32).collect();
+        let sin: Vec<f32> = freqs.iter().map(|w| ((m as f64) * w).sin() as f32).collect();
+        let x: Vec<f32> = (0..d).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let a = rope_apply_cached(&x, &cos, &sin);
+        let b = rope_standard(&x, m, 10000.0);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn odd_dim_rejected() {
+        rope_freqs(7, 10000.0);
+    }
+}

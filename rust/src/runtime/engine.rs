@@ -1,0 +1,360 @@
+//! The decode engine: compiled executables + resident weights + per-batch
+//! state.
+
+use crate::model::weights::{TinyManifest, WeightStore};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Per-batch decode state: KV caches and RoPE recurrence values, kept as
+/// host literals and threaded through `execute` each step (the tiny model
+/// state is a few MB; see DESIGN.md §Perf for the measured step cost).
+pub struct BatchState {
+    pub batch: usize,
+    kc: Literal,
+    vc: Literal,
+    cos: Literal,
+    sin: Literal,
+    /// Decode steps taken (positions consumed per lane are tracked by the
+    /// coordinator; this is for diagnostics).
+    pub steps: u64,
+}
+
+/// The PJRT decode engine.
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: TinyManifest,
+    /// Lazily compiled decode executables, keyed by batch size.
+    decode: Mutex<BTreeMap<usize, PjRtLoadedExecutable>>,
+    /// Lazily compiled attention-only executable (quickstart artifact).
+    attn: Mutex<Option<PjRtLoadedExecutable>>,
+    /// Weight literals in HLO-signature order.
+    weights: Vec<Literal>,
+}
+
+impl Engine {
+    /// Load manifest + weights and create the PJRT CPU client. Executables
+    /// compile lazily on first use.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let ws = WeightStore::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e}"))?;
+        let mut weights = Vec::with_capacity(ws.arrays().len());
+        for meta in ws.arrays() {
+            let ty = match meta.dtype.as_str() {
+                "float32" => ElementType::F32,
+                "int8" => ElementType::S8,
+                "int32" => ElementType::S32,
+                other => bail!("unsupported dtype {other} for {}", meta.name),
+            };
+            let lit = Literal::create_from_shape_and_untyped_data(
+                ty,
+                &meta.shape,
+                ws.bytes(&meta.name)?,
+            )
+            .map_err(|e| anyhow!("literal {}: {e}", meta.name))?;
+            weights.push(lit);
+        }
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest: ws.manifest,
+            decode: Mutex::new(BTreeMap::new()),
+            attn: Mutex::new(None),
+            weights,
+        })
+    }
+
+    fn compile_file(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))
+    }
+
+    /// Batch sizes with a compiled decode variant available.
+    pub fn batch_variants(&self) -> &[usize] {
+        &self.manifest.batch_variants
+    }
+
+    /// Smallest compiled batch variant that fits `n` lanes.
+    pub fn pick_batch(&self, n: usize) -> Option<usize> {
+        self.manifest
+            .batch_variants
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .or_else(|| self.manifest.batch_variants.last().copied())
+    }
+
+    fn ensure_decode(&self, batch: usize) -> Result<()> {
+        let mut map = self.decode.lock().unwrap();
+        if map.contains_key(&batch) {
+            return Ok(());
+        }
+        let file = format!("tiny_decode_b{batch}.hlo.txt");
+        let exe = self
+            .compile_file(&file)
+            .with_context(|| format!("decode variant b{batch}"))?;
+        map.insert(batch, exe);
+        Ok(())
+    }
+
+    /// Fresh zeroed state for a batch variant.
+    pub fn new_state(&self, batch: usize) -> Result<BatchState> {
+        if !self.manifest.batch_variants.contains(&batch) {
+            bail!("no compiled variant for batch {batch}");
+        }
+        let m = &self.manifest;
+        let cache_elems = batch * m.n_layers * m.n_heads * m.n_ctx * m.d_head;
+        let half = m.d_head / 2;
+        let kc = Literal::vec1(vec![0f32; cache_elems].as_slice()).reshape(&[
+            batch as i64,
+            m.n_layers as i64,
+            m.n_heads as i64,
+            m.n_ctx as i64,
+            m.d_head as i64,
+        ])?;
+        let vc = kc.clone_literal()?;
+        // RoPE seed: one step before position 0 — cos(−θ)=a, sin(−θ)=−b
+        let freqs: Vec<f64> = crate::rope::rope_freqs(m.d_head, m.rope_base);
+        let mut cos0 = Vec::with_capacity(batch * half);
+        let mut sin0 = Vec::with_capacity(batch * half);
+        for _ in 0..batch {
+            cos0.extend(freqs.iter().map(|w| w.cos() as f32));
+            sin0.extend(freqs.iter().map(|w| (-w.sin()) as f32));
+        }
+        let cos = f32_literal(&cos0, &[batch, half])?;
+        let sin = f32_literal(&sin0, &[batch, half])?;
+        Ok(BatchState {
+            batch,
+            kc,
+            vc,
+            cos,
+            sin,
+            steps: 0,
+        })
+    }
+
+    /// One decode step for the whole batch. `tokens[i]` is appended at
+    /// position `pos[i]` of lane `i`; returns logits `[batch * vocab]`
+    /// row-major. Lanes that are idle should carry `pos = 0, token = 0`
+    /// (their cache row 0 is overwritten next time they start a sequence).
+    pub fn decode_step(
+        &self,
+        st: &mut BatchState,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != st.batch || pos.len() != st.batch {
+            bail!(
+                "batch mismatch: state {}, tokens {}, pos {}",
+                st.batch,
+                tokens.len(),
+                pos.len()
+            );
+        }
+        for (i, &p) in pos.iter().enumerate() {
+            if p as usize >= self.manifest.n_ctx {
+                bail!("lane {i}: position {p} ≥ context capacity {}", self.manifest.n_ctx);
+            }
+        }
+        self.ensure_decode(st.batch)?;
+        let map = self.decode.lock().unwrap();
+        let exe = map.get(&st.batch).unwrap();
+
+        let tok_lit = Literal::vec1(tokens);
+        let pos_lit = Literal::vec1(pos);
+        let mut args: Vec<&Literal> = vec![&tok_lit, &pos_lit, &st.kc, &st.vc, &st.cos, &st.sin];
+        args.extend(self.weights.iter());
+
+        let result = exe
+            .execute::<&Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let mut outs = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if outs.len() != 5 {
+            bail!("expected 5 outputs, got {}", outs.len());
+        }
+        let sin = outs.pop().unwrap();
+        let cos = outs.pop().unwrap();
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        st.kc = kc;
+        st.vc = vc;
+        st.cos = cos;
+        st.sin = sin;
+        st.steps += 1;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e}"))
+    }
+
+    /// Debug: fetch the K-cache as a host vector (cross-validation).
+    pub fn debug_kcache(&self, st: &BatchState) -> Result<Vec<f32>> {
+        st.kc.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Debug: fetch the RoPE cos state.
+    pub fn debug_cos(&self, st: &BatchState) -> Result<Vec<f32>> {
+        st.cos.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Run the attention-only artifact (quickstart): row-batched SwiftKV
+    /// attention as lowered from the Pallas kernel.
+    pub fn attention(
+        &self,
+        lens: &[i32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        rows: usize,
+        n_ctx: usize,
+        d_head: usize,
+    ) -> Result<Vec<f32>> {
+        {
+            let mut slot = self.attn.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(self.compile_file("swiftkv_attn.hlo.txt")?);
+            }
+        }
+        let slot = self.attn.lock().unwrap();
+        let exe = slot.as_ref().unwrap();
+        let (r, n, d) = (rows as i64, n_ctx as i64, d_head as i64);
+        let lens_l = Literal::vec1(lens);
+        let q_l = Literal::vec1(q).reshape(&[r, d])?;
+        let k_l = Literal::vec1(k).reshape(&[r, n, d])?;
+        let v_l = Literal::vec1(v).reshape(&[r, n, d])?;
+        let result = exe
+            .execute::<Literal>(&[lens_l, q_l, k_l, v_l])
+            .map_err(|e| anyhow!("execute attn: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("out: {e}"))
+    }
+}
+
+/// Build an f32 literal from a host slice with an explicit shape via the
+/// untyped-data path (avoids `vec1().reshape()`, whose result the 0.5.1
+/// runtime transfers incorrectly for some shapes).
+fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("f32 literal: {e}"))
+}
+
+/// `Literal` lacks `Clone`; round-trip through raw parts.
+trait CloneLiteral {
+    fn clone_literal(&self) -> Result<Literal>;
+}
+
+impl CloneLiteral for Literal {
+    fn clone_literal(&self) -> Result<Literal> {
+        let shape = self.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let mut bytes = vec![0u8; self.size_bytes()];
+        // copy_raw_to is typed; use f32 path for f32 arrays
+        match self.ty().map_err(|e| anyhow!("{e}"))? {
+            xla::ElementType::F32 => {
+                let mut host = vec![0f32; self.element_count()];
+                self.copy_raw_to(&mut host).map_err(|e| anyhow!("{e}"))?;
+                bytes.copy_from_slice(unsafe {
+                    std::slice::from_raw_parts(host.as_ptr() as *const u8, host.len() * 4)
+                });
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, &dims, &bytes)
+                    .map_err(|e| anyhow!("{e}"))
+            }
+            other => bail!("clone_literal: unsupported {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    fn engine() -> Option<Engine> {
+        artifacts_available().then(|| Engine::load(&default_artifacts_dir()).unwrap())
+    }
+
+    #[test]
+    fn loads_weights_and_manifest() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!e.weights.is_empty());
+        assert!(e.batch_variants().contains(&1));
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let Some(e) = engine() else {
+            return;
+        };
+        assert_eq!(e.pick_batch(1), Some(1));
+        assert_eq!(e.pick_batch(3), Some(4));
+        assert_eq!(e.pick_batch(100), Some(8));
+    }
+
+    #[test]
+    fn state_rejects_unknown_batch() {
+        let Some(e) = engine() else {
+            return;
+        };
+        assert!(e.new_state(3).is_err());
+        assert!(e.new_state(1).is_ok());
+    }
+
+    #[test]
+    fn decode_step_positions_validated() {
+        let Some(e) = engine() else {
+            return;
+        };
+        let mut st = e.new_state(1).unwrap();
+        let bad = e.decode_step(&mut st, &[0], &[e.manifest.n_ctx as i32]);
+        assert!(bad.is_err());
+    }
+}
+
+#[cfg(test)]
+mod state_tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    /// The returned state must evolve: after one step, cache row 0 holds
+    /// the rotated key, the RoPE state holds cos(0·θ) = 1, and untouched
+    /// rows remain zero. (This is the regression test for the elided-
+    /// constant bug — see aot.py's to_hlo_text docstring.)
+    #[test]
+    fn state_roundtrip_evolves() {
+        if !artifacts_available() {
+            return;
+        }
+        let e = Engine::load(&default_artifacts_dir()).unwrap();
+        let mut st = e.new_state(1).unwrap();
+        e.decode_step(&mut st, &[3], &[0]).unwrap();
+        let m = &e.manifest;
+        let kc = e.debug_kcache(&st).unwrap();
+        let row0: f32 = kc[..m.d_head].iter().map(|x| x.abs()).sum();
+        let row1: f32 = kc[m.d_head..2 * m.d_head].iter().map(|x| x.abs()).sum();
+        assert!(row0 > 0.0, "cache row 0 empty after step 0");
+        assert_eq!(row1, 0.0, "cache row 1 written prematurely");
+        let cos = e.debug_cos(&st).unwrap();
+        for (i, c) in cos.iter().enumerate() {
+            assert!((c - 1.0).abs() < 1e-5, "cos[{i}] = {c}, want cos(0) = 1");
+        }
+    }
+}

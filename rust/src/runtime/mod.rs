@@ -1,0 +1,23 @@
+//! PJRT runtime — loads the AOT artifacts and executes them from the
+//! serving hot path. Python never runs here: the HLO text produced once by
+//! `python/compile/aot.py` is parsed, compiled and executed through the
+//! `xla` crate's PJRT CPU client.
+//!
+//! [`engine::Engine`] owns the client, the compiled decode-step
+//! executables (one per batch variant) and the resident weight literals;
+//! [`engine::BatchState`] carries a batch's KV caches and RoPE recurrence
+//! state between steps.
+
+pub mod engine;
+
+pub use engine::{BatchState, Engine};
+
+/// Default artifacts directory (relative to the crate root).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the AOT artifacts have been built.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,102 @@
+//! SKV Processor Array cycle model (Fig. 5): dual-mode GEMV / attention.
+
+use super::ArchConfig;
+
+/// GEMV mode: INT8 input × INT4 weights. The input vector is split into
+/// `n_processors` chunks of `int_lanes` dims; one array pass reduces
+/// `gemv_width()` dims per cycle, producing one output element per cycle
+/// via pipelining (partial sums EM-Added in the SFU).
+///
+/// `din`-dim input, `dout` output elements → `ceil(din/width) · dout`
+/// steady-state cycles plus the pipeline fill.
+pub fn gemv_cycles(arch: &ArchConfig, din: usize, dout: usize) -> u64 {
+    assert!(din >= 1 && dout >= 1);
+    let passes = din.div_ceil(arch.gemv_width()) as u64;
+    let fill = arch.dot_latency + 2; // array pipeline + EM-Add tree
+    passes * dout as u64 + fill
+}
+
+/// Attention mode: each SKV processor runs one head's single-pass SwiftKV
+/// attention independently (FXP32, 32-dim dot per cycle → `qk_ii` cycles
+/// per token). Heads beyond `n_processors` serialize in rounds.
+pub fn attention_cycles(arch: &ArchConfig, n_heads: usize, d_head: usize, len: usize) -> u64 {
+    assert!(n_heads >= 1 && len >= 1);
+    let ii = d_head.div_ceil(arch.fxp_lanes()) as u64;
+    let fill = arch.dot_latency + 1 + arch.exp_latency + arch.mul_latency;
+    let finalize = arch.div_latency + ii;
+    let per_head = ii * len as u64 + fill + finalize;
+    let rounds = n_heads.div_ceil(arch.n_processors) as u64;
+    rounds * per_head
+}
+
+/// Decoder-RoPE cycles for one token (Fig. 6): the pair recurrence +
+/// rotation is a 3-stage pipeline over `d_head/2` pairs, running in every
+/// SKV unit in parallel (q and k rotate concurrently on separate
+/// multiplier pairs).
+pub fn rope_cycles(arch: &ArchConfig, d_head: usize) -> u64 {
+    arch.rope_pair_latency + (d_head as u64 / 2).saturating_sub(1)
+}
+
+/// Peak GEMV throughput in GOPS (2 ops per MAC).
+pub fn gemv_peak_gops(arch: &ArchConfig) -> f64 {
+    2.0 * arch.gemv_width() as f64 * arch.clock_mhz * 1e6 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn gemv_4096_square_one_output_per_cycle() {
+        // 4096-dim dot in a single pass → dout cycles + fill
+        let c = gemv_cycles(&arch(), 4096, 4096);
+        assert!((c as i64 - 4096).unsigned_abs() < 16, "{c}");
+    }
+
+    #[test]
+    fn gemv_wide_input_multiple_passes() {
+        // 11008-dim input needs ceil(11008/4096) = 3 passes per output
+        let c = gemv_cycles(&arch(), 11008, 4096);
+        assert!((c as i64 - 3 * 4096).unsigned_abs() < 16, "{c}");
+    }
+
+    #[test]
+    fn attention_32_heads_parallel_4n() {
+        // 32 heads fit the array → one round of ≈ 4N cycles (paper §IV-B)
+        let c = attention_cycles(&arch(), 32, 128, 512);
+        assert!((c as f64 - 2048.0).abs() < 60.0, "{c}");
+    }
+
+    #[test]
+    fn attention_64_heads_two_rounds() {
+        let one = attention_cycles(&arch(), 32, 128, 512);
+        let two = attention_cycles(&arch(), 64, 128, 512);
+        assert_eq!(two, 2 * one);
+    }
+
+    #[test]
+    fn gqa_fewer_kv_heads_same_rounds() {
+        // attention parallelism is over *query* heads
+        let a = attention_cycles(&arch(), 32, 128, 256);
+        let b = attention_cycles(&arch(), 24, 128, 256);
+        assert_eq!(a, b); // both one round
+    }
+
+    #[test]
+    fn rope_three_cycles_plus_pipeline() {
+        // d=128 → 64 pairs → 3 + 63 = 66 cycles
+        assert_eq!(rope_cycles(&arch(), 128), 66);
+        // a single pair takes exactly the paper's 3 cycles
+        assert_eq!(rope_cycles(&arch(), 2), 3);
+    }
+
+    #[test]
+    fn peak_gops_near_paper_1836() {
+        let g = gemv_peak_gops(&arch());
+        assert!((g - 1836.0).abs() / 1836.0 < 0.01, "{g}");
+    }
+}

@@ -1,0 +1,38 @@
+//! Dispatcher cycle model (§IV-A): moves vectors between the Processor
+//! Array, the Global Buffer and the SFU — splitting `x ∈ R^4096` across 32
+//! processors and collecting results.
+
+use super::ArchConfig;
+
+/// Cycles to move `bytes` through the dispatcher crossbar.
+pub fn move_cycles(arch: &ArchConfig, bytes: u64) -> u64 {
+    bytes.div_ceil(arch.dispatch_bytes_per_cycle) + 2
+}
+
+/// Scatter an f32/FXP32 vector of `n` elements to the array.
+pub fn scatter_vec_cycles(arch: &ArchConfig, n: usize) -> u64 {
+    move_cycles(arch, 4 * n as u64)
+}
+
+/// Gather per-head results (`n` elements) back to the buffer/SFU.
+pub fn gather_vec_cycles(arch: &ArchConfig, n: usize) -> u64 {
+    move_cycles(arch, 4 * n as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_move_cost() {
+        let a = ArchConfig::default();
+        // 4096 f32 = 16 KiB at 128 B/cycle = 128 cycles + overhead
+        assert_eq!(scatter_vec_cycles(&a, 4096), 128 + 2);
+    }
+
+    #[test]
+    fn small_moves_dominated_by_overhead() {
+        let a = ArchConfig::default();
+        assert_eq!(move_cycles(&a, 8), 3);
+    }
+}

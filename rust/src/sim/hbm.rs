@@ -1,0 +1,41 @@
+//! HBM traffic model: bytes ÷ bandwidth, in core cycles.
+
+use super::ArchConfig;
+
+/// Cycles to stream `bytes` from HBM at the configured bandwidth.
+pub fn stream_cycles(arch: &ArchConfig, bytes: u64) -> u64 {
+    (bytes as f64 / arch.hbm_bytes_per_cycle()).ceil() as u64
+}
+
+/// Effective GB/s for a transfer that took `cycles` cycles.
+pub fn achieved_gbps(arch: &ArchConfig, bytes: u64, cycles: u64) -> f64 {
+    bytes as f64 / (cycles as f64 / (arch.clock_mhz * 1e6)) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_accounting() {
+        let a = ArchConfig::default();
+        // 460 GB for one second's worth of cycles
+        let cycles = stream_cycles(&a, 460_000_000_000);
+        let secs = cycles as f64 / (a.clock_mhz * 1e6);
+        assert!((secs - 1.0).abs() < 1e-3, "secs = {secs}");
+    }
+
+    #[test]
+    fn achieved_equals_configured_at_saturation() {
+        let a = ArchConfig::default();
+        let bytes = 1_000_000_000;
+        let cycles = stream_cycles(&a, bytes);
+        let g = achieved_gbps(&a, bytes, cycles);
+        assert!((g - 460.0).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        assert_eq!(stream_cycles(&ArchConfig::default(), 0), 0);
+    }
+}

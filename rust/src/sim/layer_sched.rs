@@ -1,0 +1,350 @@
+//! Full per-token decode schedule of a model on SwiftKV-MHA — the source
+//! of the Table III latency/throughput numbers and the Fig. 8(a)
+//! module-level breakdown.
+//!
+//! The Dispatcher serializes the per-layer stages (Fig. 4's dataflow);
+//! within each weight-bound GEMV stage, HBM streaming is overlapped with
+//! compute up to `prefetch_eff` (Global-Buffer double buffering). The KV
+//! stream of the attention stage is a fully sequential scan whose
+//! addresses are known in advance, so it double-buffers perfectly:
+//! `time = max(compute, kv_stream)`.
+
+use super::{array, dispatcher, hbm, sfu, ArchConfig};
+use crate::model::LlmConfig;
+
+/// One scheduled stage: compute cycles, memory cycles, resulting time.
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    pub name: &'static str,
+    /// Module group for the Fig. 8(a) breakdown.
+    pub module: &'static str,
+    pub compute: u64,
+    pub memory: u64,
+    pub time: u64,
+}
+
+/// Simulated cost of generating one token.
+#[derive(Debug, Clone)]
+pub struct TokenSim {
+    pub model: String,
+    pub n_ctx: usize,
+    /// Per-layer stages (one layer's worth; layers are identical).
+    pub layer_stages: Vec<StageCost>,
+    /// Final stages (norm + LM head).
+    pub head_stages: Vec<StageCost>,
+    pub n_layers: usize,
+    pub total_cycles: u64,
+    pub latency_ms: f64,
+    pub tokens_per_s: f64,
+}
+
+impl TokenSim {
+    /// Fig. 8(a): cycles per module group, aggregated over all layers.
+    pub fn module_breakdown(&self) -> Vec<(String, u64)> {
+        let mut groups: Vec<(String, u64)> = Vec::new();
+        let mut add = |name: &str, cycles: u64| {
+            if let Some(g) = groups.iter_mut().find(|(n, _)| n == name) {
+                g.1 += cycles;
+            } else {
+                groups.push((name.to_string(), cycles));
+            }
+        };
+        for s in &self.layer_stages {
+            add(s.module, s.time * self.n_layers as u64);
+        }
+        for s in &self.head_stages {
+            add(s.module, s.time);
+        }
+        groups
+    }
+
+    /// Fraction of total latency spent in a module group.
+    pub fn module_share(&self, module: &str) -> f64 {
+        let total: u64 = self.module_breakdown().iter().map(|(_, c)| c).sum();
+        let m = self
+            .module_breakdown()
+            .iter()
+            .find(|(n, _)| n == module)
+            .map(|(_, c)| *c)
+            .unwrap_or(0);
+        m as f64 / total as f64
+    }
+}
+
+/// Bytes of packed W4 storage for a `[din, dout]` matrix + f32 scales.
+fn w4_bytes(din: usize, dout: usize) -> u64 {
+    (din as u64 * dout as u64) / 2 + dout as u64 * 4
+}
+
+/// Simulate one decode step at context length `n_ctx`.
+pub fn simulate_token(arch: &ArchConfig, cfg: &LlmConfig, n_ctx: usize) -> TokenSim {
+    let d = cfg.d_model;
+    let kv_dim = cfg.n_kv_heads * cfg.d_head;
+    let ffn = cfg.d_ffn;
+
+    let mut stages: Vec<StageCost> = Vec::new();
+    let weight_stage = |name: &'static str, module: &'static str, compute: u64, wbytes: u64| {
+        let memory = hbm::stream_cycles(arch, wbytes);
+        StageCost {
+            name,
+            module,
+            compute,
+            memory,
+            time: arch.overlap(compute, memory),
+        }
+    };
+    let sfu_stage = |name: &'static str, cycles: u64| StageCost {
+        name,
+        module: "SFU & Dispatch",
+        compute: cycles,
+        memory: 0,
+        time: cycles,
+    };
+
+    // --- attention half of the layer ------------------------------------
+    stages.push(sfu_stage(
+        "attn RMSNorm + INT8 cast",
+        sfu::rmsnorm_cycles(arch, d) + sfu::cast_cycles(arch, d) + dispatcher::scatter_vec_cycles(arch, d),
+    ));
+    stages.push(weight_stage(
+        "QKV GEMV",
+        "QKV/O projections",
+        array::gemv_cycles(arch, d, d) + 2 * array::gemv_cycles(arch, d, kv_dim),
+        w4_bytes(d, d) + 2 * w4_bytes(d, kv_dim),
+    ));
+    stages.push(sfu_stage(
+        "QKV FXP32 cast + head split",
+        3 * sfu::cast_cycles(arch, d.max(kv_dim)) + dispatcher::scatter_vec_cycles(arch, d),
+    ));
+    stages.push(StageCost {
+        name: "decoder RoPE",
+        module: "Attention (SKV)",
+        compute: array::rope_cycles(arch, cfg.d_head),
+        memory: 0,
+        time: array::rope_cycles(arch, cfg.d_head),
+    });
+    // single-pass attention: per-head FXP32 scan; KV stream (INT8) is a
+    // perfectly prefetchable sequential scan → time = max(compute, mem)
+    {
+        let compute = array::attention_cycles(arch, cfg.n_heads, cfg.d_head, n_ctx);
+        let kv_bytes = cfg.kv_bytes_per_token_layer() * n_ctx as u64 // read
+            + cfg.kv_bytes_per_token_layer(); // append write
+        let memory = hbm::stream_cycles(arch, kv_bytes);
+        stages.push(StageCost {
+            name: "SwiftKV attention (all heads)",
+            module: "Attention (SKV)",
+            compute,
+            memory,
+            time: compute.max(memory),
+        });
+    }
+    stages.push(sfu_stage(
+        "attn out INT8 cast + gather",
+        sfu::cast_cycles(arch, d) + dispatcher::gather_vec_cycles(arch, d),
+    ));
+    stages.push(weight_stage(
+        "O GEMV",
+        "QKV/O projections",
+        array::gemv_cycles(arch, d, d),
+        w4_bytes(d, d),
+    ));
+    stages.push(sfu_stage("residual EM-Add", sfu::elementwise_cycles(arch, d)));
+
+    // --- MLP half of the layer -------------------------------------------
+    stages.push(sfu_stage(
+        "mlp RMSNorm + INT8 cast",
+        sfu::rmsnorm_cycles(arch, d) + sfu::cast_cycles(arch, d),
+    ));
+    if cfg.gated_mlp {
+        stages.push(weight_stage(
+            "gate+up GEMV",
+            "FFN",
+            2 * array::gemv_cycles(arch, d, ffn),
+            2 * w4_bytes(d, ffn),
+        ));
+        stages.push(sfu_stage(
+            "SiLU + Hadamard + cast",
+            2 * sfu::elementwise_cycles(arch, ffn) + sfu::cast_cycles(arch, ffn),
+        ));
+    } else {
+        stages.push(weight_stage(
+            "up GEMV",
+            "FFN",
+            array::gemv_cycles(arch, d, ffn),
+            w4_bytes(d, ffn),
+        ));
+        stages.push(sfu_stage(
+            "activation + cast",
+            sfu::elementwise_cycles(arch, ffn) + sfu::cast_cycles(arch, ffn),
+        ));
+    }
+    stages.push(weight_stage(
+        "down GEMV",
+        "FFN",
+        array::gemv_cycles(arch, ffn, d),
+        w4_bytes(ffn, d),
+    ));
+    stages.push(sfu_stage("residual EM-Add ", sfu::elementwise_cycles(arch, d)));
+
+    // --- final norm + LM head ---------------------------------------------
+    let head_stages = vec![
+        StageCost {
+            name: "final RMSNorm + cast",
+            module: "SFU & Dispatch",
+            compute: sfu::rmsnorm_cycles(arch, d) + sfu::cast_cycles(arch, d),
+            memory: 0,
+            time: sfu::rmsnorm_cycles(arch, d) + sfu::cast_cycles(arch, d),
+        },
+        weight_stage(
+            "LM head GEMV",
+            "LM head",
+            array::gemv_cycles(arch, d, cfg.vocab),
+            w4_bytes(d, cfg.vocab),
+        ),
+    ];
+
+    let layer_cycles: u64 = stages.iter().map(|s| s.time).sum();
+    let head_cycles: u64 = head_stages.iter().map(|s| s.time).sum();
+    let total = layer_cycles * cfg.n_layers as u64 + head_cycles;
+    let latency_ms = arch.cycles_to_ms(total);
+
+    TokenSim {
+        model: cfg.name.to_string(),
+        n_ctx,
+        layer_stages: stages,
+        head_stages,
+        n_layers: cfg.n_layers,
+        total_cycles: total,
+        latency_ms,
+        tokens_per_s: 1000.0 / latency_ms,
+    }
+}
+
+/// Average decode latency over a generation whose context grows from
+/// `start_ctx` to `start_ctx + steps` (Table III measures at a fixed
+/// context; this is used by the serving metrics).
+pub fn average_latency_ms(arch: &ArchConfig, cfg: &LlmConfig, start_ctx: usize, steps: usize) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..steps {
+        acc += simulate_token(arch, cfg, start_ctx + i).latency_ms;
+    }
+    acc / steps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    /// Table III: LLaMA2-7B decode latency 12.3 ms, 81.5 token/s.
+    #[test]
+    fn calibration_llama2() {
+        let sim = simulate_token(&arch(), &LlmConfig::llama2_7b(), 512);
+        assert!(
+            (sim.latency_ms - 12.3).abs() < 1.0,
+            "latency {:.2} ms vs paper 12.3",
+            sim.latency_ms
+        );
+        assert!(
+            (sim.tokens_per_s - 81.5).abs() < 7.0,
+            "speed {:.1} tok/s vs paper 81.5",
+            sim.tokens_per_s
+        );
+    }
+
+    /// Table III: ChatGLM-6B decode latency 10.4 ms, 96.3 token/s.
+    #[test]
+    fn calibration_chatglm() {
+        let sim = simulate_token(&arch(), &LlmConfig::chatglm_6b(), 512);
+        assert!(
+            (sim.latency_ms - 10.4).abs() < 1.3,
+            "latency {:.2} ms vs paper 10.4",
+            sim.latency_ms
+        );
+    }
+
+    /// Fig. 8(a): attention is ≈ 3.19 % of end-to-end latency — a 13.48×
+    /// reduction from the 43 % reported by DFX [5].
+    #[test]
+    fn fig8a_attention_share() {
+        let sim = simulate_token(&arch(), &LlmConfig::llama2_7b(), 512);
+        let share = sim.module_share("Attention (SKV)");
+        assert!(
+            (0.022..0.045).contains(&share),
+            "attention share {:.2}% vs paper 3.19%",
+            share * 100.0
+        );
+        let reduction = 0.43 / share;
+        assert!(
+            (9.5..20.0).contains(&reduction),
+            "reduction {reduction:.1}× vs paper 13.48×"
+        );
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let sim = simulate_token(&arch(), &LlmConfig::llama2_7b(), 512);
+        let sum: u64 = sim.module_breakdown().iter().map(|(_, c)| c).sum();
+        assert_eq!(sum, sim.total_cycles);
+    }
+
+    #[test]
+    fn ffn_dominates_gemv_bound_decode() {
+        // W4A8 decode is weight-bound: FFN > QKV/O > attention
+        let sim = simulate_token(&arch(), &LlmConfig::llama2_7b(), 512);
+        let get = |m: &str| {
+            sim.module_breakdown()
+                .iter()
+                .find(|(n, _)| n == m)
+                .map(|(_, c)| *c)
+                .unwrap()
+        };
+        assert!(get("FFN") > get("QKV/O projections"));
+        assert!(get("QKV/O projections") > get("Attention (SKV)"));
+    }
+
+    #[test]
+    fn latency_grows_mildly_with_context() {
+        let a = arch();
+        let cfg = LlmConfig::llama2_7b();
+        let short = simulate_token(&a, &cfg, 128).latency_ms;
+        let long = simulate_token(&a, &cfg, 2048).latency_ms;
+        assert!(long > short);
+        // decode is weight-bound: 16× context costs well under 2× latency
+        assert!(long / short < 1.6, "{short} → {long}");
+    }
+
+    #[test]
+    fn gqa_model_cheaper_kv() {
+        let a = arch();
+        let mha = simulate_token(&a, &LlmConfig::llama2_7b(), 2048);
+        let gqa = simulate_token(&a, &LlmConfig::llama3_8b(), 2048);
+        let mha_attn = mha
+            .module_breakdown()
+            .iter()
+            .find(|(n, _)| n == "Attention (SKV)")
+            .unwrap()
+            .1;
+        let gqa_attn = gqa
+            .module_breakdown()
+            .iter()
+            .find(|(n, _)| n == "Attention (SKV)")
+            .unwrap()
+            .1;
+        // same query-head count ⇒ same compute, but the KV stream is 4×
+        // smaller; at long context the attention stage must not be larger
+        assert!(gqa_attn <= mha_attn);
+    }
+
+    #[test]
+    fn average_latency_monotone_window() {
+        let a = arch();
+        let cfg = LlmConfig::llama2_7b();
+        let early = average_latency_ms(&a, &cfg, 64, 16);
+        let late = average_latency_ms(&a, &cfg, 1024, 16);
+        assert!(late >= early);
+    }
+}

@@ -1,0 +1,128 @@
+//! Power & efficiency model — Tables III/IV and Fig. 8(b).
+//!
+//! §V: "normalized power consumption of the SwiftKV-MHA FPGA chip is
+//! 18.3 W, with HBM power consumption of approximately 15.5 W" → 33.8 W
+//! system (Table III). Efficiency metrics: token/J = speed / system
+//! power; GOPS/W (Table IV convention, chip power).
+//!
+//! Chip power is a first-order activity model over the resource estimate:
+//! static + per-DSP + per-LUT + per-BRAM dynamic at the given clock,
+//! fitted to the paper's 18.3 W at the default configuration.
+
+use super::resources::{estimate, ResourceReport};
+use super::ArchConfig;
+
+/// Power estimate breakdown (watts).
+#[derive(Debug, Clone)]
+pub struct PowerReport {
+    pub static_w: f64,
+    pub dsp_w: f64,
+    pub logic_w: f64,
+    pub bram_w: f64,
+    pub hbm_w: f64,
+}
+
+impl PowerReport {
+    pub fn chip_w(&self) -> f64 {
+        self.static_w + self.dsp_w + self.logic_w + self.bram_w
+    }
+
+    pub fn system_w(&self) -> f64 {
+        self.chip_w() + self.hbm_w
+    }
+}
+
+/// Per-unit dynamic power constants at 225 MHz (fitted to §V's 18.3 W
+/// chip + 15.5 W HBM at full streaming).
+const STATIC_W: f64 = 3.2;
+const DSP_MW: f64 = 1.5;
+const LUT_UW: f64 = 7.0;
+const BRAM_MW: f64 = 8.0;
+const HBM_W_FULL: f64 = 15.5;
+
+/// Estimate power for an architecture (chip scales with clock and
+/// resources; HBM with achieved bandwidth utilization).
+pub fn power(arch: &ArchConfig, hbm_utilization: f64) -> PowerReport {
+    let r: ResourceReport = estimate(arch);
+    let t = r.total();
+    let f_scale = arch.clock_mhz / 225.0;
+    PowerReport {
+        static_w: STATIC_W,
+        dsp_w: t.dsp as f64 * DSP_MW / 1e3 * f_scale,
+        logic_w: (t.lut + t.ff / 2) as f64 * LUT_UW / 1e6 * f_scale,
+        bram_w: t.bram as f64 * BRAM_MW / 1e3 * f_scale,
+        hbm_w: HBM_W_FULL * hbm_utilization.clamp(0.0, 1.0),
+    }
+}
+
+/// Tokens per joule at a generation speed (Table III's token/J column).
+pub fn tokens_per_joule(tokens_per_s: f64, system_w: f64) -> f64 {
+    tokens_per_s / system_w
+}
+
+/// GOPS per watt (Table IV's efficiency column, chip power convention).
+pub fn gops_per_watt(gops: f64, chip_w: f64) -> f64 {
+    gops / chip_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_power_matches_paper() {
+        let p = power(&ArchConfig::default(), 1.0);
+        assert!(
+            (p.chip_w() - 18.3).abs() < 0.8,
+            "chip power {:.1} W vs paper 18.3 W",
+            p.chip_w()
+        );
+    }
+
+    #[test]
+    fn system_power_matches_table3() {
+        let p = power(&ArchConfig::default(), 1.0);
+        assert!(
+            (p.system_w() - 33.8).abs() < 1.0,
+            "system {:.1} W vs paper 33.8 W",
+            p.system_w()
+        );
+    }
+
+    /// Table III: 81.5 token/s at 33.8 W → 2.41 token/J.
+    #[test]
+    fn tokens_per_joule_llama2() {
+        let tpj = tokens_per_joule(81.5, 33.8);
+        assert!((tpj - 2.41).abs() < 0.02, "{tpj:.2}");
+    }
+
+    /// Table IV: 1100.3 GOPS / 18.3 W = 60.12 GOPS/W.
+    #[test]
+    fn gops_per_watt_table4() {
+        let e = gops_per_watt(1100.3, 18.3);
+        assert!((e - 60.12).abs() < 0.2, "{e:.2}");
+    }
+
+    #[test]
+    fn hbm_power_scales_with_utilization() {
+        let idle = power(&ArchConfig::default(), 0.0);
+        let full = power(&ArchConfig::default(), 1.0);
+        assert!(idle.hbm_w < 0.1);
+        assert!((full.hbm_w - 15.5).abs() < 1e-9);
+        assert_eq!(idle.chip_w(), full.chip_w());
+    }
+
+    #[test]
+    fn power_scales_with_clock() {
+        let slow = power(
+            &ArchConfig {
+                clock_mhz: 112.5,
+                ..ArchConfig::default()
+            },
+            1.0,
+        );
+        let fast = power(&ArchConfig::default(), 1.0);
+        assert!(slow.chip_w() < fast.chip_w());
+        assert!(slow.chip_w() > fast.chip_w() / 2.0); // static floor
+    }
+}

@@ -1,0 +1,56 @@
+//! Special Function Unit cycle model (§IV-A): EM-Add, quantization /
+//! casting (FXP32/INT32/INT8), Hadamard product, SiLU, RMS normalization.
+//!
+//! All are lane-parallel vector ops at `sfu_lanes` elements per cycle with
+//! a short pipeline; RMSNorm needs a reduction pass plus an rsqrt.
+
+use super::ArchConfig;
+
+/// Elementwise op over `n` elements (EM-Add, Hadamard, SiLU, casts).
+pub fn elementwise_cycles(arch: &ArchConfig, n: usize) -> u64 {
+    (n.div_ceil(arch.sfu_lanes)) as u64 + 4
+}
+
+/// Quantize/cast a vector (same structure as elementwise; kept separate
+/// for breakdown reporting).
+pub fn cast_cycles(arch: &ArchConfig, n: usize) -> u64 {
+    elementwise_cycles(arch, n)
+}
+
+/// RMS normalization: square-accumulate pass + rsqrt + scale pass.
+pub fn rmsnorm_cycles(arch: &ArchConfig, n: usize) -> u64 {
+    let pass = (n.div_ceil(arch.sfu_lanes)) as u64;
+    pass + arch.div_latency + pass + 4
+}
+
+/// EM-Add reduction of the 32 processors' partial sums (tree over
+/// `n_processors` values, one output element per cycle when pipelined —
+/// folded into the GEMV pipeline; exposed for standalone accounting).
+pub fn emadd_tree_latency(arch: &ArchConfig) -> u64 {
+    (arch.n_processors as f64).log2().ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_lane_parallel() {
+        let a = ArchConfig::default();
+        assert_eq!(elementwise_cycles(&a, 4096), 128 + 4);
+        assert_eq!(elementwise_cycles(&a, 1), 1 + 4);
+    }
+
+    #[test]
+    fn rmsnorm_two_passes() {
+        let a = ArchConfig::default();
+        let c = rmsnorm_cycles(&a, 4096);
+        assert_eq!(c, 128 + a.div_latency + 128 + 4);
+    }
+
+    #[test]
+    fn emadd_tree_depth() {
+        let a = ArchConfig::default();
+        assert_eq!(emadd_tree_latency(&a), 5); // log2(32)
+    }
+}

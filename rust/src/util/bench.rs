@@ -1,0 +1,175 @@
+//! Timing harness for `rust/benches/*` (offline replacement for criterion).
+//!
+//! Warmup, then adaptive measurement until a time budget or iteration cap
+//! is reached; reports min/median/mean and a robust spread estimate.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    /// Median absolute deviation (scaled) — robust spread.
+    pub mad_ns: f64,
+}
+
+impl Measurement {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+/// Bench runner with a global time budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_ms: u64, measure_ms: u64) -> Self {
+        Bencher {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Run `f` repeatedly; `f` must return something observable to prevent
+    /// the optimizer from deleting the work (use `std::hint::black_box`).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // warmup
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+
+        // measurement: sample batches, record per-iteration times
+        let mut samples: Vec<f64> = Vec::new();
+        let batch = warm_iters.clamp(1, 1024);
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed() < self.measure && iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(dt);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            min_ns: min,
+            median_ns: median,
+            mean_ns: mean,
+            mad_ns: mad,
+        };
+        println!(
+            "{:<48} time: [{} {} {}]  ({} iters)",
+            m.name,
+            fmt_ns(m.min_ns),
+            fmt_ns(m.median_ns),
+            fmt_ns(m.mean_ns),
+            m.iters
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Human-friendly nanosecond formatting (criterion-style).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::new(10, 50);
+        let m = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn ordering_of_workloads() {
+        // a 10x bigger loop must measure meaningfully slower
+        let mut b = Bencher::new(20, 100);
+        let small = b
+            .bench("small", || {
+                let mut x = 0u64;
+                for i in 0..50u64 {
+                    x = x.wrapping_add(std::hint::black_box(i));
+                }
+                x
+            })
+            .median_ns;
+        let large = b
+            .bench("large", || {
+                let mut x = 0u64;
+                for i in 0..5000u64 {
+                    x = x.wrapping_add(std::hint::black_box(i));
+                }
+                x
+            })
+            .median_ns;
+        assert!(large > small * 3.0, "large {large} vs small {small}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny CLI flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown flags are an error (catches typos).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (excluding argv[0]).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        args: I,
+        known: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !known.contains(&name.as_str()) && !bool_flags.contains(&name.as_str()) {
+                    return Err(format!("unknown flag --{name}"));
+                }
+                let value = if bool_flags.contains(&name.as_str()) {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next().ok_or_else(|| format!("--{name} needs a value"))?
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse(known: &[&str], bool_flags: &[&str]) -> Result<Args, String> {
+        Args::parse_from(std::env::args().skip(1), known, bool_flags)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true" | "1" | "yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], known: &[&str], bools: &[&str]) -> Result<Args, String> {
+        Args::parse_from(args.iter().map(|s| s.to_string()), known, bools)
+    }
+
+    #[test]
+    fn flag_styles() {
+        let a = parse(
+            &["--ctx", "512", "--model=llama2-7b", "--verbose", "cmd"],
+            &["ctx", "model"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.get_usize("ctx", 0).unwrap(), 512);
+        assert_eq!(a.get("model"), Some("llama2-7b"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["cmd".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&["--nope", "1"], &["ctx"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--ctx"], &["ctx"], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &["ctx"], &[]).unwrap();
+        assert_eq!(a.get_usize("ctx", 128).unwrap(), 128);
+        assert_eq!(a.get_or("ctx", "x"), "x");
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse(&["--ctx", "abc"], &["ctx"], &[]).unwrap();
+        assert!(a.get_usize("ctx", 0).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate closure is
+//! cached), so the small generic dependencies a project like this would
+//! normally pull from crates.io are implemented here from scratch:
+//!
+//! - [`rng`] — deterministic SplitMix64/xoshiro256** PRNG with uniform,
+//!   range and Gaussian sampling (replaces `rand::SmallRng`),
+//! - [`json`] — a minimal JSON parser + writer for `artifacts/manifest.json`
+//!   and report emission (replaces `serde_json`),
+//! - [`bench`] — a warmup/measure timing harness with criterion-style
+//!   output used by `rust/benches/*` (replaces `criterion`),
+//! - [`cli`] — a tiny flag parser for the `swiftkv` binary and examples
+//!   (replaces `clap`),
+//! - [`prop`] — a seeded random-case property-test driver with failure
+//!   reporting (replaces `proptest` for our invariant sweeps).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

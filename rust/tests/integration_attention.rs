@@ -1,0 +1,104 @@
+//! Integration: all four attention algorithms + the FXP32 datapath agree
+//! on the same randomized problems across a shape sweep.
+
+use swiftkv::attention::{flash, fxp_swiftkv, native, online, swiftkv as swiftkv_attn, HeadProblem};
+use swiftkv::fxp::Exp2Lut;
+use swiftkv::util::Rng;
+
+struct Problem {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    d: usize,
+    len: usize,
+}
+
+fn random_problem(rng: &mut Rng, d: usize, len: usize, scale: f32) -> Problem {
+    Problem {
+        q: rng.uniform_vec(d, scale),
+        k: rng.uniform_vec(d * len, scale),
+        v: rng.uniform_vec(d * len, scale),
+        d,
+        len,
+    }
+}
+
+#[test]
+fn all_algorithms_agree_across_shapes() {
+    let mut rng = Rng::seed_from_u64(100);
+    for &d in &[8usize, 32, 64, 128] {
+        for &len in &[1usize, 7, 64, 257, 512] {
+            let pr = random_problem(&mut rng, d, len, 1.0);
+            let p = HeadProblem::new(&pr.q, &pr.k, &pr.v, d, len);
+            let base = native::attend(&p);
+            for (name, out) in [
+                ("swiftkv", swiftkv_attn::attend(&p)),
+                ("online", online::attend(&p)),
+                ("flash8", flash::attend(&p, 8)),
+                ("flash16", flash::attend(&p, 16)),
+                ("flash32", flash::attend(&p, 32)),
+            ] {
+                for (i, (a, b)) in out.iter().zip(&base).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-4,
+                        "{name} d={d} len={len} dim {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fxp_datapath_tracks_f32_within_quantization() {
+    let lut = Exp2Lut::new();
+    let mut rng = Rng::seed_from_u64(200);
+    for &len in &[16usize, 128, 512] {
+        let pr = random_problem(&mut rng, 64, len, 1.0);
+        let p = HeadProblem::new(&pr.q, &pr.k, &pr.v, 64, len);
+        let want = native::attend(&p);
+        let got = fxp_swiftkv::attend(&lut, &pr.q, &pr.k, &pr.v, 64, len);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "len={len} dim {i}: fxp {a} vs f32 {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn extreme_magnitudes_all_stable() {
+    // scores spanning ±hundreds: rescaling must keep everything finite
+    let mut rng = Rng::seed_from_u64(300);
+    let pr = random_problem(&mut rng, 32, 256, 60.0);
+    let p = HeadProblem::new(&pr.q, &pr.k, &pr.v, 32, 256);
+    for out in [
+        native::attend(&p),
+        swiftkv_attn::attend(&p),
+        online::attend(&p),
+        flash::attend(&p, 32),
+    ] {
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn incremental_decode_matches_batch_recompute() {
+    // serving pattern: attention state extended one token at a time must
+    // equal recomputing over the grown cache
+    let mut rng = Rng::seed_from_u64(400);
+    let d = 32;
+    let max_len = 64;
+    let pr = random_problem(&mut rng, d, max_len, 1.0);
+    let mut st = swiftkv_attn::SwiftKvState::new(d);
+    for len in 1..=max_len {
+        let p = HeadProblem::new(&pr.q, &pr.k, &pr.v, d, len);
+        swiftkv_attn::extend(&mut st, &p, len - 1, len);
+        let inc = st.finalize();
+        let full = native::attend(&p);
+        for (a, b) in inc.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-4, "len={len}");
+        }
+    }
+}

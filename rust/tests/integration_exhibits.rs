@@ -1,0 +1,62 @@
+//! Integration: every paper exhibit regenerates, and the artifact-backed
+//! Table I lands in the paper's range.
+
+use swiftkv::model::{LlmConfig, TinyModel, WeightStore};
+use swiftkv::report;
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
+use swiftkv::sim::ArchConfig;
+
+#[test]
+fn every_exhibit_regenerates() {
+    let arch = ArchConfig::default();
+    let exhibits = [
+        ("fig7a", report::fig7a(&arch)),
+        ("fig7b", report::fig7b(&arch)),
+        ("explut", report::exp_lut_error()),
+        ("table2", report::table2(&arch)),
+        ("fig8a", report::fig8a(&arch, &LlmConfig::llama2_7b(), 512)),
+        ("table3", report::table3(&arch)),
+        ("fig8b", report::fig8b(&arch)),
+        ("table4", report::table4(&arch)),
+    ];
+    for (name, text) in exhibits {
+        assert!(
+            text.lines().count() >= if name == "explut" { 1 } else { 3 },
+            "{name} too short"
+        );
+        assert!(!text.contains("NaN") && !text.contains(" inf "), "{name} has bad values:\n{text}");
+    }
+}
+
+#[test]
+fn table1_topk_agreement_matches_paper_band() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let tm = TinyModel::load(&WeightStore::load(&default_artifacts_dir()).unwrap()).unwrap();
+    let (_, fr) = report::table1(&tm, 12, 40);
+    // paper: Top-1 100%, Top-2 100%, Top-3 99%, Top-5 98% on LLaMA2-7B.
+    // Our tiny random-weight model has near-uniform logits over a 512
+    // vocab, so exact top-k SET agreement is brittle at larger k (near
+    // ties flip on 1e-5-level FXP noise); the greedy path (top-1) is what
+    // decoding actually uses and must stay ≈ paper. See EXPERIMENTS.md E3.
+    assert!(fr[0] >= 0.97, "Top-1 {:.3}", fr[0]);
+    assert!(fr[1] >= 0.92, "Top-2 {:.3}", fr[1]);
+    assert!(fr[2] >= 0.85, "Top-3 {:.3}", fr[2]);
+    assert!(fr[3] >= 0.70, "Top-5 {:.3}", fr[3]);
+    // sets ordered: agreement can only drop as k grows... not strictly
+    // (set equality), but Top-1 must dominate Top-5
+    assert!(fr[0] >= fr[3] - 1e-9);
+}
+
+#[test]
+fn exp_lut_error_value() {
+    let s = report::exp_lut_error();
+    // "0.00587 %" printed — parse it back and check the paper band
+    let pct: f64 = s
+        .split_whitespace()
+        .find_map(|w| w.parse::<f64>().ok().filter(|x| *x > 0.001 && *x < 0.01))
+        .expect("no percentage found");
+    assert!((pct - 0.00586).abs() < 0.0002, "{pct}");
+}

@@ -1,0 +1,142 @@
+//! Property tests (seeded random-case sweeps via `util::prop`): the
+//! coordinator/batching invariants and the core numeric invariants the
+//! paper's algorithm depends on.
+
+use swiftkv::attention::{native, swiftkv as swiftkv_attn, HeadProblem};
+use swiftkv::coordinator::Batcher;
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::model::Request;
+use swiftkv::util::prop;
+
+#[test]
+fn prop_swiftkv_equals_softmax_attention() {
+    prop::check("swiftkv == softmax·V", 40, |rng, _| {
+        let d = [4, 8, 16, 32][rng.gen_range(0, 4)];
+        let len = rng.gen_range(1, 200);
+        let scale = [0.5f32, 1.0, 4.0][rng.gen_range(0, 3)];
+        let q = rng.uniform_vec(d, scale);
+        let k = rng.uniform_vec(d * len, scale);
+        let v = rng.uniform_vec(d * len, scale);
+        let p = HeadProblem::new(&q, &k, &v, d, len);
+        let a = swiftkv_attn::attend(&p);
+        let b = native::attend(&p);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn prop_exp_lut_bounds_and_monotonicity() {
+    let lut = Exp2Lut::new();
+    prop::check("exp LUT ∈ (0,1], monotone", 60, |rng, _| {
+        let x1 = -20.0 * rng.gen_f64();
+        let x2 = x1 - 5.0 * rng.gen_f64();
+        let e1 = lut.exp_neg(Fxp32::from_f64(x1));
+        let e2 = lut.exp_neg(Fxp32::from_f64(x2));
+        assert!(e1 <= Fxp32::ONE && e1.raw() >= 0);
+        assert!(e2 <= e1, "exp({x2}) > exp({x1})");
+        // relative accuracy vs f64 when not underflowed
+        if x1 > -15.0 {
+            let want = x1.exp();
+            assert!((e1.to_f64() - want).abs() < 1e-4 + want * 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_fxp_mul_bounded_error() {
+    prop::check("Q15.17 multiply error ≤ 1 ulp-ish", 100, |rng, _| {
+        let a = (rng.gen_f64() - 0.5) * 200.0;
+        let b = (rng.gen_f64() - 0.5) * 200.0;
+        let q = Fxp32::from_f64(a) * Fxp32::from_f64(b);
+        let want = a * b;
+        if want.abs() < 16000.0 {
+            // quantized inputs already carry ≤ half-ulp each; product error
+            // is bounded by |a|+|b| halves plus the rounding
+            let tol = (a.abs() + b.abs() + 2.0) * (1.0 / 131072.0);
+            assert!((q.to_f64() - want).abs() <= tol, "{a}*{b}: {q}");
+        }
+    });
+}
+
+#[test]
+fn prop_fxp_dot_matches_f64() {
+    prop::check("wide-accumulator dot", 40, |rng, _| {
+        let n = rng.gen_range(1, 300);
+        let a = rng.uniform_vec(n, 2.0);
+        let b = rng.uniform_vec(n, 2.0);
+        let qa = vector::quantize(&a);
+        let qb = vector::quantize(&b);
+        let got = vector::dot(&qa, &qb).to_f64();
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        assert!((got - want).abs() < 1e-4 * n as f64 + 1e-4, "{got} vs {want}");
+    });
+}
+
+#[test]
+fn prop_batcher_conservation() {
+    // every submitted request is eventually either finished or rejected;
+    // no token is generated for a request that was never admitted
+    prop::check("batcher conserves requests", 30, |rng, case| {
+        let lanes = rng.gen_range(1, 5);
+        let n_ctx = 32;
+        let mut b = Batcher::new(lanes, n_ctx);
+        let n_req = rng.gen_range(1, 12);
+        let mut submitted = 0u64;
+        let mut rejected = 0u64;
+        for i in 0..n_req {
+            let plen = rng.gen_range(1, 20);
+            let glen = rng.gen_range(1, 20);
+            let r = Request {
+                id: case * 1000 + i as u64,
+                prompt: (0..plen as u32).collect(),
+                gen_len: glen,
+                arrival_ms: 0,
+            };
+            match b.submit(r) {
+                Ok(()) => submitted += 1,
+                Err(_) => rejected += 1,
+            }
+        }
+        // drive with a deterministic fake sampler
+        let mut iter = 0u64;
+        while !b.is_drained() {
+            b.admit(iter);
+            let (_, _, _) = b.gather_inputs();
+            let samples = vec![1u32; lanes];
+            b.scatter_outputs(&samples, iter);
+            iter += 1;
+            assert!(iter < 10_000, "batcher did not drain");
+        }
+        assert_eq!(b.finished.len() as u64, submitted);
+        assert_eq!(b.counters(), (submitted, rejected));
+        for s in &b.finished {
+            assert_eq!(s.generated.len(), s.request.gen_len);
+            assert!(s.max_context() <= n_ctx);
+        }
+    });
+}
+
+#[test]
+fn prop_z_recurrence_bounds() {
+    // Z_t ∈ (0, t] and μ_t is the running max — the §III invariants
+    prop::check("Z and mu invariants", 40, |rng, _| {
+        let d = 8;
+        let len = rng.gen_range(2, 128);
+        let q = rng.uniform_vec(d, 3.0);
+        let k = rng.uniform_vec(d * len, 3.0);
+        let v = rng.uniform_vec(d * len, 1.0);
+        let p = HeadProblem::new(&q, &k, &v, d, len);
+        let scale = p.scale();
+        let mut st = swiftkv_attn::SwiftKvState::new(d);
+        let mut true_max = f32::NEG_INFINITY;
+        for t in 0..len {
+            let s = swiftkv::attention::dot_f32(p.q, p.key(t)) * scale;
+            true_max = true_max.max(s);
+            st.update(s, p.value(t));
+            assert!(st.z > 0.0 && st.z <= (t + 1) as f32 + 1e-3);
+            assert!((st.mu - true_max).abs() < 1e-6, "mu != running max");
+        }
+    });
+}
