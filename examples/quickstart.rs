@@ -15,6 +15,7 @@
 
 use swiftkv::attention::{fxp_swiftkv, native, swiftkv as swiftkv_attn, HeadProblem};
 use swiftkv::fxp::Exp2Lut;
+#[cfg(feature = "pjrt")]
 use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
 use swiftkv::sim::{edge_hw, ArchConfig, AttentionAlg};
 use swiftkv::util::Rng;
@@ -45,7 +46,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!("[1] rust SwiftKV vs native softmax: max |Δ| = {max_err:.2e}");
 
-    // --- 2. AOT Pallas kernel through PJRT -----------------------------
+    // --- 2. AOT Pallas kernel through PJRT (needs --features pjrt) -----
+    #[cfg(feature = "pjrt")]
     if artifacts_available() {
         let eng = Engine::load(&default_artifacts_dir())?;
         let out = eng.attention(&lens, &q, &k, &v, rows, n_ctx, d)?;
@@ -67,6 +69,8 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("[2] skipped — run `make artifacts` first");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("[2] skipped — build with `--features pjrt` (and `make artifacts`)");
 
     // --- 3. FXP32 datapath ---------------------------------------------
     let lut = Exp2Lut::new();

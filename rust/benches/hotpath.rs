@@ -1,17 +1,23 @@
-//! Bench: the L3 hot paths (§Perf targets).
+//! Bench: the L3 hot paths (§Perf targets), with JSON emission — every
+//! run rewrites `BENCH_hotpath.json` at the repository root so the perf
+//! trajectory stays machine-readable across PRs.
 //!
-//! - the FXP32 per-token SwiftKV update (the SKV-core inner loop),
-//! - the f32 per-token update,
-//! - W4A8 GEMV (the tiny model's dominant op),
-//! - one full tiny-model decode step (both numerics modes),
-//! - one PJRT engine decode step (batch 1/8) when artifacts exist.
+//! Headline comparison (the acceptance gate of the fused-kernel PR): the
+//! fused multi-head SwiftKV sweep (`kernels::MhaSwiftKv` /
+//! `kernels::FxpMhaSwiftKv` — one pass over a token-major interleaved
+//! cache advancing all heads per row) vs the per-head loop the model used
+//! to run (`swiftkv::attend` / `attend_fxp` once per head over a
+//! head-major cache), at 8 heads × d_head 64 × n 512. Also measured:
+//! allocating vs `_into` GEMV, and the full tiny-model decode step on the
+//! synthetic model (no artifacts needed) in both numerics modes.
 
 use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
 use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
-use swiftkv::fxp::Exp2Lut;
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::{FxpMhaSwiftKv, MhaSwiftKv};
 use swiftkv::model::{NumericsMode, TinyModel, WeightStore};
 use swiftkv::quant::{quantize_int8, Int4Matrix, QuantLinear};
-use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
 use swiftkv::util::bench::Bencher;
 use swiftkv::util::Rng;
 
@@ -30,7 +36,86 @@ fn main() {
     let p = HeadProblem::new(&q, &k, &v, d, n);
     b.bench("hot/f32_swiftkv_scan n=512 d=128", || swiftkv_attn::attend(&p));
 
-    // W4A8 GEMV 256→768 (tiny model's widest projection)
+    // --- fused multi-head sweep vs per-head loop: 8 heads × d=64 × n=512
+    let (h, dh) = (8usize, 64usize);
+    let row = h * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let qm = rng.uniform_vec(row, 1.0);
+    let km = rng.uniform_vec(n * row, 1.0); // token-major interleaved
+    let vm = rng.uniform_vec(n * row, 1.0);
+    // head-major copies for the per-head baseline
+    let mut k_heads = vec![0.0f32; n * row];
+    let mut v_heads = vec![0.0f32; n * row];
+    for t in 0..n {
+        for head in 0..h {
+            let src = (t * h + head) * dh;
+            let dst = (head * n + t) * dh;
+            k_heads[dst..dst + dh].copy_from_slice(&km[src..src + dh]);
+            v_heads[dst..dst + dh].copy_from_slice(&vm[src..src + dh]);
+        }
+    }
+
+    let mut per_head_out = vec![0.0f32; row];
+    b.bench("hot/mha_per_head 8h d=64 n=512", || {
+        for head in 0..h {
+            let p = HeadProblem::new(
+                &qm[head * dh..(head + 1) * dh],
+                &k_heads[head * n * dh..(head + 1) * n * dh],
+                &v_heads[head * n * dh..(head + 1) * n * dh],
+                dh,
+                n,
+            );
+            let o = swiftkv_attn::attend(&p);
+            per_head_out[head * dh..(head + 1) * dh].copy_from_slice(&o);
+        }
+        per_head_out[0]
+    });
+    let mut mha = MhaSwiftKv::new(h, dh);
+    let mut fused_out = vec![0.0f32; row];
+    b.bench("hot/mha_fused 8h d=64 n=512", || {
+        mha.attend(&qm, &km, &vm, n, scale, &mut fused_out);
+        fused_out[0]
+    });
+    report_speedup(&b, "hot/mha_per_head 8h d=64 n=512", "hot/mha_fused 8h d=64 n=512");
+
+    // same comparison on the Q15.17 accelerator datapath
+    let qq = vector::quantize(&qm);
+    let kq = vector::quantize(&km);
+    let vq = vector::quantize(&vm);
+    let fxp_scale = Fxp32::from_f64(1.0 / (dh as f64).sqrt());
+    let head_problems: Vec<FxpHeadProblem> = (0..h)
+        .map(|head| {
+            FxpHeadProblem::quantize(
+                &qm[head * dh..(head + 1) * dh],
+                &k_heads[head * n * dh..(head + 1) * n * dh],
+                &v_heads[head * n * dh..(head + 1) * n * dh],
+                dh,
+                n,
+            )
+        })
+        .collect();
+    b.bench("hot/fxp_mha_per_head 8h d=64 n=512", || {
+        let mut acc = 0i64;
+        for hp in &head_problems {
+            let o = attend_fxp(&lut, hp);
+            acc += o[0].raw() as i64;
+        }
+        acc
+    });
+    let mut fxp_mha = FxpMhaSwiftKv::new(h, dh);
+    let mut fused_fxp = vec![Fxp32::ZERO; row];
+    b.bench("hot/fxp_mha_fused 8h d=64 n=512", || {
+        fxp_mha.attend(&lut, &qq, &kq, &vq, n, fxp_scale, &mut fused_fxp);
+        fused_fxp[0].raw()
+    });
+    report_speedup(
+        &b,
+        "hot/fxp_mha_per_head 8h d=64 n=512",
+        "hot/fxp_mha_fused 8h d=64 n=512",
+    );
+
+    // W4A8 GEMV 256→768 (tiny model's widest projection): allocating
+    // wrappers vs the caller-scratch `_into` path
     let w = rng.uniform_vec(256 * 768, 0.5);
     let lin = QuantLinear::new(Int4Matrix::quantize(&w, 256, 768));
     let x = rng.uniform_vec(256, 1.0);
@@ -39,46 +124,104 @@ fn main() {
     b.bench("hot/gemv_w4a8 256x768 (prequant)", || {
         swiftkv::quant::gemv_w4a8(&xq, &lin.weight)
     });
+    let mut gemv_out = vec![0.0f32; 768];
+    let mut qbuf = vec![0i8; 256];
+    b.bench("hot/gemv_w4a8 256x768 (into, no alloc)", || {
+        lin.forward_into(&x, &mut qbuf, &mut gemv_out);
+        gemv_out[0]
+    });
+
+    // full decode step on the synthetic tiny model (no artifacts needed):
+    // fused attention + zero-allocation scratch path, both numerics modes
+    let tm = TinyModel::synthetic(5, 512, 256, 8, 4, 1024, 512);
+    let mut logits = vec![0.0f32; tm.vocab];
+    let mut tok = 0u32;
+    let mut st = tm.new_state();
+    b.bench("hot/tiny_decode_step synthetic desktop", || {
+        if st.pos >= tm.n_ctx {
+            st.reset();
+        }
+        tok = (tok + 1) % tm.vocab as u32;
+        tm.decode_step_into(&mut st, tok, NumericsMode::DesktopF32, &mut logits);
+        logits[0]
+    });
+    let mut st2 = tm.new_state();
+    b.bench("hot/tiny_decode_step synthetic accel", || {
+        if st2.pos >= tm.n_ctx {
+            st2.reset();
+        }
+        tok = (tok + 1) % tm.vocab as u32;
+        tm.decode_step_into(&mut st2, tok, NumericsMode::Accelerator, &mut logits);
+        logits[0]
+    });
 
     if artifacts_available() {
         let ws = WeightStore::load(&default_artifacts_dir()).unwrap();
-        let tm = TinyModel::load(&ws).unwrap();
-        let mut st = tm.new_state();
-        let mut i = 0u32;
+        let am = TinyModel::load(&ws).unwrap();
+        let mut ast = am.new_state();
+        let mut alog = vec![0.0f32; am.vocab];
+        let mut ai = 0u32;
         b.bench("hot/tiny_decode_step rust-desktop", || {
-            if st.pos >= tm.n_ctx {
-                st = tm.new_state();
+            if ast.pos >= am.n_ctx {
+                ast.reset();
             }
-            i = (i + 1) % 512;
-            tm.decode_step(&mut st, i, NumericsMode::DesktopF32)
+            ai = (ai + 1) % am.vocab as u32;
+            am.decode_step_into(&mut ast, ai, NumericsMode::DesktopF32, &mut alog);
+            alog[0]
         });
-        let mut st2 = tm.new_state();
+        let mut ast2 = am.new_state();
         b.bench("hot/tiny_decode_step rust-accel", || {
-            if st2.pos >= tm.n_ctx {
-                st2 = tm.new_state();
+            if ast2.pos >= am.n_ctx {
+                ast2.reset();
             }
-            i = (i + 1) % 512;
-            tm.decode_step(&mut st2, i, NumericsMode::Accelerator)
+            ai = (ai + 1) % am.vocab as u32;
+            am.decode_step_into(&mut ast2, ai, NumericsMode::Accelerator, &mut alog);
+            alog[0]
         });
 
-        let eng = Engine::load(&default_artifacts_dir()).unwrap();
-        for batch in [1usize, 8] {
-            let mut bs = eng.new_state(batch).unwrap();
-            let tokens = vec![7i32; batch];
-            let mut pos = 0i32;
-            b.bench(&format!("hot/pjrt_decode_step b{batch}"), || {
-                if pos as usize >= eng.manifest.n_ctx {
-                    bs = eng.new_state(batch).unwrap();
-                    pos = 0;
-                }
-                let out = eng
-                    .decode_step(&mut bs, &tokens, &vec![pos; batch])
-                    .unwrap();
-                pos += 1;
-                out
-            });
-        }
+        #[cfg(feature = "pjrt")]
+        pjrt_benches(&mut b);
+        #[cfg(not(feature = "pjrt"))]
+        println!("(pjrt feature disabled — PJRT benches skipped)");
     } else {
-        println!("(artifacts not built — PJRT benches skipped)");
+        println!("(artifacts not built — artifact-model benches skipped)");
+    }
+
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|r| r.join("BENCH_hotpath.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_hotpath.json"));
+    match b.write_json(&out_path) {
+        Ok(()) => println!("\nwrote {}", out_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+}
+
+/// Print the median-time ratio `slow / fast` for two recorded benches.
+fn report_speedup(b: &Bencher, slow: &str, fast: &str) {
+    if let (Some(s), Some(f)) = (b.get(slow), b.get(fast)) {
+        println!("  -> fused speedup: {:.2}x ({} vs {})", s.median_ns / f.median_ns, slow, fast);
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &mut Bencher) {
+    use swiftkv::runtime::Engine;
+    let eng = Engine::load(&default_artifacts_dir()).unwrap();
+    for batch in [1usize, 8] {
+        let mut bs = eng.new_state(batch).unwrap();
+        let tokens = vec![7i32; batch];
+        let mut pos = 0i32;
+        b.bench(&format!("hot/pjrt_decode_step b{batch}"), || {
+            if pos as usize >= eng.manifest.n_ctx {
+                bs = eng.new_state(batch).unwrap();
+                pos = 0;
+            }
+            let out = eng
+                .decode_step(&mut bs, &tokens, &vec![pos; batch])
+                .unwrap();
+            pos += 1;
+            out
+        });
     }
 }

@@ -53,8 +53,19 @@ impl FxpSwiftKvState {
 
     /// Eq. (8): one-time normalization on the divide unit.
     pub fn finalize(&self) -> Vec<Fxp32> {
+        let mut out = vec![Fxp32::ZERO; self.y.len()];
+        self.finalize_into(&mut out);
+        out
+    }
+
+    /// Eq. (8) into a caller-owned buffer (no allocation); bit-identical
+    /// to [`Self::finalize`].
+    pub fn finalize_into(&self, out: &mut [Fxp32]) {
         assert!(self.consumed > 0);
-        vector::div_scalar(&self.y, self.z)
+        assert_eq!(out.len(), self.y.len());
+        for (o, &y) in out.iter_mut().zip(&self.y) {
+            *o = y.sat_div(self.z);
+        }
     }
 }
 

@@ -62,8 +62,19 @@ impl SwiftKvState {
 
     /// Eq. (8): the deferred one-time normalization.
     pub fn finalize(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.y.len()];
+        self.finalize_into(&mut out);
+        out
+    }
+
+    /// Eq. (8) into a caller-owned buffer (no allocation) — same
+    /// element-wise `y / Z` as [`Self::finalize`], bit-identical.
+    pub fn finalize_into(&self, out: &mut [f32]) {
         assert!(self.consumed > 0, "finalize before any token");
-        self.y.iter().map(|y| y / self.z).collect()
+        assert_eq!(out.len(), self.y.len());
+        for (o, &y) in out.iter_mut().zip(&self.y) {
+            *o = y / self.z;
+        }
     }
 }
 

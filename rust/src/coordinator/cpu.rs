@@ -1,0 +1,226 @@
+//! CPU batch serving over the pure-Rust tiny model — the default-feature
+//! serving path (no PJRT required).
+//!
+//! Same continuous-batching shape as the PJRT [`super::server`]: queue →
+//! [`super::batcher::Batcher`] → one batch step → greedy sample → retire.
+//! The batch step fans the active lanes out across OS threads with
+//! `std::thread::scope`; each lane owns its [`DecodeState`] (KV caches +
+//! [`crate::kernels::DecodeScratch`]), so a steady-state lane step
+//! performs zero heap allocation and lanes never contend on memory.
+//! Recycled lanes restart at position 0 via [`DecodeState::reset`] —
+//! caches are reused, not re-allocated.
+
+use super::batcher::Batcher;
+use super::metrics::{Percentiles, ServeMetrics};
+use super::session::Session;
+use crate::model::tiny::{argmax, DecodeState};
+use crate::model::{LlmConfig, NumericsMode, Request, TinyModel};
+use crate::sim::{layer_sched, ArchConfig};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// CPU serving configuration.
+#[derive(Debug, Clone)]
+pub struct CpuServeOptions {
+    /// Number of decode lanes (threads at full occupancy).
+    pub lanes: usize,
+    /// Numerics mode every lane decodes in.
+    pub mode: NumericsMode,
+    /// Safety cap on batch iterations (0 = unlimited).
+    pub max_iterations: u64,
+    /// Model config used for the simulated-accelerator metrics.
+    pub sim_model: LlmConfig,
+}
+
+impl Default for CpuServeOptions {
+    fn default() -> Self {
+        CpuServeOptions {
+            lanes: 4,
+            mode: NumericsMode::DesktopF32,
+            max_iterations: 0,
+            sim_model: LlmConfig::llama2_7b(),
+        }
+    }
+}
+
+/// Result of a CPU serving run.
+pub struct CpuServeReport {
+    pub sessions: Vec<Session>,
+    pub metrics: ServeMetrics,
+}
+
+/// The CPU decode server.
+pub struct CpuServer<'m> {
+    model: &'m TinyModel,
+    opts: CpuServeOptions,
+}
+
+impl<'m> CpuServer<'m> {
+    pub fn new(model: &'m TinyModel, opts: CpuServeOptions) -> Self {
+        assert!(opts.lanes >= 1, "need at least one lane");
+        CpuServer { model, opts }
+    }
+
+    /// Serve a request stream to completion (arrival times are honoured in
+    /// iteration order, like the PJRT server).
+    pub fn serve(&self, requests: Vec<Request>) -> CpuServeReport {
+        let lanes = self.opts.lanes;
+        let model = self.model;
+        let mode = self.opts.mode;
+        let vocab = model.vocab;
+        let mut batcher = Batcher::new(lanes, model.n_ctx);
+        let mut states: Vec<DecodeState> = (0..lanes).map(|_| model.new_state()).collect();
+        let mut logits = vec![0.0f32; lanes * vocab];
+
+        let mut pending: VecDeque<Request> = requests.into();
+        let t0 = Instant::now();
+        let mut iteration = 0u64;
+        let mut step_ms: Vec<f64> = Vec::new();
+        let mut occupancy_acc = 0.0;
+        let mut sim_cycles: u64 = 0;
+        let arch = ArchConfig::default();
+        let mut iter_end_ms: Vec<f64> = Vec::new();
+
+        loop {
+            // admit every request whose arrival time has passed
+            let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+            while let Some(r) = pending.front() {
+                if r.arrival_ms as f64 <= now_ms {
+                    let r = pending.pop_front().unwrap();
+                    // oversized requests are rejected by the batcher; drop
+                    let _ = batcher.submit(r);
+                } else {
+                    break;
+                }
+            }
+            batcher.admit(iteration);
+            if batcher.is_drained() {
+                if pending.is_empty() {
+                    break;
+                }
+                // idle until the next arrival
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                continue;
+            }
+
+            let (tokens, positions, active) = batcher.gather_inputs();
+            occupancy_acc += batcher.occupancy();
+
+            // lanes starting a fresh session restart their decode state
+            for (i, st) in states.iter_mut().enumerate() {
+                if active[i] && positions[i] == 0 && st.pos != 0 {
+                    st.reset();
+                }
+            }
+
+            // fused batch step: one thread per active lane; a lone lane
+            // runs inline to skip the spawn overhead
+            let ts = Instant::now();
+            let n_active = active.iter().filter(|a| **a).count();
+            if n_active <= 1 {
+                for (i, (st, out)) in states
+                    .iter_mut()
+                    .zip(logits.chunks_mut(vocab))
+                    .enumerate()
+                {
+                    if active[i] {
+                        model.decode_step_into(st, tokens[i] as u32, mode, out);
+                    }
+                }
+            } else {
+                std::thread::scope(|scope| {
+                    for (i, (st, out)) in states
+                        .iter_mut()
+                        .zip(logits.chunks_mut(vocab))
+                        .enumerate()
+                    {
+                        if !active[i] {
+                            continue;
+                        }
+                        let tok = tokens[i] as u32;
+                        scope.spawn(move || {
+                            model.decode_step_into(st, tok, mode, out);
+                        });
+                    }
+                });
+            }
+            step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+
+            // simulated accelerator cost for this step
+            let max_ctx = positions
+                .iter()
+                .zip(&active)
+                .filter(|(_, a)| **a)
+                .map(|(p, _)| *p as usize + 1)
+                .max()
+                .unwrap_or(1);
+            sim_cycles +=
+                layer_sched::simulate_token(&arch, &self.opts.sim_model, max_ctx).total_cycles;
+
+            // greedy sample per lane
+            let samples: Vec<u32> = (0..lanes)
+                .map(|i| argmax(&logits[i * vocab..(i + 1) * vocab]) as u32)
+                .collect();
+            batcher.scatter_outputs(&samples, iteration);
+            iter_end_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+
+            iteration += 1;
+            if self.opts.max_iterations > 0 && iteration >= self.opts.max_iterations {
+                break;
+            }
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let sessions = batcher.finished;
+        let total_tokens: usize = sessions.iter().map(|s| s.generated.len()).sum();
+        let at_ms = |it: u64| -> f64 {
+            iter_end_ms
+                .get(it as usize)
+                .copied()
+                .unwrap_or(wall_s * 1e3)
+        };
+        let latencies: Vec<f64> = sessions
+            .iter()
+            .filter_map(|s| s.finished_at.map(|f| at_ms(f) - at_ms(s.admitted_at)))
+            .collect();
+        let ttfts: Vec<f64> = sessions
+            .iter()
+            .filter_map(|s| s.first_token_at.map(|f| at_ms(f) - at_ms(s.admitted_at)))
+            .collect();
+
+        let zero = Percentiles {
+            p50: 0.0,
+            p90: 0.0,
+            p99: 0.0,
+            mean: 0.0,
+            max: 0.0,
+        };
+        let sim_ms = arch.cycles_to_ms(sim_cycles);
+        let metrics = ServeMetrics {
+            requests: sessions.len(),
+            total_tokens_generated: total_tokens,
+            iterations: iteration,
+            wall_s,
+            step_ms: Percentiles::compute(&step_ms).unwrap_or(zero),
+            request_latency_ms: Percentiles::compute(&latencies).unwrap_or(zero),
+            ttft_ms: Percentiles::compute(&ttfts).unwrap_or(zero),
+            mean_occupancy: if iteration > 0 {
+                occupancy_acc / iteration as f64
+            } else {
+                0.0
+            },
+            tokens_per_s: if wall_s > 0.0 {
+                total_tokens as f64 / wall_s
+            } else {
+                0.0
+            },
+            simulated_accel_ms: sim_ms,
+            simulated_tokens_per_s: if sim_ms > 0.0 {
+                total_tokens as f64 / (sim_ms / 1e3)
+            } else {
+                0.0
+            },
+        };
+        CpuServeReport { sessions, metrics }
+    }
+}

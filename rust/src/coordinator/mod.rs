@@ -1,26 +1,32 @@
-//! L3 coordinator — the decode serving layer in front of the PJRT engine.
+//! L3 coordinator — the decode serving layer.
 //!
 //! Shaped like a serving-system router (the SwiftKV-MHA accelerator is a
 //! decode engine; this is the host side that keeps it fed):
 //!
 //! - [`session`] — per-request decode sessions (prompt feed → generation),
-//! - [`batcher`] — continuous batching over the engine's fixed lane count:
-//!   free lanes are re-admitted from the queue every iteration, and the
-//!   compiled batch variant is chosen by occupancy,
-//! - [`server`] — the synchronous decode loop: gather (token, position)
-//!   per lane, one engine step, scatter logits, greedy-sample, retire
-//!   finished sessions,
+//! - [`batcher`] — continuous batching over a fixed lane count: free
+//!   lanes are re-admitted from the queue every iteration,
+//! - [`cpu`] — the default serving backend: the pure-Rust tiny model on
+//!   the fused decode kernels, lanes stepped in parallel with
+//!   `std::thread::scope`,
+//! - [`server`] — the PJRT serving loop over the AOT engine (behind the
+//!   `pjrt` feature): gather (token, position) per lane, one engine step,
+//!   scatter logits, greedy-sample, retire finished sessions,
 //! - [`metrics`] — per-request latency/throughput accounting plus the
 //!   simulated SwiftKV-MHA timing for the same schedule (via
 //!   [`crate::sim::layer_sched`]), so the E2E example reports both
-//!   wall-clock (CPU PJRT) and modelled-accelerator numbers.
+//!   wall-clock and modelled-accelerator numbers.
 
 pub mod batcher;
+pub mod cpu;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod session;
 
 pub use batcher::{Batcher, LaneState};
+pub use cpu::{CpuServeOptions, CpuServeReport, CpuServer};
 pub use metrics::{Percentiles, ServeMetrics};
+#[cfg(feature = "pjrt")]
 pub use server::{ServeOptions, ServeReport, Server};
 pub use session::{Session, SessionPhase};

@@ -89,9 +89,27 @@ pub fn quantize(xs: &[f32]) -> Vec<Fxp32> {
     xs.iter().map(|&x| Fxp32::from_f32(x)).collect()
 }
 
+/// [`quantize`] into a caller-owned buffer (no allocation).
+#[inline]
+pub fn quantize_into(xs: &[f32], out: &mut [Fxp32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = Fxp32::from_f32(x);
+    }
+}
+
 /// Dequantize a Q15.17 slice to `f32`.
 pub fn dequantize(xs: &[Fxp32]) -> Vec<f32> {
     xs.iter().map(|x| x.to_f32()).collect()
+}
+
+/// [`dequantize`] into a caller-owned buffer (no allocation).
+#[inline]
+pub fn dequantize_into(xs: &[Fxp32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = x.to_f32();
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,224 @@
+//! Fused multi-head SwiftKV decode state in the accelerator's FXP32
+//! (Q15.17) arithmetic — the multi-head datapath of Fig. 5.
+//!
+//! Same interleaved token-major layout and API as [`super::mha::MhaSwiftKv`],
+//! but every operation is the bit-exact Q15.17 model: wide-accumulator
+//! dot products on the MAC array ([`crate::fxp::vector::dot`]), the
+//! shift + 5-bit-LUT exponential of Eqs. (9)–(10), and saturating AXPY
+//! updates. Because integer addition is associative and all per-head
+//! operations are issued in the same order as the per-head
+//! [`crate::attention::fxp_swiftkv::FxpSwiftKvState`], the fused sweep is
+//! **bit-for-bit identical** to running each head separately — the
+//! property `tests/prop_mha_fused.rs` asserts on raw bits.
+
+use crate::fxp::{vector, Exp2Lut, Fxp32};
+
+/// Packed multi-head Q15.17 SwiftKV recurrence state.
+#[derive(Debug, Clone)]
+pub struct FxpMhaSwiftKv {
+    n_heads: usize,
+    d: usize,
+    mu: Vec<Fxp32>,
+    z: Vec<Fxp32>,
+    /// Unnormalized output, `[n_heads * d]`, head-major.
+    y: Vec<Fxp32>,
+    consumed: usize,
+}
+
+impl FxpMhaSwiftKv {
+    /// Fresh state for `n_heads` heads of dimension `d`.
+    pub fn new(n_heads: usize, d: usize) -> Self {
+        assert!(n_heads > 0 && d > 0, "empty state");
+        FxpMhaSwiftKv {
+            n_heads,
+            d,
+            mu: vec![Fxp32::MIN; n_heads],
+            z: vec![Fxp32::ZERO; n_heads],
+            y: vec![Fxp32::ZERO; n_heads * d],
+            consumed: 0,
+        }
+    }
+
+    /// Reset for a new query without releasing the buffers.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.consumed = 0;
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Width of one interleaved cache row (`n_heads · d`).
+    #[inline]
+    pub fn row_width(&self) -> usize {
+        self.n_heads * self.d
+    }
+
+    /// Consume one interleaved `(k_t, v_t)` row, advancing every head —
+    /// Eqs. (5)–(7) in Q15.17 with the LUT exponential.
+    #[inline]
+    pub fn update_token(
+        &mut self,
+        lut: &Exp2Lut,
+        q: &[Fxp32],
+        k_t: &[Fxp32],
+        v_t: &[Fxp32],
+        scale: Fxp32,
+    ) {
+        let (h, d) = (self.n_heads, self.d);
+        debug_assert_eq!(q.len(), h * d);
+        debug_assert_eq!(k_t.len(), h * d);
+        debug_assert_eq!(v_t.len(), h * d);
+        if self.consumed == 0 {
+            for head in 0..h {
+                let o = head * d;
+                let s = vector::dot(&q[o..o + d], &k_t[o..o + d]).sat_mul(scale);
+                self.mu[head] = s;
+                self.z[head] = Fxp32::ONE;
+                self.y[o..o + d].copy_from_slice(&v_t[o..o + d]);
+            }
+        } else {
+            for head in 0..h {
+                let o = head * d;
+                let s = vector::dot(&q[o..o + d], &k_t[o..o + d]).sat_mul(scale);
+                let yh = &mut self.y[o..o + d];
+                let vh = &v_t[o..o + d];
+                if s <= self.mu[head] {
+                    // β = exp(s − μ) ∈ (0, 1]
+                    let beta = lut.exp_neg(s.sat_sub(self.mu[head]));
+                    self.z[head] = self.z[head].sat_add(beta);
+                    vector::axpy_inplace(beta, yh, vh);
+                } else {
+                    // α = exp(μ − s) ∈ (0, 1)
+                    let alpha = lut.exp_neg(self.mu[head].sat_sub(s));
+                    self.z[head] = alpha.sat_mul(self.z[head]).sat_add(Fxp32::ONE);
+                    vector::scale_axpy_inplace(alpha, yh, vh);
+                    self.mu[head] = s;
+                }
+            }
+        }
+        self.consumed += 1;
+    }
+
+    /// Extend over cache rows `[from, to)` of a token-major interleaved
+    /// Q15.17 cache (`k`/`v` are `[len, n_heads * d]` row-major).
+    #[allow(clippy::too_many_arguments)]
+    pub fn extend(
+        &mut self,
+        lut: &Exp2Lut,
+        q: &[Fxp32],
+        k: &[Fxp32],
+        v: &[Fxp32],
+        from: usize,
+        to: usize,
+        scale: Fxp32,
+    ) {
+        let row = self.row_width();
+        assert!(k.len() >= to * row, "k cache too short");
+        assert!(v.len() >= to * row, "v cache too short");
+        for t in from..to {
+            self.update_token(
+                lut,
+                q,
+                &k[t * row..(t + 1) * row],
+                &v[t * row..(t + 1) * row],
+                scale,
+            );
+        }
+    }
+
+    /// Eq. (8) on the divide unit, into a caller-owned buffer.
+    pub fn finalize_into(&self, out: &mut [Fxp32]) {
+        assert!(self.consumed > 0, "finalize before any token");
+        assert_eq!(out.len(), self.n_heads * self.d);
+        for head in 0..self.n_heads {
+            let o = head * self.d;
+            let z = self.z[head];
+            for (dst, &y) in out[o..o + self.d].iter_mut().zip(&self.y[o..o + self.d]) {
+                *dst = y.sat_div(z);
+            }
+        }
+    }
+
+    /// One-shot fused attention over `len` interleaved cache rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend(
+        &mut self,
+        lut: &Exp2Lut,
+        q: &[Fxp32],
+        k: &[Fxp32],
+        v: &[Fxp32],
+        len: usize,
+        scale: Fxp32,
+        out: &mut [Fxp32],
+    ) {
+        self.reset();
+        self.extend(lut, q, k, v, 0, len, scale);
+        self.finalize_into(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
+    use crate::kernels::gather_head;
+    use crate::util::Rng;
+
+    #[test]
+    fn fused_bit_exact_vs_per_head() {
+        let lut = Exp2Lut::new();
+        let mut rng = Rng::seed_from_u64(21);
+        let (h, d, len) = (4usize, 16usize, 48usize);
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qq = vector::quantize(&q);
+        let kq = vector::quantize(&k);
+        let vq = vector::quantize(&v);
+        let mut mha = FxpMhaSwiftKv::new(h, d);
+        let mut out = vec![Fxp32::ZERO; h * d];
+        mha.attend(&lut, &qq, &kq, &vq, len, scale, &mut out);
+
+        for head in 0..h {
+            let kh = gather_head(&k, head, h, d, len);
+            let vh = gather_head(&v, head, h, d, len);
+            let p = FxpHeadProblem::quantize(&q[head * d..(head + 1) * d], &kh, &vh, d, len);
+            let want = attend_fxp(&lut, &p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert_eq!(a.raw(), b.raw(), "head {head} dim {i} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_reset() {
+        let lut = Exp2Lut::new();
+        let mut rng = Rng::seed_from_u64(22);
+        let (h, d, len) = (2usize, 8usize, 20usize);
+        let qq = vector::quantize(&rng.uniform_vec(h * d, 1.0));
+        let kq = vector::quantize(&rng.uniform_vec(len * h * d, 1.0));
+        let vq = vector::quantize(&rng.uniform_vec(len * h * d, 1.0));
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let mut mha = FxpMhaSwiftKv::new(h, d);
+        let mut a = vec![Fxp32::ZERO; h * d];
+        mha.attend(&lut, &qq, &kq, &vq, len, scale, &mut a);
+        let mut b = vec![Fxp32::ZERO; h * d];
+        mha.attend(&lut, &qq, &kq, &vq, len, scale, &mut b);
+        assert_eq!(
+            a.iter().map(|x| x.raw()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.raw()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,279 @@
+//! Fused multi-head SwiftKV decode state (f32).
+//!
+//! The paper's SwiftKV-MHA accelerator streams every `(k_t, v_t)` cache
+//! row exactly once and feeds *all* heads from that single sweep (§IV,
+//! Fig. 5): the per-token recurrence of Eqs. (5)–(8) runs in lock-step
+//! across heads over an interleaved, token-major cache. This is the
+//! software analogue: all heads' `(μ, Z, Y)` state packed contiguously,
+//! one [`MhaSwiftKv::update_token`] call advancing every head, and a
+//! non-allocating [`MhaSwiftKv::finalize_into`].
+//!
+//! Layout: a cache *row* holds all heads' vectors for one token position,
+//! head-major within the row — `row[t] = [head0[d] | head1[d] | …]`,
+//! `row_width = n_heads · d`. Queries and outputs use the same packing.
+//!
+//! Per head the recurrence is identical (same branch structure, same
+//! element-wise update order) to the per-head
+//! [`crate::attention::swiftkv::SwiftKvState`]; only the dot product uses
+//! the multi-accumulator [`super::simd::dot`], so outputs agree with the
+//! per-head path to within f32 re-association noise (≪ 1e-5 relative).
+
+use super::simd;
+
+/// Packed multi-head SwiftKV recurrence state.
+#[derive(Debug, Clone)]
+pub struct MhaSwiftKv {
+    n_heads: usize,
+    d: usize,
+    /// Running max per head.
+    mu: Vec<f32>,
+    /// Softmax denominator per head.
+    z: Vec<f32>,
+    /// Unnormalized output, `[n_heads * d]`, head-major.
+    y: Vec<f32>,
+    consumed: usize,
+}
+
+impl MhaSwiftKv {
+    /// Fresh state for `n_heads` heads of dimension `d`.
+    pub fn new(n_heads: usize, d: usize) -> Self {
+        assert!(n_heads > 0 && d > 0, "empty state");
+        MhaSwiftKv {
+            n_heads,
+            d,
+            mu: vec![f32::NEG_INFINITY; n_heads],
+            z: vec![0.0; n_heads],
+            y: vec![0.0; n_heads * d],
+            consumed: 0,
+        }
+    }
+
+    /// Reset for a new query without releasing the buffers (the scratch
+    /// reuse that keeps the decode hot loop allocation-free). `μ`, `Z`,
+    /// `Y` are re-initialized lazily by the first token's update.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.consumed = 0;
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Tokens consumed since the last reset.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Width of one interleaved cache row (`n_heads · d`).
+    #[inline]
+    pub fn row_width(&self) -> usize {
+        self.n_heads * self.d
+    }
+
+    /// Consume one interleaved `(k_t, v_t)` cache row, advancing *every*
+    /// head in a single sweep — the fused analogue of Fig. 3's
+    /// compare-and-select + update parts, Eqs. (5)–(7).
+    ///
+    /// `q`, `k_t`, `v_t` are `[n_heads * d]` head-major packed rows;
+    /// `scale` is the `1/√d` of Eq. (5).
+    #[inline]
+    pub fn update_token(&mut self, q: &[f32], k_t: &[f32], v_t: &[f32], scale: f32) {
+        let (h, d) = (self.n_heads, self.d);
+        debug_assert_eq!(q.len(), h * d);
+        debug_assert_eq!(k_t.len(), h * d);
+        debug_assert_eq!(v_t.len(), h * d);
+        if self.consumed == 0 {
+            // μ₁ = s₁ branch for every head: β = exp(0) = 1
+            for head in 0..h {
+                let o = head * d;
+                let s = simd::dot(&q[o..o + d], &k_t[o..o + d]) * scale;
+                self.mu[head] = s;
+                self.z[head] = 1.0;
+                self.y[o..o + d].copy_from_slice(&v_t[o..o + d]);
+            }
+        } else {
+            for head in 0..h {
+                let o = head * d;
+                let s = simd::dot(&q[o..o + d], &k_t[o..o + d]) * scale;
+                let yh = &mut self.y[o..o + d];
+                let vh = &v_t[o..o + d];
+                if s <= self.mu[head] {
+                    // Eq. (6): fold the new token in at weight β ∈ (0, 1]
+                    let beta = (s - self.mu[head]).exp();
+                    self.z[head] += beta;
+                    simd::axpy(beta, yh, vh);
+                } else {
+                    // Eq. (7): rescale history by α ∈ (0, 1)
+                    let alpha = (self.mu[head] - s).exp();
+                    self.z[head] = alpha * self.z[head] + 1.0;
+                    simd::scale_axpy(alpha, yh, vh);
+                    self.mu[head] = s;
+                }
+            }
+        }
+        self.consumed += 1;
+    }
+
+    /// Extend over cache rows `[from, to)` of a token-major interleaved
+    /// cache (`k`/`v` are `[len, n_heads * d]` row-major). Matches the
+    /// incremental-decode contract of [`crate::attention::swiftkv::extend`].
+    pub fn extend(&mut self, q: &[f32], k: &[f32], v: &[f32], from: usize, to: usize, scale: f32) {
+        let row = self.row_width();
+        assert!(k.len() >= to * row, "k cache too short");
+        assert!(v.len() >= to * row, "v cache too short");
+        for t in from..to {
+            self.update_token(q, &k[t * row..(t + 1) * row], &v[t * row..(t + 1) * row], scale);
+        }
+    }
+
+    /// Eq. (8): the deferred one-time normalization, written into a
+    /// caller-owned `[n_heads * d]` buffer (no allocation).
+    pub fn finalize_into(&self, out: &mut [f32]) {
+        assert!(self.consumed > 0, "finalize before any token");
+        assert_eq!(out.len(), self.n_heads * self.d);
+        for head in 0..self.n_heads {
+            let o = head * self.d;
+            let z = self.z[head];
+            for (dst, &y) in out[o..o + self.d].iter_mut().zip(&self.y[o..o + self.d]) {
+                *dst = y / z;
+            }
+        }
+    }
+
+    /// One-shot fused attention over `len` interleaved cache rows:
+    /// reset → single sweep → finalize, all into caller-owned memory.
+    pub fn attend(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        len: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        self.reset();
+        self.extend(q, k, v, 0, len, scale);
+        self.finalize_into(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{native, swiftkv as swiftkv_attn, HeadProblem};
+    use crate::kernels::gather_head;
+    use crate::util::Rng;
+
+    #[test]
+    fn fused_matches_per_head_swiftkv() {
+        let mut rng = Rng::seed_from_u64(11);
+        let (h, d, len) = (4usize, 16usize, 64usize);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+
+        let mut mha = MhaSwiftKv::new(h, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, scale, &mut out);
+
+        for head in 0..h {
+            let kh = gather_head(&k, head, h, d, len);
+            let vh = gather_head(&v, head, h, d, len);
+            let p = HeadProblem::new(&q[head * d..(head + 1) * d], &kh, &vh, d, len);
+            let want = swiftkv_attn::attend(&p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 5e-5 * (1.0 + b.abs()),
+                    "head {head} dim {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_native_softmax() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (h, d, len) = (2usize, 8usize, 33usize);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+        let mut mha = MhaSwiftKv::new(h, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, scale, &mut out);
+        for head in 0..h {
+            let kh = gather_head(&k, head, h, d, len);
+            let vh = gather_head(&v, head, h, d, len);
+            let p = HeadProblem::new(&q[head * d..(head + 1) * d], &kh, &vh, d, len);
+            let want = native::attend(&p);
+            for (a, b) in out[head * d..(head + 1) * d].iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_returns_value_row() {
+        let mut rng = Rng::seed_from_u64(13);
+        let (h, d) = (3usize, 5usize);
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(h * d, 1.0);
+        let v = rng.uniform_vec(h * d, 1.0);
+        let mut mha = MhaSwiftKv::new(h, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, 1, 1.0, &mut out);
+        for (a, b) in out.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn extend_is_incremental() {
+        let mut rng = Rng::seed_from_u64(14);
+        let (h, d, len) = (2usize, 7usize, 40usize);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+
+        let mut one = MhaSwiftKv::new(h, d);
+        let mut a = vec![0.0f32; h * d];
+        one.attend(&q, &k, &v, len, scale, &mut a);
+
+        let mut two = MhaSwiftKv::new(h, d);
+        two.extend(&q, &k, &v, 0, 13, scale);
+        two.extend(&q, &k, &v, 13, len, scale);
+        let mut b = vec![0.0f32; h * d];
+        two.finalize_into(&mut b);
+        assert_eq!(a, b, "incremental extend must be bit-identical");
+    }
+
+    #[test]
+    fn reset_reuses_buffers() {
+        let mut rng = Rng::seed_from_u64(15);
+        let (h, d, len) = (2usize, 4usize, 10usize);
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+        let mut mha = MhaSwiftKv::new(h, d);
+        let mut a = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, 0.5, &mut a);
+        let mut b = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, 0.5, &mut b);
+        assert_eq!(a, b, "reset must fully re-initialize the recurrence");
+    }
+
+    #[test]
+    #[should_panic(expected = "finalize before any token")]
+    fn finalize_without_tokens_panics() {
+        let mha = MhaSwiftKv::new(1, 4);
+        let mut out = vec![0.0f32; 4];
+        mha.finalize_into(&mut out);
+    }
+}

@@ -1,0 +1,51 @@
+//! Fused multi-head decode kernels — the software hot-path substrate.
+//!
+//! The paper's SwiftKV-MHA accelerator derives its 13.48× attention
+//! latency reduction from a *fused* schedule (§IV, Fig. 5): every
+//! `(k_t, v_t)` cache row is streamed exactly once and feeds all heads in
+//! a uniform pipeline; no per-head re-scan, no intermediate buffers. This
+//! module is the same restructuring applied to the Rust model:
+//!
+//! - [`simd`] — `chunks_exact`-based multi-accumulator `dot`/`axpy`/
+//!   `scale_axpy` primitives (the 4-lane trick of `quant::gemv`,
+//!   generalized),
+//! - [`mha::MhaSwiftKv`] — all heads' `(μ, Z, Y)` state packed
+//!   contiguously, advanced per interleaved cache row in a single sweep
+//!   (f32 numerics),
+//! - [`fxp_mha::FxpMhaSwiftKv`] — the same fused sweep in the
+//!   accelerator's Q15.17 + LUT-exp arithmetic, bit-exact vs. the
+//!   per-head [`crate::attention::fxp_swiftkv`] datapath,
+//! - [`scratch::DecodeScratch`] — caller-owned buffers making a
+//!   steady-state [`crate::model::TinyModel`] decode step allocation-free.
+//!
+//! The non-allocating `_into` companions on the quant side
+//! ([`crate::quant::gemv_w4a8_into`], [`crate::quant::quantize_int8_into`],
+//! [`crate::quant::QuantLinear::forward_into`]) are re-exported here so
+//! the whole fused-kernel surface is reachable from one path.
+
+pub mod fxp_mha;
+pub mod mha;
+pub mod scratch;
+pub mod simd;
+
+pub use crate::quant::{gemv_w4a8_into, quantize_int8_into};
+pub use fxp_mha::FxpMhaSwiftKv;
+pub use mha::MhaSwiftKv;
+pub use scratch::DecodeScratch;
+pub use simd::{axpy, dot, scale, scale_axpy};
+
+/// Gather one head of a token-major interleaved cache
+/// (`[len][n_heads * d]`) into a contiguous head-major `[len, d]`
+/// buffer — the layout the per-head [`crate::attention`] paths consume.
+/// Used by the fused-vs-per-head equivalence tests and for layout
+/// debugging.
+pub fn gather_head(cache: &[f32], head: usize, n_heads: usize, d: usize, len: usize) -> Vec<f32> {
+    assert!(head < n_heads, "head out of range");
+    assert!(cache.len() >= len * n_heads * d, "cache too short");
+    let mut out = Vec::with_capacity(len * d);
+    for t in 0..len {
+        let at = (t * n_heads + head) * d;
+        out.extend_from_slice(&cache[at..at + d]);
+    }
+    out
+}

@@ -1,0 +1,93 @@
+//! Caller-owned scratch for one decode step of the tiny model.
+//!
+//! Every intermediate buffer a [`crate::model::TinyModel::decode_step_into`]
+//! call needs is pre-allocated here once per sequence, so a steady-state
+//! decode step performs **zero heap allocation** on the attention path
+//! (asserted by `tests/alloc_hotpath.rs` with a counting allocator).
+//! The packed multi-head SwiftKV states ride along and are `reset()` —
+//! not re-allocated — once per layer.
+
+use super::fxp_mha::FxpMhaSwiftKv;
+use super::mha::MhaSwiftKv;
+use crate::fxp::Fxp32;
+
+/// Pre-allocated intermediates for one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeScratch {
+    /// Residual stream, `[d_model]`.
+    pub x: Vec<f32>,
+    /// RMS-normed activation, `[d_model]`.
+    pub xn: Vec<f32>,
+    /// Q/K/V projections, `[d_model]` each.
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Position-encoded query (all heads), `[d_model]`.
+    pub q_rot: Vec<f32>,
+    /// Fused attention output, `[d_model]`.
+    pub attn_out: Vec<f32>,
+    /// Output projection, `[d_model]`.
+    pub o: Vec<f32>,
+    /// MLP intermediates, `[d_ffn]` each.
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    pub act: Vec<f32>,
+    /// MLP down projection, `[d_model]`.
+    pub down: Vec<f32>,
+    /// INT8 activation buffer for the W4A8 GEMVs, `[max(d_model, d_ffn)]`.
+    pub qi8: Vec<i8>,
+    /// Q15.17 quantized query for the accelerator datapath, `[d_model]`.
+    pub q_fxp: Vec<Fxp32>,
+    /// Q15.17 fused attention output, `[d_model]`.
+    pub attn_fxp: Vec<Fxp32>,
+    /// Fused multi-head f32 SwiftKV state (desktop numerics).
+    pub mha: MhaSwiftKv,
+    /// Fused multi-head Q15.17 SwiftKV state (accelerator numerics).
+    pub fxp_mha: FxpMhaSwiftKv,
+}
+
+impl DecodeScratch {
+    /// Allocate all buffers for a model shape. `d_model = n_heads · d_head`.
+    pub fn new(n_heads: usize, d_head: usize, d_ffn: usize) -> Self {
+        let d_model = n_heads * d_head;
+        DecodeScratch {
+            x: vec![0.0; d_model],
+            xn: vec![0.0; d_model],
+            q: vec![0.0; d_model],
+            k: vec![0.0; d_model],
+            v: vec![0.0; d_model],
+            q_rot: vec![0.0; d_model],
+            attn_out: vec![0.0; d_model],
+            o: vec![0.0; d_model],
+            gate: vec![0.0; d_ffn],
+            up: vec![0.0; d_ffn],
+            act: vec![0.0; d_ffn],
+            down: vec![0.0; d_model],
+            qi8: vec![0; d_model.max(d_ffn)],
+            q_fxp: vec![Fxp32::ZERO; d_model],
+            attn_fxp: vec![Fxp32::ZERO; d_model],
+            mha: MhaSwiftKv::new(n_heads, d_head),
+            fxp_mha: FxpMhaSwiftKv::new(n_heads, d_head),
+        }
+    }
+
+    /// Model width the scratch was sized for.
+    pub fn d_model(&self) -> usize {
+        self.x.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_shape() {
+        let s = DecodeScratch::new(4, 8, 128);
+        assert_eq!(s.d_model(), 32);
+        assert_eq!(s.gate.len(), 128);
+        assert_eq!(s.qi8.len(), 128);
+        assert_eq!(s.mha.row_width(), 32);
+        assert_eq!(s.fxp_mha.row_width(), 32);
+    }
+}

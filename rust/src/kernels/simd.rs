@@ -1,0 +1,159 @@
+//! SIMD-width f32 primitives for the fused decode kernels.
+//!
+//! Every loop is written over `chunks_exact(LANES)` with independent
+//! accumulators/lanes so the compiler auto-vectorizes the body (the same
+//! 4-lane trick [`crate::quant::gemv`] uses for the INT4 MAC loop and
+//! [`crate::fxp::vector::dot`] uses for the wide-accumulator dot). The
+//! remainder loops keep every function correct for arbitrary lengths —
+//! odd `d`, `d` not a multiple of the unroll width, `d < LANES`.
+//!
+//! Numerics note: [`dot`] sums in four partial accumulators and combines
+//! them pairwise, so it is *not* bit-identical to a sequential reduction
+//! (`attention::dot_f32`); the difference is bounded by normal f32
+//! re-association noise (≤ a few ulp per element). [`axpy`] and
+//! [`scale_axpy`] are element-wise and bit-identical to their scalar
+//! counterparts.
+
+/// Unroll width of the inner loops (f32 lanes per step).
+pub const LANES: usize = 4;
+
+/// Dot product with four independent accumulators (vectorizable).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let ra = ca.remainder();
+    let rb = cb.remainder();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in ca.zip(cb) {
+        a0 += x[0] * y[0];
+        a1 += x[1] * y[1];
+        a2 += x[2] * y[2];
+        a3 += x[3] * y[3];
+    }
+    let mut s = (a0 + a1) + (a2 + a3);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y ← y + β·x` — the β-branch of Eq. (6) (history untouched).
+#[inline]
+pub fn axpy(beta: f32, y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let split = y.len() - y.len() % LANES;
+    let (yv, yr) = y.split_at_mut(split);
+    let (xv, xr) = x.split_at(split);
+    for (yc, xc) in yv.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
+        yc[0] += beta * xc[0];
+        yc[1] += beta * xc[1];
+        yc[2] += beta * xc[2];
+        yc[3] += beta * xc[3];
+    }
+    for (yi, xi) in yr.iter_mut().zip(xr) {
+        *yi += beta * xi;
+    }
+}
+
+/// `y ← α·y + x` — the α-branch of Eq. (7) (history rescaled, new token
+/// folded in at weight 1).
+#[inline]
+pub fn scale_axpy(alpha: f32, y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let split = y.len() - y.len() % LANES;
+    let (yv, yr) = y.split_at_mut(split);
+    let (xv, xr) = x.split_at(split);
+    for (yc, xc) in yv.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
+        yc[0] = alpha * yc[0] + xc[0];
+        yc[1] = alpha * yc[1] + xc[1];
+        yc[2] = alpha * yc[2] + xc[2];
+        yc[3] = alpha * yc[3] + xc[3];
+    }
+    for (yi, xi) in yr.iter_mut().zip(xr) {
+        *yi = alpha * *yi + xi;
+    }
+}
+
+/// `y ← α·y` in place.
+#[inline]
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for yi in y.iter_mut() {
+        *yi *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn seq_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn dot_matches_sequential_within_reassociation_noise() {
+        let mut rng = Rng::seed_from_u64(1);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 33, 64, 127, 512] {
+            let a = rng.uniform_vec(n, 2.0);
+            let b = rng.uniform_vec(n, 2.0);
+            let got = dot(&a, &b);
+            let want = seq_dot(&a, &b);
+            assert!(
+                (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_bit_identical_to_scalar() {
+        let mut rng = Rng::seed_from_u64(2);
+        for n in [1usize, 3, 4, 6, 17, 64] {
+            let x = rng.uniform_vec(n, 1.0);
+            let y0 = rng.uniform_vec(n, 1.0);
+            let beta = 0.37f32;
+            let mut a = y0.clone();
+            axpy(beta, &mut a, &x);
+            let mut b = y0.clone();
+            for (yi, xi) in b.iter_mut().zip(&x) {
+                *yi += beta * xi;
+            }
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_axpy_bit_identical_to_scalar() {
+        let mut rng = Rng::seed_from_u64(3);
+        for n in [1usize, 2, 5, 8, 13, 100] {
+            let x = rng.uniform_vec(n, 1.0);
+            let y0 = rng.uniform_vec(n, 1.0);
+            let alpha = 0.81f32;
+            let mut a = y0.clone();
+            scale_axpy(alpha, &mut a, &x);
+            let mut b = y0.clone();
+            for (yi, xi) in b.iter_mut().zip(&x) {
+                *yi = alpha * *yi + xi;
+            }
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_in_place() {
+        let mut y = vec![1.0f32, -2.0, 4.0];
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![0.5, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_slices_are_fine() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        let mut y: Vec<f32> = Vec::new();
+        axpy(1.0, &mut y, &[]);
+        scale_axpy(1.0, &mut y, &[]);
+    }
+}

@@ -10,8 +10,10 @@
 //! - **L2** (build time): a JAX decoder model calling the kernels, lowered
 //!   once to HLO text (`python/compile/aot.py` → `artifacts/`).
 //! - **L3** (this crate): the decode coordinator, the PJRT runtime that
-//!   loads the AOT artifacts, bit-exact fixed-point models of the paper's
-//!   datapath ([`fxp`], [`attention`], [`rope`], [`quant`]), and a
+//!   loads the AOT artifacts (behind the off-by-default `pjrt` feature),
+//!   bit-exact fixed-point models of the paper's datapath ([`fxp`],
+//!   [`attention`], [`rope`], [`quant`]), the fused multi-head decode
+//!   kernels the serving hot path runs on ([`kernels`]), and a
 //!   cycle-level model of the SwiftKV-MHA accelerator ([`sim`]) plus the
 //!   baseline accelerators ([`baselines`]) used by the paper's evaluation.
 //!
@@ -22,6 +24,7 @@ pub mod attention;
 pub mod baselines;
 pub mod coordinator;
 pub mod fxp;
+pub mod kernels;
 pub mod model;
 pub mod quant;
 pub mod report;

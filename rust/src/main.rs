@@ -8,10 +8,14 @@
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 
+#[cfg(feature = "pjrt")]
 use swiftkv::coordinator::{ServeOptions, Server};
-use swiftkv::model::{LlmConfig, TinyModel, WeightStore, WorkloadGen, WorkloadSpec};
+use swiftkv::coordinator::{CpuServeOptions, CpuServer};
+use swiftkv::model::{LlmConfig, NumericsMode, TinyModel, WeightStore, WorkloadGen, WorkloadSpec};
 use swiftkv::report;
-use swiftkv::runtime::{artifacts_available, default_artifacts_dir, Engine};
+#[cfg(feature = "pjrt")]
+use swiftkv::runtime::Engine;
+use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
 use swiftkv::sim::{layer_sched, ArchConfig};
 use swiftkv::util::cli::Args;
 
@@ -31,6 +35,63 @@ fn model_by_name(name: &str) -> Result<LlmConfig, String> {
         "tiny" => LlmConfig::tiny(),
         other => return Err(format!("unknown model '{other}'")),
     })
+}
+
+fn workload_spec(args: &Args, vocab: usize) -> Result<WorkloadSpec, String> {
+    Ok(WorkloadSpec {
+        num_requests: args.get_usize("requests", 16)?,
+        vocab,
+        prompt_len: (4, 24),
+        gen_len: (8, 48),
+        mean_gap_ms: args.get_f64("gap-ms", 0.0)?,
+        seed: args.get_usize("seed", 0)? as u64,
+    })
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(args: &Args) -> Result<(), String> {
+    let eng = Engine::load(&default_artifacts_dir()).map_err(|e| e.to_string())?;
+    let reqs = WorkloadGen::new(workload_spec(args, eng.manifest.vocab)?).generate();
+    let batch = args.get_usize("batch", 8)?;
+    let report = Server::new(
+        &eng,
+        ServeOptions {
+            batch: Some(batch),
+            max_iterations: 0,
+            sim_model: LlmConfig::llama2_7b(),
+        },
+    )
+    .serve(reqs)
+    .map_err(|e| e.to_string())?;
+    println!("{}", report.metrics.format_table());
+    Ok(())
+}
+
+/// Serve over the pure-Rust CPU backend (fused decode kernels, lanes in
+/// parallel). Falls back to a synthetic tiny model when the AOT
+/// artifacts have not been built.
+fn serve_cpu(args: &Args) -> Result<(), String> {
+    let tm = if artifacts_available() {
+        let ws = WeightStore::load(&default_artifacts_dir()).map_err(|e| e.to_string())?;
+        TinyModel::load(&ws).map_err(|e| e.to_string())?
+    } else {
+        println!("(artifacts not built — serving the synthetic tiny model on the CPU backend)");
+        TinyModel::synthetic(0, 512, 256, 8, 4, 1024, 512)
+    };
+    let reqs = WorkloadGen::new(workload_spec(args, tm.vocab)?).generate();
+    let lanes = args.get_usize("batch", 8)?;
+    let report = CpuServer::new(
+        &tm,
+        CpuServeOptions {
+            lanes,
+            mode: NumericsMode::DesktopF32,
+            max_iterations: 0,
+            sim_model: LlmConfig::llama2_7b(),
+        },
+    )
+    .serve(reqs);
+    println!("{}", report.metrics.format_table());
+    Ok(())
 }
 
 fn run() -> Result<(), String> {
@@ -77,31 +138,15 @@ fn run() -> Result<(), String> {
             println!("{}", report::fig8a(&arch, &cfg, ctx));
         }
         "serve" => {
-            if !artifacts_available() {
-                return Err("artifacts not built — run `make artifacts`".into());
+            // PJRT engine when compiled in and artifacts exist; otherwise
+            // the CPU backend over the fused decode kernels.
+            #[cfg(feature = "pjrt")]
+            {
+                if artifacts_available() {
+                    return serve_pjrt(&args);
+                }
             }
-            let eng = Engine::load(&default_artifacts_dir()).map_err(|e| e.to_string())?;
-            let spec = WorkloadSpec {
-                num_requests: args.get_usize("requests", 16)?,
-                vocab: eng.manifest.vocab,
-                prompt_len: (4, 24),
-                gen_len: (8, 48),
-                mean_gap_ms: args.get_f64("gap-ms", 0.0)?,
-                seed: args.get_usize("seed", 0)? as u64,
-            };
-            let reqs = WorkloadGen::new(spec).generate();
-            let batch = args.get_usize("batch", 8)?;
-            let report = Server::new(
-                &eng,
-                ServeOptions {
-                    batch: Some(batch),
-                    max_iterations: 0,
-                    sim_model: LlmConfig::llama2_7b(),
-                },
-            )
-            .serve(reqs)
-            .map_err(|e| e.to_string())?;
-            println!("{}", report.metrics.format_table());
+            serve_cpu(&args)?;
         }
         "accuracy" => {
             if !artifacts_available() {

@@ -1,28 +1,43 @@
-//! Pure-Rust forward pass of the tiny AOT model, in two numerics modes.
+//! Pure-Rust forward pass of the tiny AOT model, in two numerics modes,
+//! running entirely on the fused multi-head decode kernels
+//! ([`crate::kernels`]).
 //!
-//! - [`NumericsMode::DesktopF32`] — "desktop" arithmetic: f32 GEMV over
-//!   dequantized W4A8 weights, f32 softmax attention. This is the
-//!   reference side of the paper's Table I comparison ("desktop results
-//!   using the same W4A8 precision").
+//! - [`NumericsMode::DesktopF32`] — "desktop" arithmetic: exact W4A8
+//!   integer GEMV + f32 single-pass SwiftKV attention (numerically equal
+//!   to softmax(qKᵀ/√d)V to ~1e-6; the reference side of the paper's
+//!   Table I comparison, "desktop results using the same W4A8
+//!   precision").
 //! - [`NumericsMode::Accelerator`] — the SwiftKV-MHA datapath: exact
 //!   INT8×INT4 integer GEMV, FXP32 (Q15.17) single-pass attention with
 //!   the 5-bit-LUT exponential, decoder-RoPE recurrence.
 //!
-//! Running both modes over the same token stream and comparing Top-k
-//! logits reproduces Table I. The desktop mode additionally cross-checks
-//! the PJRT runtime (same weights, same math → near-identical logits).
+//! Both modes share the exact integer GEMV, so they differ ONLY in the
+//! attention datapath — precisely the contribution Table I isolates.
+//!
+//! Hot-path structure (§Perf): the KV caches are **token-major
+//! interleaved** (`[layer][pos][head * d_head]`), so one decode step
+//! streams each cache row once and advances *every* head in a single
+//! fused sweep ([`crate::kernels::MhaSwiftKv`] /
+//! [`crate::kernels::FxpMhaSwiftKv`]) — the software analogue of the
+//! SwiftKV-MHA pipeline of Fig. 5. The accelerator mode additionally
+//! keeps a Q15.17 mirror of the cache, appended once per token, so no
+//! re-quantization of history ever happens. All intermediates live in a
+//! per-sequence [`DecodeScratch`]; a steady-state
+//! [`TinyModel::decode_step_into`] performs **zero heap allocation**
+//! (asserted by `tests/alloc_hotpath.rs`).
 
 use super::weights::WeightStore;
-use crate::attention::{fxp_swiftkv, native, HeadProblem};
-use crate::fxp::Exp2Lut;
-use crate::quant::{gemv_w4a8, quantize_int8, Int4Matrix, QuantLinear};
-use crate::rope::RopeState;
+use crate::fxp::{vector, Exp2Lut, Fxp32};
+use crate::kernels::DecodeScratch;
+use crate::quant::{Int4Matrix, QuantLinear};
+use crate::rope::{rope_apply_cached_into, RopeState};
+use crate::util::Rng;
 use anyhow::{bail, Result};
 
 /// Which datapath to model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NumericsMode {
-    /// f32 GEMV on dequantized weights + f32 softmax attention.
+    /// Integer GEMV + f32 single-pass SwiftKV attention.
     DesktopF32,
     /// Integer GEMV + FXP32 LUT-exp SwiftKV attention.
     Accelerator,
@@ -51,7 +66,6 @@ impl DualLinear {
                 dequant[i * dout + j] = wq[i * dout + j] as f32 * scales[j];
             }
         }
-        let _ = dout;
         Ok(DualLinear {
             quant: QuantLinear::new(mat),
             dequant,
@@ -59,15 +73,31 @@ impl DualLinear {
         })
     }
 
-    fn forward(&self, x: &[f32], _mode: NumericsMode) -> Vec<f32> {
+    /// Quantize-on-the-fly W4A8 linear from an f32 matrix (synthetic
+    /// models and tests — no artifact files needed).
+    fn from_f32(w: &[f32], din: usize, dout: usize) -> DualLinear {
+        let mat = Int4Matrix::quantize(w, din, dout);
+        let dequant = mat.dequantize();
+        DualLinear {
+            quant: QuantLinear::new(mat),
+            dequant,
+            din,
+        }
+    }
+
+    /// The exact W4A8 integer GEMV (INT8×INT4→INT32 is exact on desktop
+    /// hardware too), through caller-owned scratch — shared by both
+    /// numerics modes.
+    #[inline]
+    fn forward_into(&self, x: &[f32], qbuf: &mut [i8], out: &mut [f32]) {
         assert_eq!(x.len(), self.din);
-        // Both modes share the *exact* W4A8 integer GEMV (INT8×INT4→INT32
-        // is exact on desktop hardware too — the paper compares "desktop
-        // results using the same W4A8 precision"). The two modes therefore
-        // differ ONLY in the attention datapath, which is precisely the
-        // contribution Table I isolates.
-        let xq = quantize_int8(x);
-        gemv_w4a8(&xq, &self.quant.weight)
+        self.quant.forward_into(x, qbuf, out);
+    }
+
+    /// Output width (test/diagnostic use).
+    #[allow(dead_code)]
+    fn dout(&self) -> usize {
+        self.quant.dout()
     }
 
     /// Dequantized f32 weight view (diagnostics / error analysis).
@@ -96,6 +126,7 @@ pub struct TinyModel {
     pub n_heads: usize,
     pub d_head: usize,
     pub n_layers: usize,
+    pub d_ffn: usize,
     pub n_ctx: usize,
     pub rope_base: f64,
     embedding: Vec<f32>,
@@ -105,27 +136,44 @@ pub struct TinyModel {
     lut: Exp2Lut,
 }
 
-/// Mutable per-sequence decode state (KV caches + RoPE recurrence).
+/// Mutable per-sequence decode state: token-major interleaved KV caches
+/// (f32 + Q15.17 mirror), the RoPE recurrence, and the pre-allocated
+/// [`DecodeScratch`].
 pub struct DecodeState {
-    /// `[layer][head][pos][d_head]` flattened K cache.
+    /// `[layer][pos][head * d_head]` token-major K cache: all heads' rows
+    /// for one position are contiguous (the fused-sweep layout).
     kc: Vec<f32>,
     vc: Vec<f32>,
+    /// Q15.17 mirrors for the accelerator datapath, appended once per
+    /// token — history is never re-quantized.
+    kq: Vec<Fxp32>,
+    vq: Vec<Fxp32>,
+    /// Token rows (per layer) present in the Q15.17 mirror. Lags `pos`
+    /// when steps run in `DesktopF32` mode; the next `Accelerator` step
+    /// backfills the gap so modes can be mixed freely on one state.
+    fxp_rows: usize,
     rope: RopeState,
     pub pos: usize,
     n_ctx: usize,
     n_heads: usize,
     d_head: usize,
+    rope_base: f64,
+    scratch: DecodeScratch,
 }
 
 impl DecodeState {
-    fn idx(&self, l: usize, h: usize, t: usize) -> usize {
-        ((l * self.n_heads + h) * self.n_ctx + t) * self.d_head
+    /// Restart the state for a new sequence without re-allocating the
+    /// caches (lane recycling in the CPU batch server). Stale cache rows
+    /// are never read: row `t` is rewritten at step `t` before any read.
+    pub fn reset(&mut self) {
+        self.pos = 0;
+        self.fxp_rows = 0;
+        self.rope = RopeState::new(self.d_head, self.rope_base);
     }
 
-    /// Contiguous `[n_ctx, d_head]` cache rows for (layer, head).
-    fn head_cache(&self, l: usize, h: usize) -> std::ops::Range<usize> {
-        let start = self.idx(l, h, 0);
-        start..start + self.n_ctx * self.d_head
+    /// Width of one interleaved cache row.
+    fn row(&self) -> usize {
+        self.n_heads * self.d_head
     }
 }
 
@@ -148,12 +196,16 @@ impl TinyModel {
                 w_down: DualLinear::load(ws, &format!("{p}.w_down"))?,
             });
         }
+        if m.d_model != m.n_heads * m.d_head {
+            bail!("manifest: d_model must equal n_heads * d_head");
+        }
         Ok(TinyModel {
             vocab: m.vocab,
             d_model: m.d_model,
             n_heads: m.n_heads,
             d_head: m.d_head,
             n_layers: m.n_layers,
+            d_ffn: m.d_ffn,
             n_ctx: m.n_ctx,
             rope_base: m.rope_base,
             embedding: ws.f32_vec("embedding")?,
@@ -164,87 +216,228 @@ impl TinyModel {
         })
     }
 
-    /// Fresh decode state.
+    /// Deterministic random model with the same datapath as the AOT tiny
+    /// model — lets the decode hot path (and its benches/tests) run
+    /// without the Python-built artifacts.
+    pub fn synthetic(
+        seed: u64,
+        vocab: usize,
+        d_model: usize,
+        n_heads: usize,
+        n_layers: usize,
+        d_ffn: usize,
+        n_ctx: usize,
+    ) -> TinyModel {
+        assert!(vocab >= 2 && n_layers >= 1 && n_ctx >= 1);
+        assert!(n_heads > 0 && d_model % n_heads == 0, "d_model must split across heads");
+        let d_head = d_model / n_heads;
+        assert!(d_head % 2 == 0, "RoPE needs an even head dim");
+        let mut rng = Rng::seed_from_u64(seed);
+        let w_scale = 1.0 / (d_model as f32).sqrt();
+        let linear = |rng: &mut Rng, din: usize, dout: usize| -> DualLinear {
+            DualLinear::from_f32(&rng.uniform_vec(din * dout, w_scale), din, dout)
+        };
+        let gain = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            rng.uniform_vec(n, 0.25).iter().map(|x| 1.0 + x).collect()
+        };
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            layers.push(LayerWeights {
+                attn_norm: gain(&mut rng, d_model),
+                wq: linear(&mut rng, d_model, d_model),
+                wk: linear(&mut rng, d_model, d_model),
+                wv: linear(&mut rng, d_model, d_model),
+                wo: linear(&mut rng, d_model, d_model),
+                mlp_norm: gain(&mut rng, d_model),
+                w_gate: linear(&mut rng, d_model, d_ffn),
+                w_up: linear(&mut rng, d_model, d_ffn),
+                w_down: linear(&mut rng, d_ffn, d_model),
+            });
+        }
+        let embedding = rng.uniform_vec(vocab * d_model, 1.0);
+        let final_norm = gain(&mut rng, d_model);
+        let lm_head = linear(&mut rng, d_model, vocab);
+        TinyModel {
+            vocab,
+            d_model,
+            n_heads,
+            d_head,
+            n_layers,
+            d_ffn,
+            n_ctx,
+            rope_base: 10000.0,
+            embedding,
+            layers,
+            final_norm,
+            lm_head,
+            lut: Exp2Lut::new(),
+        }
+    }
+
+    /// Fresh decode state (caches + RoPE recurrence + scratch).
     pub fn new_state(&self) -> DecodeState {
+        let row = self.n_heads * self.d_head;
+        let cache = self.n_layers * self.n_ctx * row;
         DecodeState {
-            kc: vec![0.0; self.n_layers * self.n_heads * self.n_ctx * self.d_head],
-            vc: vec![0.0; self.n_layers * self.n_heads * self.n_ctx * self.d_head],
+            kc: vec![0.0; cache],
+            vc: vec![0.0; cache],
+            kq: vec![Fxp32::ZERO; cache],
+            vq: vec![Fxp32::ZERO; cache],
+            fxp_rows: 0,
             rope: RopeState::new(self.d_head, self.rope_base),
             pos: 0,
             n_ctx: self.n_ctx,
             n_heads: self.n_heads,
             d_head: self.d_head,
+            rope_base: self.rope_base,
+            scratch: DecodeScratch::new(self.n_heads, self.d_head, self.d_ffn),
         }
     }
 
     /// One decode step: append `token` at the state's position, return
-    /// logits over the vocabulary.
+    /// logits over the vocabulary. Allocates only the returned vector;
+    /// use [`Self::decode_step_into`] for the allocation-free variant.
     pub fn decode_step(&self, st: &mut DecodeState, token: u32, mode: NumericsMode) -> Vec<f32> {
+        let mut logits = vec![0.0f32; self.vocab];
+        self.decode_step_into(st, token, mode, &mut logits);
+        logits
+    }
+
+    /// One decode step into a caller-owned logits buffer. Steady-state
+    /// this performs **no heap allocation**: every intermediate lives in
+    /// the state's [`DecodeScratch`], the fused multi-head SwiftKV states
+    /// are `reset()` per layer, and each KV cache row is written once and
+    /// streamed once per step.
+    pub fn decode_step_into(
+        &self,
+        st: &mut DecodeState,
+        token: u32,
+        mode: NumericsMode,
+        logits: &mut [f32],
+    ) {
         assert!((token as usize) < self.vocab, "token out of range");
         assert!(st.pos < self.n_ctx, "context overflow");
+        assert_eq!(logits.len(), self.vocab, "logits buffer size");
         let d = self.d_model;
         let (h, dh) = (self.n_heads, self.d_head);
+        let row = st.row();
+        debug_assert_eq!(row, d);
+        let n_ctx = self.n_ctx;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let fxp_scale = Fxp32::from_f64(1.0 / (dh as f64).sqrt());
 
-        let mut x = self.embedding[token as usize * d..(token as usize + 1) * d].to_vec();
         // advance the shared RoPE recurrence once per token
         st.rope.advance();
-        let (cos, sin) = (st.rope.cos.clone(), st.rope.sin.clone());
+        let pos = st.pos;
+        let len = pos + 1;
+        // first Q15.17 mirror row missing for this step (== pos when every
+        // step ran in Accelerator mode; smaller after DesktopF32 steps)
+        let fxp_from = st.fxp_rows.min(pos);
+
+        // split the state into disjoint mutable borrows
+        let DecodeState {
+            kc,
+            vc,
+            kq,
+            vq,
+            rope,
+            scratch: sc,
+            ..
+        } = st;
+
+        sc.x
+            .copy_from_slice(&self.embedding[token as usize * d..(token as usize + 1) * d]);
 
         for (l, lw) in self.layers.iter().enumerate() {
-            let xn = rms_norm(&x, &lw.attn_norm);
-            let q = lw.wq.forward(&xn, mode);
-            let k = lw.wk.forward(&xn, mode);
-            let v = lw.wv.forward(&xn, mode);
+            rms_norm_into(&sc.x, &lw.attn_norm, &mut sc.xn);
+            lw.wq.forward_into(&sc.xn, &mut sc.qi8, &mut sc.q);
+            lw.wk.forward_into(&sc.xn, &mut sc.qi8, &mut sc.k);
+            lw.wv.forward_into(&sc.xn, &mut sc.qi8, &mut sc.v);
 
-            let mut attn_out = vec![0.0f32; d];
-            for head in 0..h {
-                let q_h = crate::rope::rope_apply_cached(&q[head * dh..(head + 1) * dh], &cos, &sin);
-                let k_h = crate::rope::rope_apply_cached(&k[head * dh..(head + 1) * dh], &cos, &sin);
-                // append to cache (already position-encoded)
-                let at = st.idx(l, head, st.pos);
-                st.kc[at..at + dh].copy_from_slice(&k_h);
-                st.vc[at..at + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
-
-                let range = st.head_cache(l, head);
-                let k_cache = &st.kc[range.clone()];
-                let v_cache = &st.vc[range];
-                let len = st.pos + 1;
-                let out = match mode {
-                    NumericsMode::DesktopF32 => {
-                        let p = HeadProblem::new(&q_h, k_cache, v_cache, dh, len);
-                        native::attend(&p)
-                    }
-                    NumericsMode::Accelerator => {
-                        fxp_swiftkv::attend(&self.lut, &q_h, k_cache, v_cache, dh, len)
-                    }
-                };
-                attn_out[head * dh..(head + 1) * dh].copy_from_slice(&out);
+            // rotate q into scratch and k directly into this position's
+            // interleaved cache row; store v alongside
+            let at = (l * n_ctx + pos) * row;
+            let lstart = l * n_ctx * row;
+            {
+                let krow = &mut kc[at..at + row];
+                for head in 0..h {
+                    let o = head * dh;
+                    rope_apply_cached_into(
+                        &sc.q[o..o + dh],
+                        &rope.cos,
+                        &rope.sin,
+                        &mut sc.q_rot[o..o + dh],
+                    );
+                    rope_apply_cached_into(
+                        &sc.k[o..o + dh],
+                        &rope.cos,
+                        &rope.sin,
+                        &mut krow[o..o + dh],
+                    );
+                }
             }
-            let o = lw.wo.forward(&attn_out, mode);
-            for (xi, oi) in x.iter_mut().zip(&o) {
+            vc[at..at + row].copy_from_slice(&sc.v);
+
+            match mode {
+                NumericsMode::DesktopF32 => {
+                    // fused f32 sweep: every cache row feeds all heads once
+                    let k_layer = &kc[lstart..lstart + len * row];
+                    let v_layer = &vc[lstart..lstart + len * row];
+                    sc.mha.reset();
+                    sc.mha.extend(&sc.q_rot, k_layer, v_layer, 0, len, scale);
+                    sc.mha.finalize_into(&mut sc.attn_out);
+                }
+                NumericsMode::Accelerator => {
+                    // quantize the rotated query once per layer, append the
+                    // missing (k, v) rows to the Q15.17 mirror — steady
+                    // state that is exactly the current row; after
+                    // DesktopF32 steps the gap is backfilled — then one
+                    // fused Q15.17 sweep. History already mirrored is
+                    // never re-quantized.
+                    vector::quantize_into(&sc.q_rot, &mut sc.q_fxp);
+                    for t in fxp_from..len {
+                        let rat = (l * n_ctx + t) * row;
+                        vector::quantize_into(&kc[rat..rat + row], &mut kq[rat..rat + row]);
+                        vector::quantize_into(&vc[rat..rat + row], &mut vq[rat..rat + row]);
+                    }
+                    let kq_layer = &kq[lstart..lstart + len * row];
+                    let vq_layer = &vq[lstart..lstart + len * row];
+                    sc.fxp_mha.reset();
+                    sc.fxp_mha
+                        .extend(&self.lut, &sc.q_fxp, kq_layer, vq_layer, 0, len, fxp_scale);
+                    sc.fxp_mha.finalize_into(&mut sc.attn_fxp);
+                    vector::dequantize_into(&sc.attn_fxp, &mut sc.attn_out);
+                }
+            }
+
+            lw.wo.forward_into(&sc.attn_out, &mut sc.qi8, &mut sc.o);
+            for (xi, oi) in sc.x.iter_mut().zip(&sc.o) {
                 *xi += oi;
             }
 
-            let xn = rms_norm(&x, &lw.mlp_norm);
-            let gate = lw.w_gate.forward(&xn, mode);
-            let up = lw.w_up.forward(&xn, mode);
-            let act: Vec<f32> = gate
-                .iter()
-                .zip(&up)
-                .map(|(&g, &u)| silu(g) * u)
-                .collect();
-            let down = lw.w_down.forward(&act, mode);
-            for (xi, di) in x.iter_mut().zip(&down) {
+            rms_norm_into(&sc.x, &lw.mlp_norm, &mut sc.xn);
+            lw.w_gate.forward_into(&sc.xn, &mut sc.qi8, &mut sc.gate);
+            lw.w_up.forward_into(&sc.xn, &mut sc.qi8, &mut sc.up);
+            for ((a, &g), &u) in sc.act.iter_mut().zip(&sc.gate).zip(&sc.up) {
+                *a = silu(g) * u;
+            }
+            lw.w_down.forward_into(&sc.act, &mut sc.qi8, &mut sc.down);
+            for (xi, di) in sc.x.iter_mut().zip(&sc.down) {
                 *xi += di;
             }
         }
 
+        rms_norm_into(&sc.x, &self.final_norm, &mut sc.xn);
+        self.lm_head.forward_into(&sc.xn, &mut sc.qi8, logits);
+
+        if mode == NumericsMode::Accelerator {
+            st.fxp_rows = len;
+        }
         st.pos += 1;
-        let xn = rms_norm(&x, &self.final_norm);
-        self.lm_head.forward(&xn, mode)
     }
 
     /// Debug access to cache rows (cross-validation against the JAX side).
+    /// Returns the `[d_head]` K/V slices of (layer, head, position).
     pub fn debug_cache<'a>(
         &self,
         st: &'a DecodeState,
@@ -252,7 +445,8 @@ impl TinyModel {
         h: usize,
         t: usize,
     ) -> (&'a [f32], &'a [f32]) {
-        let at = st.idx(l, h, t);
+        let row = self.n_heads * self.d_head;
+        let at = (l * st.n_ctx + t) * row + h * self.d_head;
         (&st.kc[at..at + self.d_head], &st.vc[at..at + self.d_head])
     }
 
@@ -262,11 +456,12 @@ impl TinyModel {
     }
 
     /// Greedy generation: feed `prompt`, then generate `steps` tokens.
+    /// The logits buffer is allocated once and reused across steps.
     pub fn generate(&self, prompt: &[u32], steps: usize, mode: NumericsMode) -> Vec<u32> {
         let mut st = self.new_state();
-        let mut logits = Vec::new();
+        let mut logits = vec![0.0f32; self.vocab];
         for &t in prompt {
-            logits = self.decode_step(&mut st, t, mode);
+            self.decode_step_into(&mut st, t, mode, &mut logits);
         }
         let mut out = Vec::with_capacity(steps);
         for _ in 0..steps {
@@ -275,7 +470,7 @@ impl TinyModel {
             if st.pos >= self.n_ctx {
                 break;
             }
-            logits = self.decode_step(&mut st, next, mode);
+            self.decode_step_into(&mut st, next, mode, &mut logits);
         }
         out
     }
@@ -283,9 +478,20 @@ impl TinyModel {
 
 /// RMS normalization (SFU op).
 pub fn rms_norm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    rms_norm_into(x, g, &mut out);
+    out
+}
+
+/// [`rms_norm`] into a caller-owned buffer (no allocation).
+pub fn rms_norm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
     let var = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let r = 1.0 / (var + 1e-5).sqrt();
-    x.iter().zip(g).map(|(v, w)| v * r * w).collect()
+    for ((o, &v), &w) in out.iter_mut().zip(x).zip(g) {
+        *o = v * r * w;
+    }
 }
 
 /// SiLU activation (SFU op).
@@ -321,6 +527,10 @@ mod tests {
         dir.join("manifest.json")
             .exists()
             .then(|| TinyModel::load(&WeightStore::load(&dir).unwrap()).unwrap())
+    }
+
+    fn tiny_synth() -> TinyModel {
+        TinyModel::synthetic(42, 64, 32, 4, 2, 64, 48)
     }
 
     #[test]
@@ -380,6 +590,101 @@ mod tests {
         println!("kc l0 h0 row0[:4] {:?}", &k0[..4]);
         println!("kc l0 h0 row1[:4] {:?}", &k1[..4]);
         println!("vc l0 h0 row1[:4] {:?}", &v1[..4]);
+    }
+
+    #[test]
+    fn synthetic_decode_finite_logits_both_modes() {
+        let m = tiny_synth();
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut st = m.new_state();
+            for &t in &[7u32, 1, 63, 0] {
+                let logits = m.decode_step(&mut st, t, mode);
+                assert_eq!(logits.len(), m.vocab);
+                assert!(logits.iter().all(|x| x.is_finite()), "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_into_matches_decode_step() {
+        let m = tiny_synth();
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut s1 = m.new_state();
+            let mut s2 = m.new_state();
+            let mut buf = vec![0.0f32; m.vocab];
+            for &t in &[1u32, 9, 30, 2, 2] {
+                let a = m.decode_step(&mut s1, t, mode);
+                m.decode_step_into(&mut s2, t, mode, &mut buf);
+                assert_eq!(a, buf, "{mode:?} diverged at token {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_state_matches_fresh_state() {
+        let m = tiny_synth();
+        let mut st = m.new_state();
+        for &t in &[3u32, 5, 7] {
+            m.decode_step(&mut st, t, NumericsMode::Accelerator);
+        }
+        st.reset();
+        assert_eq!(st.pos, 0);
+        let a = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
+        let mut fresh = m.new_state();
+        let b = m.decode_step(&mut fresh, 11, NumericsMode::Accelerator);
+        assert_eq!(a, b, "recycled state must decode like a fresh one");
+    }
+
+    #[test]
+    fn mixed_modes_backfill_quantized_mirror() {
+        // DesktopF32 steps leave the Q15.17 mirror behind; the next
+        // Accelerator step must backfill it from the f32 cache so the
+        // fused sweep sees real history, not zeros.
+        let m = tiny_synth();
+        let mut st = m.new_state();
+        for &t in &[3u32, 9, 27] {
+            m.decode_step(&mut st, t, NumericsMode::DesktopF32);
+        }
+        assert_eq!(st.fxp_rows, 0);
+        let logits = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(st.fxp_rows, 4);
+        let row = m.n_heads * m.d_head;
+        for l in 0..m.n_layers {
+            for t in 0..4 {
+                let at = (l * m.n_ctx + t) * row;
+                for i in 0..row {
+                    assert_eq!(
+                        st.kq[at + i].raw(),
+                        Fxp32::from_f32(st.kc[at + i]).raw(),
+                        "k mirror stale at layer {l} row {t} lane {i}"
+                    );
+                    assert_eq!(
+                        st.vq[at + i].raw(),
+                        Fxp32::from_f32(st.vc[at + i]).raw(),
+                        "v mirror stale at layer {l} row {t} lane {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_generation_deterministic_and_in_vocab() {
+        let m = tiny_synth();
+        let a = m.generate(&[1, 2, 3], 8, NumericsMode::Accelerator);
+        let b = m.generate(&[1, 2, 3], 8, NumericsMode::Accelerator);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (t as usize) < m.vocab));
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn synthetic_shapes_consistent() {
+        let m = tiny_synth();
+        assert_eq!(m.d_model, m.n_heads * m.d_head);
+        assert_eq!(m.lm_head.dout(), m.vocab);
+        assert_eq!(m.layers.len(), m.n_layers);
     }
 
     #[test]

@@ -8,17 +8,30 @@ use super::int4::Int4Matrix;
 use super::int8::QuantizedVec;
 
 /// `y = dequant(Wᵀ x)` for a packed INT4 matrix and an INT8 vector.
+pub fn gemv_w4a8(x: &QuantizedVec, w: &Int4Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; w.dout];
+    gemv_w4a8_into(x, w, &mut out);
+    out
+}
+
+/// [`gemv_w4a8`] into a caller-owned `[dout]` buffer (no allocation).
+pub fn gemv_w4a8_into(x: &QuantizedVec, w: &Int4Matrix, out: &mut [f32]) {
+    gemv_w4a8_raw_into(&x.data, x.scale, w, out);
+}
+
+/// The GEMV core on raw quantized lanes — `out = (Wᵀ xs) · xscale · wscale`.
 ///
 /// Hot path (§Perf): the nibble unpack is fused into the MAC loop — each
 /// packed byte contributes two lanes directly from registers, with four
 /// i32 accumulators so the compiler vectorizes the reduction. This is the
 /// software model of the 128-lane DSP column; see EXPERIMENTS.md §Perf
-/// for the before/after.
-pub fn gemv_w4a8(x: &QuantizedVec, w: &Int4Matrix) -> Vec<f32> {
-    assert_eq!(x.data.len(), w.din, "dimension mismatch");
-    let mut out = vec![0.0f32; w.dout];
+/// for the before/after. Taking `&[i8]` instead of [`QuantizedVec`] lets
+/// the caller reuse one scratch buffer across layers
+/// ([`QuantLinear::forward_into`]).
+pub fn gemv_w4a8_raw_into(xs: &[i8], xscale: f32, w: &Int4Matrix, out: &mut [f32]) {
+    assert_eq!(xs.len(), w.din, "dimension mismatch");
+    assert_eq!(out.len(), w.dout, "output length mismatch");
     let stride = w.din.div_ceil(2);
-    let xs = &x.data;
     for (j, o) in out.iter_mut().enumerate() {
         let col = &w.packed[j * stride..(j + 1) * stride];
         let mut acc0 = 0i32;
@@ -55,9 +68,8 @@ pub fn gemv_w4a8(x: &QuantizedVec, w: &Int4Matrix) -> Vec<f32> {
             acc0 += xs[w.din - 1] as i32 * lo;
         }
         let acc = acc0 + acc1 + acc2 + acc3;
-        *o = acc as f32 * x.scale * w.scales[j];
+        *o = acc as f32 * xscale * w.scales[j];
     }
-    out
 }
 
 /// A quantized linear layer: packed weights + the f32 forward that first
@@ -74,8 +86,19 @@ impl QuantLinear {
 
     /// Quantize `x` to INT8 and run the W4A8 GEMV.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
-        let xq = super::int8::quantize_int8(x);
-        gemv_w4a8(&xq, &self.weight)
+        let mut out = vec![0.0f32; self.weight.dout];
+        let mut qbuf = vec![0i8; self.weight.din];
+        self.forward_into(x, &mut qbuf, &mut out);
+        out
+    }
+
+    /// [`Self::forward`] through caller-owned scratch: `qbuf` (≥ `din`
+    /// lanes, only the first `din` are used) holds the INT8 activation,
+    /// `out` (`dout` lanes) receives the result. No allocation.
+    pub fn forward_into(&self, x: &[f32], qbuf: &mut [i8], out: &mut [f32]) {
+        let qb = &mut qbuf[..self.weight.din];
+        let scale = super::int8::quantize_int8_into(x, qb);
+        gemv_w4a8_raw_into(qb, scale, &self.weight, out);
     }
 
     pub fn din(&self) -> usize {

@@ -17,13 +17,21 @@ impl QuantizedVec {
 /// Symmetric per-tensor INT8 quantization: `scale = max|x| / 127`,
 /// round-to-nearest, clamp to ±127. Matches `ref.quantize_int8`.
 pub fn quantize_int8(x: &[f32]) -> QuantizedVec {
+    let mut data = vec![0i8; x.len()];
+    let scale = quantize_int8_into(x, &mut data);
+    QuantizedVec { data, scale }
+}
+
+/// [`quantize_int8`] into a caller-owned buffer (no allocation); returns
+/// the dequantization scale. Bit-identical to the allocating variant.
+pub fn quantize_int8_into(x: &[f32], out: &mut [i8]) -> f32 {
+    assert_eq!(out.len(), x.len());
     let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
     let scale = amax / 127.0;
-    let data = x
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-        .collect();
-    QuantizedVec { data, scale }
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
 }
 
 #[cfg(test)]

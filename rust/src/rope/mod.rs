@@ -11,4 +11,4 @@ pub mod incremental;
 pub mod standard;
 
 pub use incremental::RopeState;
-pub use standard::{rope_apply_cached, rope_freqs, rope_standard};
+pub use standard::{rope_apply_cached, rope_apply_cached_into, rope_freqs, rope_standard};

@@ -30,16 +30,24 @@ pub fn rope_standard(x: &[f32], m: u64, base: f64) -> Vec<f32> {
 /// Rotate channel pairs with pre-computed `(cos, sin)` tables — the
 /// rotation half of the incremental unit (Eq. 11's multiply network).
 pub fn rope_apply_cached(x: &[f32], cos: &[f32], sin: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    rope_apply_cached_into(x, cos, sin, &mut out);
+    out
+}
+
+/// [`rope_apply_cached`] into a caller-owned buffer (no allocation). The
+/// decode hot path rotates the new token's q/k directly into scratch and
+/// the KV cache row with this.
+pub fn rope_apply_cached_into(x: &[f32], cos: &[f32], sin: &[f32], out: &mut [f32]) {
     let d = x.len();
+    assert_eq!(out.len(), d);
     assert_eq!(cos.len(), d / 2);
     assert_eq!(sin.len(), d / 2);
-    let mut out = vec![0.0f32; d];
     for i in 0..d / 2 {
         let (x0, x1) = (x[2 * i], x[2 * i + 1]);
         out[2 * i] = x0 * cos[i] - x1 * sin[i];
         out[2 * i + 1] = x0 * sin[i] + x1 * cos[i];
     }
-    out
 }
 
 #[cfg(test)]

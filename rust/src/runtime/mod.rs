@@ -3,13 +3,22 @@
 //! `python/compile/aot.py` is parsed, compiled and executed through the
 //! `xla` crate's PJRT CPU client.
 //!
-//! [`engine::Engine`] owns the client, the compiled decode-step
+//! The engine is gated behind the off-by-default `pjrt` feature: the
+//! `xla` crate closure is heavyweight and only present where it has been
+//! vendored (see `Cargo.toml`). The default build still exposes the
+//! artifact-path helpers so artifact-optional callers compile unchanged;
+//! serving without the feature goes through
+//! [`crate::coordinator::CpuServer`].
+//!
+//! `engine::Engine` owns the client, the compiled decode-step
 //! executables (one per batch variant) and the resident weight literals;
-//! [`engine::BatchState`] carries a batch's KV caches and RoPE recurrence
+//! `engine::BatchState` carries a batch's KV caches and RoPE recurrence
 //! state between steps.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{BatchState, Engine};
 
 /// Default artifacts directory (relative to the crate root).

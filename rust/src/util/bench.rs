@@ -2,7 +2,12 @@
 //!
 //! Warmup, then adaptive measurement until a time budget or iteration cap
 //! is reached; reports min/median/mean and a robust spread estimate.
+//! Results can be serialized to JSON ([`Bencher::write_json`]) so each
+//! bench run leaves a machine-readable perf trajectory (e.g.
+//! `BENCH_hotpath.json` at the repository root).
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement summary (nanoseconds per iteration).
@@ -20,6 +25,22 @@ pub struct Measurement {
 impl Measurement {
     pub fn throughput_per_sec(&self) -> f64 {
         1e9 / self.median_ns
+    }
+
+    /// JSON object with every recorded statistic.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("min_ns".to_string(), Json::Num(self.min_ns));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("mad_ns".to_string(), Json::Num(self.mad_ns));
+        m.insert(
+            "throughput_per_sec".to_string(),
+            Json::Num(self.throughput_per_sec()),
+        );
+        Json::Obj(m)
     }
 }
 
@@ -107,6 +128,30 @@ impl Bencher {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Look up a recorded measurement by exact name.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+
+    /// All results as a JSON document (`{schema, benchmarks: [...]}`).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert(
+            "schema".to_string(),
+            Json::Str("swiftkv-bench-v1".to_string()),
+        );
+        root.insert(
+            "benchmarks".to_string(),
+            Json::Arr(self.results.iter().map(Measurement::to_json).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    /// Write the JSON document to `path` (overwrites).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
 }
 
 /// Human-friendly nanosecond formatting (criterion-style).
@@ -163,6 +208,22 @@ mod tests {
             })
             .median_ns;
         assert!(large > small * 3.0, "large {large} vs small {small}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut b = Bencher::new(5, 20);
+        b.bench("alpha", || std::hint::black_box(3u64 * 7));
+        b.bench("beta", || std::hint::black_box(11u64 + 2));
+        let doc = b.to_json().to_string();
+        let parsed = crate::util::Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("swiftkv-bench-v1"));
+        let benches = parsed.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").unwrap().as_str(), Some("alpha"));
+        assert!(benches[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(b.get("beta").is_some());
+        assert!(b.get("gamma").is_none());
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Steady-state allocation audit: a counting global allocator asserts
+//! that the fused decode hot path performs **zero heap allocation** —
+//! the acceptance gate of the fused-kernel PR.
+//!
+//! One test binary, one `#[test]`: the harness runs it on a single test
+//! thread, so the counter observes only this path (a retry loop absorbs
+//! any one-off runtime allocation that lands mid-measurement).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::{FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::model::{NumericsMode, TinyModel};
+use swiftkv::quant::{Int4Matrix, QuantLinear};
+use swiftkv::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Run `f` up to `tries` times; pass if any run completes without a
+/// single allocation. Returns the smallest delta observed.
+fn min_allocs(tries: usize, mut f: impl FnMut()) -> usize {
+    let mut best = usize::MAX;
+    for _ in 0..tries {
+        let before = alloc_count();
+        f();
+        let delta = alloc_count() - before;
+        best = best.min(delta);
+        if best == 0 {
+            break;
+        }
+    }
+    best
+}
+
+#[test]
+fn fused_decode_hot_path_is_allocation_free() {
+    // --- kernel level: fused MHA sweeps over preallocated buffers ------
+    let mut rng = Rng::seed_from_u64(9);
+    let (h, d, len) = (8usize, 64usize, 128usize);
+    let scale = 1.0 / (d as f32).sqrt();
+    let q = rng.uniform_vec(h * d, 1.0);
+    let k = rng.uniform_vec(len * h * d, 1.0);
+    let v = rng.uniform_vec(len * h * d, 1.0);
+    let mut mha = MhaSwiftKv::new(h, d);
+    let mut out = vec![0.0f32; h * d];
+    // warm up once (first call may touch lazy runtime state)
+    mha.attend(&q, &k, &v, len, scale, &mut out);
+    let f32_allocs = min_allocs(5, || {
+        mha.attend(&q, &k, &v, len, scale, &mut out);
+    });
+    assert_eq!(f32_allocs, 0, "fused f32 MHA sweep allocated");
+
+    let lut = Exp2Lut::new();
+    let fscale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+    let qq = vector::quantize(&q);
+    let kq = vector::quantize(&k);
+    let vq = vector::quantize(&v);
+    let mut fxp_mha = FxpMhaSwiftKv::new(h, d);
+    let mut fout = vec![Fxp32::ZERO; h * d];
+    fxp_mha.attend(&lut, &qq, &kq, &vq, len, fscale, &mut fout);
+    let fxp_allocs = min_allocs(5, || {
+        fxp_mha.attend(&lut, &qq, &kq, &vq, len, fscale, &mut fout);
+    });
+    assert_eq!(fxp_allocs, 0, "fused FXP32 MHA sweep allocated");
+
+    // --- GEMV level: forward_into through caller scratch ---------------
+    let w = rng.uniform_vec(64 * 96, 0.5);
+    let lin = QuantLinear::new(Int4Matrix::quantize(&w, 64, 96));
+    let x = rng.uniform_vec(64, 1.0);
+    let mut qbuf = vec![0i8; 64];
+    let mut gout = vec![0.0f32; 96];
+    lin.forward_into(&x, &mut qbuf, &mut gout);
+    let gemv_allocs = min_allocs(5, || {
+        lin.forward_into(&x, &mut qbuf, &mut gout);
+    });
+    assert_eq!(gemv_allocs, 0, "forward_into allocated");
+
+    // --- model level: a steady-state decode step, both numerics modes --
+    let tm = TinyModel::synthetic(3, 64, 32, 4, 2, 64, 48);
+    let mut logits = vec![0.0f32; tm.vocab];
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        let mut st = tm.new_state();
+        // warm up: prime the caches / branch predictors, leave headroom
+        // so the measured steps stay inside the context window
+        for t in 0..8u32 {
+            tm.decode_step_into(&mut st, t % tm.vocab as u32, mode, &mut logits);
+        }
+        let mut t = 8u32;
+        let step_allocs = min_allocs(5, || {
+            tm.decode_step_into(&mut st, t % tm.vocab as u32, mode, &mut logits);
+            t += 1;
+        });
+        assert_eq!(
+            step_allocs, 0,
+            "steady-state decode step allocated in {mode:?}"
+        );
+    }
+}

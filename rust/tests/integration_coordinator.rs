@@ -1,6 +1,9 @@
 //! Integration: the serving loop end-to-end over the PJRT engine —
 //! continuous batching, lane recycling, and correctness of batched
-//! generation against solo generation.
+//! generation against solo generation. Compiled only with the `pjrt`
+//! feature; the default-build equivalents over the CPU backend live in
+//! `integration_cpu_serve.rs`.
+#![cfg(feature = "pjrt")]
 
 use swiftkv::coordinator::{ServeOptions, Server};
 use swiftkv::model::{

@@ -1,0 +1,149 @@
+//! Integration: the CPU serving loop end-to-end over the synthetic tiny
+//! model — continuous batching, `std::thread::scope` lane parallelism,
+//! lane recycling, and correctness of batched generation against solo
+//! generation. Runs on the default feature set (no PJRT, no artifacts).
+
+use swiftkv::coordinator::{CpuServeOptions, CpuServer};
+use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
+
+fn model() -> TinyModel {
+    TinyModel::synthetic(7, 64, 32, 4, 2, 64, 48)
+}
+
+fn opts(lanes: usize, mode: NumericsMode) -> CpuServeOptions {
+    CpuServeOptions {
+        lanes,
+        mode,
+        max_iterations: 10_000,
+        sim_model: LlmConfig::llama2_7b(),
+    }
+}
+
+#[test]
+fn serves_a_workload_to_completion() {
+    let tm = model();
+    let reqs = WorkloadGen::new(WorkloadSpec {
+        num_requests: 6,
+        vocab: tm.vocab,
+        prompt_len: (2, 6),
+        gen_len: (3, 8),
+        mean_gap_ms: 0.0,
+        seed: 42,
+    })
+    .generate();
+    let expect: Vec<(u64, usize)> = reqs.iter().map(|r| (r.id, r.gen_len)).collect();
+
+    let report = CpuServer::new(&tm, opts(4, NumericsMode::DesktopF32)).serve(reqs);
+    assert_eq!(report.sessions.len(), 6);
+    for (id, gen_len) in expect {
+        let s = report
+            .sessions
+            .iter()
+            .find(|s| s.request.id == id)
+            .expect("session missing");
+        assert_eq!(s.generated.len(), gen_len, "request {id}");
+        assert!(s.generated.iter().all(|&t| (t as usize) < tm.vocab));
+    }
+    assert!(report.metrics.total_tokens_generated > 0);
+    assert!(report.metrics.tokens_per_s > 0.0);
+    assert!(report.metrics.simulated_accel_ms > 0.0);
+    assert!(report.metrics.mean_occupancy > 0.0);
+}
+
+#[test]
+fn batched_serving_matches_solo_generation_both_modes() {
+    let tm = model();
+    let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![50, 7], vec![42, 42, 42, 42]];
+    let gen_len = 6;
+
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request {
+                id: i as u64,
+                prompt: p.clone(),
+                gen_len,
+                arrival_ms: 0,
+            })
+            .collect();
+        let report = CpuServer::new(&tm, opts(4, mode)).serve(reqs);
+
+        for (i, p) in prompts.iter().enumerate() {
+            let want = tm.generate(p, gen_len, mode);
+            let got = &report
+                .sessions
+                .iter()
+                .find(|s| s.request.id == i as u64)
+                .unwrap()
+                .generated;
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "{mode:?} request {i}: batched serving diverged from solo decode"
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_recycling_more_requests_than_lanes() {
+    let tm = model();
+    // 5 requests through 2 lanes → at least one lane is recycled
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![(i as u32 * 31 + 5) % tm.vocab as u32],
+            gen_len: 3,
+            arrival_ms: 0,
+        })
+        .collect();
+    let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
+    assert_eq!(report.sessions.len(), 5);
+    for s in &report.sessions {
+        assert_eq!(s.generated.len(), 3);
+    }
+    // recycled-lane results must equal fresh-lane results
+    let solo = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(vec![Request {
+        id: 99,
+        prompt: vec![5],
+        gen_len: 3,
+        arrival_ms: 0,
+    }]);
+    let first = report.sessions.iter().find(|s| s.request.id == 0).unwrap();
+    assert_eq!(first.generated, solo.sessions[0].generated);
+}
+
+#[test]
+fn staggered_arrivals_all_served() {
+    let tm = model();
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![10 + i as u32],
+            gen_len: 2,
+            arrival_ms: i * 20,
+        })
+        .collect();
+    let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
+    assert_eq!(report.sessions.len(), 4);
+    assert!(report.metrics.mean_occupancy > 0.0);
+}
+
+#[test]
+fn single_lane_runs_inline() {
+    // exercises the no-spawn fast path (n_active <= 1)
+    let tm = model();
+    let reqs = vec![Request {
+        id: 0,
+        prompt: vec![3, 4],
+        gen_len: 4,
+        arrival_ms: 0,
+    }];
+    let report = CpuServer::new(&tm, opts(1, NumericsMode::Accelerator)).serve(reqs);
+    assert_eq!(report.sessions.len(), 1);
+    assert_eq!(
+        report.sessions[0].generated,
+        tm.generate(&[3, 4], 4, NumericsMode::Accelerator)
+    );
+}

@@ -4,7 +4,9 @@
 //! These tests exercise the full L2→L3 seam: JAX-lowered HLO (with the
 //! Pallas kernels inside) compiled and run by the `xla` crate, fed by the
 //! weight blob the Python side dumped. Skipped when `make artifacts` has
-//! not been run.
+//! not been run; compiled only with the `pjrt` feature (the `xla` crate
+//! closure must be vendored).
+#![cfg(feature = "pjrt")]
 
 use swiftkv::attention::{native, HeadProblem};
 use swiftkv::model::{tiny, NumericsMode, TinyModel, WeightStore};

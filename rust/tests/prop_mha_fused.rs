@@ -1,0 +1,186 @@
+//! Property tests: the fused multi-head SwiftKV kernels are equivalent to
+//! the per-head reference path across random shapes — f32 to within 1e-5
+//! relative (the dot product re-associates), FXP32 **bit-for-bit** (all
+//! integer ops are issued in the per-head order). Shapes deliberately
+//! include `len = 1`, odd `d`, `d` not a multiple of the SIMD unroll
+//! width, and single-head states; a dedicated case checks incremental
+//! `extend` equivalence.
+
+use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
+use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::simd;
+use swiftkv::kernels::{FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::util::prop;
+use swiftkv::util::Rng;
+
+/// Shapes covering the edge cases: single token, odd head dim, head dim
+/// below/above/misaligned-with the unroll width.
+const HEADS: [usize; 4] = [1, 2, 3, 8];
+const DIMS: [usize; 7] = [1, 2, 3, 5, 7, 16, 33];
+const LENS: [usize; 5] = [1, 2, 3, 17, 96];
+
+struct MhaData {
+    h: usize,
+    d: usize,
+    len: usize,
+    q: Vec<f32>,
+    /// Token-major interleaved `[len][h*d]` caches.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl MhaData {
+    fn random(rng: &mut Rng, scale: f32) -> MhaData {
+        let h = HEADS[rng.gen_range(0, HEADS.len())];
+        let d = DIMS[rng.gen_range(0, DIMS.len())];
+        let len = LENS[rng.gen_range(0, LENS.len())];
+        MhaData {
+            h,
+            d,
+            len,
+            q: rng.uniform_vec(h * d, scale),
+            k: rng.uniform_vec(len * h * d, scale),
+            v: rng.uniform_vec(len * h * d, scale),
+        }
+    }
+
+    /// Gather one head of a token-major cache into a contiguous
+    /// head-major `[len, d]` buffer (what the per-head path consumes).
+    fn gather(&self, cache: &[f32], head: usize) -> Vec<f32> {
+        swiftkv::kernels::gather_head(cache, head, self.h, self.d, self.len)
+    }
+
+    fn head_q(&self, head: usize) -> &[f32] {
+        &self.q[head * self.d..(head + 1) * self.d]
+    }
+}
+
+#[test]
+fn prop_fused_f32_matches_per_head_attend() {
+    prop::check("fused f32 == per-head swiftkv::attend", 40, |rng, _| {
+        let data = MhaData::random(rng, 1.0);
+        let (h, d, len) = (data.h, data.d, data.len);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let mut mha = MhaSwiftKv::new(h, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&data.q, &data.k, &data.v, len, scale, &mut out);
+
+        for head in 0..h {
+            let kh = data.gather(&data.k, head);
+            let vh = data.gather(&data.v, head);
+            let p = HeadProblem::new(data.head_q(head), &kh, &vh, d, len);
+            let want = swiftkv_attn::attend(&p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 5e-5 * (1.0 + b.abs()),
+                    "h={h} d={d} len={len} head={head} dim={i}: {a} vs {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fused_fxp_bit_exact_vs_per_head() {
+    prop::check("fused fxp == per-head attend_fxp (bit-exact)", 30, |rng, _| {
+        let data = MhaData::random(rng, 1.0);
+        let (h, d, len) = (data.h, data.d, data.len);
+        let lut = Exp2Lut::new();
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+
+        let qq = vector::quantize(&data.q);
+        let kq = vector::quantize(&data.k);
+        let vq = vector::quantize(&data.v);
+        let mut mha = FxpMhaSwiftKv::new(h, d);
+        let mut out = vec![Fxp32::ZERO; h * d];
+        mha.attend(&lut, &qq, &kq, &vq, len, scale, &mut out);
+
+        for head in 0..h {
+            let kh = data.gather(&data.k, head);
+            let vh = data.gather(&data.v, head);
+            let p = FxpHeadProblem::quantize(data.head_q(head), &kh, &vh, d, len);
+            let want = attend_fxp(&lut, &p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.raw(),
+                    b.raw(),
+                    "h={h} d={d} len={len} head={head} dim={i}: raw bits diverged"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_incremental_extend_equals_one_shot() {
+    prop::check("chunked extend == one-shot sweep", 30, |rng, _| {
+        let data = MhaData::random(rng, 1.0);
+        let (h, d, len) = (data.h, data.d, data.len);
+        let scale = 1.0 / (d as f32).sqrt();
+        let cut = rng.gen_range(0, len + 1);
+
+        // f32: chunked extend must be bit-identical to the one-shot sweep
+        let mut one = MhaSwiftKv::new(h, d);
+        let mut a = vec![0.0f32; h * d];
+        one.attend(&data.q, &data.k, &data.v, len, scale, &mut a);
+        let mut two = MhaSwiftKv::new(h, d);
+        two.extend(&data.q, &data.k, &data.v, 0, cut, scale);
+        two.extend(&data.q, &data.k, &data.v, cut, len, scale);
+        let mut b = vec![0.0f32; h * d];
+        two.finalize_into(&mut b);
+        assert_eq!(a, b, "h={h} d={d} len={len} cut={cut}");
+
+        // fxp: same, on raw bits
+        let lut = Exp2Lut::new();
+        let fscale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qq = vector::quantize(&data.q);
+        let kq = vector::quantize(&data.k);
+        let vq = vector::quantize(&data.v);
+        let mut fone = FxpMhaSwiftKv::new(h, d);
+        let mut fa = vec![Fxp32::ZERO; h * d];
+        fone.attend(&lut, &qq, &kq, &vq, len, fscale, &mut fa);
+        let mut ftwo = FxpMhaSwiftKv::new(h, d);
+        ftwo.extend(&lut, &qq, &kq, &vq, 0, cut, fscale);
+        ftwo.extend(&lut, &qq, &kq, &vq, cut, len, fscale);
+        let mut fb = vec![Fxp32::ZERO; h * d];
+        ftwo.finalize_into(&mut fb);
+        for (i, (x, y)) in fa.iter().zip(&fb).enumerate() {
+            assert_eq!(x.raw(), y.raw(), "fxp dim {i} (cut={cut})");
+        }
+    });
+}
+
+#[test]
+fn prop_finalize_into_matches_finalize() {
+    prop::check("SwiftKvState::finalize_into == finalize", 20, |rng, _| {
+        let d = DIMS[rng.gen_range(0, DIMS.len())];
+        let len = LENS[rng.gen_range(0, LENS.len())];
+        let q = rng.uniform_vec(d, 1.0);
+        let k = rng.uniform_vec(len * d, 1.0);
+        let v = rng.uniform_vec(len * d, 1.0);
+        let p = HeadProblem::new(&q, &k, &v, d, len);
+        let mut st = swiftkv_attn::SwiftKvState::new(d);
+        swiftkv_attn::extend(&mut st, &p, 0, len);
+        let a = st.finalize();
+        let mut b = vec![0.0f32; d];
+        st.finalize_into(&mut b);
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_simd_dot_matches_sequential() {
+    prop::check("simd::dot == sequential dot", 30, |rng, _| {
+        let n = rng.gen_range(0, 300);
+        let a = rng.uniform_vec(n, 2.0);
+        let b = rng.uniform_vec(n, 2.0);
+        let got = simd::dot(&a, &b);
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(
+            (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+            "n={n}: {got} vs {want}"
+        );
+    });
+}
