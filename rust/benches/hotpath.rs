@@ -7,9 +7,14 @@
 //! `kernels::FxpMhaSwiftKv` — one pass over a token-major interleaved
 //! cache advancing all heads per row) vs the per-head loop the model used
 //! to run (`swiftkv::attend` / `attend_fxp` once per head over a
-//! head-major cache), at 8 heads × d_head 64 × n 512. Also measured:
+//! head-major cache), at 8 heads × d_head 64 × n 512. Grouped-query
+//! sweeps (8q/2kv and 32q/8kv at d=64, n=512, plus their MHA baselines)
+//! measure the KV-bandwidth win of GQA directly: each entry is annotated
+//! with its streamed `kv_bytes_per_token` and `group` factor in the JSON,
+//! so the group-factor reduction is recorded, not assumed. Also measured:
 //! allocating vs `_into` GEMV, and the full tiny-model decode step on the
-//! synthetic model (no artifacts needed) in both numerics modes.
+//! synthetic model (no artifacts needed, MHA and GQA shapes) in both
+//! numerics modes.
 
 use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
 use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
@@ -76,7 +81,12 @@ fn main() {
         mha.attend(&qm, &km, &vm, n, scale, &mut fused_out);
         fused_out[0]
     });
-    report_speedup(&b, "hot/mha_per_head 8h d=64 n=512", "hot/mha_fused 8h d=64 n=512");
+    report_speedup(
+        &b,
+        "fused speedup",
+        "hot/mha_per_head 8h d=64 n=512",
+        "hot/mha_fused 8h d=64 n=512",
+    );
 
     // same comparison on the Q15.17 accelerator datapath
     let qq = vector::quantize(&qm);
@@ -110,8 +120,57 @@ fn main() {
     });
     report_speedup(
         &b,
+        "fused speedup",
         "hot/fxp_mha_per_head 8h d=64 n=512",
         "hot/fxp_mha_fused 8h d=64 n=512",
+    );
+
+    // --- fused grouped-query sweeps: GQA shapes next to their MHA
+    // baselines at the same query width. The cache a GQA sweep streams is
+    // `group`× smaller; kv_bytes_per_token (f32 K+V bytes per cache row)
+    // is annotated into the JSON so the reduction is machine-checkable.
+    for (hq, hkv) in [(8usize, 8usize), (8, 2), (32, 32), (32, 8)] {
+        let group = hq / hkv;
+        let kv_row = hkv * dh;
+        let qg = rng.uniform_vec(hq * dh, 1.0);
+        let kg = rng.uniform_vec(n * kv_row, 1.0); // token-major interleaved
+        let vg = rng.uniform_vec(n * kv_row, 1.0);
+        let kv_bytes = (2 * kv_row * std::mem::size_of::<f32>()) as f64;
+
+        let mut gqa = MhaSwiftKv::new_grouped(hq, hkv, dh);
+        let mut gout = vec![0.0f32; hq * dh];
+        let name = format!("hot/mha_fused_gqa {hq}q{hkv}kv d=64 n=512");
+        b.bench(&name, || {
+            gqa.attend(&qg, &kg, &vg, n, scale, &mut gout);
+            gout[0]
+        });
+        b.annotate(&name, "kv_bytes_per_token", kv_bytes);
+        b.annotate(&name, "group", group as f64);
+
+        let qgq = vector::quantize(&qg);
+        let kgq = vector::quantize(&kg);
+        let vgq = vector::quantize(&vg);
+        let mut gqa_fxp = FxpMhaSwiftKv::new_grouped(hq, hkv, dh);
+        let mut gout_fxp = vec![Fxp32::ZERO; hq * dh];
+        let name = format!("hot/fxp_mha_fused_gqa {hq}q{hkv}kv d=64 n=512");
+        b.bench(&name, || {
+            gqa_fxp.attend(&lut, &qgq, &kgq, &vgq, n, fxp_scale, &mut gout_fxp);
+            gout_fxp[0].raw()
+        });
+        b.annotate(&name, "kv_bytes_per_token", kv_bytes);
+        b.annotate(&name, "group", group as f64);
+    }
+    report_speedup(
+        &b,
+        "gqa kv-shrink speedup",
+        "hot/mha_fused_gqa 8q8kv d=64 n=512",
+        "hot/mha_fused_gqa 8q2kv d=64 n=512",
+    );
+    report_speedup(
+        &b,
+        "gqa kv-shrink speedup",
+        "hot/mha_fused_gqa 32q32kv d=64 n=512",
+        "hot/mha_fused_gqa 32q8kv d=64 n=512",
     );
 
     // W4A8 GEMV 256→768 (tiny model's widest projection): allocating
@@ -133,7 +192,7 @@ fn main() {
 
     // full decode step on the synthetic tiny model (no artifacts needed):
     // fused attention + zero-allocation scratch path, both numerics modes
-    let tm = TinyModel::synthetic(5, 512, 256, 8, 4, 1024, 512);
+    let tm = TinyModel::synthetic(5, 512, 256, 8, 8, 4, 1024, 512);
     let mut logits = vec![0.0f32; tm.vocab];
     let mut tok = 0u32;
     let mut st = tm.new_state();
@@ -154,6 +213,44 @@ fn main() {
         tm.decode_step_into(&mut st2, tok, NumericsMode::Accelerator, &mut logits);
         logits[0]
     });
+
+    // same decode step on a grouped-query synthetic model (8 query heads
+    // over 2 KV heads — group 4): the KV caches, Q15.17 mirror and K/V
+    // projections all shrink by the group factor
+    let tg = TinyModel::synthetic(5, 512, 256, 8, 2, 4, 1024, 512);
+    let mut stg = tg.new_state();
+    b.bench("hot/tiny_decode_step synthetic gqa-8q2kv desktop", || {
+        if stg.pos >= tg.n_ctx {
+            stg.reset();
+        }
+        tok = (tok + 1) % tg.vocab as u32;
+        tg.decode_step_into(&mut stg, tok, NumericsMode::DesktopF32, &mut logits);
+        logits[0]
+    });
+    let mut stg2 = tg.new_state();
+    b.bench("hot/tiny_decode_step synthetic gqa-8q2kv accel", || {
+        if stg2.pos >= tg.n_ctx {
+            stg2.reset();
+        }
+        tok = (tok + 1) % tg.vocab as u32;
+        tg.decode_step_into(&mut stg2, tok, NumericsMode::Accelerator, &mut logits);
+        logits[0]
+    });
+    // annotate every decode-step bench with its per-layer cache-row bytes
+    // (the LlmConfig::kv_bytes_per_token_layer convention) so the GQA
+    // entries cross-check against the MHA baselines in the JSON
+    for (m, prefix) in [
+        (&tm, "hot/tiny_decode_step synthetic"),
+        (&tg, "hot/tiny_decode_step synthetic gqa-8q2kv"),
+    ] {
+        let bytes = (2 * m.n_kv_heads * m.d_head * std::mem::size_of::<f32>()) as f64;
+        let group = (m.n_heads / m.n_kv_heads) as f64;
+        for mode in ["desktop", "accel"] {
+            let name = format!("{prefix} {mode}");
+            b.annotate(&name, "kv_bytes_per_token_layer", bytes);
+            b.annotate(&name, "group", group);
+        }
+    }
 
     if artifacts_available() {
         let ws = WeightStore::load(&default_artifacts_dir()).unwrap();
@@ -198,9 +295,9 @@ fn main() {
 }
 
 /// Print the median-time ratio `slow / fast` for two recorded benches.
-fn report_speedup(b: &Bencher, slow: &str, fast: &str) {
+fn report_speedup(b: &Bencher, label: &str, slow: &str, fast: &str) {
     if let (Some(s), Some(f)) = (b.get(slow), b.get(fast)) {
-        println!("  -> fused speedup: {:.2}x ({} vs {})", s.median_ns / f.median_ns, slow, fast);
+        println!("  -> {label}: {:.2}x ({} vs {})", s.median_ns / f.median_ns, slow, fast);
     }
 }
 

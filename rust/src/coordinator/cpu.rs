@@ -7,8 +7,11 @@
 //! `std::thread::scope`; each lane owns its [`DecodeState`] (KV caches +
 //! [`crate::kernels::DecodeScratch`]), so a steady-state lane step
 //! performs zero heap allocation and lanes never contend on memory.
-//! Recycled lanes restart at position 0 via [`DecodeState::reset`] —
-//! caches are reused, not re-allocated.
+//! Grouped-query models serve unchanged: each lane's caches are sized
+//! `n_kv_heads * d_head` per token by [`TinyModel::new_state`], so a GQA
+//! model cuts per-lane KV memory (and streamed KV bytes per step) by the
+//! group factor. Recycled lanes restart at position 0 via
+//! [`DecodeState::reset`] — caches are reused, not re-allocated.
 
 use super::batcher::Batcher;
 use super::metrics::{Percentiles, ServeMetrics};
@@ -58,6 +61,12 @@ pub struct CpuServer<'m> {
 impl<'m> CpuServer<'m> {
     pub fn new(model: &'m TinyModel, opts: CpuServeOptions) -> Self {
         assert!(opts.lanes >= 1, "need at least one lane");
+        assert!(
+            model.n_kv_heads >= 1 && model.n_heads % model.n_kv_heads == 0,
+            "model GQA shape invalid: {} query heads over {} KV heads",
+            model.n_heads,
+            model.n_kv_heads
+        );
         CpuServer { model, opts }
     }
 

@@ -1,22 +1,26 @@
 //! Fused multi-head SwiftKV decode state in the accelerator's FXP32
-//! (Q15.17) arithmetic — the multi-head datapath of Fig. 5.
+//! (Q15.17) arithmetic — the multi-head datapath of Fig. 5, grouped-query
+//! aware.
 //!
-//! Same interleaved token-major layout and API as [`super::mha::MhaSwiftKv`],
-//! but every operation is the bit-exact Q15.17 model: wide-accumulator
+//! Same interleaved token-major layout and API as [`super::mha::MhaSwiftKv`]
+//! (KV rows are `n_kv_heads · d` wide; queries/outputs `n_heads · d`), but
+//! every operation is the bit-exact Q15.17 model: wide-accumulator
 //! dot products on the MAC array ([`crate::fxp::vector::dot`]), the
 //! shift + 5-bit-LUT exponential of Eqs. (9)–(10), and saturating AXPY
 //! updates. Because integer addition is associative and all per-head
 //! operations are issued in the same order as the per-head
 //! [`crate::attention::fxp_swiftkv::FxpSwiftKvState`], the fused sweep is
-//! **bit-for-bit identical** to running each head separately — the
-//! property `tests/prop_mha_fused.rs` asserts on raw bits.
+//! **bit-for-bit identical** to running each query head separately against
+//! its shared KV head — the property `tests/prop_mha_fused.rs` and
+//! `tests/prop_gqa_fused.rs` assert on raw bits.
 
 use crate::fxp::{vector, Exp2Lut, Fxp32};
 
-/// Packed multi-head Q15.17 SwiftKV recurrence state.
+/// Packed multi-head Q15.17 SwiftKV recurrence state (GQA-aware).
 #[derive(Debug, Clone)]
 pub struct FxpMhaSwiftKv {
     n_heads: usize,
+    n_kv_heads: usize,
     d: usize,
     mu: Vec<Fxp32>,
     z: Vec<Fxp32>,
@@ -26,11 +30,23 @@ pub struct FxpMhaSwiftKv {
 }
 
 impl FxpMhaSwiftKv {
-    /// Fresh state for `n_heads` heads of dimension `d`.
+    /// Fresh multi-head-attention state (`n_kv_heads == n_heads`) for
+    /// `n_heads` heads of dimension `d`.
     pub fn new(n_heads: usize, d: usize) -> Self {
-        assert!(n_heads > 0 && d > 0, "empty state");
+        Self::new_grouped(n_heads, n_heads, d)
+    }
+
+    /// Fresh grouped-query state: `n_heads` query heads sharing
+    /// `n_kv_heads` KV heads (`n_heads % n_kv_heads == 0`).
+    pub fn new_grouped(n_heads: usize, n_kv_heads: usize, d: usize) -> Self {
+        assert!(n_heads > 0 && n_kv_heads > 0 && d > 0, "empty state");
+        assert!(
+            n_heads % n_kv_heads == 0,
+            "n_heads ({n_heads}) must be a multiple of n_kv_heads ({n_kv_heads})"
+        );
         FxpMhaSwiftKv {
             n_heads,
+            n_kv_heads,
             d,
             mu: vec![Fxp32::MIN; n_heads],
             z: vec![Fxp32::ZERO; n_heads],
@@ -49,6 +65,16 @@ impl FxpMhaSwiftKv {
         self.n_heads
     }
 
+    pub fn n_kv_heads(&self) -> usize {
+        self.n_kv_heads
+    }
+
+    /// Query heads per KV head (`1` for MHA, `n_heads` for MQA).
+    #[inline]
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
     pub fn d(&self) -> usize {
         self.d
     }
@@ -57,14 +83,21 @@ impl FxpMhaSwiftKv {
         self.consumed
     }
 
-    /// Width of one interleaved cache row (`n_heads · d`).
+    /// Width of one interleaved KV cache row (`n_kv_heads · d`).
     #[inline]
     pub fn row_width(&self) -> usize {
+        self.n_kv_heads * self.d
+    }
+
+    /// Width of the packed query / output rows (`n_heads · d`).
+    #[inline]
+    pub fn q_width(&self) -> usize {
         self.n_heads * self.d
     }
 
-    /// Consume one interleaved `(k_t, v_t)` row, advancing every head —
-    /// Eqs. (5)–(7) in Q15.17 with the LUT exponential.
+    /// Consume one interleaved `(k_t, v_t)` row, advancing every query
+    /// head — Eqs. (5)–(7) in Q15.17 with the LUT exponential. Each
+    /// KV-head slice is loaded once and feeds its whole group.
     #[inline]
     pub fn update_token(
         &mut self,
@@ -74,35 +107,45 @@ impl FxpMhaSwiftKv {
         v_t: &[Fxp32],
         scale: Fxp32,
     ) {
-        let (h, d) = (self.n_heads, self.d);
-        debug_assert_eq!(q.len(), h * d);
-        debug_assert_eq!(k_t.len(), h * d);
-        debug_assert_eq!(v_t.len(), h * d);
+        let d = self.d;
+        let group = self.group();
+        debug_assert_eq!(q.len(), self.n_heads * d);
+        debug_assert_eq!(k_t.len(), self.n_kv_heads * d);
+        debug_assert_eq!(v_t.len(), self.n_kv_heads * d);
         if self.consumed == 0 {
-            for head in 0..h {
-                let o = head * d;
-                let s = vector::dot(&q[o..o + d], &k_t[o..o + d]).sat_mul(scale);
-                self.mu[head] = s;
-                self.z[head] = Fxp32::ONE;
-                self.y[o..o + d].copy_from_slice(&v_t[o..o + d]);
+            for kv in 0..self.n_kv_heads {
+                let kh = &k_t[kv * d..(kv + 1) * d];
+                let vh = &v_t[kv * d..(kv + 1) * d];
+                for g in 0..group {
+                    let head = kv * group + g;
+                    let o = head * d;
+                    let s = vector::dot(&q[o..o + d], kh).sat_mul(scale);
+                    self.mu[head] = s;
+                    self.z[head] = Fxp32::ONE;
+                    self.y[o..o + d].copy_from_slice(vh);
+                }
             }
         } else {
-            for head in 0..h {
-                let o = head * d;
-                let s = vector::dot(&q[o..o + d], &k_t[o..o + d]).sat_mul(scale);
-                let yh = &mut self.y[o..o + d];
-                let vh = &v_t[o..o + d];
-                if s <= self.mu[head] {
-                    // β = exp(s − μ) ∈ (0, 1]
-                    let beta = lut.exp_neg(s.sat_sub(self.mu[head]));
-                    self.z[head] = self.z[head].sat_add(beta);
-                    vector::axpy_inplace(beta, yh, vh);
-                } else {
-                    // α = exp(μ − s) ∈ (0, 1)
-                    let alpha = lut.exp_neg(self.mu[head].sat_sub(s));
-                    self.z[head] = alpha.sat_mul(self.z[head]).sat_add(Fxp32::ONE);
-                    vector::scale_axpy_inplace(alpha, yh, vh);
-                    self.mu[head] = s;
+            for kv in 0..self.n_kv_heads {
+                let kh = &k_t[kv * d..(kv + 1) * d];
+                let vh = &v_t[kv * d..(kv + 1) * d];
+                for g in 0..group {
+                    let head = kv * group + g;
+                    let o = head * d;
+                    let s = vector::dot(&q[o..o + d], kh).sat_mul(scale);
+                    let yh = &mut self.y[o..o + d];
+                    if s <= self.mu[head] {
+                        // β = exp(s − μ) ∈ (0, 1]
+                        let beta = lut.exp_neg(s.sat_sub(self.mu[head]));
+                        self.z[head] = self.z[head].sat_add(beta);
+                        vector::axpy_inplace(beta, yh, vh);
+                    } else {
+                        // α = exp(μ − s) ∈ (0, 1)
+                        let alpha = lut.exp_neg(self.mu[head].sat_sub(s));
+                        self.z[head] = alpha.sat_mul(self.z[head]).sat_add(Fxp32::ONE);
+                        vector::scale_axpy_inplace(alpha, yh, vh);
+                        self.mu[head] = s;
+                    }
                 }
             }
         }
@@ -110,7 +153,7 @@ impl FxpMhaSwiftKv {
     }
 
     /// Extend over cache rows `[from, to)` of a token-major interleaved
-    /// Q15.17 cache (`k`/`v` are `[len, n_heads * d]` row-major).
+    /// Q15.17 cache (`k`/`v` are `[len, n_kv_heads * d]` row-major).
     #[allow(clippy::too_many_arguments)]
     pub fn extend(
         &mut self,
@@ -194,6 +237,39 @@ mod tests {
         for head in 0..h {
             let kh = gather_head(&k, head, h, d, len);
             let vh = gather_head(&v, head, h, d, len);
+            let p = FxpHeadProblem::quantize(&q[head * d..(head + 1) * d], &kh, &vh, d, len);
+            let want = attend_fxp(&lut, &p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert_eq!(a.raw(), b.raw(), "head {head} dim {i} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_bit_exact_vs_per_head_over_shared_kv() {
+        // GQA: every query head must be bit-identical to the per-head
+        // Q15.17 reference run on its shared KV head's cache.
+        let lut = Exp2Lut::new();
+        let mut rng = Rng::seed_from_u64(23);
+        let (h, hkv, d, len) = (8usize, 2usize, 16usize, 32usize);
+        let group = h / hkv;
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * hkv * d, 1.0);
+        let v = rng.uniform_vec(len * hkv * d, 1.0);
+
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qq = vector::quantize(&q);
+        let kq = vector::quantize(&k);
+        let vq = vector::quantize(&v);
+        let mut mha = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        assert_eq!(mha.row_width(), hkv * d);
+        let mut out = vec![Fxp32::ZERO; h * d];
+        mha.attend(&lut, &qq, &kq, &vq, len, scale, &mut out);
+
+        for head in 0..h {
+            let kv = head / group;
+            let kh = gather_head(&k, kv, hkv, d, len);
+            let vh = gather_head(&v, kv, hkv, d, len);
             let p = FxpHeadProblem::quantize(&q[head * d..(head + 1) * d], &kh, &vh, d, len);
             let want = attend_fxp(&lut, &p);
             for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {

@@ -1,4 +1,4 @@
-//! Fused multi-head SwiftKV decode state (f32).
+//! Fused multi-head SwiftKV decode state (f32), grouped-query aware.
 //!
 //! The paper's SwiftKV-MHA accelerator streams every `(k_t, v_t)` cache
 //! row exactly once and feeds *all* heads from that single sweep (§IV,
@@ -8,26 +8,36 @@
 //! one [`MhaSwiftKv::update_token`] call advancing every head, and a
 //! non-allocating [`MhaSwiftKv::finalize_into`].
 //!
-//! Layout: a cache *row* holds all heads' vectors for one token position,
-//! head-major within the row — `row[t] = [head0[d] | head1[d] | …]`,
-//! `row_width = n_heads · d`. Queries and outputs use the same packing.
+//! **Grouped-query attention** (GQA/MQA — the standard KV-bandwidth
+//! reduction on edge targets) is first-class: with
+//! `group = n_heads / n_kv_heads`, each streamed KV row holds only
+//! `n_kv_heads · d` elements and every KV-head slice is loaded once and
+//! advances its whole group of query heads. `n_kv_heads == n_heads` is
+//! plain MHA; `n_kv_heads == 1` is MQA.
 //!
-//! Per head the recurrence is identical (same branch structure, same
-//! element-wise update order) to the per-head
+//! Layout: a cache *row* holds all **KV heads'** vectors for one token
+//! position, head-major within the row —
+//! `row[t] = [kv_head0[d] | kv_head1[d] | …]`, `row_width = n_kv_heads · d`.
+//! Queries and outputs are packed over the **query** heads
+//! (`n_heads · d`, head-major).
+//!
+//! Per query head the recurrence is identical (same branch structure,
+//! same element-wise update order) to the per-head
 //! [`crate::attention::swiftkv::SwiftKvState`]; only the dot product uses
 //! the multi-accumulator [`super::simd::dot`], so outputs agree with the
 //! per-head path to within f32 re-association noise (≪ 1e-5 relative).
 
 use super::simd;
 
-/// Packed multi-head SwiftKV recurrence state.
+/// Packed multi-head SwiftKV recurrence state (GQA-aware).
 #[derive(Debug, Clone)]
 pub struct MhaSwiftKv {
     n_heads: usize,
+    n_kv_heads: usize,
     d: usize,
-    /// Running max per head.
+    /// Running max per query head.
     mu: Vec<f32>,
-    /// Softmax denominator per head.
+    /// Softmax denominator per query head.
     z: Vec<f32>,
     /// Unnormalized output, `[n_heads * d]`, head-major.
     y: Vec<f32>,
@@ -35,11 +45,23 @@ pub struct MhaSwiftKv {
 }
 
 impl MhaSwiftKv {
-    /// Fresh state for `n_heads` heads of dimension `d`.
+    /// Fresh multi-head-attention state (`n_kv_heads == n_heads`) for
+    /// `n_heads` heads of dimension `d`.
     pub fn new(n_heads: usize, d: usize) -> Self {
-        assert!(n_heads > 0 && d > 0, "empty state");
+        Self::new_grouped(n_heads, n_heads, d)
+    }
+
+    /// Fresh grouped-query state: `n_heads` query heads sharing
+    /// `n_kv_heads` KV heads (`n_heads % n_kv_heads == 0`).
+    pub fn new_grouped(n_heads: usize, n_kv_heads: usize, d: usize) -> Self {
+        assert!(n_heads > 0 && n_kv_heads > 0 && d > 0, "empty state");
+        assert!(
+            n_heads % n_kv_heads == 0,
+            "n_heads ({n_heads}) must be a multiple of n_kv_heads ({n_kv_heads})"
+        );
         MhaSwiftKv {
             n_heads,
+            n_kv_heads,
             d,
             mu: vec![f32::NEG_INFINITY; n_heads],
             z: vec![0.0; n_heads],
@@ -60,6 +82,16 @@ impl MhaSwiftKv {
         self.n_heads
     }
 
+    pub fn n_kv_heads(&self) -> usize {
+        self.n_kv_heads
+    }
+
+    /// Query heads per KV head (`1` for MHA, `n_heads` for MQA).
+    #[inline]
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
     pub fn d(&self) -> usize {
         self.d
     }
@@ -69,50 +101,67 @@ impl MhaSwiftKv {
         self.consumed
     }
 
-    /// Width of one interleaved cache row (`n_heads · d`).
+    /// Width of one interleaved KV cache row (`n_kv_heads · d`).
     #[inline]
     pub fn row_width(&self) -> usize {
+        self.n_kv_heads * self.d
+    }
+
+    /// Width of the packed query / output rows (`n_heads · d`).
+    #[inline]
+    pub fn q_width(&self) -> usize {
         self.n_heads * self.d
     }
 
     /// Consume one interleaved `(k_t, v_t)` cache row, advancing *every*
-    /// head in a single sweep — the fused analogue of Fig. 3's
-    /// compare-and-select + update parts, Eqs. (5)–(7).
+    /// query head in a single sweep — the fused analogue of Fig. 3's
+    /// compare-and-select + update parts, Eqs. (5)–(7). Each KV-head
+    /// slice is loaded once and feeds its whole group of query heads.
     ///
-    /// `q`, `k_t`, `v_t` are `[n_heads * d]` head-major packed rows;
-    /// `scale` is the `1/√d` of Eq. (5).
+    /// `q` is `[n_heads * d]`; `k_t`, `v_t` are `[n_kv_heads * d]`
+    /// head-major packed rows; `scale` is the `1/√d` of Eq. (5).
     #[inline]
     pub fn update_token(&mut self, q: &[f32], k_t: &[f32], v_t: &[f32], scale: f32) {
-        let (h, d) = (self.n_heads, self.d);
-        debug_assert_eq!(q.len(), h * d);
-        debug_assert_eq!(k_t.len(), h * d);
-        debug_assert_eq!(v_t.len(), h * d);
+        let d = self.d;
+        let group = self.group();
+        debug_assert_eq!(q.len(), self.n_heads * d);
+        debug_assert_eq!(k_t.len(), self.n_kv_heads * d);
+        debug_assert_eq!(v_t.len(), self.n_kv_heads * d);
         if self.consumed == 0 {
             // μ₁ = s₁ branch for every head: β = exp(0) = 1
-            for head in 0..h {
-                let o = head * d;
-                let s = simd::dot(&q[o..o + d], &k_t[o..o + d]) * scale;
-                self.mu[head] = s;
-                self.z[head] = 1.0;
-                self.y[o..o + d].copy_from_slice(&v_t[o..o + d]);
+            for kv in 0..self.n_kv_heads {
+                let kh = &k_t[kv * d..(kv + 1) * d];
+                let vh = &v_t[kv * d..(kv + 1) * d];
+                for g in 0..group {
+                    let head = kv * group + g;
+                    let o = head * d;
+                    let s = simd::dot(&q[o..o + d], kh) * scale;
+                    self.mu[head] = s;
+                    self.z[head] = 1.0;
+                    self.y[o..o + d].copy_from_slice(vh);
+                }
             }
         } else {
-            for head in 0..h {
-                let o = head * d;
-                let s = simd::dot(&q[o..o + d], &k_t[o..o + d]) * scale;
-                let yh = &mut self.y[o..o + d];
-                let vh = &v_t[o..o + d];
-                if s <= self.mu[head] {
-                    // Eq. (6): fold the new token in at weight β ∈ (0, 1]
-                    let beta = (s - self.mu[head]).exp();
-                    self.z[head] += beta;
-                    simd::axpy(beta, yh, vh);
-                } else {
-                    // Eq. (7): rescale history by α ∈ (0, 1)
-                    let alpha = (self.mu[head] - s).exp();
-                    self.z[head] = alpha * self.z[head] + 1.0;
-                    simd::scale_axpy(alpha, yh, vh);
-                    self.mu[head] = s;
+            for kv in 0..self.n_kv_heads {
+                let kh = &k_t[kv * d..(kv + 1) * d];
+                let vh = &v_t[kv * d..(kv + 1) * d];
+                for g in 0..group {
+                    let head = kv * group + g;
+                    let o = head * d;
+                    let s = simd::dot(&q[o..o + d], kh) * scale;
+                    let yh = &mut self.y[o..o + d];
+                    if s <= self.mu[head] {
+                        // Eq. (6): fold the new token in at weight β ∈ (0, 1]
+                        let beta = (s - self.mu[head]).exp();
+                        self.z[head] += beta;
+                        simd::axpy(beta, yh, vh);
+                    } else {
+                        // Eq. (7): rescale history by α ∈ (0, 1)
+                        let alpha = (self.mu[head] - s).exp();
+                        self.z[head] = alpha * self.z[head] + 1.0;
+                        simd::scale_axpy(alpha, yh, vh);
+                        self.mu[head] = s;
+                    }
                 }
             }
         }
@@ -120,7 +169,7 @@ impl MhaSwiftKv {
     }
 
     /// Extend over cache rows `[from, to)` of a token-major interleaved
-    /// cache (`k`/`v` are `[len, n_heads * d]` row-major). Matches the
+    /// cache (`k`/`v` are `[len, n_kv_heads * d]` row-major). Matches the
     /// incremental-decode contract of [`crate::attention::swiftkv::extend`].
     pub fn extend(&mut self, q: &[f32], k: &[f32], v: &[f32], from: usize, to: usize, scale: f32) {
         let row = self.row_width();
@@ -219,6 +268,65 @@ mod tests {
     }
 
     #[test]
+    fn grouped_matches_per_head_over_shared_kv() {
+        // GQA: query head h reads KV head h / group; each query head must
+        // match the per-head reference run on its shared KV slice.
+        let mut rng = Rng::seed_from_u64(16);
+        let (h, hkv, d, len) = (6usize, 2usize, 16usize, 40usize);
+        let group = h / hkv;
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * hkv * d, 1.0);
+        let v = rng.uniform_vec(len * hkv * d, 1.0);
+
+        let mut mha = MhaSwiftKv::new_grouped(h, hkv, d);
+        assert_eq!(mha.row_width(), hkv * d);
+        assert_eq!(mha.q_width(), h * d);
+        assert_eq!(mha.group(), group);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, scale, &mut out);
+
+        for head in 0..h {
+            let kv = head / group;
+            let kh = gather_head(&k, kv, hkv, d, len);
+            let vh = gather_head(&v, kv, hkv, d, len);
+            let p = HeadProblem::new(&q[head * d..(head + 1) * d], &kh, &vh, d, len);
+            let want = swiftkv_attn::attend(&p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 5e-5 * (1.0 + b.abs()),
+                    "head {head} dim {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mqa_identical_queries_share_output() {
+        // MQA (1 KV head): query heads with identical q rows must produce
+        // bit-identical outputs — they see exactly the same KV stream.
+        let mut rng = Rng::seed_from_u64(17);
+        let (h, d, len) = (4usize, 8usize, 12usize);
+        let qh = rng.uniform_vec(d, 1.0);
+        let mut q = Vec::with_capacity(h * d);
+        for _ in 0..h {
+            q.extend_from_slice(&qh);
+        }
+        let k = rng.uniform_vec(len * d, 1.0);
+        let v = rng.uniform_vec(len * d, 1.0);
+        let mut mha = MhaSwiftKv::new_grouped(h, 1, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, 0.7, &mut out);
+        for head in 1..h {
+            assert_eq!(
+                &out[..d],
+                &out[head * d..(head + 1) * d],
+                "head {head} diverged from head 0"
+            );
+        }
+    }
+
+    #[test]
     fn single_token_returns_value_row() {
         let mut rng = Rng::seed_from_u64(13);
         let (h, d) = (3usize, 5usize);
@@ -275,5 +383,11 @@ mod tests {
         let mha = MhaSwiftKv::new(1, 4);
         let mut out = vec![0.0f32; 4];
         mha.finalize_into(&mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of n_kv_heads")]
+    fn indivisible_group_panics() {
+        let _ = MhaSwiftKv::new_grouped(6, 4, 8);
     }
 }

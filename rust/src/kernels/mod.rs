@@ -11,12 +11,20 @@
 //!   generalized),
 //! - [`mha::MhaSwiftKv`] — all heads' `(μ, Z, Y)` state packed
 //!   contiguously, advanced per interleaved cache row in a single sweep
-//!   (f32 numerics),
+//!   (f32 numerics). Grouped-query attention is first-class: with
+//!   `n_kv_heads < n_heads` each KV row shrinks to `n_kv_heads · d` and
+//!   every KV-head slice advances its whole group of query heads,
 //! - [`fxp_mha::FxpMhaSwiftKv`] — the same fused sweep in the
 //!   accelerator's Q15.17 + LUT-exp arithmetic, bit-exact vs. the
 //!   per-head [`crate::attention::fxp_swiftkv`] datapath,
 //! - [`scratch::DecodeScratch`] — caller-owned buffers making a
-//!   steady-state [`crate::model::TinyModel`] decode step allocation-free.
+//!   steady-state [`crate::model::TinyModel`] decode step allocation-free
+//!   (KV-side buffers sized `n_kv_heads · d_head` under GQA/MQA).
+//!
+//! Ground truth for all of the above is the deliberately naive scalar
+//! oracle in [`crate::util::oracle`] (materialized scores, two-pass
+//! softmax), which `tests/prop_gqa_fused.rs` sweeps across MQA/GQA/MHA
+//! shapes.
 //!
 //! The non-allocating `_into` companions on the quant side
 //! ([`crate::quant::gemv_w4a8_into`], [`crate::quant::quantize_int8_into`],

@@ -3,9 +3,11 @@
 //! Every intermediate buffer a [`crate::model::TinyModel::decode_step_into`]
 //! call needs is pre-allocated here once per sequence, so a steady-state
 //! decode step performs **zero heap allocation** on the attention path
-//! (asserted by `tests/alloc_hotpath.rs` with a counting allocator).
-//! The packed multi-head SwiftKV states ride along and are `reset()` —
-//! not re-allocated — once per layer.
+//! (asserted by `tests/alloc_hotpath.rs` with a counting allocator) —
+//! including under GQA/MQA shapes, where the K/V projection buffers and
+//! the packed multi-head SwiftKV states shrink to `n_kv_heads · d_head`
+//! per token. The SwiftKV states ride along and are `reset()` — not
+//! re-allocated — once per layer.
 
 use super::fxp_mha::FxpMhaSwiftKv;
 use super::mha::MhaSwiftKv;
@@ -18,11 +20,12 @@ pub struct DecodeScratch {
     pub x: Vec<f32>,
     /// RMS-normed activation, `[d_model]`.
     pub xn: Vec<f32>,
-    /// Q/K/V projections, `[d_model]` each.
+    /// Q projection, `[d_model]`.
     pub q: Vec<f32>,
+    /// K/V projections, `[n_kv_heads * d_head]` each (GQA: ≤ d_model).
     pub k: Vec<f32>,
     pub v: Vec<f32>,
-    /// Position-encoded query (all heads), `[d_model]`.
+    /// Position-encoded query (all query heads), `[d_model]`.
     pub q_rot: Vec<f32>,
     /// Fused attention output, `[d_model]`.
     pub attn_out: Vec<f32>,
@@ -47,15 +50,22 @@ pub struct DecodeScratch {
 }
 
 impl DecodeScratch {
-    /// Allocate all buffers for a model shape. `d_model = n_heads · d_head`.
-    pub fn new(n_heads: usize, d_head: usize, d_ffn: usize) -> Self {
+    /// Allocate all buffers for a model shape. `d_model = n_heads · d_head`;
+    /// the KV-side buffers are `n_kv_heads · d_head` wide
+    /// (`n_kv_heads == n_heads` for plain MHA, `1` for MQA).
+    pub fn new(n_heads: usize, n_kv_heads: usize, d_head: usize, d_ffn: usize) -> Self {
+        assert!(
+            n_kv_heads > 0 && n_heads % n_kv_heads == 0,
+            "n_heads must be a multiple of n_kv_heads"
+        );
         let d_model = n_heads * d_head;
+        let d_kv = n_kv_heads * d_head;
         DecodeScratch {
             x: vec![0.0; d_model],
             xn: vec![0.0; d_model],
             q: vec![0.0; d_model],
-            k: vec![0.0; d_model],
-            v: vec![0.0; d_model],
+            k: vec![0.0; d_kv],
+            v: vec![0.0; d_kv],
             q_rot: vec![0.0; d_model],
             attn_out: vec![0.0; d_model],
             o: vec![0.0; d_model],
@@ -66,14 +76,20 @@ impl DecodeScratch {
             qi8: vec![0; d_model.max(d_ffn)],
             q_fxp: vec![Fxp32::ZERO; d_model],
             attn_fxp: vec![Fxp32::ZERO; d_model],
-            mha: MhaSwiftKv::new(n_heads, d_head),
-            fxp_mha: FxpMhaSwiftKv::new(n_heads, d_head),
+            mha: MhaSwiftKv::new_grouped(n_heads, n_kv_heads, d_head),
+            fxp_mha: FxpMhaSwiftKv::new_grouped(n_heads, n_kv_heads, d_head),
         }
     }
 
     /// Model width the scratch was sized for.
     pub fn d_model(&self) -> usize {
         self.x.len()
+    }
+
+    /// KV projection width the scratch was sized for
+    /// (`n_kv_heads · d_head`).
+    pub fn d_kv(&self) -> usize {
+        self.k.len()
     }
 }
 
@@ -83,11 +99,32 @@ mod tests {
 
     #[test]
     fn sizes_match_shape() {
-        let s = DecodeScratch::new(4, 8, 128);
+        let s = DecodeScratch::new(4, 4, 8, 128);
         assert_eq!(s.d_model(), 32);
+        assert_eq!(s.d_kv(), 32);
         assert_eq!(s.gate.len(), 128);
         assert_eq!(s.qi8.len(), 128);
         assert_eq!(s.mha.row_width(), 32);
         assert_eq!(s.fxp_mha.row_width(), 32);
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_buffers() {
+        let s = DecodeScratch::new(8, 2, 16, 64);
+        assert_eq!(s.d_model(), 128);
+        assert_eq!(s.d_kv(), 32);
+        assert_eq!(s.k.len(), 32);
+        assert_eq!(s.v.len(), 32);
+        assert_eq!(s.q.len(), 128);
+        assert_eq!(s.mha.row_width(), 32);
+        assert_eq!(s.mha.q_width(), 128);
+        assert_eq!(s.fxp_mha.row_width(), 32);
+        assert_eq!(s.fxp_mha.group(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of n_kv_heads")]
+    fn indivisible_group_panics() {
+        let _ = DecodeScratch::new(6, 4, 8, 32);
     }
 }

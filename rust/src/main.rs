@@ -4,7 +4,7 @@
 //! ```text
 //! swiftkv exhibits [--only fig7a|fig7b|table2|table3|table4|fig8a|fig8b|explut]
 //! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
-//! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0]
+//! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 
@@ -69,14 +69,31 @@ fn serve_pjrt(args: &Args) -> Result<(), String> {
 
 /// Serve over the pure-Rust CPU backend (fused decode kernels, lanes in
 /// parallel). Falls back to a synthetic tiny model when the AOT
-/// artifacts have not been built.
+/// artifacts have not been built; `--kv-heads` picks its GQA shape
+/// (8 = MHA, 2 = group-4 GQA, 1 = MQA).
 fn serve_cpu(args: &Args) -> Result<(), String> {
+    // the synthetic fallback model's query-head count; --kv-heads must
+    // divide it (only meaningful when artifacts are absent)
+    const SYNTH_HEADS: usize = 8;
     let tm = if artifacts_available() {
+        if args.get("kv-heads").is_some() {
+            println!(
+                "(--kv-heads applies only to the synthetic fallback — serving the AOT \
+                 artifact model with its own head shape)"
+            );
+        }
         let ws = WeightStore::load(&default_artifacts_dir()).map_err(|e| e.to_string())?;
         TinyModel::load(&ws).map_err(|e| e.to_string())?
     } else {
-        println!("(artifacts not built — serving the synthetic tiny model on the CPU backend)");
-        TinyModel::synthetic(0, 512, 256, 8, 4, 1024, 512)
+        let kv_heads = args.get_usize("kv-heads", SYNTH_HEADS)?;
+        if kv_heads == 0 || SYNTH_HEADS % kv_heads != 0 {
+            return Err(format!("--kv-heads must divide {SYNTH_HEADS}, got {kv_heads}"));
+        }
+        println!(
+            "(artifacts not built — serving the synthetic tiny model on the CPU backend, \
+             {SYNTH_HEADS} query heads / {kv_heads} KV heads)"
+        );
+        TinyModel::synthetic(0, 512, 256, SYNTH_HEADS, kv_heads, 4, 1024, 512)
     };
     let reqs = WorkloadGen::new(workload_spec(args, tm.vocab)?).generate();
     let lanes = args.get_usize("batch", 8)?;
@@ -98,6 +115,7 @@ fn run() -> Result<(), String> {
     let args = Args::parse(
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
+            "kv-heads",
         ],
         &["help"],
     )?;

@@ -52,6 +52,24 @@ impl LlmConfig {
         }
     }
 
+    /// LLaMA2-70B (GQA: 64 query heads sharing 8 KV heads) — the classic
+    /// grouped-query shape; its KV cache is 8× smaller per token than an
+    /// MHA layout of the same width.
+    pub fn llama2_70b() -> Self {
+        LlmConfig {
+            name: "Llama-2-70B",
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ffn: 28672,
+            gated_mlp: true,
+            vocab: 32000,
+            rope_base: 10000.0,
+        }
+    }
+
     /// LLaMA3-8B (GQA: 8 KV heads) — listed in §IV-A as a target class.
     pub fn llama3_8b() -> Self {
         LlmConfig {
@@ -108,6 +126,12 @@ impl LlmConfig {
             Self::llama3_8b(),
             Self::qwen3_8b(),
         ]
+    }
+
+    /// Query heads per KV head (`1` for MHA, `n_heads` for MQA) — the
+    /// factor by which GQA shrinks KV-cache traffic.
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
     }
 
     /// Total parameter count (embeddings + blocks + head).
@@ -217,6 +241,22 @@ mod tests {
             mha.kv_bytes_per_token_layer(),
             2 * 32 * 128 // 2 (K+V) × heads × d_head × 1 byte
         );
+        // the shrink is exactly the group factor
+        assert_eq!(mha.group(), 1);
+        assert_eq!(gqa.group(), 4);
+        assert_eq!(
+            mha.kv_bytes_per_token_layer(),
+            gqa.kv_bytes_per_token_layer() * gqa.group() as u64
+        );
+    }
+
+    #[test]
+    fn llama2_70b_group_of_eight() {
+        let cfg = LlmConfig::llama2_70b();
+        assert_eq!(cfg.group(), 8);
+        assert_eq!(cfg.kv_bytes_per_token_layer(), 2 * 8 * 128);
+        let p = cfg.params() as f64;
+        assert!((6.4e10..7.1e10).contains(&p), "llama2-70b params = {p}");
     }
 
     #[test]

@@ -15,11 +15,14 @@
 //! attention datapath — precisely the contribution Table I isolates.
 //!
 //! Hot-path structure (§Perf): the KV caches are **token-major
-//! interleaved** (`[layer][pos][head * d_head]`), so one decode step
+//! interleaved** (`[layer][pos][kv_head * d_head]`), so one decode step
 //! streams each cache row once and advances *every* head in a single
 //! fused sweep ([`crate::kernels::MhaSwiftKv`] /
 //! [`crate::kernels::FxpMhaSwiftKv`]) — the software analogue of the
-//! SwiftKV-MHA pipeline of Fig. 5. The accelerator mode additionally
+//! SwiftKV-MHA pipeline of Fig. 5. Grouped-query attention is native:
+//! with `n_kv_heads < n_heads` the cache rows (and the Q15.17 mirror)
+//! shrink to `n_kv_heads · d_head` per token and each KV-head slice
+//! feeds its whole group of query heads. The accelerator mode additionally
 //! keeps a Q15.17 mirror of the cache, appended once per token, so no
 //! re-quantization of history ever happens. All intermediates live in a
 //! per-sequence [`DecodeScratch`]; a steady-state
@@ -124,6 +127,9 @@ pub struct TinyModel {
     pub vocab: usize,
     pub d_model: usize,
     pub n_heads: usize,
+    /// KV heads (GQA/MQA when `< n_heads`; the K/V projections and caches
+    /// are `n_kv_heads * d_head` wide).
+    pub n_kv_heads: usize,
     pub d_head: usize,
     pub n_layers: usize,
     pub d_ffn: usize,
@@ -140,8 +146,9 @@ pub struct TinyModel {
 /// (f32 + Q15.17 mirror), the RoPE recurrence, and the pre-allocated
 /// [`DecodeScratch`].
 pub struct DecodeState {
-    /// `[layer][pos][head * d_head]` token-major K cache: all heads' rows
-    /// for one position are contiguous (the fused-sweep layout).
+    /// `[layer][pos][kv_head * d_head]` token-major K cache: all KV heads'
+    /// rows for one position are contiguous (the fused-sweep layout; rows
+    /// shrink by the group factor under GQA/MQA).
     kc: Vec<f32>,
     vc: Vec<f32>,
     /// Q15.17 mirrors for the accelerator datapath, appended once per
@@ -155,7 +162,7 @@ pub struct DecodeState {
     rope: RopeState,
     pub pos: usize,
     n_ctx: usize,
-    n_heads: usize,
+    n_kv_heads: usize,
     d_head: usize,
     rope_base: f64,
     scratch: DecodeScratch,
@@ -171,9 +178,9 @@ impl DecodeState {
         self.rope = RopeState::new(self.d_head, self.rope_base);
     }
 
-    /// Width of one interleaved cache row.
+    /// Width of one interleaved KV cache row (`n_kv_heads * d_head`).
     fn row(&self) -> usize {
-        self.n_heads * self.d_head
+        self.n_kv_heads * self.d_head
     }
 }
 
@@ -199,10 +206,28 @@ impl TinyModel {
         if m.d_model != m.n_heads * m.d_head {
             bail!("manifest: d_model must equal n_heads * d_head");
         }
+        if m.n_kv_heads == 0 || m.n_heads % m.n_kv_heads != 0 {
+            bail!("manifest: n_heads must be a multiple of n_kv_heads");
+        }
+        // the declared GQA shape must match the stored K/V projection
+        // widths — catch a mismatched manifest here, not mid-decode
+        let d_kv = m.n_kv_heads * m.d_head;
+        for (l, lw) in layers.iter().enumerate() {
+            for (name, w) in [("wk", &lw.wk), ("wv", &lw.wv)] {
+                if w.dout() != d_kv {
+                    bail!(
+                        "layer{l}.{name}: projection width {} does not match \
+                         n_kv_heads * d_head = {d_kv}",
+                        w.dout()
+                    );
+                }
+            }
+        }
         Ok(TinyModel {
             vocab: m.vocab,
             d_model: m.d_model,
             n_heads: m.n_heads,
+            n_kv_heads: m.n_kv_heads,
             d_head: m.d_head,
             n_layers: m.n_layers,
             d_ffn: m.d_ffn,
@@ -218,19 +243,29 @@ impl TinyModel {
 
     /// Deterministic random model with the same datapath as the AOT tiny
     /// model — lets the decode hot path (and its benches/tests) run
-    /// without the Python-built artifacts.
+    /// without the Python-built artifacts. `n_kv_heads == n_heads` is
+    /// plain MHA; `n_kv_heads < n_heads` builds a grouped-query model
+    /// whose K/V projections (and KV caches) are `n_kv_heads * d_head`
+    /// wide.
+    #[allow(clippy::too_many_arguments)]
     pub fn synthetic(
         seed: u64,
         vocab: usize,
         d_model: usize,
         n_heads: usize,
+        n_kv_heads: usize,
         n_layers: usize,
         d_ffn: usize,
         n_ctx: usize,
     ) -> TinyModel {
         assert!(vocab >= 2 && n_layers >= 1 && n_ctx >= 1);
         assert!(n_heads > 0 && d_model % n_heads == 0, "d_model must split across heads");
+        assert!(
+            n_kv_heads > 0 && n_heads % n_kv_heads == 0,
+            "n_heads must be a multiple of n_kv_heads"
+        );
         let d_head = d_model / n_heads;
+        let d_kv = n_kv_heads * d_head;
         assert!(d_head % 2 == 0, "RoPE needs an even head dim");
         let mut rng = Rng::seed_from_u64(seed);
         let w_scale = 1.0 / (d_model as f32).sqrt();
@@ -245,8 +280,8 @@ impl TinyModel {
             layers.push(LayerWeights {
                 attn_norm: gain(&mut rng, d_model),
                 wq: linear(&mut rng, d_model, d_model),
-                wk: linear(&mut rng, d_model, d_model),
-                wv: linear(&mut rng, d_model, d_model),
+                wk: linear(&mut rng, d_model, d_kv),
+                wv: linear(&mut rng, d_model, d_kv),
                 wo: linear(&mut rng, d_model, d_model),
                 mlp_norm: gain(&mut rng, d_model),
                 w_gate: linear(&mut rng, d_model, d_ffn),
@@ -261,6 +296,7 @@ impl TinyModel {
             vocab,
             d_model,
             n_heads,
+            n_kv_heads,
             d_head,
             n_layers,
             d_ffn,
@@ -274,9 +310,11 @@ impl TinyModel {
         }
     }
 
-    /// Fresh decode state (caches + RoPE recurrence + scratch).
+    /// Fresh decode state (caches + RoPE recurrence + scratch). The KV
+    /// caches (and Q15.17 mirror) hold `n_kv_heads * d_head` per token —
+    /// the group-factor KV shrink under GQA/MQA.
     pub fn new_state(&self) -> DecodeState {
-        let row = self.n_heads * self.d_head;
+        let row = self.n_kv_heads * self.d_head;
         let cache = self.n_layers * self.n_ctx * row;
         DecodeState {
             kc: vec![0.0; cache],
@@ -287,10 +325,10 @@ impl TinyModel {
             rope: RopeState::new(self.d_head, self.rope_base),
             pos: 0,
             n_ctx: self.n_ctx,
-            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
             d_head: self.d_head,
             rope_base: self.rope_base,
-            scratch: DecodeScratch::new(self.n_heads, self.d_head, self.d_ffn),
+            scratch: DecodeScratch::new(self.n_heads, self.n_kv_heads, self.d_head, self.d_ffn),
         }
     }
 
@@ -320,8 +358,9 @@ impl TinyModel {
         assert_eq!(logits.len(), self.vocab, "logits buffer size");
         let d = self.d_model;
         let (h, dh) = (self.n_heads, self.d_head);
+        let h_kv = self.n_kv_heads;
         let row = st.row();
-        debug_assert_eq!(row, d);
+        debug_assert_eq!(row, h_kv * dh);
         let n_ctx = self.n_ctx;
         let scale = 1.0 / (dh as f32).sqrt();
         let fxp_scale = Fxp32::from_f64(1.0 / (dh as f64).sqrt());
@@ -354,12 +393,12 @@ impl TinyModel {
             lw.wk.forward_into(&sc.xn, &mut sc.qi8, &mut sc.k);
             lw.wv.forward_into(&sc.xn, &mut sc.qi8, &mut sc.v);
 
-            // rotate q into scratch and k directly into this position's
-            // interleaved cache row; store v alongside
+            // rotate q (all query heads) into scratch and k (KV heads
+            // only) directly into this position's interleaved cache row;
+            // store v alongside
             let at = (l * n_ctx + pos) * row;
             let lstart = l * n_ctx * row;
             {
-                let krow = &mut kc[at..at + row];
                 for head in 0..h {
                     let o = head * dh;
                     rope_apply_cached_into(
@@ -368,6 +407,10 @@ impl TinyModel {
                         &rope.sin,
                         &mut sc.q_rot[o..o + dh],
                     );
+                }
+                let krow = &mut kc[at..at + row];
+                for head in 0..h_kv {
+                    let o = head * dh;
                     rope_apply_cached_into(
                         &sc.k[o..o + dh],
                         &rope.cos,
@@ -437,7 +480,7 @@ impl TinyModel {
     }
 
     /// Debug access to cache rows (cross-validation against the JAX side).
-    /// Returns the `[d_head]` K/V slices of (layer, head, position).
+    /// Returns the `[d_head]` K/V slices of (layer, **KV** head, position).
     pub fn debug_cache<'a>(
         &self,
         st: &'a DecodeState,
@@ -445,7 +488,8 @@ impl TinyModel {
         h: usize,
         t: usize,
     ) -> (&'a [f32], &'a [f32]) {
-        let row = self.n_heads * self.d_head;
+        assert!(h < self.n_kv_heads, "KV head out of range");
+        let row = self.n_kv_heads * self.d_head;
         let at = (l * st.n_ctx + t) * row + h * self.d_head;
         (&st.kc[at..at + self.d_head], &st.vc[at..at + self.d_head])
     }
@@ -530,7 +574,12 @@ mod tests {
     }
 
     fn tiny_synth() -> TinyModel {
-        TinyModel::synthetic(42, 64, 32, 4, 2, 64, 48)
+        TinyModel::synthetic(42, 64, 32, 4, 4, 2, 64, 48)
+    }
+
+    /// Grouped-query variant: 4 query heads sharing 2 KV heads.
+    fn tiny_synth_gqa() -> TinyModel {
+        TinyModel::synthetic(42, 64, 32, 4, 2, 2, 64, 48)
     }
 
     #[test]
@@ -649,7 +698,7 @@ mod tests {
         let logits = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
         assert!(logits.iter().all(|x| x.is_finite()));
         assert_eq!(st.fxp_rows, 4);
-        let row = m.n_heads * m.d_head;
+        let row = m.n_kv_heads * m.d_head;
         for l in 0..m.n_layers {
             for t in 0..4 {
                 let at = (l * m.n_ctx + t) * row;
@@ -685,6 +734,105 @@ mod tests {
         assert_eq!(m.d_model, m.n_heads * m.d_head);
         assert_eq!(m.lm_head.dout(), m.vocab);
         assert_eq!(m.layers.len(), m.n_layers);
+    }
+
+    #[test]
+    fn gqa_synthetic_shapes_and_cache_shrink() {
+        let m = tiny_synth_gqa();
+        assert_eq!(m.n_kv_heads, 2);
+        let d_kv = m.n_kv_heads * m.d_head;
+        assert_eq!(m.layers[0].wk.dout(), d_kv);
+        assert_eq!(m.layers[0].wv.dout(), d_kv);
+        assert_eq!(m.layers[0].wq.dout(), m.d_model);
+        let st = m.new_state();
+        // cache rows hold n_kv_heads * d_head — half of an MHA cache here
+        assert_eq!(st.kc.len(), m.n_layers * m.n_ctx * d_kv);
+        assert_eq!(st.kq.len(), st.kc.len());
+        let mha_cache = tiny_synth().new_state().kc.len();
+        assert_eq!(st.kc.len() * 2, mha_cache);
+    }
+
+    #[test]
+    fn gqa_decode_finite_logits_both_modes() {
+        let m = tiny_synth_gqa();
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut st = m.new_state();
+            for &t in &[7u32, 1, 63, 0] {
+                let logits = m.decode_step(&mut st, t, mode);
+                assert_eq!(logits.len(), m.vocab);
+                assert!(logits.iter().all(|x| x.is_finite()), "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_decode_step_into_matches_decode_step() {
+        let m = tiny_synth_gqa();
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut s1 = m.new_state();
+            let mut s2 = m.new_state();
+            let mut buf = vec![0.0f32; m.vocab];
+            for &t in &[1u32, 9, 30, 2, 2] {
+                let a = m.decode_step(&mut s1, t, mode);
+                m.decode_step_into(&mut s2, t, mode, &mut buf);
+                assert_eq!(a, buf, "{mode:?} diverged at token {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_generation_deterministic_and_reset_safe() {
+        let m = tiny_synth_gqa();
+        let a = m.generate(&[1, 2, 3], 8, NumericsMode::Accelerator);
+        let b = m.generate(&[1, 2, 3], 8, NumericsMode::Accelerator);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (t as usize) < m.vocab));
+        // recycled GQA state decodes like a fresh one
+        let mut st = m.new_state();
+        for &t in &[3u32, 5, 7] {
+            m.decode_step(&mut st, t, NumericsMode::DesktopF32);
+        }
+        st.reset();
+        let x = m.decode_step(&mut st, 11, NumericsMode::DesktopF32);
+        let mut fresh = m.new_state();
+        let y = m.decode_step(&mut fresh, 11, NumericsMode::DesktopF32);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn gqa_mixed_modes_backfill_quantized_mirror() {
+        let m = tiny_synth_gqa();
+        let mut st = m.new_state();
+        for &t in &[3u32, 9] {
+            m.decode_step(&mut st, t, NumericsMode::DesktopF32);
+        }
+        assert_eq!(st.fxp_rows, 0);
+        let logits = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(st.fxp_rows, 3);
+        let row = m.n_kv_heads * m.d_head;
+        for l in 0..m.n_layers {
+            for t in 0..3 {
+                let at = (l * m.n_ctx + t) * row;
+                for i in 0..row {
+                    assert_eq!(
+                        st.kq[at + i].raw(),
+                        Fxp32::from_f32(st.kc[at + i]).raw(),
+                        "k mirror stale at layer {l} row {t} lane {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "KV head out of range")]
+    fn debug_cache_rejects_query_head_index() {
+        let m = tiny_synth_gqa();
+        let mut st = m.new_state();
+        m.decode_step(&mut st, 1, NumericsMode::DesktopF32);
+        // head 2 is a valid *query* head but not a KV head (only 2 exist)
+        let _ = m.debug_cache(&st, 0, 2, 0);
     }
 
     #[test]

@@ -26,6 +26,9 @@ pub struct TinyManifest {
     pub vocab: usize,
     pub d_model: usize,
     pub n_heads: usize,
+    /// KV heads (GQA/MQA). Older manifests omit this; it defaults to
+    /// `n_heads` (plain MHA).
+    pub n_kv_heads: usize,
     pub d_head: usize,
     pub n_layers: usize,
     pub d_ffn: usize,
@@ -64,10 +67,23 @@ impl WeightStore {
                 }
             }
         }
+        let n_heads = g("n_heads")?;
+        // absent → MHA default; present but malformed → hard error (don't
+        // silently drop a declared GQA shape)
+        let n_kv_heads = match model.get("n_kv_heads") {
+            None => n_heads,
+            Some(j) => j
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest: model.n_kv_heads is not an integer"))?,
+        };
+        if n_kv_heads == 0 || n_heads % n_kv_heads != 0 {
+            bail!("manifest: n_heads ({n_heads}) must be a multiple of n_kv_heads ({n_kv_heads})");
+        }
         let manifest = TinyManifest {
             vocab: g("vocab")?,
             d_model: g("d_model")?,
-            n_heads: g("n_heads")?,
+            n_heads,
+            n_kv_heads,
             d_head: g("d_head")?,
             n_layers: g("n_layers")?,
             d_ffn: g("d_ffn")?,
@@ -194,6 +210,9 @@ mod tests {
             return;
         };
         assert_eq!(ws.manifest.d_model, ws.manifest.n_heads * ws.manifest.d_head);
+        // older manifests carry no n_kv_heads entry — MHA default applies
+        assert!(ws.manifest.n_kv_heads >= 1);
+        assert_eq!(ws.manifest.n_heads % ws.manifest.n_kv_heads, 0);
         assert!(!ws.arrays().is_empty());
         assert!(!ws.manifest.artifact_files.is_empty());
     }

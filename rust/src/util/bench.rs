@@ -20,6 +20,9 @@ pub struct Measurement {
     pub mean_ns: f64,
     /// Median absolute deviation (scaled) — robust spread.
     pub mad_ns: f64,
+    /// Numeric annotations attached via [`Bencher::annotate`] (modeled
+    /// bytes per op, group factors, …); serialized under `"extras"`.
+    pub extras: BTreeMap<String, f64>,
 }
 
 impl Measurement {
@@ -40,6 +43,14 @@ impl Measurement {
             "throughput_per_sec".to_string(),
             Json::Num(self.throughput_per_sec()),
         );
+        if !self.extras.is_empty() {
+            let extras = self
+                .extras
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect();
+            m.insert("extras".to_string(), Json::Obj(extras));
+        }
         Json::Obj(m)
     }
 }
@@ -112,6 +123,7 @@ impl Bencher {
             median_ns: median,
             mean_ns: mean,
             mad_ns: mad,
+            extras: BTreeMap::new(),
         };
         println!(
             "{:<48} time: [{} {} {}]  ({} iters)",
@@ -132,6 +144,16 @@ impl Bencher {
     /// Look up a recorded measurement by exact name.
     pub fn get(&self, name: &str) -> Option<&Measurement> {
         self.results.iter().find(|m| m.name == name)
+    }
+
+    /// Attach a numeric annotation to an already-recorded measurement —
+    /// modeled quantities (streamed KV bytes per token, group factor, …)
+    /// that belong next to the timing in the JSON trajectory. No-op if
+    /// the name was never benched.
+    pub fn annotate(&mut self, name: &str, key: &str, value: f64) {
+        if let Some(m) = self.results.iter_mut().find(|m| m.name == name) {
+            m.extras.insert(key.to_string(), value);
+        }
     }
 
     /// All results as a JSON document (`{schema, benchmarks: [...]}`).
@@ -224,6 +246,28 @@ mod tests {
         assert!(benches[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(b.get("beta").is_some());
         assert!(b.get("gamma").is_none());
+    }
+
+    #[test]
+    fn annotations_survive_to_json() {
+        let mut b = Bencher::new(5, 20);
+        b.bench("kv_sweep", || std::hint::black_box(1u64 + 1));
+        b.annotate("kv_sweep", "kv_bytes_per_token", 4096.0);
+        b.annotate("kv_sweep", "group", 4.0);
+        b.annotate("never_benched", "ignored", 1.0);
+        assert_eq!(
+            b.get("kv_sweep").unwrap().extras.get("kv_bytes_per_token"),
+            Some(&4096.0)
+        );
+        let doc = b.to_json().to_string();
+        let parsed = crate::util::Json::parse(&doc).unwrap();
+        let benches = parsed.get("benchmarks").unwrap().as_arr().unwrap();
+        let extras = benches[0].get("extras").unwrap();
+        assert_eq!(
+            extras.get("kv_bytes_per_token").unwrap().as_f64(),
+            Some(4096.0)
+        );
+        assert_eq!(extras.get("group").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]

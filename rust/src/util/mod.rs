@@ -13,11 +13,16 @@
 //! - [`cli`] — a tiny flag parser for the `swiftkv` binary and examples
 //!   (replaces `clap`),
 //! - [`prop`] — a seeded random-case property-test driver with failure
-//!   reporting (replaces `proptest` for our invariant sweeps).
+//!   reporting (replaces `proptest` for our invariant sweeps; the base
+//!   seed is pinned via the `SWIFTKV_PROP_SEED` env var in CI),
+//! - [`oracle`] — a deliberately naive scalar GQA/MQA/MHA attention
+//!   oracle (materialized scores, two-pass softmax) used as ground truth
+//!   by the fused-kernel property tests.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod oracle;
 pub mod prop;
 pub mod rng;
 

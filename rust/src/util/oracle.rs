@@ -1,0 +1,207 @@
+//! Deliberately naive scalar attention oracle — the ground truth for the
+//! fused-kernel property tests.
+//!
+//! Everything here is written for obviousness, not speed: scores are
+//! fully materialized, the softmax is the textbook two-pass max/sum form,
+//! and every loop is a plain scalar loop (no SIMD helpers, no fused
+//! recurrences, no shared state). Arbitrary `n_heads` / `n_kv_heads` /
+//! `d` / `len` are supported, so the same function is the reference for
+//! MHA (`n_kv_heads == n_heads`), GQA (`1 < n_kv_heads < n_heads`) and
+//! MQA (`n_kv_heads == 1`). `tests/prop_gqa_fused.rs` sweeps the fused
+//! [`crate::kernels::MhaSwiftKv`] sweep against this across edge shapes.
+//!
+//! Layout contract (identical to the fused kernels): `q` is
+//! `[n_heads * d]` head-major; `k`/`v` are token-major interleaved
+//! `[len][n_kv_heads * d]`; query head `h` reads KV head
+//! `h / (n_heads / n_kv_heads)`.
+
+/// Scalar two-pass-softmax grouped-query attention over token-major
+/// interleaved caches. Returns the `[n_heads * d]` head-major output.
+///
+/// Panics on inconsistent shapes or `len == 0` (attention over zero
+/// tokens is undefined — the fused kernels' `finalize` panics too).
+#[allow(clippy::too_many_arguments)]
+pub fn gqa_attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    len: usize,
+    scale: f32,
+) -> Vec<f32> {
+    assert!(n_heads > 0 && n_kv_heads > 0 && d > 0, "empty shape");
+    assert!(len > 0, "attention over zero tokens is undefined");
+    assert!(
+        n_heads % n_kv_heads == 0,
+        "n_heads must be a multiple of n_kv_heads"
+    );
+    assert_eq!(q.len(), n_heads * d, "q length");
+    let row = n_kv_heads * d;
+    assert!(k.len() >= len * row, "k cache too short");
+    assert!(v.len() >= len * row, "v cache too short");
+    let group = n_heads / n_kv_heads;
+
+    let mut out = vec![0.0f32; n_heads * d];
+    let mut scores = vec![0.0f32; len];
+    for head in 0..n_heads {
+        let kv = head / group;
+        let qh = &q[head * d..(head + 1) * d];
+
+        // pass 1: materialize every score, track the max
+        let mut max = f32::NEG_INFINITY;
+        for (t, slot) in scores.iter_mut().enumerate() {
+            let ko = t * row + kv * d;
+            let mut s = 0.0f32;
+            for (&qi, &ki) in qh.iter().zip(&k[ko..ko + d]) {
+                s += qi * ki;
+            }
+            let s = s * scale;
+            *slot = s;
+            if s > max {
+                max = s;
+            }
+        }
+
+        // pass 2: exponentiate against the max, sum the denominator
+        let mut z = 0.0f32;
+        for slot in scores.iter_mut() {
+            *slot = (*slot - max).exp();
+            z += *slot;
+        }
+
+        // weighted value sum, one token at a time
+        let oh = &mut out[head * d..(head + 1) * d];
+        for (t, &w) in scores.iter().enumerate() {
+            let vo = t * row + kv * d;
+            let w = w / z;
+            for (o, &vi) in oh.iter_mut().zip(&v[vo..vo + d]) {
+                *o += w * vi;
+            }
+        }
+    }
+    out
+}
+
+/// Plain multi-head convenience wrapper (`n_kv_heads == n_heads`).
+#[allow(clippy::too_many_arguments)]
+pub fn mha_attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_heads: usize,
+    d: usize,
+    len: usize,
+    scale: f32,
+) -> Vec<f32> {
+    gqa_attend(q, k, v, n_heads, n_heads, d, len, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn single_token_returns_value_row_per_group() {
+        // len = 1: softmax weight is 1, every query head copies its KV
+        // head's value slice
+        let mut rng = Rng::seed_from_u64(31);
+        let (h, hkv, d) = (4usize, 2usize, 5usize);
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(hkv * d, 1.0);
+        let v = rng.uniform_vec(hkv * d, 1.0);
+        let out = gqa_attend(&q, &k, &v, h, hkv, d, 1, 0.9);
+        let group = h / hkv;
+        for head in 0..h {
+            let kv = head / group;
+            for i in 0..d {
+                assert!(
+                    (out[head * d + i] - v[kv * d + i]).abs() < 1e-6,
+                    "head {head} dim {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_native_single_head_attention() {
+        // n_heads == n_kv_heads == 1 degenerates to the validated
+        // per-head softmax reference
+        let mut rng = Rng::seed_from_u64(32);
+        let (d, len) = (16usize, 40usize);
+        let q = rng.uniform_vec(d, 1.0);
+        let k = rng.uniform_vec(len * d, 1.0);
+        let v = rng.uniform_vec(len * d, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let p = crate::attention::HeadProblem::new(&q, &k, &v, d, len);
+        let want = crate::attention::native::attend(&p);
+        let got = gqa_attend(&q, &k, &v, 1, 1, d, len, scale);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "dim {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn identical_queries_in_a_group_share_output() {
+        let mut rng = Rng::seed_from_u64(33);
+        let (h, d, len) = (3usize, 7usize, 12usize);
+        let qh = rng.uniform_vec(d, 1.0);
+        let mut q = Vec::new();
+        for _ in 0..h {
+            q.extend_from_slice(&qh);
+        }
+        let k = rng.uniform_vec(len * d, 1.0);
+        let v = rng.uniform_vec(len * d, 1.0);
+        let out = gqa_attend(&q, &k, &v, h, 1, d, len, 0.5);
+        for head in 1..h {
+            assert_eq!(&out[..d], &out[head * d..(head + 1) * d]);
+        }
+    }
+
+    #[test]
+    fn output_stays_in_value_hull() {
+        // softmax output is a convex combination of value rows
+        let mut rng = Rng::seed_from_u64(34);
+        let (h, hkv, d, len) = (6usize, 3usize, 4usize, 20usize);
+        let row = hkv * d;
+        let q = rng.uniform_vec(h * d, 2.0);
+        let k = rng.uniform_vec(len * row, 2.0);
+        let v = rng.uniform_vec(len * row, 2.0);
+        let out = gqa_attend(&q, &k, &v, h, hkv, d, len, 1.0);
+        let group = h / hkv;
+        for head in 0..h {
+            let kv = head / group;
+            for i in 0..d {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for t in 0..len {
+                    let x = v[t * row + kv * d + i];
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                let o = out[head * d + i];
+                assert!(o >= lo - 1e-5 && o <= hi + 1e-5, "head {head} dim {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mha_wrapper_is_gqa_with_equal_heads() {
+        let mut rng = Rng::seed_from_u64(35);
+        let (h, d, len) = (2usize, 3usize, 9usize);
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+        assert_eq!(
+            mha_attend(&q, &k, &v, h, d, len, 0.7),
+            gqa_attend(&q, &k, &v, h, h, d, len, 0.7)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "zero tokens")]
+    fn zero_len_panics() {
+        let _ = gqa_attend(&[1.0], &[], &[], 1, 1, 1, 0, 1.0);
+    }
+}

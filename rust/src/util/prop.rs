@@ -2,16 +2,44 @@
 //!
 //! Runs a property over `n` deterministically-seeded random cases; on
 //! failure reports the case seed so the exact input can be replayed with
-//! `check_one`.
+//! `check_one`. The base seed defaults to a fixed constant and can be
+//! pinned (or varied) with the `SWIFTKV_PROP_SEED` environment variable —
+//! CI pins it so every run sweeps exactly the same cases and a red run
+//! reproduces locally with the same value.
 
 use super::rng::Rng;
+
+/// Default base seed for the case sweep (kept stable across releases so
+/// historical failures replay).
+pub const DEFAULT_BASE_SEED: u64 = 0xC0FFEE;
+
+/// Base seed for [`check`]'s case sweep: `SWIFTKV_PROP_SEED` (decimal or
+/// `0x`-prefixed hex) when set and parseable, else
+/// [`DEFAULT_BASE_SEED`].
+pub fn base_seed() -> u64 {
+    std::env::var("SWIFTKV_PROP_SEED")
+        .ok()
+        .and_then(|s| parse_seed(&s))
+        .unwrap_or(DEFAULT_BASE_SEED)
+}
+
+/// Parse a seed string: decimal, or hex with a `0x`/`0X` prefix.
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
 
 /// Run `prop(rng, case_index)` for `n` seeded cases. The property should
 /// panic (assert) on violation; this driver wraps the panic with the case
 /// seed for reproduction.
 pub fn check(name: &str, n: u64, prop: impl Fn(&mut Rng, u64) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
     for case in 0..n {
-        let seed = splitmix(0xC0FFEE ^ case);
+        let seed = splitmix(base ^ case);
         let result = std::panic::catch_unwind(|| {
             let mut rng = Rng::seed_from_u64(seed);
             prop(&mut rng, case);
@@ -59,6 +87,16 @@ mod tests {
         check("fails", 10, |rng, _| {
             assert!(rng.gen_f64() < 0.2, "too big");
         });
+    }
+
+    #[test]
+    fn seed_strings_parse_decimal_and_hex() {
+        assert_eq!(parse_seed("12648430"), Some(12648430));
+        assert_eq!(parse_seed("0xC0FFEE"), Some(0xC0FFEE));
+        assert_eq!(parse_seed("0XfF"), Some(255));
+        assert_eq!(parse_seed(" 7 "), Some(7));
+        assert_eq!(parse_seed("not-a-seed"), None);
+        assert_eq!(parse_seed(""), None);
     }
 
     #[test]

@@ -89,6 +89,26 @@ fn fused_decode_hot_path_is_allocation_free() {
     });
     assert_eq!(fxp_allocs, 0, "fused FXP32 MHA sweep allocated");
 
+    // --- kernel level, grouped-query: 8 query heads over 2 KV heads ----
+    let hkv = 2usize;
+    let kg = rng.uniform_vec(len * hkv * d, 1.0);
+    let vg = rng.uniform_vec(len * hkv * d, 1.0);
+    let mut gqa = MhaSwiftKv::new_grouped(h, hkv, d);
+    gqa.attend(&q, &kg, &vg, len, scale, &mut out);
+    let gqa_allocs = min_allocs(5, || {
+        gqa.attend(&q, &kg, &vg, len, scale, &mut out);
+    });
+    assert_eq!(gqa_allocs, 0, "fused f32 GQA sweep allocated");
+
+    let kgq = vector::quantize(&kg);
+    let vgq = vector::quantize(&vg);
+    let mut gqa_fxp = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+    gqa_fxp.attend(&lut, &qq, &kgq, &vgq, len, fscale, &mut fout);
+    let gqa_fxp_allocs = min_allocs(5, || {
+        gqa_fxp.attend(&lut, &qq, &kgq, &vgq, len, fscale, &mut fout);
+    });
+    assert_eq!(gqa_fxp_allocs, 0, "fused FXP32 GQA sweep allocated");
+
     // --- GEMV level: forward_into through caller scratch ---------------
     let w = rng.uniform_vec(64 * 96, 0.5);
     let lin = QuantLinear::new(Int4Matrix::quantize(&w, 64, 96));
@@ -101,24 +121,28 @@ fn fused_decode_hot_path_is_allocation_free() {
     });
     assert_eq!(gemv_allocs, 0, "forward_into allocated");
 
-    // --- model level: a steady-state decode step, both numerics modes --
-    let tm = TinyModel::synthetic(3, 64, 32, 4, 2, 64, 48);
-    let mut logits = vec![0.0f32; tm.vocab];
-    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
-        let mut st = tm.new_state();
-        // warm up: prime the caches / branch predictors, leave headroom
-        // so the measured steps stay inside the context window
-        for t in 0..8u32 {
-            tm.decode_step_into(&mut st, t % tm.vocab as u32, mode, &mut logits);
+    // --- model level: a steady-state decode step, both numerics modes,
+    // MHA and grouped-query (8q/2kv-style group of 2 on the tiny shape) --
+    let tm = TinyModel::synthetic(3, 64, 32, 4, 4, 2, 64, 48);
+    let tg = TinyModel::synthetic(3, 64, 32, 4, 2, 2, 64, 48);
+    for (label, m) in [("mha", &tm), ("gqa", &tg)] {
+        let mut logits = vec![0.0f32; m.vocab];
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut st = m.new_state();
+            // warm up: prime the caches / branch predictors, leave headroom
+            // so the measured steps stay inside the context window
+            for t in 0..8u32 {
+                m.decode_step_into(&mut st, t % m.vocab as u32, mode, &mut logits);
+            }
+            let mut t = 8u32;
+            let step_allocs = min_allocs(5, || {
+                m.decode_step_into(&mut st, t % m.vocab as u32, mode, &mut logits);
+                t += 1;
+            });
+            assert_eq!(
+                step_allocs, 0,
+                "steady-state {label} decode step allocated in {mode:?}"
+            );
         }
-        let mut t = 8u32;
-        let step_allocs = min_allocs(5, || {
-            tm.decode_step_into(&mut st, t % tm.vocab as u32, mode, &mut logits);
-            t += 1;
-        });
-        assert_eq!(
-            step_allocs, 0,
-            "steady-state decode step allocated in {mode:?}"
-        );
     }
 }

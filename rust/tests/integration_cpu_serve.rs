@@ -7,7 +7,12 @@ use swiftkv::coordinator::{CpuServeOptions, CpuServer};
 use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
 
 fn model() -> TinyModel {
-    TinyModel::synthetic(7, 64, 32, 4, 2, 64, 48)
+    TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48)
+}
+
+/// Grouped-query synthetic model: 4 query heads sharing 2 KV heads.
+fn gqa_model() -> TinyModel {
+    TinyModel::synthetic(7, 64, 32, 4, 2, 2, 64, 48)
 }
 
 fn opts(lanes: usize, mode: NumericsMode) -> CpuServeOptions {
@@ -81,6 +86,54 @@ fn batched_serving_matches_solo_generation_both_modes() {
                 got.as_slice(),
                 want.as_slice(),
                 "{mode:?} request {i}: batched serving diverged from solo decode"
+            );
+        }
+    }
+}
+
+#[test]
+fn gqa_batched_serving_matches_solo_generation_both_modes() {
+    // the whole serving stack — batcher, lane threads, recycled
+    // DecodeStates with group-factor-shrunk KV caches — over a
+    // grouped-query model, in both numerics modes
+    let tm = gqa_model();
+    assert_eq!(tm.n_kv_heads, 2);
+    let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![50, 7], vec![42, 42, 42, 42], vec![9]];
+    let gen_len = 6;
+
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request {
+                id: i as u64,
+                prompt: p.clone(),
+                gen_len,
+                arrival_ms: 0,
+            })
+            .collect();
+        // llama3-8b sim config: the GQA shape the sim layer prices
+        let opts = CpuServeOptions {
+            lanes: 2, // fewer lanes than requests → recycling under GQA
+            mode,
+            max_iterations: 10_000,
+            sim_model: LlmConfig::llama3_8b(),
+        };
+        let report = CpuServer::new(&tm, opts).serve(reqs);
+        assert_eq!(report.sessions.len(), prompts.len());
+
+        for (i, p) in prompts.iter().enumerate() {
+            let want = tm.generate(p, gen_len, mode);
+            let got = &report
+                .sessions
+                .iter()
+                .find(|s| s.request.id == i as u64)
+                .unwrap()
+                .generated;
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "{mode:?} GQA request {i}: batched serving diverged from solo decode"
             );
         }
     }

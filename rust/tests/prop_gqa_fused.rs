@@ -1,0 +1,271 @@
+//! Property tests: fused grouped-query SwiftKV decode vs the naive
+//! scalar oracle (`util::oracle`) and the per-head references, swept
+//! over edge shapes — MQA (`n_kv_heads == 1`), GQA, pure-MHA regression
+//! (`group == 1`), `len = 1`, empty extends, and head dims off the SIMD
+//! unroll width. f32 must match the two-pass-softmax oracle to within
+//! 1e-5 relative; the Q15.17 fused sweep must be **bit-for-bit** equal
+//! to running each query head separately against its shared KV head.
+
+use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::{gather_head, FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::util::{oracle, prop, Rng};
+
+/// (n_heads, n_kv_heads) pairs: MQA, several GQA group factors, and the
+/// `group == 1` MHA regression cases.
+const GROUPS: [(usize, usize); 8] = [
+    (1, 1),
+    (2, 1),
+    (3, 1),
+    (4, 2),
+    (6, 3),
+    (8, 2),
+    (8, 8),
+    (12, 4),
+];
+/// Head dims below/above/misaligned-with the 4-lane SIMD unroll.
+const DIMS: [usize; 6] = [1, 3, 5, 7, 16, 33];
+const LENS: [usize; 5] = [1, 2, 3, 17, 96];
+
+struct GqaData {
+    h: usize,
+    hkv: usize,
+    d: usize,
+    len: usize,
+    q: Vec<f32>,
+    /// Token-major interleaved `[len][hkv * d]` caches.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl GqaData {
+    fn random(rng: &mut Rng, scale: f32) -> GqaData {
+        let (h, hkv) = GROUPS[rng.gen_range(0, GROUPS.len())];
+        let d = DIMS[rng.gen_range(0, DIMS.len())];
+        let len = LENS[rng.gen_range(0, LENS.len())];
+        GqaData {
+            h,
+            hkv,
+            d,
+            len,
+            q: rng.uniform_vec(h * d, scale),
+            k: rng.uniform_vec(len * hkv * d, scale),
+            v: rng.uniform_vec(len * hkv * d, scale),
+        }
+    }
+
+    fn group(&self) -> usize {
+        self.h / self.hkv
+    }
+}
+
+#[test]
+fn prop_fused_gqa_f32_matches_scalar_oracle() {
+    prop::check("fused GQA f32 == two-pass scalar oracle", 50, |rng, _| {
+        let data = GqaData::random(rng, 1.0);
+        let (h, hkv, d, len) = (data.h, data.hkv, data.d, data.len);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let mut mha = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&data.q, &data.k, &data.v, len, scale, &mut out);
+
+        let want = oracle::gqa_attend(&data.q, &data.k, &data.v, h, hkv, d, len, scale);
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "h={h} hkv={hkv} d={d} len={len} flat-dim={i}: fused {a} vs oracle {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fused_gqa_fxp_bit_exact_vs_per_group_reference() {
+    prop::check("fused GQA fxp == per-group attend_fxp (bit-exact)", 35, |rng, _| {
+        let data = GqaData::random(rng, 1.0);
+        let (h, hkv, d, len) = (data.h, data.hkv, data.d, data.len);
+        let group = data.group();
+        let lut = Exp2Lut::new();
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+
+        let qq = vector::quantize(&data.q);
+        let kq = vector::quantize(&data.k);
+        let vq = vector::quantize(&data.v);
+        let mut mha = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut out = vec![Fxp32::ZERO; h * d];
+        mha.attend(&lut, &qq, &kq, &vq, len, scale, &mut out);
+
+        for head in 0..h {
+            // per-group reference: this query head against its shared KV
+            // head's cache, gathered to the head-major per-head layout
+            let kv = head / group;
+            let kh = gather_head(&data.k, kv, hkv, d, len);
+            let vh = gather_head(&data.v, kv, hkv, d, len);
+            let p = FxpHeadProblem::quantize(&data.q[head * d..(head + 1) * d], &kh, &vh, d, len);
+            let want = attend_fxp(&lut, &p);
+            for (i, (a, b)) in out[head * d..(head + 1) * d].iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.raw(),
+                    b.raw(),
+                    "h={h} hkv={hkv} d={d} len={len} head={head} dim={i}: raw bits diverged"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gqa_incremental_extend_equals_one_shot() {
+    prop::check("GQA chunked extend == one-shot sweep", 35, |rng, _| {
+        let data = GqaData::random(rng, 1.0);
+        let (h, hkv, d, len) = (data.h, data.hkv, data.d, data.len);
+        let scale = 1.0 / (d as f32).sqrt();
+        // cut ∈ [0, len]: 0 exercises an empty first extend
+        let cut = rng.gen_range(0, len + 1);
+
+        // f32: chunked extend must be bit-identical to the one-shot sweep
+        let mut one = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut a = vec![0.0f32; h * d];
+        one.attend(&data.q, &data.k, &data.v, len, scale, &mut a);
+        let mut two = MhaSwiftKv::new_grouped(h, hkv, d);
+        two.extend(&data.q, &data.k, &data.v, 0, cut, scale);
+        two.extend(&data.q, &data.k, &data.v, cut, len, scale);
+        let mut b = vec![0.0f32; h * d];
+        two.finalize_into(&mut b);
+        assert_eq!(a, b, "h={h} hkv={hkv} d={d} len={len} cut={cut}");
+
+        // fxp: same, on raw bits
+        let lut = Exp2Lut::new();
+        let fscale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qq = vector::quantize(&data.q);
+        let kq = vector::quantize(&data.k);
+        let vq = vector::quantize(&data.v);
+        let mut fone = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut fa = vec![Fxp32::ZERO; h * d];
+        fone.attend(&lut, &qq, &kq, &vq, len, fscale, &mut fa);
+        let mut ftwo = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        ftwo.extend(&lut, &qq, &kq, &vq, 0, cut, fscale);
+        ftwo.extend(&lut, &qq, &kq, &vq, cut, len, fscale);
+        let mut fb = vec![Fxp32::ZERO; h * d];
+        ftwo.finalize_into(&mut fb);
+        for (i, (x, y)) in fa.iter().zip(&fb).enumerate() {
+            assert_eq!(x.raw(), y.raw(), "fxp flat-dim {i} (cut={cut})");
+        }
+    });
+}
+
+#[test]
+fn prop_group_one_equals_plain_mha_state() {
+    // `group == 1` regression: a grouped state with n_kv_heads == n_heads
+    // must be bit-identical to the pre-GQA `new(h, d)` construction.
+    prop::check("new_grouped(h, h, d) == new(h, d)", 20, |rng, _| {
+        let h = [1usize, 2, 3, 8][rng.gen_range(0, 4)];
+        let d = DIMS[rng.gen_range(0, DIMS.len())];
+        let len = LENS[rng.gen_range(0, LENS.len())];
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * h * d, 1.0);
+        let v = rng.uniform_vec(len * h * d, 1.0);
+
+        let mut plain = MhaSwiftKv::new(h, d);
+        let mut a = vec![0.0f32; h * d];
+        plain.attend(&q, &k, &v, len, scale, &mut a);
+        let mut grouped = MhaSwiftKv::new_grouped(h, h, d);
+        let mut b = vec![0.0f32; h * d];
+        grouped.attend(&q, &k, &v, len, scale, &mut b);
+        assert_eq!(a, b, "h={h} d={d} len={len}");
+    });
+}
+
+#[test]
+fn prop_mqa_oracle_agreement_under_spread_scores() {
+    // MQA with wider score spread (stress the rescale branch, Eq. 7)
+    prop::check("MQA fused == oracle at scale 3", 25, |rng, _| {
+        let h = [2usize, 4, 8][rng.gen_range(0, 3)];
+        let d = DIMS[rng.gen_range(0, DIMS.len())];
+        let len = LENS[rng.gen_range(0, LENS.len())];
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 3.0);
+        let k = rng.uniform_vec(len * d, 3.0);
+        let v = rng.uniform_vec(len * d, 1.0);
+
+        let mut mha = MhaSwiftKv::new_grouped(h, 1, d);
+        let mut out = vec![0.0f32; h * d];
+        mha.attend(&q, &k, &v, len, scale, &mut out);
+        let want = oracle::gqa_attend(&q, &k, &v, h, 1, d, len, scale);
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-5 * (1.0 + b.abs()),
+                "h={h} d={d} len={len} flat-dim={i}: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn empty_extend_consumes_nothing_then_matches_one_shot() {
+    // "n == 0": an extend over an empty row range is a no-op — the state
+    // reports zero consumed tokens and a later full sweep is unaffected.
+    let mut rng = Rng::seed_from_u64(77);
+    let (h, hkv, d, len) = (4usize, 2usize, 8usize, 10usize);
+    let scale = 1.0 / (d as f32).sqrt();
+    let q = rng.uniform_vec(h * d, 1.0);
+    let k = rng.uniform_vec(len * hkv * d, 1.0);
+    let v = rng.uniform_vec(len * hkv * d, 1.0);
+
+    let mut st = MhaSwiftKv::new_grouped(h, hkv, d);
+    st.extend(&q, &k, &v, 0, 0, scale);
+    assert_eq!(st.consumed(), 0, "empty extend must consume nothing");
+    st.extend(&q, &k, &v, 0, len, scale);
+    let mut a = vec![0.0f32; h * d];
+    st.finalize_into(&mut a);
+
+    let mut one = MhaSwiftKv::new_grouped(h, hkv, d);
+    let mut b = vec![0.0f32; h * d];
+    one.attend(&q, &k, &v, len, scale, &mut b);
+    assert_eq!(a, b);
+
+    // same on the Q15.17 path
+    let lut = Exp2Lut::new();
+    let fscale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+    let qq = vector::quantize(&q);
+    let kq = vector::quantize(&k);
+    let vq = vector::quantize(&v);
+    let mut fst = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+    fst.extend(&lut, &qq, &kq, &vq, 0, 0, fscale);
+    assert_eq!(fst.consumed(), 0);
+    fst.extend(&lut, &qq, &kq, &vq, 0, len, fscale);
+    let mut fa = vec![Fxp32::ZERO; h * d];
+    fst.finalize_into(&mut fa);
+    let mut fone = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+    let mut fb = vec![Fxp32::ZERO; h * d];
+    fone.attend(&lut, &qq, &kq, &vq, len, fscale, &mut fb);
+    assert_eq!(
+        fa.iter().map(|x| x.raw()).collect::<Vec<_>>(),
+        fb.iter().map(|x| x.raw()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn single_token_gqa_broadcasts_value_rows() {
+    // len == 1: every query head's output is its KV head's value slice
+    let mut rng = Rng::seed_from_u64(78);
+    let (h, hkv, d) = (6usize, 2usize, 5usize);
+    let group = h / hkv;
+    let q = rng.uniform_vec(h * d, 1.0);
+    let k = rng.uniform_vec(hkv * d, 1.0);
+    let v = rng.uniform_vec(hkv * d, 1.0);
+    let mut mha = MhaSwiftKv::new_grouped(h, hkv, d);
+    let mut out = vec![0.0f32; h * d];
+    mha.attend(&q, &k, &v, 1, 1.0, &mut out);
+    for head in 0..h {
+        let kv = head / group;
+        for i in 0..d {
+            assert!(
+                (out[head * d + i] - v[kv * d + i]).abs() < 1e-6,
+                "head {head} dim {i}"
+            );
+        }
+    }
+}
