@@ -92,6 +92,34 @@ def lower_attention(rows: int, n_ctx: int, d_head: int) -> str:
     return to_hlo_text(lowered)
 
 
+def model_manifest(cfg: M.TinyConfig, seed: int) -> dict:
+    """The manifest's ``model`` section.
+
+    ``n_kv_heads`` is emitted explicitly (not defaulted by the reader):
+    the Rust loader validates the stored K/V projection widths against
+    ``n_kv_heads * d_head``, so a grouped-query artifact that lies about
+    its shape fails at load time, not mid-decode.
+    """
+    if cfg.n_kv_heads <= 0 or cfg.n_heads % cfg.n_kv_heads != 0:
+        raise ValueError(
+            f"n_heads ({cfg.n_heads}) must be a positive multiple of "
+            f"n_kv_heads ({cfg.n_kv_heads})")
+    if cfg.n_kv_heads != cfg.n_heads:
+        # the JAX reference decode path is MHA-only; a GQA manifest over
+        # MHA-shaped weights would be rejected by TinyModel::load anyway
+        raise ValueError(
+            "the JAX reference model is MHA-only: n_kv_heads "
+            f"({cfg.n_kv_heads}) must equal n_heads ({cfg.n_heads})")
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+        "d_head": cfg.d_head,
+        "n_layers": cfg.n_layers, "d_ffn": cfg.d_ffn,
+        "n_ctx": cfg.n_ctx, "rope_base": cfg.rope_base,
+        "block_k": cfg.block_k, "seed": seed,
+    }
+
+
 def dump_weights(params, specs, path: str):
     """weights.bin: little-endian arrays at 64-byte alignment, in
     signature order. Returns the manifest table."""
@@ -161,13 +189,7 @@ def main() -> None:
           f"{len(table)} arrays")
 
     manifest = {
-        "model": {
-            "vocab": cfg.vocab, "d_model": cfg.d_model,
-            "n_heads": cfg.n_heads, "d_head": cfg.d_head,
-            "n_layers": cfg.n_layers, "d_ffn": cfg.d_ffn,
-            "n_ctx": cfg.n_ctx, "rope_base": cfg.rope_base,
-            "block_k": cfg.block_k, "seed": args.seed,
-        },
+        "model": model_manifest(cfg, args.seed),
         "batch_variants": list(BATCH_VARIANTS),
         "artifacts": artifacts,
         "weights": table,

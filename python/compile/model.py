@@ -43,6 +43,11 @@ class TinyConfig:
     vocab: int = 512
     d_model: int = 256
     n_heads: int = 8
+    # KV heads (GQA/MQA when < n_heads). The JAX reference model itself
+    # is MHA-only for now, so this must equal n_heads here; the manifest
+    # still carries it explicitly because the Rust loader
+    # (TinyModel::load) validates K/V projection widths against it.
+    n_kv_heads: int = 8
     d_head: int = 32
     n_layers: int = 4
     d_ffn: int = 768

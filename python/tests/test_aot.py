@@ -7,6 +7,7 @@ cos/sin tables vanished and every position-dependent value downstream was
 wrong — see aot.py::to_hlo_text).
 """
 
+import dataclasses
 import json
 import os
 
@@ -24,10 +25,36 @@ def artifacts_built():
     return os.path.exists(os.path.join(ARTIFACTS, "manifest.json"))
 
 
-pytestmark = pytest.mark.skipif(not artifacts_built(),
-                                reason="run `make artifacts` first")
+# Artifact-file checks need `make artifacts`; manifest-construction and
+# lowering checks run everywhere.
+requires_artifacts = pytest.mark.skipif(not artifacts_built(),
+                                        reason="run `make artifacts` first")
 
 
+def test_model_manifest_emits_n_kv_heads():
+    cfg = M.TinyConfig()
+    m = aot.model_manifest(cfg, seed=0)
+    assert m["n_kv_heads"] == cfg.n_kv_heads
+    assert m["n_heads"] % m["n_kv_heads"] == 0
+    # the Rust loader cross-checks wk/wv widths against this product
+    assert m["n_kv_heads"] * m["d_head"] <= m["d_model"]
+    assert m["seed"] == 0
+
+
+def test_model_manifest_rejects_bad_kv_shapes():
+    cfg = dataclasses.replace(M.TinyConfig(), n_kv_heads=3)  # 8 % 3 != 0
+    with pytest.raises(ValueError, match="multiple of n_kv_heads"):
+        aot.model_manifest(cfg, seed=0)
+    cfg = dataclasses.replace(M.TinyConfig(), n_kv_heads=0)
+    with pytest.raises(ValueError, match="multiple of n_kv_heads"):
+        aot.model_manifest(cfg, seed=0)
+    # divisible but grouped: the JAX reference model is MHA-only
+    cfg = dataclasses.replace(M.TinyConfig(), n_kv_heads=2)
+    with pytest.raises(ValueError, match="MHA-only"):
+        aot.model_manifest(cfg, seed=0)
+
+
+@requires_artifacts
 def test_no_elided_constants_in_any_artifact():
     for name in os.listdir(ARTIFACTS):
         if name.endswith(".hlo.txt"):
@@ -47,6 +74,7 @@ def test_hlo_text_lowering_preserves_constants():
     assert "31.5" in text  # the largest table entry is printed verbatim
 
 
+@requires_artifacts
 def test_manifest_matches_config_and_weights():
     manifest = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
     cfg = M.TinyConfig()
@@ -68,6 +96,7 @@ def test_manifest_matches_config_and_weights():
         assert w["offset"] % 64 == 0, f"{name} not 64-byte aligned"
 
 
+@requires_artifacts
 def test_weights_blob_roundtrip():
     manifest = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
     cfg = M.TinyConfig()
@@ -81,6 +110,17 @@ def test_weights_blob_roundtrip():
         np.testing.assert_array_equal(arr, np.asarray(params[name]), err_msg=name)
 
 
+@requires_artifacts
+def test_manifest_declares_n_kv_heads_on_disk():
+    # the committed artifact set must carry the explicit GQA shape the
+    # Rust loader validates (older manifests defaulted it to n_heads)
+    manifest = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    m = manifest["model"]
+    assert m["n_kv_heads"] == M.TinyConfig().n_kv_heads
+    assert m["n_heads"] % m["n_kv_heads"] == 0
+
+
+@requires_artifacts
 def test_all_declared_artifacts_exist():
     manifest = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
     for key, art in manifest["artifacts"].items():
@@ -89,6 +129,7 @@ def test_all_declared_artifacts_exist():
         assert os.path.getsize(path) > 1000, key
 
 
+@requires_artifacts
 def test_decode_artifact_parameter_count():
     # tokens, pos, kc, vc, cos, sin + every weight = HLO entry params
     manifest = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))

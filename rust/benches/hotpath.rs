@@ -11,15 +11,22 @@
 //! sweeps (8q/2kv and 32q/8kv at d=64, n=512, plus their MHA baselines)
 //! measure the KV-bandwidth win of GQA directly: each entry is annotated
 //! with its streamed `kv_bytes_per_token` and `group` factor in the JSON,
-//! so the group-factor reduction is recorded, not assumed. Also measured:
-//! allocating vs `_into` GEMV, and the full tiny-model decode step on the
-//! synthetic model (no artifacts needed, MHA and GQA shapes) in both
-//! numerics modes.
+//! so the group-factor reduction is recorded, not assumed. Paged twins
+//! (`hot/*_fused_paged … bl=16`) run the identical sweep through
+//! BlockPool/BlockTable indirection, so the full cost of paging on the
+//! hot path is a recorded ratio, not a guess. Also measured: allocating
+//! vs `_into` GEMV, and the full tiny-model decode step on the synthetic
+//! model (no artifacts needed, MHA and GQA shapes; paged KV caches) in
+//! both numerics modes.
+//!
+//! CI gates on this file's output: `bench_gate` compares every
+//! `*fused*` entry against the committed `BENCH_baseline.json` and fails
+//! the job on a >15% median-ns regression (see EXPERIMENTS.md §Perf).
 
 use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
 use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
 use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
-use swiftkv::kernels::{FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::kernels::{BlockPool, BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
 use swiftkv::model::{NumericsMode, TinyModel, WeightStore};
 use swiftkv::quant::{quantize_int8, Int4Matrix, QuantLinear};
 use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
@@ -173,6 +180,58 @@ fn main() {
         "hot/mha_fused_gqa 32q8kv d=64 n=512",
     );
 
+    // --- paged sweeps: the same 8-head fused walk through block-table
+    // indirection (BlockPool/BlockTable, block_len 16) next to its
+    // contiguous twin above — the delta is the full price of paging on
+    // the hot path (results are bit-identical; tests/prop_paged.rs)
+    {
+        let block_len = 16usize;
+        let pool = BlockPool::new(n.div_ceil(block_len), block_len, row);
+        let mut table = BlockTable::new(&pool, n);
+        table.ensure_tokens(&pool, n);
+        for t in 0..n {
+            table.k_row_mut(t).copy_from_slice(&km[t * row..(t + 1) * row]);
+            table.v_row_mut(t).copy_from_slice(&vm[t * row..(t + 1) * row]);
+            table.quantize_row(t);
+        }
+        let kv_bytes = (2 * row * std::mem::size_of::<f32>()) as f64;
+
+        let mut paged = MhaSwiftKv::new(h, dh);
+        let name = format!("hot/mha_fused_paged 8h d=64 n=512 bl={block_len}");
+        b.bench(&name, || {
+            paged.reset();
+            paged.extend_paged(&qm, &table, 0, n, scale);
+            paged.finalize_into(&mut fused_out);
+            fused_out[0]
+        });
+        b.annotate(&name, "block_len", block_len as f64);
+        b.annotate(&name, "kv_bytes_per_token", kv_bytes);
+
+        let mut paged_fxp = FxpMhaSwiftKv::new(h, dh);
+        let name = format!("hot/fxp_mha_fused_paged 8h d=64 n=512 bl={block_len}");
+        b.bench(&name, || {
+            paged_fxp.reset();
+            paged_fxp.extend_paged(&lut, &qq, &table, 0, n, fxp_scale);
+            paged_fxp.finalize_into(&mut fused_fxp);
+            fused_fxp[0].raw()
+        });
+        b.annotate(&name, "block_len", block_len as f64);
+        b.annotate(&name, "kv_bytes_per_token", kv_bytes);
+        table.release_into(&pool);
+    }
+    report_speedup(
+        &b,
+        "paging overhead (x contiguous)",
+        "hot/mha_fused_paged 8h d=64 n=512 bl=16",
+        "hot/mha_fused 8h d=64 n=512",
+    );
+    report_speedup(
+        &b,
+        "paging overhead (x contiguous)",
+        "hot/fxp_mha_fused_paged 8h d=64 n=512 bl=16",
+        "hot/fxp_mha_fused 8h d=64 n=512",
+    );
+
     // W4A8 GEMV 256→768 (tiny model's widest projection): allocating
     // wrappers vs the caller-scratch `_into` path
     let w = rng.uniform_vec(256 * 768, 0.5);
@@ -198,7 +257,7 @@ fn main() {
     let mut st = tm.new_state();
     b.bench("hot/tiny_decode_step synthetic desktop", || {
         if st.pos >= tm.n_ctx {
-            st.reset();
+            st.reset_for_reuse();
         }
         tok = (tok + 1) % tm.vocab as u32;
         tm.decode_step_into(&mut st, tok, NumericsMode::DesktopF32, &mut logits);
@@ -207,7 +266,7 @@ fn main() {
     let mut st2 = tm.new_state();
     b.bench("hot/tiny_decode_step synthetic accel", || {
         if st2.pos >= tm.n_ctx {
-            st2.reset();
+            st2.reset_for_reuse();
         }
         tok = (tok + 1) % tm.vocab as u32;
         tm.decode_step_into(&mut st2, tok, NumericsMode::Accelerator, &mut logits);
@@ -221,7 +280,7 @@ fn main() {
     let mut stg = tg.new_state();
     b.bench("hot/tiny_decode_step synthetic gqa-8q2kv desktop", || {
         if stg.pos >= tg.n_ctx {
-            stg.reset();
+            stg.reset_for_reuse();
         }
         tok = (tok + 1) % tg.vocab as u32;
         tg.decode_step_into(&mut stg, tok, NumericsMode::DesktopF32, &mut logits);
@@ -230,7 +289,7 @@ fn main() {
     let mut stg2 = tg.new_state();
     b.bench("hot/tiny_decode_step synthetic gqa-8q2kv accel", || {
         if stg2.pos >= tg.n_ctx {
-            stg2.reset();
+            stg2.reset_for_reuse();
         }
         tok = (tok + 1) % tg.vocab as u32;
         tg.decode_step_into(&mut stg2, tok, NumericsMode::Accelerator, &mut logits);
@@ -249,6 +308,12 @@ fn main() {
             let name = format!("{prefix} {mode}");
             b.annotate(&name, "kv_bytes_per_token_layer", bytes);
             b.annotate(&name, "group", group);
+            // decode-step KV now lives in paged blocks of this length
+            b.annotate(
+                &name,
+                "kv_block_len",
+                swiftkv::model::DEFAULT_KV_BLOCK_LEN as f64,
+            );
         }
     }
 
@@ -260,7 +325,7 @@ fn main() {
         let mut ai = 0u32;
         b.bench("hot/tiny_decode_step rust-desktop", || {
             if ast.pos >= am.n_ctx {
-                ast.reset();
+                ast.reset_for_reuse();
             }
             ai = (ai + 1) % am.vocab as u32;
             am.decode_step_into(&mut ast, ai, NumericsMode::DesktopF32, &mut alog);
@@ -269,7 +334,7 @@ fn main() {
         let mut ast2 = am.new_state();
         b.bench("hot/tiny_decode_step rust-accel", || {
             if ast2.pos >= am.n_ctx {
-                ast2.reset();
+                ast2.reset_for_reuse();
             }
             ai = (ai + 1) % am.vocab as u32;
             am.decode_step_into(&mut ast2, ai, NumericsMode::Accelerator, &mut alog);

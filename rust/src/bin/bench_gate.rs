@@ -1,0 +1,57 @@
+//! `bench_gate` — CI perf-regression gate over `swiftkv-bench-v1` JSON.
+//!
+//! ```text
+//! bench_gate <BENCH_baseline.json> <BENCH_current.json> \
+//!     [--max-regress-pct 15] [--gate fused]
+//! ```
+//!
+//! Compares median ns/op of every benchmark present in both documents
+//! and prints a markdown delta table (pipe it into `$GITHUB_STEP_SUMMARY`
+//! for the job summary). Exits non-zero when any benchmark whose name
+//! contains the gate substring (default `fused` — the fused-sweep hot
+//! paths) regressed by more than the threshold, so a slow hot path
+//! fails the job instead of shipping silently. An empty baseline passes
+//! vacuously: refresh `BENCH_baseline.json` from a trusted bench run to
+//! arm the gate. Comparison logic lives in
+//! [`swiftkv::util::bench::compare_bench_json`] (unit-tested in-tree).
+
+use swiftkv::util::bench::compare_bench_json;
+use swiftkv::util::cli::Args;
+use swiftkv::util::Json;
+
+fn main() {
+    match run() {
+        Ok(passed) => {
+            if !passed {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> Result<bool, String> {
+    let args = Args::parse(&["max-regress-pct", "gate"], &["help"])?;
+    if args.get_bool("help") || args.positional().len() != 2 {
+        return Err(
+            "usage: bench_gate <baseline.json> <current.json> \
+             [--max-regress-pct 15] [--gate fused]"
+                .into(),
+        );
+    }
+    let max_regress_pct = args.get_f64("max-regress-pct", 15.0)?;
+    let gate = args.get_or("gate", "fused");
+    let load = |path: &str| -> Result<Json, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("{path}: {e:?}"))
+    };
+    let baseline = load(&args.positional()[0])?;
+    let current = load(&args.positional()[1])?;
+    let report = compare_bench_json(&baseline, &current, gate, max_regress_pct)?;
+    println!("{}", report.to_markdown());
+    Ok(report.passed())
+}

@@ -4,22 +4,30 @@
 //! Same continuous-batching shape as the PJRT [`super::server`]: queue →
 //! [`super::batcher::Batcher`] → one batch step → greedy sample → retire.
 //! The batch step fans the active lanes out across OS threads with
-//! `std::thread::scope`; each lane owns its [`DecodeState`] (KV caches +
-//! [`crate::kernels::DecodeScratch`]), so a steady-state lane step
-//! performs zero heap allocation and lanes never contend on memory.
-//! Grouped-query models serve unchanged: each lane's caches are sized
-//! `n_kv_heads * d_head` per token by [`TinyModel::new_state`], so a GQA
-//! model cuts per-lane KV memory (and streamed KV bytes per step) by the
-//! group factor. Recycled lanes restart at position 0 via
-//! [`DecodeState::reset`] — caches are reused, not re-allocated.
+//! `std::thread::scope`; each lane owns its [`DecodeState`] (per-layer
+//! block tables + [`crate::kernels::DecodeScratch`]), so a steady-state
+//! lane step performs zero heap allocation and lanes never contend on
+//! memory — the KV rows live in **one shared
+//! [`crate::kernels::BlockPool`]** that every lane draws fixed-size
+//! blocks from, sized by [`CpuServeOptions::kv_block_len`] /
+//! [`CpuServeOptions::kv_pool_blocks`]; the only contended state is the
+//! pool's free list, touched once per `block_len` tokens per layer.
+//! Grouped-query models serve unchanged: the pool's rows are sized
+//! `n_kv_heads * d_head` by [`TinyModel::new_pool`], so a GQA model cuts
+//! pooled KV memory (and streamed KV bytes per step) by the group
+//! factor. Recycled lanes restart at position 0 via
+//! [`DecodeState::reset_for_reuse`], which returns their blocks to the
+//! pool for other lanes — reclamation, not re-allocation.
 
 use super::batcher::Batcher;
 use super::metrics::{Percentiles, ServeMetrics};
 use super::session::Session;
+use crate::kernels::BlockPool;
 use crate::model::tiny::{argmax, DecodeState};
-use crate::model::{LlmConfig, NumericsMode, Request, TinyModel};
+use crate::model::{LlmConfig, NumericsMode, Request, TinyModel, DEFAULT_KV_BLOCK_LEN};
 use crate::sim::{layer_sched, ArchConfig};
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// CPU serving configuration.
@@ -33,6 +41,11 @@ pub struct CpuServeOptions {
     pub max_iterations: u64,
     /// Model config used for the simulated-accelerator metrics.
     pub sim_model: LlmConfig,
+    /// Tokens per KV cache block in the shared pool.
+    pub kv_block_len: usize,
+    /// Total blocks in the shared pool; `0` sizes it for the worst case
+    /// (`lanes × blocks_per_seq`, i.e. every lane at full context).
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for CpuServeOptions {
@@ -42,6 +55,8 @@ impl Default for CpuServeOptions {
             mode: NumericsMode::DesktopF32,
             max_iterations: 0,
             sim_model: LlmConfig::llama2_7b(),
+            kv_block_len: DEFAULT_KV_BLOCK_LEN,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -50,6 +65,9 @@ impl Default for CpuServeOptions {
 pub struct CpuServeReport {
     pub sessions: Vec<Session>,
     pub metrics: ServeMetrics,
+    /// The shared KV block pool the lanes served from (all blocks are
+    /// back on its free list by the time `serve` returns).
+    pub kv_pool: Arc<BlockPool>,
 }
 
 /// The CPU decode server.
@@ -61,6 +79,7 @@ pub struct CpuServer<'m> {
 impl<'m> CpuServer<'m> {
     pub fn new(model: &'m TinyModel, opts: CpuServeOptions) -> Self {
         assert!(opts.lanes >= 1, "need at least one lane");
+        assert!(opts.kv_block_len >= 1, "need at least one token per KV block");
         assert!(
             model.n_kv_heads >= 1 && model.n_heads % model.n_kv_heads == 0,
             "model GQA shape invalid: {} query heads over {} KV heads",
@@ -68,6 +87,16 @@ impl<'m> CpuServer<'m> {
             model.n_kv_heads
         );
         CpuServer { model, opts }
+    }
+
+    /// Blocks the shared pool will hold: the configured count, or the
+    /// worst case (every lane at full context) when unset.
+    fn pool_blocks(&self) -> usize {
+        if self.opts.kv_pool_blocks > 0 {
+            self.opts.kv_pool_blocks
+        } else {
+            self.opts.lanes * self.model.blocks_per_seq(self.opts.kv_block_len)
+        }
     }
 
     /// Serve a request stream to completion (arrival times are honoured in
@@ -78,7 +107,12 @@ impl<'m> CpuServer<'m> {
         let mode = self.opts.mode;
         let vocab = model.vocab;
         let mut batcher = Batcher::new(lanes, model.n_ctx);
-        let mut states: Vec<DecodeState> = (0..lanes).map(|_| model.new_state()).collect();
+        // one block pool for every lane: blocks migrate between lanes as
+        // sequences retire (reclamation in reset_for_reuse / Drop)
+        let kv_pool = model.new_pool(self.pool_blocks(), self.opts.kv_block_len);
+        let mut states: Vec<DecodeState> = (0..lanes)
+            .map(|_| model.new_state_in(kv_pool.clone()))
+            .collect();
         let mut logits = vec![0.0f32; lanes * vocab];
 
         let mut pending: VecDeque<Request> = requests.into();
@@ -116,9 +150,12 @@ impl<'m> CpuServer<'m> {
             occupancy_acc += batcher.occupancy();
 
             // lanes starting a fresh session restart their decode state
+            // (their retired predecessor's blocks were already reclaimed
+            // at retirement below; this also covers any future path that
+            // hands a lane a new session without an idle iteration)
             for (i, st) in states.iter_mut().enumerate() {
                 if active[i] && positions[i] == 0 && st.pos != 0 {
-                    st.reset();
+                    st.reset_for_reuse();
                 }
             }
 
@@ -170,7 +207,19 @@ impl<'m> CpuServer<'m> {
             let samples: Vec<u32> = (0..lanes)
                 .map(|i| argmax(&logits[i * vocab..(i + 1) * vocab]) as u32)
                 .collect();
-            batcher.scatter_outputs(&samples, iteration);
+            let retired = batcher.scatter_outputs(&samples, iteration);
+            if !retired.is_empty() {
+                // reclaim at retirement, not at the lane's next admission:
+                // an idle lane must not pin a dead sequence's blocks while
+                // other lanes grow (a lane inactive after scatter has no
+                // session, so its blocks are unreachable)
+                let (_, _, still_active) = batcher.gather_inputs();
+                for (i, st) in states.iter_mut().enumerate() {
+                    if active[i] && !still_active[i] && st.pos != 0 {
+                        st.reset_for_reuse();
+                    }
+                }
+            }
             iter_end_ms.push(t0.elapsed().as_secs_f64() * 1e3);
 
             iteration += 1;
@@ -178,6 +227,12 @@ impl<'m> CpuServer<'m> {
                 break;
             }
         }
+
+        // retire the lane states: every block returns to the pool (the
+        // Drop impl covers panicking paths; this makes it explicit and
+        // lets callers assert full reclamation on the returned pool)
+        drop(states);
+        debug_assert_eq!(kv_pool.free_blocks(), kv_pool.total_blocks());
 
         let wall_s = t0.elapsed().as_secs_f64();
         let sessions = batcher.finished;
@@ -230,6 +285,10 @@ impl<'m> CpuServer<'m> {
                 0.0
             },
         };
-        CpuServeReport { sessions, metrics }
+        CpuServeReport {
+            sessions,
+            metrics,
+            kv_pool,
+        }
     }
 }

@@ -179,6 +179,28 @@ impl FxpMhaSwiftKv {
         }
     }
 
+    /// Extend over token positions `[from, to)` of a block-gathered
+    /// paged Q15.17 mirror ([`super::paged::BlockTable`]). Because the
+    /// rows reach [`FxpMhaSwiftKv::update_token`] in the same order with
+    /// the same per-head op sequence as [`FxpMhaSwiftKv::extend`], the
+    /// paged sweep is **bit-exact** versus the contiguous one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extend_paged(
+        &mut self,
+        lut: &Exp2Lut,
+        q: &[Fxp32],
+        table: &super::paged::BlockTable,
+        from: usize,
+        to: usize,
+        scale: Fxp32,
+    ) {
+        assert_eq!(table.row_width(), self.row_width(), "table row width mismatch");
+        assert!(table.capacity_tokens() >= to, "block table too short");
+        for t in from..to {
+            self.update_token(lut, q, table.kq_row(t), table.vq_row(t), scale);
+        }
+    }
+
     /// Eq. (8) on the divide unit, into a caller-owned buffer.
     pub fn finalize_into(&self, out: &mut [Fxp32]) {
         assert!(self.consumed > 0, "finalize before any token");
@@ -276,6 +298,47 @@ mod tests {
                 assert_eq!(a.raw(), b.raw(), "head {head} dim {i} diverged");
             }
         }
+    }
+
+    #[test]
+    fn paged_extend_bit_exact_vs_contiguous() {
+        use crate::kernels::paged::{BlockPool, BlockTable};
+        let lut = Exp2Lut::new();
+        let mut rng = Rng::seed_from_u64(24);
+        let (h, hkv, d, len) = (4usize, 2usize, 8usize, 10usize);
+        let row = hkv * d;
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * row, 1.0);
+        let v = rng.uniform_vec(len * row, 1.0);
+        let qq = vector::quantize(&q);
+        let kq = vector::quantize(&k);
+        let vq = vector::quantize(&v);
+
+        // block_len 4 → ragged last block (10 = 2·4 + 2); mirror filled
+        // through the same quantize path as the contiguous reference
+        let pool = BlockPool::new(3, 4, row);
+        let mut table = BlockTable::new(&pool, len);
+        table.ensure_tokens(&pool, len);
+        for t in 0..len {
+            table.k_row_mut(t).copy_from_slice(&k[t * row..(t + 1) * row]);
+            table.v_row_mut(t).copy_from_slice(&v[t * row..(t + 1) * row]);
+            table.quantize_row(t);
+        }
+
+        let mut contiguous = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut a = vec![Fxp32::ZERO; h * d];
+        contiguous.attend(&lut, &qq, &kq, &vq, len, scale, &mut a);
+
+        let mut paged = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        paged.extend_paged(&lut, &qq, &table, 0, 7, scale);
+        paged.extend_paged(&lut, &qq, &table, 7, len, scale);
+        let mut b = vec![Fxp32::ZERO; h * d];
+        paged.finalize_into(&mut b);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.raw(), y.raw(), "flat dim {i} diverged");
+        }
+        table.release_into(&pool);
     }
 
     #[test]

@@ -180,6 +180,26 @@ impl MhaSwiftKv {
         }
     }
 
+    /// Extend over token positions `[from, to)` of a block-gathered
+    /// paged cache ([`super::paged::BlockTable`]). Row values reach
+    /// [`MhaSwiftKv::update_token`] in the same order and through the
+    /// same per-head op sequence as [`MhaSwiftKv::extend`], so the paged
+    /// sweep is bit-identical to the contiguous one over equal rows.
+    pub fn extend_paged(
+        &mut self,
+        q: &[f32],
+        table: &super::paged::BlockTable,
+        from: usize,
+        to: usize,
+        scale: f32,
+    ) {
+        assert_eq!(table.row_width(), self.row_width(), "table row width mismatch");
+        assert!(table.capacity_tokens() >= to, "block table too short");
+        for t in from..to {
+            self.update_token(q, table.k_row(t), table.v_row(t), scale);
+        }
+    }
+
     /// Eq. (8): the deferred one-time normalization, written into a
     /// caller-owned `[n_heads * d]` buffer (no allocation).
     pub fn finalize_into(&self, out: &mut [f32]) {
@@ -375,6 +395,39 @@ mod tests {
         let mut b = vec![0.0f32; h * d];
         mha.attend(&q, &k, &v, len, 0.5, &mut b);
         assert_eq!(a, b, "reset must fully re-initialize the recurrence");
+    }
+
+    #[test]
+    fn paged_extend_bit_identical_to_contiguous() {
+        use crate::kernels::paged::{BlockPool, BlockTable};
+        let mut rng = Rng::seed_from_u64(18);
+        let (h, hkv, d, len) = (4usize, 2usize, 8usize, 11usize);
+        let row = hkv * d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = rng.uniform_vec(h * d, 1.0);
+        let k = rng.uniform_vec(len * row, 1.0);
+        let v = rng.uniform_vec(len * row, 1.0);
+
+        // block_len 3 → ragged last block (11 = 3·3 + 2)
+        let pool = BlockPool::new(4, 3, row);
+        let mut table = BlockTable::new(&pool, len);
+        table.ensure_tokens(&pool, len);
+        for t in 0..len {
+            table.k_row_mut(t).copy_from_slice(&k[t * row..(t + 1) * row]);
+            table.v_row_mut(t).copy_from_slice(&v[t * row..(t + 1) * row]);
+        }
+
+        let mut contiguous = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut a = vec![0.0f32; h * d];
+        contiguous.attend(&q, &k, &v, len, scale, &mut a);
+
+        let mut paged = MhaSwiftKv::new_grouped(h, hkv, d);
+        paged.extend_paged(&q, &table, 0, 5, scale);
+        paged.extend_paged(&q, &table, 5, len, scale);
+        let mut b = vec![0.0f32; h * d];
+        paged.finalize_into(&mut b);
+        assert_eq!(a, b, "paged sweep must be bit-identical to contiguous");
+        table.release_into(&pool);
     }
 
     #[test]

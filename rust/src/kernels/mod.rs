@@ -17,6 +17,11 @@
 //! - [`fxp_mha::FxpMhaSwiftKv`] — the same fused sweep in the
 //!   accelerator's Q15.17 + LUT-exp arithmetic, bit-exact vs. the
 //!   per-head [`crate::attention::fxp_swiftkv`] datapath,
+//! - [`paged::BlockPool`] / [`paged::BlockTable`] — the paged KV cache:
+//!   fixed-size blocks of interleaved rows drawn from one shared pool by
+//!   every sequence, walked by the `extend_paged` sweeps with the same
+//!   per-head op order (f32 bit-identical, Q15.17 bit-exact vs the
+//!   contiguous path),
 //! - [`scratch::DecodeScratch`] — caller-owned buffers making a
 //!   steady-state [`crate::model::TinyModel`] decode step allocation-free
 //!   (KV-side buffers sized `n_kv_heads · d_head` under GQA/MQA).
@@ -33,12 +38,14 @@
 
 pub mod fxp_mha;
 pub mod mha;
+pub mod paged;
 pub mod scratch;
 pub mod simd;
 
 pub use crate::quant::{gemv_w4a8_into, quantize_int8_into};
 pub use fxp_mha::FxpMhaSwiftKv;
 pub use mha::MhaSwiftKv;
+pub use paged::{BlockPool, BlockTable, KvBlock};
 pub use scratch::DecodeScratch;
 pub use simd::{axpy, dot, scale, scale_axpy};
 

@@ -1,0 +1,401 @@
+//! Paged KV cache: a shared pool of fixed-size blocks behind the fused
+//! decode sweep.
+//!
+//! The uniform per-token sweep of the SwiftKV recurrence reads every
+//! `(k_t, v_t)` cache row exactly once, which makes the KV layout the
+//! system's real memory contract. Up to now each sequence owned one
+//! contiguous token-major cache sized for the full context window —
+//! simple, but every serving lane pays worst-case memory even for short
+//! sequences, and long contexts cannot outgrow their lane. This module
+//! replaces that contract with block-table indirection (the paged-KV
+//! design of vLLM, here over the paper's interleaved token-major rows):
+//!
+//! - [`KvBlock`] — `block_len` interleaved rows of `n_kv_heads · d` f32
+//!   K and V, plus their Q15.17 mirrors (the accelerator datapath's
+//!   no-re-quantization contract rides along per block),
+//! - [`BlockPool`] — a fixed set of blocks allocated once up front and
+//!   recycled through a mutex-guarded free list; many sequences (serving
+//!   lanes) draw from one pool and return blocks on
+//!   [`crate::model::tiny::DecodeState::reset_for_reuse`],
+//! - [`BlockTable`] — a per-sequence (per-layer) ordered list of
+//!   checked-out blocks mapping logical token position `t` to block
+//!   `t / block_len`, row `t % block_len`.
+//!
+//! Blocks own their storage (`Vec`s moved in and out of the pool), so
+//! sharing one pool across `std::thread::scope` lanes is plain safe
+//! Rust: the free list is the only contended state, touched once per
+//! `block_len` tokens per layer. After pool warm-up (construction
+//! allocates every block eagerly) the decode hot path stays
+//! **allocation-free**: `alloc`/`release` move blocks through a
+//! pre-reserved `Vec`, and each table reserves its worst-case block
+//! count at creation.
+//!
+//! The paged sweeps ([`super::mha::MhaSwiftKv::extend_paged`],
+//! [`super::fxp_mha::FxpMhaSwiftKv::extend_paged`]) walk block-gathered
+//! rows through the *same* `update_token` as the contiguous path, in the
+//! same order — so the f32 path is bit-identical and the Q15.17 path is
+//! bit-exact versus the contiguous cache (asserted across block lengths,
+//! ragged last blocks, and recycled pools by `tests/prop_paged.rs`).
+
+use crate::fxp::{vector, Fxp32};
+use std::sync::Mutex;
+
+/// One fixed-size cache block: `block_len` interleaved token-major rows
+/// of f32 K/V plus their Q15.17 mirrors.
+#[derive(Debug)]
+pub struct KvBlock {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    kq: Vec<Fxp32>,
+    vq: Vec<Fxp32>,
+}
+
+impl KvBlock {
+    fn new(block_len: usize, row: usize) -> KvBlock {
+        let n = block_len * row;
+        KvBlock {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            kq: vec![Fxp32::ZERO; n],
+            vq: vec![Fxp32::ZERO; n],
+        }
+    }
+
+    /// Quantize row `o` of the f32 K/V into the Q15.17 mirror (the
+    /// append-once mirror contract: history is never re-quantized).
+    #[inline]
+    fn quantize_row(&mut self, o: usize, row: usize) {
+        let at = o * row;
+        vector::quantize_into(&self.k[at..at + row], &mut self.kq[at..at + row]);
+        vector::quantize_into(&self.v[at..at + row], &mut self.vq[at..at + row]);
+    }
+}
+
+/// A fixed pool of [`KvBlock`]s shared by every sequence (serving lane)
+/// of one model shape. All blocks are allocated eagerly at construction;
+/// afterwards [`BlockPool::alloc`] / [`BlockPool::release`] only move
+/// blocks through the pre-reserved free list — no heap traffic.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_len: usize,
+    row: usize,
+    total: usize,
+    free: Mutex<Vec<KvBlock>>,
+}
+
+impl BlockPool {
+    /// Eagerly allocate `blocks` blocks of `block_len` rows of width
+    /// `row` (`n_kv_heads · d`).
+    pub fn new(blocks: usize, block_len: usize, row: usize) -> BlockPool {
+        assert!(blocks > 0, "pool needs at least one block");
+        assert!(block_len > 0, "block_len must be positive");
+        assert!(row > 0, "row width must be positive");
+        let mut free = Vec::with_capacity(blocks);
+        for _ in 0..blocks {
+            free.push(KvBlock::new(block_len, row));
+        }
+        BlockPool {
+            block_len,
+            row,
+            total: blocks,
+            free: Mutex::new(free),
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    /// Width of one interleaved cache row (`n_kv_heads · d`).
+    pub fn row_width(&self) -> usize {
+        self.row
+    }
+
+    /// Total blocks owned by the pool (checked out + free).
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    /// Blocks currently available for checkout.
+    pub fn free_blocks(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Bytes of cache storage per block (f32 K/V + Q15.17 mirrors) —
+    /// the pool-sizing arithmetic of EXPERIMENTS.md §Paged-KV.
+    pub fn bytes_per_block(&self) -> usize {
+        let n = self.block_len * self.row;
+        2 * n * std::mem::size_of::<f32>() + 2 * n * std::mem::size_of::<Fxp32>()
+    }
+
+    /// Check a block out of the pool, or `None` when exhausted.
+    pub fn try_alloc(&self) -> Option<KvBlock> {
+        self.lock().pop()
+    }
+
+    /// Check a block out of the pool.
+    ///
+    /// # Panics
+    /// When the pool is exhausted — size it for the worst-case live set
+    /// (`lanes × n_layers × ⌈n_ctx / block_len⌉` for the CPU server, or
+    /// raise `--kv-pool-blocks`).
+    pub fn alloc(&self) -> KvBlock {
+        self.try_alloc().unwrap_or_else(|| {
+            panic!(
+                "KV block pool exhausted ({} blocks of {} tokens in flight); \
+                 size the pool for the worst-case live set",
+                self.total, self.block_len
+            )
+        })
+    }
+
+    /// Return a checked-out block to the pool.
+    pub fn release(&self, block: KvBlock) {
+        debug_assert_eq!(block.k.len(), self.block_len * self.row, "foreign block");
+        let mut free = self.lock();
+        debug_assert!(free.len() < self.total, "released more blocks than allocated");
+        free.push(block);
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<KvBlock>> {
+        // a lane that panicked mid-step poisons the lock; the free list
+        // itself is always in a consistent state (push/pop are atomic
+        // under the guard), so recover rather than cascade the panic
+        self.free.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Per-sequence (per-layer) block-table indirection: an ordered list of
+/// checked-out blocks mapping token position `t` to block
+/// `t / block_len`, row `t % block_len`. Capacity for the worst case
+/// (`max_tokens`) is reserved at creation so appends never allocate.
+#[derive(Debug)]
+pub struct BlockTable {
+    blocks: Vec<KvBlock>,
+    block_len: usize,
+    row: usize,
+}
+
+impl BlockTable {
+    /// Empty table for up to `max_tokens` positions of rows shaped like
+    /// `pool`'s blocks. Checks no blocks out yet.
+    pub fn new(pool: &BlockPool, max_tokens: usize) -> BlockTable {
+        BlockTable {
+            blocks: Vec::with_capacity(max_tokens.div_ceil(pool.block_len)),
+            block_len: pool.block_len,
+            row: pool.row,
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    /// Width of one interleaved cache row.
+    pub fn row_width(&self) -> usize {
+        self.row
+    }
+
+    /// Blocks currently checked out by this table.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Token positions the checked-out blocks can hold.
+    pub fn capacity_tokens(&self) -> usize {
+        self.blocks.len() * self.block_len
+    }
+
+    /// Check out blocks from `pool` until at least `tokens` positions
+    /// are mapped. Amortized cost: one pool round-trip per `block_len`
+    /// tokens; no heap allocation (the block list is pre-reserved).
+    pub fn ensure_tokens(&mut self, pool: &BlockPool, tokens: usize) {
+        assert_eq!(pool.block_len, self.block_len, "pool/table block_len mismatch");
+        assert_eq!(pool.row, self.row, "pool/table row width mismatch");
+        while self.capacity_tokens() < tokens {
+            self.blocks.push(pool.alloc());
+        }
+    }
+
+    /// Return every checked-out block to `pool` (lane recycling /
+    /// sequence retirement). The table is empty afterwards.
+    pub fn release_into(&mut self, pool: &BlockPool) {
+        for block in self.blocks.drain(..) {
+            pool.release(block);
+        }
+    }
+
+    #[inline]
+    fn locate(&self, t: usize) -> (usize, usize) {
+        let b = t / self.block_len;
+        assert!(b < self.blocks.len(), "token {t} beyond mapped blocks");
+        (b, (t % self.block_len) * self.row)
+    }
+
+    /// f32 K row at token position `t`.
+    #[inline]
+    pub fn k_row(&self, t: usize) -> &[f32] {
+        let (b, at) = self.locate(t);
+        &self.blocks[b].k[at..at + self.row]
+    }
+
+    /// f32 V row at token position `t`.
+    #[inline]
+    pub fn v_row(&self, t: usize) -> &[f32] {
+        let (b, at) = self.locate(t);
+        &self.blocks[b].v[at..at + self.row]
+    }
+
+    /// Q15.17 K mirror row at token position `t`.
+    #[inline]
+    pub fn kq_row(&self, t: usize) -> &[Fxp32] {
+        let (b, at) = self.locate(t);
+        &self.blocks[b].kq[at..at + self.row]
+    }
+
+    /// Q15.17 V mirror row at token position `t`.
+    #[inline]
+    pub fn vq_row(&self, t: usize) -> &[Fxp32] {
+        let (b, at) = self.locate(t);
+        &self.blocks[b].vq[at..at + self.row]
+    }
+
+    /// Mutable f32 K row at token position `t`.
+    #[inline]
+    pub fn k_row_mut(&mut self, t: usize) -> &mut [f32] {
+        let (b, at) = self.locate(t);
+        &mut self.blocks[b].k[at..at + self.row]
+    }
+
+    /// Mutable f32 V row at token position `t`.
+    #[inline]
+    pub fn v_row_mut(&mut self, t: usize) -> &mut [f32] {
+        let (b, at) = self.locate(t);
+        &mut self.blocks[b].v[at..at + self.row]
+    }
+
+    /// Quantize the f32 K/V row at `t` into the Q15.17 mirror.
+    #[inline]
+    pub fn quantize_row(&mut self, t: usize) {
+        let b = t / self.block_len;
+        assert!(b < self.blocks.len(), "token {t} beyond mapped blocks");
+        let row = self.row;
+        self.blocks[b].quantize_row(t % self.block_len, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_allocates_eagerly_and_recycles() {
+        let pool = BlockPool::new(3, 4, 8);
+        assert_eq!(pool.total_blocks(), 3);
+        assert_eq!(pool.free_blocks(), 3);
+        assert_eq!(pool.block_len(), 4);
+        assert_eq!(pool.row_width(), 8);
+
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.free_blocks(), 1);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.free_blocks(), 3);
+    }
+
+    #[test]
+    fn try_alloc_reports_exhaustion() {
+        let pool = BlockPool::new(1, 2, 4);
+        let blk = pool.try_alloc().expect("one block available");
+        assert!(pool.try_alloc().is_none());
+        pool.release(blk);
+        assert!(pool.try_alloc().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "KV block pool exhausted")]
+    fn alloc_panics_when_exhausted() {
+        let pool = BlockPool::new(1, 2, 4);
+        let _held = pool.alloc();
+        let _ = pool.alloc();
+    }
+
+    #[test]
+    fn table_maps_tokens_to_block_rows() {
+        let pool = BlockPool::new(4, 3, 2);
+        let mut table = BlockTable::new(&pool, 10);
+        assert_eq!(table.capacity_tokens(), 0);
+        table.ensure_tokens(&pool, 7); // 3 blocks of 3 rows, last ragged
+        assert_eq!(table.num_blocks(), 3);
+        assert_eq!(table.capacity_tokens(), 9);
+        assert_eq!(pool.free_blocks(), 1);
+
+        for t in 0..7 {
+            table.k_row_mut(t).copy_from_slice(&[t as f32, -(t as f32)]);
+            table.v_row_mut(t).copy_from_slice(&[10.0 + t as f32, 0.5]);
+        }
+        for t in 0..7 {
+            assert_eq!(table.k_row(t), &[t as f32, -(t as f32)]);
+            assert_eq!(table.v_row(t), &[10.0 + t as f32, 0.5]);
+        }
+
+        table.release_into(&pool);
+        assert_eq!(table.num_blocks(), 0);
+        assert_eq!(pool.free_blocks(), 4);
+    }
+
+    #[test]
+    fn ensure_tokens_is_idempotent() {
+        let pool = BlockPool::new(4, 2, 2);
+        let mut table = BlockTable::new(&pool, 8);
+        table.ensure_tokens(&pool, 3);
+        assert_eq!(table.num_blocks(), 2);
+        table.ensure_tokens(&pool, 3);
+        table.ensure_tokens(&pool, 4); // still fits in 2 blocks
+        assert_eq!(table.num_blocks(), 2);
+        table.ensure_tokens(&pool, 5);
+        assert_eq!(table.num_blocks(), 3);
+        table.release_into(&pool);
+    }
+
+    #[test]
+    fn quantize_row_mirrors_f32_rows() {
+        let pool = BlockPool::new(2, 2, 3);
+        let mut table = BlockTable::new(&pool, 4);
+        table.ensure_tokens(&pool, 3);
+        for t in 0..3 {
+            let vals = [0.25 * t as f32, -1.5, 2.0];
+            table.k_row_mut(t).copy_from_slice(&vals);
+            table.v_row_mut(t).copy_from_slice(&vals);
+            table.quantize_row(t);
+        }
+        for t in 0..3 {
+            for (q, &f) in table.kq_row(t).iter().zip(table.k_row(t)) {
+                assert_eq!(q.raw(), Fxp32::from_f32(f).raw());
+            }
+            for (q, &f) in table.vq_row(t).iter().zip(table.v_row(t)) {
+                assert_eq!(q.raw(), Fxp32::from_f32(f).raw());
+            }
+        }
+        table.release_into(&pool);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond mapped blocks")]
+    fn unmapped_token_panics() {
+        let pool = BlockPool::new(2, 2, 2);
+        let mut table = BlockTable::new(&pool, 4);
+        table.ensure_tokens(&pool, 2);
+        let _ = table.k_row(2);
+    }
+
+    #[test]
+    fn bytes_per_block_accounts_mirrors() {
+        let pool = BlockPool::new(1, 16, 128);
+        // 16 rows × 128 lanes × (K + V) × (f32 + Q15.17) = 32 KiB
+        assert_eq!(pool.bytes_per_block(), 16 * 128 * 2 * (4 + 4));
+    }
+}

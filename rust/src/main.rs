@@ -5,13 +5,17 @@
 //! swiftkv exhibits [--only fig7a|fig7b|table2|table3|table4|fig8a|fig8b|explut]
 //! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
 //! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
+//!                  [--kv-block-len 16] [--kv-pool-blocks 0]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 
 #[cfg(feature = "pjrt")]
 use swiftkv::coordinator::{ServeOptions, Server};
 use swiftkv::coordinator::{CpuServeOptions, CpuServer};
-use swiftkv::model::{LlmConfig, NumericsMode, TinyModel, WeightStore, WorkloadGen, WorkloadSpec};
+use swiftkv::model::{
+    LlmConfig, NumericsMode, TinyModel, WeightStore, WorkloadGen, WorkloadSpec,
+    DEFAULT_KV_BLOCK_LEN,
+};
 use swiftkv::report;
 #[cfg(feature = "pjrt")]
 use swiftkv::runtime::Engine;
@@ -97,6 +101,13 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
     };
     let reqs = WorkloadGen::new(workload_spec(args, tm.vocab)?).generate();
     let lanes = args.get_usize("batch", 8)?;
+    // paged-KV pool shape: tokens per block, and total blocks shared by
+    // every lane (0 = worst case, all lanes at full context)
+    let kv_block_len = args.get_usize("kv-block-len", DEFAULT_KV_BLOCK_LEN)?;
+    if kv_block_len == 0 {
+        return Err("--kv-block-len must be at least 1".into());
+    }
+    let kv_pool_blocks = args.get_usize("kv-pool-blocks", 0)?;
     let report = CpuServer::new(
         &tm,
         CpuServeOptions {
@@ -104,10 +115,20 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
             mode: NumericsMode::DesktopF32,
             max_iterations: 0,
             sim_model: LlmConfig::llama2_7b(),
+            kv_block_len,
+            kv_pool_blocks,
         },
     )
     .serve(reqs);
     println!("{}", report.metrics.format_table());
+    let pool = &report.kv_pool;
+    println!(
+        "kv pool: {} blocks x {} tokens ({:.2} MiB incl. Q15.17 mirror), row width {}",
+        pool.total_blocks(),
+        pool.block_len(),
+        (pool.total_blocks() * pool.bytes_per_block()) as f64 / (1024.0 * 1024.0),
+        pool.row_width(),
+    );
     Ok(())
 }
 
@@ -115,7 +136,7 @@ fn run() -> Result<(), String> {
     let args = Args::parse(
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
-            "kv-heads",
+            "kv-heads", "kv-block-len", "kv-pool-blocks",
         ],
         &["help"],
     )?;

@@ -14,28 +14,41 @@
 //! Both modes share the exact integer GEMV, so they differ ONLY in the
 //! attention datapath — precisely the contribution Table I isolates.
 //!
-//! Hot-path structure (§Perf): the KV caches are **token-major
-//! interleaved** (`[layer][pos][kv_head * d_head]`), so one decode step
-//! streams each cache row once and advances *every* head in a single
-//! fused sweep ([`crate::kernels::MhaSwiftKv`] /
-//! [`crate::kernels::FxpMhaSwiftKv`]) — the software analogue of the
-//! SwiftKV-MHA pipeline of Fig. 5. Grouped-query attention is native:
-//! with `n_kv_heads < n_heads` the cache rows (and the Q15.17 mirror)
-//! shrink to `n_kv_heads · d_head` per token and each KV-head slice
-//! feeds its whole group of query heads. The accelerator mode additionally
-//! keeps a Q15.17 mirror of the cache, appended once per token, so no
+//! Hot-path structure (§Perf): the KV caches are **paged** — token-major
+//! interleaved rows (`[pos][kv_head * d_head]`) stored in fixed-size
+//! blocks drawn from a [`BlockPool`], mapped per layer by a
+//! [`BlockTable`] — so one decode step streams each cache row once and
+//! advances *every* head in a single fused sweep
+//! ([`crate::kernels::MhaSwiftKv::extend_paged`] /
+//! [`crate::kernels::FxpMhaSwiftKv::extend_paged`]) — the software
+//! analogue of the SwiftKV-MHA pipeline of Fig. 5. Many sequences
+//! (serving lanes) share one pool and return their blocks on
+//! [`DecodeState::reset_for_reuse`], so memory is bounded by the live
+//! token set, not `lanes × n_ctx`. Grouped-query attention is native:
+//! with `n_kv_heads < n_heads` the cache rows (and the Q15.17 mirror
+//! carried inside each block) shrink to `n_kv_heads · d_head` per token
+//! and each KV-head slice feeds its whole group of query heads. The
+//! accelerator mode's Q15.17 mirror is appended once per token, so no
 //! re-quantization of history ever happens. All intermediates live in a
-//! per-sequence [`DecodeScratch`]; a steady-state
+//! per-sequence [`DecodeScratch`]; after pool warm-up a steady-state
 //! [`TinyModel::decode_step_into`] performs **zero heap allocation**
-//! (asserted by `tests/alloc_hotpath.rs`).
+//! (asserted by `tests/alloc_hotpath.rs`), block-boundary crossings
+//! included — the pool allocates every block eagerly and `alloc`/
+//! `release` only move them through a pre-reserved free list.
 
 use super::weights::WeightStore;
 use crate::fxp::{vector, Exp2Lut, Fxp32};
-use crate::kernels::DecodeScratch;
+use crate::kernels::{BlockPool, BlockTable, DecodeScratch};
 use crate::quant::{Int4Matrix, QuantLinear};
 use crate::rope::{rope_apply_cached_into, RopeState};
 use crate::util::Rng;
 use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Default tokens per KV cache block (`swiftkv serve --kv-block-len`
+/// overrides). 16 rows keeps block-table overhead ≪ 1 % of the sweep
+/// while bounding per-sequence over-allocation to 15 rows per layer.
+pub const DEFAULT_KV_BLOCK_LEN: usize = 16;
 
 /// Which datapath to model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,45 +155,62 @@ pub struct TinyModel {
     lut: Exp2Lut,
 }
 
-/// Mutable per-sequence decode state: token-major interleaved KV caches
-/// (f32 + Q15.17 mirror), the RoPE recurrence, and the pre-allocated
-/// [`DecodeScratch`].
+/// Mutable per-sequence decode state: per-layer [`BlockTable`]s over a
+/// (possibly shared) [`BlockPool`] holding the token-major interleaved
+/// KV rows (f32 + Q15.17 mirror), the RoPE recurrence, and the
+/// pre-allocated [`DecodeScratch`].
 pub struct DecodeState {
-    /// `[layer][pos][kv_head * d_head]` token-major K cache: all KV heads'
-    /// rows for one position are contiguous (the fused-sweep layout; rows
-    /// shrink by the group factor under GQA/MQA).
-    kc: Vec<f32>,
-    vc: Vec<f32>,
-    /// Q15.17 mirrors for the accelerator datapath, appended once per
-    /// token — history is never re-quantized.
-    kq: Vec<Fxp32>,
-    vq: Vec<Fxp32>,
+    /// One block table per layer: logical position `t` of layer `l`
+    /// lives in `tables[l]` at block `t / block_len`, row
+    /// `t % block_len` (rows shrink by the group factor under GQA/MQA).
+    tables: Vec<BlockTable>,
+    /// The pool the tables draw from — private to this sequence for
+    /// [`TinyModel::new_state`], shared across lanes when created via
+    /// [`TinyModel::new_state_in`].
+    pool: Arc<BlockPool>,
     /// Token rows (per layer) present in the Q15.17 mirror. Lags `pos`
     /// when steps run in `DesktopF32` mode; the next `Accelerator` step
     /// backfills the gap so modes can be mixed freely on one state.
     fxp_rows: usize,
     rope: RopeState,
     pub pos: usize,
-    n_ctx: usize,
-    n_kv_heads: usize,
     d_head: usize,
     rope_base: f64,
     scratch: DecodeScratch,
 }
 
 impl DecodeState {
-    /// Restart the state for a new sequence without re-allocating the
-    /// caches (lane recycling in the CPU batch server). Stale cache rows
-    /// are never read: row `t` is rewritten at step `t` before any read.
-    pub fn reset(&mut self) {
+    /// Restart the state for a new sequence, returning every KV block to
+    /// the pool (lane recycling in the CPU batch server: reclaimed
+    /// blocks immediately serve other lanes). Stale block contents are
+    /// never read: row `t` is rewritten at step `t` before any read.
+    pub fn reset_for_reuse(&mut self) {
+        for table in &mut self.tables {
+            table.release_into(&self.pool);
+        }
         self.pos = 0;
         self.fxp_rows = 0;
         self.rope = RopeState::new(self.d_head, self.rope_base);
     }
 
-    /// Width of one interleaved KV cache row (`n_kv_heads * d_head`).
-    fn row(&self) -> usize {
-        self.n_kv_heads * self.d_head
+    /// The pool this state draws its KV blocks from.
+    pub fn kv_pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    /// KV blocks currently checked out across all layers.
+    pub fn kv_blocks_in_use(&self) -> usize {
+        self.tables.iter().map(BlockTable::num_blocks).sum()
+    }
+}
+
+impl Drop for DecodeState {
+    /// A retired sequence returns its blocks to the pool — the fixed
+    /// pool stays whole for the remaining lanes.
+    fn drop(&mut self) {
+        for table in &mut self.tables {
+            table.release_into(&self.pool);
+        }
     }
 }
 
@@ -310,22 +340,56 @@ impl TinyModel {
         }
     }
 
-    /// Fresh decode state (caches + RoPE recurrence + scratch). The KV
-    /// caches (and Q15.17 mirror) hold `n_kv_heads * d_head` per token —
-    /// the group-factor KV shrink under GQA/MQA.
+    /// KV blocks one sequence needs at the full context window
+    /// (`n_layers × ⌈n_ctx / block_len⌉`) — the worst-case live set per
+    /// lane, and the unit of the pool-sizing math in
+    /// EXPERIMENTS.md §Paged-KV.
+    pub fn blocks_per_seq(&self, block_len: usize) -> usize {
+        assert!(block_len > 0, "block_len must be positive");
+        self.n_layers * self.n_ctx.div_ceil(block_len)
+    }
+
+    /// A block pool shaped for this model's KV rows
+    /// (`n_kv_heads · d_head` wide). `blocks` bounds the total live
+    /// tokens across every sequence drawing from it.
+    pub fn new_pool(&self, blocks: usize, block_len: usize) -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(
+            blocks,
+            block_len,
+            self.n_kv_heads * self.d_head,
+        ))
+    }
+
+    /// Fresh decode state over a private pool sized for one full-context
+    /// sequence at [`DEFAULT_KV_BLOCK_LEN`]. The KV rows (and Q15.17
+    /// mirror) hold `n_kv_heads * d_head` per token — the group-factor
+    /// KV shrink under GQA/MQA.
     pub fn new_state(&self) -> DecodeState {
-        let row = self.n_kv_heads * self.d_head;
-        let cache = self.n_layers * self.n_ctx * row;
+        let pool = self.new_pool(
+            self.blocks_per_seq(DEFAULT_KV_BLOCK_LEN),
+            DEFAULT_KV_BLOCK_LEN,
+        );
+        self.new_state_in(pool)
+    }
+
+    /// Fresh decode state drawing its KV blocks from `pool` — the
+    /// multi-lane form: every serving lane holds a clone of one shared
+    /// pool handle and blocks migrate between lanes through it.
+    pub fn new_state_in(&self, pool: Arc<BlockPool>) -> DecodeState {
+        assert_eq!(
+            pool.row_width(),
+            self.n_kv_heads * self.d_head,
+            "pool row width does not match the model's n_kv_heads * d_head"
+        );
+        let tables = (0..self.n_layers)
+            .map(|_| BlockTable::new(&pool, self.n_ctx))
+            .collect();
         DecodeState {
-            kc: vec![0.0; cache],
-            vc: vec![0.0; cache],
-            kq: vec![Fxp32::ZERO; cache],
-            vq: vec![Fxp32::ZERO; cache],
+            tables,
+            pool,
             fxp_rows: 0,
             rope: RopeState::new(self.d_head, self.rope_base),
             pos: 0,
-            n_ctx: self.n_ctx,
-            n_kv_heads: self.n_kv_heads,
             d_head: self.d_head,
             rope_base: self.rope_base,
             scratch: DecodeScratch::new(self.n_heads, self.n_kv_heads, self.d_head, self.d_ffn),
@@ -344,8 +408,9 @@ impl TinyModel {
     /// One decode step into a caller-owned logits buffer. Steady-state
     /// this performs **no heap allocation**: every intermediate lives in
     /// the state's [`DecodeScratch`], the fused multi-head SwiftKV states
-    /// are `reset()` per layer, and each KV cache row is written once and
-    /// streamed once per step.
+    /// are `reset()` per layer, each KV cache row is written once and
+    /// streamed once per step, and block-boundary crossings only move
+    /// pre-allocated blocks out of the pool's free list.
     pub fn decode_step_into(
         &self,
         st: &mut DecodeState,
@@ -359,9 +424,6 @@ impl TinyModel {
         let d = self.d_model;
         let (h, dh) = (self.n_heads, self.d_head);
         let h_kv = self.n_kv_heads;
-        let row = st.row();
-        debug_assert_eq!(row, h_kv * dh);
-        let n_ctx = self.n_ctx;
         let scale = 1.0 / (dh as f32).sqrt();
         let fxp_scale = Fxp32::from_f64(1.0 / (dh as f64).sqrt());
 
@@ -375,14 +437,20 @@ impl TinyModel {
 
         // split the state into disjoint mutable borrows
         let DecodeState {
-            kc,
-            vc,
-            kq,
-            vq,
+            tables,
+            pool,
             rope,
             scratch: sc,
             ..
         } = st;
+        debug_assert_eq!(pool.row_width(), h_kv * dh);
+
+        // map this step's row in every layer up front: one pool
+        // round-trip per block_len tokens per layer, no heap allocation
+        // (blocks are pre-allocated, the block lists pre-reserved)
+        for table in tables.iter_mut() {
+            table.ensure_tokens(pool, len);
+        }
 
         sc.x
             .copy_from_slice(&self.embedding[token as usize * d..(token as usize + 1) * d]);
@@ -394,10 +462,9 @@ impl TinyModel {
             lw.wv.forward_into(&sc.xn, &mut sc.qi8, &mut sc.v);
 
             // rotate q (all query heads) into scratch and k (KV heads
-            // only) directly into this position's interleaved cache row;
-            // store v alongside
-            let at = (l * n_ctx + pos) * row;
-            let lstart = l * n_ctx * row;
+            // only) directly into this position's block-mapped
+            // interleaved cache row; store v alongside
+            let table = &mut tables[l];
             {
                 for head in 0..h {
                     let o = head * dh;
@@ -408,7 +475,7 @@ impl TinyModel {
                         &mut sc.q_rot[o..o + dh],
                     );
                 }
-                let krow = &mut kc[at..at + row];
+                let krow = table.k_row_mut(pos);
                 for head in 0..h_kv {
                     let o = head * dh;
                     rope_apply_cached_into(
@@ -419,15 +486,14 @@ impl TinyModel {
                     );
                 }
             }
-            vc[at..at + row].copy_from_slice(&sc.v);
+            table.v_row_mut(pos).copy_from_slice(&sc.v);
 
             match mode {
                 NumericsMode::DesktopF32 => {
-                    // fused f32 sweep: every cache row feeds all heads once
-                    let k_layer = &kc[lstart..lstart + len * row];
-                    let v_layer = &vc[lstart..lstart + len * row];
+                    // fused f32 sweep over the block-gathered rows: every
+                    // cache row feeds all heads once
                     sc.mha.reset();
-                    sc.mha.extend(&sc.q_rot, k_layer, v_layer, 0, len, scale);
+                    sc.mha.extend_paged(&sc.q_rot, table, 0, len, scale);
                     sc.mha.finalize_into(&mut sc.attn_out);
                 }
                 NumericsMode::Accelerator => {
@@ -439,15 +505,11 @@ impl TinyModel {
                     // never re-quantized.
                     vector::quantize_into(&sc.q_rot, &mut sc.q_fxp);
                     for t in fxp_from..len {
-                        let rat = (l * n_ctx + t) * row;
-                        vector::quantize_into(&kc[rat..rat + row], &mut kq[rat..rat + row]);
-                        vector::quantize_into(&vc[rat..rat + row], &mut vq[rat..rat + row]);
+                        table.quantize_row(t);
                     }
-                    let kq_layer = &kq[lstart..lstart + len * row];
-                    let vq_layer = &vq[lstart..lstart + len * row];
                     sc.fxp_mha.reset();
                     sc.fxp_mha
-                        .extend(&self.lut, &sc.q_fxp, kq_layer, vq_layer, 0, len, fxp_scale);
+                        .extend_paged(&self.lut, &sc.q_fxp, table, 0, len, fxp_scale);
                     sc.fxp_mha.finalize_into(&mut sc.attn_fxp);
                     vector::dequantize_into(&sc.attn_fxp, &mut sc.attn_out);
                 }
@@ -480,7 +542,8 @@ impl TinyModel {
     }
 
     /// Debug access to cache rows (cross-validation against the JAX side).
-    /// Returns the `[d_head]` K/V slices of (layer, **KV** head, position).
+    /// Returns the `[d_head]` K/V slices of (layer, **KV** head, position),
+    /// read through the layer's block table.
     pub fn debug_cache<'a>(
         &self,
         st: &'a DecodeState,
@@ -489,9 +552,11 @@ impl TinyModel {
         t: usize,
     ) -> (&'a [f32], &'a [f32]) {
         assert!(h < self.n_kv_heads, "KV head out of range");
-        let row = self.n_kv_heads * self.d_head;
-        let at = (l * st.n_ctx + t) * row + h * self.d_head;
-        (&st.kc[at..at + self.d_head], &st.vc[at..at + self.d_head])
+        let o = h * self.d_head;
+        (
+            &st.tables[l].k_row(t)[o..o + self.d_head],
+            &st.tables[l].v_row(t)[o..o + self.d_head],
+        )
     }
 
     /// Debug access to the RoPE recurrence values.
@@ -676,12 +741,59 @@ mod tests {
         for &t in &[3u32, 5, 7] {
             m.decode_step(&mut st, t, NumericsMode::Accelerator);
         }
-        st.reset();
+        assert!(st.kv_blocks_in_use() > 0);
+        st.reset_for_reuse();
         assert_eq!(st.pos, 0);
+        // reclamation: every block is back in the pool
+        assert_eq!(st.kv_blocks_in_use(), 0);
+        assert_eq!(
+            st.kv_pool().free_blocks(),
+            st.kv_pool().total_blocks(),
+            "reset_for_reuse must return all blocks to the pool"
+        );
         let a = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
         let mut fresh = m.new_state();
         let b = m.decode_step(&mut fresh, 11, NumericsMode::Accelerator);
         assert_eq!(a, b, "recycled state must decode like a fresh one");
+    }
+
+    #[test]
+    fn dropping_a_state_returns_blocks_to_the_shared_pool() {
+        let m = tiny_synth();
+        let pool = m.new_pool(m.blocks_per_seq(4), 4);
+        {
+            let mut st = m.new_state_in(pool.clone());
+            for &t in &[3u32, 5, 7, 9, 2] {
+                m.decode_step(&mut st, t, NumericsMode::DesktopF32);
+            }
+            assert!(pool.free_blocks() < pool.total_blocks());
+        }
+        assert_eq!(pool.free_blocks(), pool.total_blocks());
+    }
+
+    #[test]
+    fn block_len_does_not_change_decode_results() {
+        // the storage contract changed; the numbers must not — decode
+        // over 1-, 3- and 16-token blocks is bit-identical per mode
+        let m = tiny_synth_gqa();
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut base_st = m.new_state();
+            let mut base = Vec::new();
+            for &t in &[1u32, 9, 30, 2, 2, 17] {
+                base.push(m.decode_step(&mut base_st, t, mode));
+            }
+            for block_len in [1usize, 3, 16] {
+                let pool = m.new_pool(m.blocks_per_seq(block_len), block_len);
+                let mut st = m.new_state_in(pool);
+                for (i, &t) in [1u32, 9, 30, 2, 2, 17].iter().enumerate() {
+                    let logits = m.decode_step(&mut st, t, mode);
+                    assert_eq!(
+                        logits, base[i],
+                        "{mode:?} bl={block_len} step {i}: paged decode diverged"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -698,19 +810,20 @@ mod tests {
         let logits = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
         assert!(logits.iter().all(|x| x.is_finite()));
         assert_eq!(st.fxp_rows, 4);
-        let row = m.n_kv_heads * m.d_head;
         for l in 0..m.n_layers {
             for t in 0..4 {
-                let at = (l * m.n_ctx + t) * row;
-                for i in 0..row {
+                let table = &st.tables[l];
+                for (i, (q, &f)) in table.kq_row(t).iter().zip(table.k_row(t)).enumerate() {
                     assert_eq!(
-                        st.kq[at + i].raw(),
-                        Fxp32::from_f32(st.kc[at + i]).raw(),
+                        q.raw(),
+                        Fxp32::from_f32(f).raw(),
                         "k mirror stale at layer {l} row {t} lane {i}"
                     );
+                }
+                for (i, (q, &f)) in table.vq_row(t).iter().zip(table.v_row(t)).enumerate() {
                     assert_eq!(
-                        st.vq[at + i].raw(),
-                        Fxp32::from_f32(st.vc[at + i]).raw(),
+                        q.raw(),
+                        Fxp32::from_f32(f).raw(),
                         "v mirror stale at layer {l} row {t} lane {i}"
                     );
                 }
@@ -744,12 +857,21 @@ mod tests {
         assert_eq!(m.layers[0].wk.dout(), d_kv);
         assert_eq!(m.layers[0].wv.dout(), d_kv);
         assert_eq!(m.layers[0].wq.dout(), m.d_model);
+        // pool rows hold n_kv_heads * d_head — half of an MHA block here
         let st = m.new_state();
-        // cache rows hold n_kv_heads * d_head — half of an MHA cache here
-        assert_eq!(st.kc.len(), m.n_layers * m.n_ctx * d_kv);
-        assert_eq!(st.kq.len(), st.kc.len());
-        let mha_cache = tiny_synth().new_state().kc.len();
-        assert_eq!(st.kc.len() * 2, mha_cache);
+        assert_eq!(st.kv_pool().row_width(), d_kv);
+        let mha_pool = tiny_synth().new_state().kv_pool().clone();
+        assert_eq!(mha_pool.row_width(), st.kv_pool().row_width() * 2);
+        assert_eq!(
+            mha_pool.bytes_per_block(),
+            st.kv_pool().bytes_per_block() * 2,
+            "GQA must halve per-block KV bytes at equal block_len"
+        );
+        // both pools cover one full-context sequence
+        assert_eq!(
+            st.kv_pool().total_blocks(),
+            m.blocks_per_seq(DEFAULT_KV_BLOCK_LEN)
+        );
     }
 
     #[test]
@@ -792,7 +914,7 @@ mod tests {
         for &t in &[3u32, 5, 7] {
             m.decode_step(&mut st, t, NumericsMode::DesktopF32);
         }
-        st.reset();
+        st.reset_for_reuse();
         let x = m.decode_step(&mut st, 11, NumericsMode::DesktopF32);
         let mut fresh = m.new_state();
         let y = m.decode_step(&mut fresh, 11, NumericsMode::DesktopF32);
@@ -810,14 +932,13 @@ mod tests {
         let logits = m.decode_step(&mut st, 11, NumericsMode::Accelerator);
         assert!(logits.iter().all(|x| x.is_finite()));
         assert_eq!(st.fxp_rows, 3);
-        let row = m.n_kv_heads * m.d_head;
         for l in 0..m.n_layers {
             for t in 0..3 {
-                let at = (l * m.n_ctx + t) * row;
-                for i in 0..row {
+                let table = &st.tables[l];
+                for (i, (q, &f)) in table.kq_row(t).iter().zip(table.k_row(t)).enumerate() {
                     assert_eq!(
-                        st.kq[at + i].raw(),
-                        Fxp32::from_f32(st.kc[at + i]).raw(),
+                        q.raw(),
+                        Fxp32::from_f32(f).raw(),
                         "k mirror stale at layer {l} row {t} lane {i}"
                     );
                 }

@@ -176,6 +176,184 @@ impl Bencher {
     }
 }
 
+/// One row of a baseline-vs-current bench comparison.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// Percent change in median ns/op (positive = slower than baseline).
+    pub delta_pct: f64,
+    /// Whether this row is subject to the regression gate.
+    pub gated: bool,
+}
+
+/// Result of [`compare_bench_json`]: the delta table plus the gate
+/// verdict. Rendered to a GitHub-flavored markdown table for the CI job
+/// summary by [`GateReport::to_markdown`].
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    pub rows: Vec<BenchDelta>,
+    /// Current benches with no baseline entry (new benches — reported,
+    /// never gated).
+    pub unmatched: Vec<String>,
+    /// Baseline benches absent from the current run. Reported always;
+    /// the gated ones among them are also failures — a renamed or
+    /// deleted fused bench must come with a baseline refresh in the
+    /// same change, or the gate would silently lose coverage.
+    pub missing: Vec<String>,
+    /// Gated rows past the threshold, plus gated baseline entries
+    /// missing from the current run.
+    pub failures: Vec<String>,
+    pub gate_substr: String,
+    pub max_regress_pct: f64,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Markdown delta table + verdict (the CI job-summary payload).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "### Hotpath bench vs committed baseline\n\nGate: any `*{}*` \
+             bench regressing > {:.0}% in median ns/op fails the job.\n\n",
+            self.gate_substr, self.max_regress_pct
+        ));
+        if self.rows.is_empty() {
+            out.push_str(
+                "No comparable baseline entries — gate passes vacuously. \
+                 Refresh `BENCH_baseline.json` from a CI bench run to arm it.\n",
+            );
+        } else {
+            out.push_str("| bench | baseline | current | Δ median | gate |\n");
+            out.push_str("|---|---:|---:|---:|---|\n");
+            for r in &self.rows {
+                let verdict = if !r.gated {
+                    "—"
+                } else if r.delta_pct > self.max_regress_pct {
+                    "**FAIL**"
+                } else {
+                    "ok"
+                };
+                out.push_str(&format!(
+                    "| {} | {} | {} | {:+.1}% | {} |\n",
+                    r.name,
+                    fmt_ns(r.base_ns),
+                    fmt_ns(r.cur_ns),
+                    r.delta_pct,
+                    verdict
+                ));
+            }
+        }
+        if !self.unmatched.is_empty() {
+            out.push_str(&format!(
+                "\n{} bench(es) without a baseline entry (not gated): {}\n",
+                self.unmatched.len(),
+                self.unmatched.join(", ")
+            ));
+        }
+        if !self.missing.is_empty() {
+            out.push_str(&format!(
+                "\n⚠ {} baseline bench(es) missing from the current run \
+                 (gated ones fail the job): {}\n",
+                self.missing.len(),
+                self.missing.join(", ")
+            ));
+        }
+        if self.passed() {
+            out.push_str("\n**GATE OK**\n");
+        } else {
+            out.push_str(&format!(
+                "\n**GATE FAILED** — {} regressed past the threshold\n",
+                self.failures.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+/// Compare two `swiftkv-bench-v1` JSON documents by median ns/op.
+///
+/// Every current benchmark that also appears in `baseline` becomes a
+/// delta row; rows whose name contains `gate_substr` (the fused-sweep
+/// hot paths) fail the gate when they regress by more than
+/// `max_regress_pct` percent. Current-only benches (new ones) are
+/// reported but never gated; baseline-only benches are reported, and
+/// the **gated** ones among them fail — renaming or deleting a gated
+/// bench must come with a baseline refresh, otherwise a 40% regression
+/// could hide behind a rename.
+pub fn compare_bench_json(
+    baseline: &Json,
+    current: &Json,
+    gate_substr: &str,
+    max_regress_pct: f64,
+) -> Result<GateReport, String> {
+    let entries = |doc: &Json, which: &str| -> Result<Vec<(String, f64)>, String> {
+        let arr = doc
+            .get("benchmarks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{which}: missing 'benchmarks' array"))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{which}: benchmarks[{i}] has no name"))?;
+            let median = e
+                .get("median_ns")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{which}: '{name}' has no median_ns"))?;
+            if median.is_nan() || median <= 0.0 {
+                return Err(format!("{which}: '{name}' has non-positive median_ns"));
+            }
+            out.push((name.to_string(), median));
+        }
+        Ok(out)
+    };
+    let base: BTreeMap<String, f64> = entries(baseline, "baseline")?.into_iter().collect();
+    let mut report = GateReport {
+        rows: Vec::new(),
+        unmatched: Vec::new(),
+        missing: Vec::new(),
+        failures: Vec::new(),
+        gate_substr: gate_substr.to_string(),
+        max_regress_pct,
+    };
+    let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    for (name, cur_ns) in entries(current, "current")? {
+        seen.insert(name.clone());
+        match base.get(&name) {
+            Some(&base_ns) => {
+                let delta_pct = (cur_ns / base_ns - 1.0) * 100.0;
+                let gated = name.contains(gate_substr);
+                if gated && delta_pct > max_regress_pct {
+                    report.failures.push(name.clone());
+                }
+                report.rows.push(BenchDelta {
+                    name,
+                    base_ns,
+                    cur_ns,
+                    delta_pct,
+                    gated,
+                });
+            }
+            None => report.unmatched.push(name),
+        }
+    }
+    for name in base.keys() {
+        if !seen.contains(name) {
+            if name.contains(gate_substr) {
+                report.failures.push(format!("{name} (missing from current run)"));
+            }
+            report.missing.push(name.clone());
+        }
+    }
+    Ok(report)
+}
+
 /// Human-friendly nanosecond formatting (criterion-style).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -268,6 +446,97 @@ mod tests {
             Some(4096.0)
         );
         assert_eq!(extras.get("group").unwrap().as_f64(), Some(4.0));
+    }
+
+    fn gate_doc(entries: &[(&str, f64)]) -> Json {
+        let benches = entries
+            .iter()
+            .map(|(name, ns)| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(name.to_string()));
+                m.insert("median_ns".to_string(), Json::Num(*ns));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str("swiftkv-bench-v1".into()));
+        root.insert("benchmarks".to_string(), Json::Arr(benches));
+        Json::Obj(root)
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_fails_beyond() {
+        let base = gate_doc(&[
+            ("hot/mha_fused 8h", 1000.0),
+            ("hot/fxp_mha_fused 8h", 2000.0),
+            ("hot/gemv_w4a8", 500.0),
+        ]);
+        // fused +10% → ok; other +80% → reported but never gated
+        let ok = gate_doc(&[
+            ("hot/mha_fused 8h", 1100.0),
+            ("hot/fxp_mha_fused 8h", 2000.0),
+            ("hot/gemv_w4a8", 900.0),
+        ]);
+        let r = compare_bench_json(&base, &ok, "fused", 15.0).unwrap();
+        assert!(r.passed(), "{:?}", r.failures);
+        assert_eq!(r.rows.len(), 3);
+        assert!(r.to_markdown().contains("GATE OK"));
+
+        // fused +20% → gate failure
+        let bad = gate_doc(&[("hot/mha_fused 8h", 1200.0), ("hot/fxp_mha_fused 8h", 2000.0)]);
+        let r = compare_bench_json(&base, &bad, "fused", 15.0).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.failures, vec!["hot/mha_fused 8h".to_string()]);
+        let md = r.to_markdown();
+        assert!(md.contains("GATE FAILED"), "{md}");
+        assert!(md.contains("**FAIL**"), "{md}");
+        assert!(md.contains("+20.0%"), "{md}");
+    }
+
+    #[test]
+    fn gate_fails_when_a_gated_baseline_bench_disappears() {
+        // a renamed/deleted fused bench must not evade the gate; a
+        // vanished ungated bench is only reported
+        let base = gate_doc(&[("hot/mha_fused 8h", 1000.0), ("hot/gemv_w4a8", 500.0)]);
+        let cur = gate_doc(&[("hot/mha_fused 8h renamed", 400.0)]);
+        let r = compare_bench_json(&base, &cur, "fused", 15.0).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.failures, vec!["hot/mha_fused 8h (missing from current run)".to_string()]);
+        assert_eq!(r.missing.len(), 2);
+        assert_eq!(r.unmatched, vec!["hot/mha_fused 8h renamed".to_string()]);
+        let md = r.to_markdown();
+        assert!(md.contains("missing from the current run"), "{md}");
+    }
+
+    #[test]
+    fn gate_is_vacuous_without_baseline_entries() {
+        let base = gate_doc(&[]);
+        let cur = gate_doc(&[("hot/mha_fused 8h", 1200.0)]);
+        let r = compare_bench_json(&base, &cur, "fused", 15.0).unwrap();
+        assert!(r.passed());
+        assert!(r.rows.is_empty());
+        assert_eq!(r.unmatched, vec!["hot/mha_fused 8h".to_string()]);
+        assert!(r.to_markdown().contains("vacuously"));
+    }
+
+    #[test]
+    fn gate_rejects_malformed_documents() {
+        let good = gate_doc(&[("a", 1.0)]);
+        assert!(compare_bench_json(&Json::Null, &good, "fused", 15.0).is_err());
+        assert!(compare_bench_json(&good, &gate_doc(&[("a", 0.0)]), "fused", 15.0).is_err());
+    }
+
+    #[test]
+    fn gate_report_roundtrips_through_real_bencher_json() {
+        // the gate must consume exactly what Bencher::to_json emits
+        let mut b = Bencher::new(5, 20);
+        b.bench("hot/mha_fused tiny", || std::hint::black_box(6u64 * 7));
+        let doc = Json::parse(&b.to_json().to_string()).unwrap();
+        let r = compare_bench_json(&doc, &doc, "fused", 15.0).unwrap();
+        assert!(r.passed());
+        assert_eq!(r.rows.len(), 1);
+        assert!(r.rows[0].gated);
+        assert!(r.rows[0].delta_pct.abs() < 1e-9);
     }
 
     #[test]

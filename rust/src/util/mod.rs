@@ -9,7 +9,8 @@
 //! - [`json`] — a minimal JSON parser + writer for `artifacts/manifest.json`
 //!   and report emission (replaces `serde_json`),
 //! - [`bench`] — a warmup/measure timing harness with criterion-style
-//!   output used by `rust/benches/*` (replaces `criterion`),
+//!   output used by `rust/benches/*` (replaces `criterion`), plus the
+//!   baseline-comparison logic behind the `bench_gate` CI binary,
 //! - [`cli`] — a tiny flag parser for the `swiftkv` binary and examples
 //!   (replaces `clap`),
 //! - [`prop`] — a seeded random-case property-test driver with failure

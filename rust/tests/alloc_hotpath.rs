@@ -10,7 +10,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
-use swiftkv::kernels::{FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::kernels::{BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
 use swiftkv::model::{NumericsMode, TinyModel};
 use swiftkv::quant::{Int4Matrix, QuantLinear};
 use swiftkv::util::Rng;
@@ -109,6 +109,34 @@ fn fused_decode_hot_path_is_allocation_free() {
     });
     assert_eq!(gqa_fxp_allocs, 0, "fused FXP32 GQA sweep allocated");
 
+    // --- kernel level, paged: block-gathered sweeps over a prebuilt
+    // table (block_len 16 → the 128-row walk crosses 8 blocks) ----------
+    let paged_pool = swiftkv::kernels::BlockPool::new(len.div_ceil(16), 16, hkv * d);
+    let mut ptable = BlockTable::new(&paged_pool, len);
+    ptable.ensure_tokens(&paged_pool, len);
+    for t in 0..len {
+        let row = hkv * d;
+        ptable.k_row_mut(t).copy_from_slice(&kg[t * row..(t + 1) * row]);
+        ptable.v_row_mut(t).copy_from_slice(&vg[t * row..(t + 1) * row]);
+        ptable.quantize_row(t);
+    }
+    gqa.reset();
+    gqa.extend_paged(&q, &ptable, 0, len, scale);
+    gqa.finalize_into(&mut out);
+    let paged_allocs = min_allocs(5, || {
+        gqa.reset();
+        gqa.extend_paged(&q, &ptable, 0, len, scale);
+        gqa.finalize_into(&mut out);
+    });
+    assert_eq!(paged_allocs, 0, "paged f32 GQA sweep allocated");
+    let paged_fxp_allocs = min_allocs(5, || {
+        gqa_fxp.reset();
+        gqa_fxp.extend_paged(&lut, &qq, &ptable, 0, len, fscale);
+        gqa_fxp.finalize_into(&mut fout);
+    });
+    assert_eq!(paged_fxp_allocs, 0, "paged FXP32 GQA sweep allocated");
+    ptable.release_into(&paged_pool);
+
     // --- GEMV level: forward_into through caller scratch ---------------
     let w = rng.uniform_vec(64 * 96, 0.5);
     let lin = QuantLinear::new(Int4Matrix::quantize(&w, 64, 96));
@@ -144,5 +172,36 @@ fn fused_decode_hot_path_is_allocation_free() {
                 "steady-state {label} decode step allocated in {mode:?}"
             );
         }
+    }
+
+    // --- model level, block boundaries: with 2-token blocks every other
+    // step checks a fresh block out of the (pre-allocated) pool — that
+    // crossing must also be allocation-free after warm-up ---------------
+    {
+        let m = &tg;
+        let mut logits = vec![0.0f32; m.vocab];
+        let pool = m.new_pool(m.blocks_per_seq(2), 2);
+        let mut st = m.new_state_in(pool);
+        for t in 0..8u32 {
+            m.decode_step_into(&mut st, t % m.vocab as u32, NumericsMode::Accelerator, &mut logits);
+        }
+        let mut t = 8u32;
+        // two steps per measurement: with block_len 2 every pair checks
+        // exactly one fresh block per layer out of the pool
+        let crossing_allocs = min_allocs(5, || {
+            for _ in 0..2 {
+                m.decode_step_into(
+                    &mut st,
+                    t % m.vocab as u32,
+                    NumericsMode::Accelerator,
+                    &mut logits,
+                );
+                t += 1;
+            }
+        });
+        assert_eq!(
+            crossing_allocs, 0,
+            "decode step allocated while crossing KV block boundaries"
+        );
     }
 }

@@ -21,6 +21,7 @@ fn opts(lanes: usize, mode: NumericsMode) -> CpuServeOptions {
         mode,
         max_iterations: 10_000,
         sim_model: LlmConfig::llama2_7b(),
+        ..CpuServeOptions::default()
     }
 }
 
@@ -118,6 +119,7 @@ fn gqa_batched_serving_matches_solo_generation_both_modes() {
             mode,
             max_iterations: 10_000,
             sim_model: LlmConfig::llama3_8b(),
+            ..CpuServeOptions::default()
         };
         let report = CpuServer::new(&tm, opts).serve(reqs);
         assert_eq!(report.sessions.len(), prompts.len());
@@ -165,6 +167,129 @@ fn lane_recycling_more_requests_than_lanes() {
     }]);
     let first = report.sessions.iter().find(|s| s.request.id == 0).unwrap();
     assert_eq!(first.generated, solo.sessions[0].generated);
+}
+
+#[test]
+fn lanes_share_one_pool_with_reclamation() {
+    // Tiny blocks so every sequence spans several of them, and a pool
+    // sized for just the two concurrent lanes' live sets (10 blocks ≪
+    // the 48 of worst-case sizing): each 6-token sequence pins 2 blocks
+    // per layer × 2 layers = 4 blocks, and the 7 requests through 2
+    // lanes need 28 block-checkouts in total — without reclamation on
+    // reset_for_reuse the pool would exhaust (and panic a lane) midway.
+    let tm = model();
+    let kv_block_len = 4;
+    let lanes = 2;
+    let kv_pool_blocks = 10;
+    let opts = CpuServeOptions {
+        lanes,
+        mode: NumericsMode::DesktopF32,
+        max_iterations: 10_000,
+        sim_model: LlmConfig::llama2_7b(),
+        kv_block_len,
+        kv_pool_blocks,
+    };
+    let reqs: Vec<Request> = (0..7)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![(i as u32 * 17 + 3) % tm.vocab as u32],
+            gen_len: 5,
+            arrival_ms: 0,
+        })
+        .collect();
+    let report = CpuServer::new(&tm, opts).serve(reqs);
+    assert_eq!(report.sessions.len(), 7);
+
+    // the shared pool has the configured shape and is fully reclaimed
+    let pool = &report.kv_pool;
+    assert_eq!(pool.block_len(), kv_block_len);
+    assert_eq!(pool.total_blocks(), kv_pool_blocks);
+    assert_eq!(
+        pool.free_blocks(),
+        pool.total_blocks(),
+        "retired lanes must return every block to the shared pool"
+    );
+
+    // paged, pool-shared serving still decodes exactly like solo decode
+    for s in &report.sessions {
+        let want = tm.generate(&s.request.prompt, s.request.gen_len, NumericsMode::DesktopF32);
+        assert_eq!(
+            s.generated, want,
+            "request {}: pooled serving diverged from solo decode",
+            s.request.id
+        );
+    }
+}
+
+#[test]
+fn idle_lanes_release_blocks_at_retirement() {
+    // Three short sequences retire and leave two lanes idle forever
+    // (nothing left in the queue for them) while the fourth, long
+    // request grows to 16 blocks. The pool (17) only covers that if
+    // retired lanes release their blocks *at retirement* — lazily
+    // holding them until the lane's next admission (which never comes
+    // for the idle lanes) would pin 4 dead blocks and panic the long
+    // lane with pool exhaustion at ~14 blocks.
+    let tm = model();
+    let opts = CpuServeOptions {
+        lanes: 3,
+        mode: NumericsMode::DesktopF32,
+        max_iterations: 10_000,
+        sim_model: LlmConfig::llama2_7b(),
+        kv_block_len: 4,
+        kv_pool_blocks: 17,
+    };
+    let mut reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![1 + i as u32],
+            gen_len: 3, // 3 cache rows → 1 block per layer
+            arrival_ms: 0,
+        })
+        .collect();
+    reqs.push(Request {
+        id: 3,
+        prompt: vec![9],
+        gen_len: 30, // 30 cache rows → 8 blocks per layer = 16 blocks
+        arrival_ms: 0,
+    });
+    let report = CpuServer::new(&tm, opts).serve(reqs);
+    assert_eq!(report.sessions.len(), 4);
+    let long = report.sessions.iter().find(|s| s.request.id == 3).unwrap();
+    assert_eq!(long.generated.len(), 30);
+    assert_eq!(report.kv_pool.free_blocks(), 17);
+}
+
+#[test]
+fn undersized_pool_is_enough_for_short_sequences() {
+    // The point of paging: a pool far smaller than lanes × n_ctx serves
+    // short sequences fine. 2 lanes × 2 layers; prompts+gen stay ≤ 8
+    // tokens = 2 blocks of 4 per layer, so 8 blocks cover both lanes —
+    // versus 24 for the worst-case sizing (n_ctx 48, 12 blocks/lane).
+    let tm = model();
+    let opts = CpuServeOptions {
+        lanes: 2,
+        mode: NumericsMode::DesktopF32,
+        max_iterations: 10_000,
+        sim_model: LlmConfig::llama2_7b(),
+        kv_block_len: 4,
+        kv_pool_blocks: 8,
+    };
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![1 + i as u32, 2],
+            gen_len: 4,
+            arrival_ms: 0,
+        })
+        .collect();
+    let report = CpuServer::new(&tm, opts).serve(reqs);
+    assert_eq!(report.sessions.len(), 5);
+    assert_eq!(report.kv_pool.total_blocks(), 8);
+    assert_eq!(report.kv_pool.free_blocks(), 8);
+    for s in &report.sessions {
+        assert_eq!(s.generated.len(), 4);
+    }
 }
 
 #[test]

@@ -1,0 +1,233 @@
+//! Property tests: the paged KV sweeps (`extend_paged` over
+//! `BlockPool`/`BlockTable`) versus the contiguous token-major path,
+//! swept over GQA/MQA/MHA shapes, block lengths {1, 3, 16} (so ragged
+//! last blocks are routine), chunked extends, and pools whose blocks
+//! have been scrambled by lane recycling. The storage contract is the
+//! only thing that changed, so the bar is strict: the f32 paged sweep
+//! must be **bit-identical** to the contiguous sweep (same rows, same
+//! op order — well inside the 1e-5 acceptance bound), and the Q15.17
+//! sweep **bit-exact** on raw bits.
+
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::{BlockPool, BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::util::{prop, Rng};
+
+/// (n_heads, n_kv_heads): MQA, GQA group factors, `group == 1` MHA.
+const GROUPS: [(usize, usize); 6] = [(1, 1), (2, 1), (4, 2), (6, 3), (8, 2), (8, 8)];
+/// Head dims off and on the SIMD unroll width.
+const DIMS: [usize; 4] = [3, 5, 16, 33];
+/// Cache lengths, including several that leave ragged last blocks.
+const LENS: [usize; 5] = [1, 2, 5, 17, 40];
+/// Block lengths under test: degenerate (1 row/block), odd, default-ish.
+const BLOCK_LENS: [usize; 3] = [1, 3, 16];
+
+struct PagedCase {
+    h: usize,
+    hkv: usize,
+    d: usize,
+    len: usize,
+    block_len: usize,
+    q: Vec<f32>,
+    /// Contiguous token-major interleaved `[len][hkv * d]` references.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pool: BlockPool,
+}
+
+impl PagedCase {
+    fn random(rng: &mut Rng, scale: f32) -> PagedCase {
+        let (h, hkv) = GROUPS[rng.gen_range(0, GROUPS.len())];
+        let d = DIMS[rng.gen_range(0, DIMS.len())];
+        let len = LENS[rng.gen_range(0, LENS.len())];
+        let block_len = BLOCK_LENS[rng.gen_range(0, BLOCK_LENS.len())];
+        let row = hkv * d;
+        PagedCase {
+            h,
+            hkv,
+            d,
+            len,
+            block_len,
+            q: rng.uniform_vec(h * d, scale),
+            k: rng.uniform_vec(len * row, scale),
+            v: rng.uniform_vec(len * row, scale),
+            pool: BlockPool::new(len.div_ceil(block_len) + 1, block_len, row),
+        }
+    }
+
+    /// Check a table out of the pool and fill it (f32 + Q15.17 mirror)
+    /// from the contiguous reference arrays.
+    fn build_table(&self) -> BlockTable {
+        let row = self.hkv * self.d;
+        let mut table = BlockTable::new(&self.pool, self.len);
+        table.ensure_tokens(&self.pool, self.len);
+        for t in 0..self.len {
+            table
+                .k_row_mut(t)
+                .copy_from_slice(&self.k[t * row..(t + 1) * row]);
+            table
+                .v_row_mut(t)
+                .copy_from_slice(&self.v[t * row..(t + 1) * row]);
+            table.quantize_row(t);
+        }
+        table
+    }
+}
+
+#[test]
+fn prop_paged_f32_bit_identical_to_contiguous() {
+    prop::check("paged f32 sweep == contiguous sweep (bit)", 40, |rng, _| {
+        let case = PagedCase::random(rng, 1.0);
+        let (h, hkv, d, len, bl) = (case.h, case.hkv, case.d, case.len, case.block_len);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut table = case.build_table();
+
+        let mut contiguous = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut a = vec![0.0f32; h * d];
+        contiguous.attend(&case.q, &case.k, &case.v, len, scale, &mut a);
+
+        let mut paged = MhaSwiftKv::new_grouped(h, hkv, d);
+        paged.extend_paged(&case.q, &table, 0, len, scale);
+        let mut b = vec![0.0f32; h * d];
+        paged.finalize_into(&mut b);
+
+        assert_eq!(a, b, "h={h} hkv={hkv} d={d} len={len} bl={bl}");
+        table.release_into(&case.pool);
+    });
+}
+
+#[test]
+fn prop_paged_fxp_bit_exact_vs_contiguous() {
+    prop::check("paged Q15.17 sweep == contiguous (raw bits)", 30, |rng, _| {
+        let case = PagedCase::random(rng, 1.0);
+        let (h, hkv, d, len, bl) = (case.h, case.hkv, case.d, case.len, case.block_len);
+        let lut = Exp2Lut::new();
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let mut table = case.build_table();
+
+        let qq = vector::quantize(&case.q);
+        let kq = vector::quantize(&case.k);
+        let vq = vector::quantize(&case.v);
+        let mut contiguous = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut a = vec![Fxp32::ZERO; h * d];
+        contiguous.attend(&lut, &qq, &kq, &vq, len, scale, &mut a);
+
+        let mut paged = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        paged.extend_paged(&lut, &qq, &table, 0, len, scale);
+        let mut b = vec![Fxp32::ZERO; h * d];
+        paged.finalize_into(&mut b);
+
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.raw(),
+                y.raw(),
+                "h={h} hkv={hkv} d={d} len={len} bl={bl} flat-dim={i}: raw bits diverged"
+            );
+        }
+        table.release_into(&case.pool);
+    });
+}
+
+#[test]
+fn prop_paged_chunked_extend_equals_one_shot() {
+    prop::check("paged chunked extend == one-shot paged sweep", 30, |rng, _| {
+        let case = PagedCase::random(rng, 1.0);
+        let (h, hkv, d, len) = (case.h, case.hkv, case.d, case.len);
+        let scale = 1.0 / (d as f32).sqrt();
+        // cut ∈ [0, len]: 0 exercises an empty first extend; cuts need
+        // not align with block boundaries
+        let cut = rng.gen_range(0, len + 1);
+        let mut table = case.build_table();
+
+        let mut one = MhaSwiftKv::new_grouped(h, hkv, d);
+        one.extend_paged(&case.q, &table, 0, len, scale);
+        let mut a = vec![0.0f32; h * d];
+        one.finalize_into(&mut a);
+
+        let mut two = MhaSwiftKv::new_grouped(h, hkv, d);
+        two.extend_paged(&case.q, &table, 0, cut, scale);
+        two.extend_paged(&case.q, &table, cut, len, scale);
+        let mut b = vec![0.0f32; h * d];
+        two.finalize_into(&mut b);
+        assert_eq!(a, b, "h={h} hkv={hkv} d={d} len={len} cut={cut}");
+        table.release_into(&case.pool);
+    });
+}
+
+#[test]
+fn prop_recycled_blocks_decode_like_fresh_ones() {
+    // Lane recycling scrambles which physical blocks a table holds and
+    // leaves stale contents (f32 and Q15.17) in them. A table rebuilt
+    // from recycled blocks must still match the contiguous reference on
+    // raw bits in both numerics.
+    prop::check("recycled pool blocks == fresh blocks", 25, |rng, _| {
+        let case = PagedCase::random(rng, 1.0);
+        let (h, hkv, d, len, bl) = (case.h, case.hkv, case.d, case.len, case.block_len);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // dirty the pool: check every block out, fill with garbage (f32
+        // and mirror), release in a different order than allocated
+        {
+            let total = case.pool.total_blocks();
+            let mut dirty = BlockTable::new(&case.pool, total * bl);
+            dirty.ensure_tokens(&case.pool, total * bl);
+            for t in 0..total * bl {
+                for x in dirty.k_row_mut(t).iter_mut() {
+                    *x = -7.5;
+                }
+                for x in dirty.v_row_mut(t).iter_mut() {
+                    *x = 9.25;
+                }
+                dirty.quantize_row(t);
+            }
+            dirty.release_into(&case.pool);
+        }
+        // hold one block back so the rebuilt table gets a rotated set
+        let held = case.pool.alloc();
+
+        let mut table = case.build_table();
+        let mut paged = MhaSwiftKv::new_grouped(h, hkv, d);
+        paged.extend_paged(&case.q, &table, 0, len, scale);
+        let mut got = vec![0.0f32; h * d];
+        paged.finalize_into(&mut got);
+
+        let mut contiguous = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut want = vec![0.0f32; h * d];
+        contiguous.attend(&case.q, &case.k, &case.v, len, scale, &mut want);
+        assert_eq!(want, got, "h={h} hkv={hkv} d={d} len={len} bl={bl} (f32)");
+
+        // Q15.17: the rebuilt mirror must fully overwrite stale garbage
+        let lut = Exp2Lut::new();
+        let fscale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qq = vector::quantize(&case.q);
+        let kq = vector::quantize(&case.k);
+        let vq = vector::quantize(&case.v);
+        let mut fpaged = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        fpaged.extend_paged(&lut, &qq, &table, 0, len, fscale);
+        let mut fgot = vec![Fxp32::ZERO; h * d];
+        fpaged.finalize_into(&mut fgot);
+        let mut fcont = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut fwant = vec![Fxp32::ZERO; h * d];
+        fcont.attend(&lut, &qq, &kq, &vq, len, fscale, &mut fwant);
+        for (i, (x, y)) in fwant.iter().zip(&fgot).enumerate() {
+            assert_eq!(x.raw(), y.raw(), "fxp flat-dim {i} diverged on recycled blocks");
+        }
+
+        table.release_into(&case.pool);
+        case.pool.release(held);
+    });
+}
+
+#[test]
+fn paged_sweep_rejects_short_table() {
+    // reading past the mapped blocks must fail loudly, not wrap
+    let pool = BlockPool::new(2, 4, 8);
+    let mut table = BlockTable::new(&pool, 8);
+    table.ensure_tokens(&pool, 4); // one block only
+    let mut mha = MhaSwiftKv::new_grouped(2, 2, 4);
+    let q = vec![0.5f32; 8];
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        mha.extend_paged(&q, &table, 0, 6, 0.5);
+    }));
+    assert!(r.is_err(), "extend_paged beyond mapped blocks must panic");
+    table.release_into(&pool);
+}
