@@ -25,9 +25,10 @@
 
 use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
 use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
+use swiftkv::coordinator::{CpuServeOptions, CpuServer};
 use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
 use swiftkv::kernels::{BlockPool, BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
-use swiftkv::model::{NumericsMode, TinyModel, WeightStore};
+use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WeightStore};
 use swiftkv::quant::{quantize_int8, Int4Matrix, QuantLinear};
 use swiftkv::runtime::{artifacts_available, default_artifacts_dir};
 use swiftkv::util::bench::Bencher;
@@ -314,6 +315,101 @@ fn main() {
                 "kv_block_len",
                 swiftkv::model::DEFAULT_KV_BLOCK_LEN as f64,
             );
+        }
+    }
+
+    // --- chunked prefill (TTFT path): a 32-token prompt through the
+    // fused causal chunk sweep vs one decode_step per token, on the same
+    // synthetic model. Every variant resets and re-feeds the full
+    // prompt, so the recorded ratio is exactly the per-prompt TTFT win
+    // (chunk_len annotated; results are bit-identical across variants —
+    // tests/prop_prefill.rs).
+    {
+        let plen = 32usize;
+        let prompt: Vec<u32> = (0..plen as u32)
+            .map(|t| (t * 7 + 3) % tm.vocab as u32)
+            .collect();
+        let mut pst = tm.new_state();
+        let name = format!("hot/tiny_prefill synthetic chunk=1 len={plen}");
+        b.bench(&name, || {
+            // per-token prefill: the pre-chunking serving path
+            pst.reset_for_reuse();
+            for &t in &prompt {
+                tm.decode_step_into(&mut pst, t, NumericsMode::DesktopF32, &mut logits);
+            }
+            logits[0]
+        });
+        b.annotate(&name, "chunk_len", 1.0);
+        b.annotate(&name, "prompt_len", plen as f64);
+        for chunk in [8usize, plen] {
+            let name = format!("hot/tiny_prefill synthetic chunk={chunk} len={plen}");
+            b.bench(&name, || {
+                pst.reset_for_reuse();
+                let mut at = 0usize;
+                while at < plen {
+                    let end = plen.min(at + chunk);
+                    let out = if end == plen {
+                        Some(&mut logits[..])
+                    } else {
+                        None
+                    };
+                    tm.prefill_into(&mut pst, &prompt[at..end], NumericsMode::DesktopF32, out);
+                    at = end;
+                }
+                logits[0]
+            });
+            b.annotate(&name, "chunk_len", chunk as f64);
+            b.annotate(&name, "prompt_len", plen as f64);
+        }
+        report_speedup(
+            &b,
+            "chunked prefill speedup",
+            &format!("hot/tiny_prefill synthetic chunk=1 len={plen}"),
+            &format!("hot/tiny_prefill synthetic chunk={plen} len={plen}"),
+        );
+    }
+
+    // --- CPU-serve TTFT: the same multi-token-prompt workload served
+    // with per-token prefill (chunk 1), the default chunk, and
+    // whole-prompt chunks (0). Each entry records the run's TTFT p50 as
+    // an annotation, so the serving-level TTFT win lands in the JSON
+    // trajectory next to the kernel-level numbers.
+    {
+        let sm = TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                prompt: (0..24).map(|t| (t * 5 + i as u32 + 1) % sm.vocab as u32).collect(),
+                gen_len: 2,
+                arrival_ms: 0,
+            })
+            .collect();
+        for prefill_chunk in [1usize, 8, 0] {
+            let server = CpuServer::new(
+                &sm,
+                CpuServeOptions {
+                    lanes: 2,
+                    mode: NumericsMode::DesktopF32,
+                    max_iterations: 10_000,
+                    sim_model: LlmConfig::llama2_7b(),
+                    prefill_chunk,
+                    ..CpuServeOptions::default()
+                },
+            );
+            let name = format!("serve/cpu_ttft prefill-chunk={prefill_chunk} prompt=24");
+            let mut ttft_samples: Vec<f64> = Vec::new();
+            b.bench(&name, || {
+                let report = server.serve(reqs.clone());
+                ttft_samples.push(report.metrics.ttft_ms.p50);
+                report.metrics.iterations
+            });
+            // median over every serve run of the bench window, not the
+            // (noise-prone) last sample
+            ttft_samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ttft_p50 = ttft_samples[ttft_samples.len() / 2];
+            b.annotate(&name, "chunk_len", prefill_chunk as f64);
+            b.annotate(&name, "prompt_len", 24.0);
+            b.annotate(&name, "ttft_p50_ms", ttft_p50);
         }
     }
 

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! bench_gate <BENCH_baseline.json> <BENCH_current.json> \
-//!     [--max-regress-pct 15] [--gate fused]
+//!     [--max-regress-pct 15] [--gate fused] [--require-baseline]
 //! ```
 //!
 //! Compares median ns/op of every benchmark present in both documents
@@ -10,9 +10,14 @@
 //! for the job summary). Exits non-zero when any benchmark whose name
 //! contains the gate substring (default `fused` — the fused-sweep hot
 //! paths) regressed by more than the threshold, so a slow hot path
-//! fails the job instead of shipping silently. An empty baseline passes
-//! vacuously: refresh `BENCH_baseline.json` from a trusted bench run to
-//! arm the gate. Comparison logic lives in
+//! fails the job instead of shipping silently.
+//!
+//! An empty baseline gates nothing. Without `--require-baseline` that is
+//! a vacuous pass, flagged by a loud `BASELINE EMPTY — gate is vacuous`
+//! banner in the output; **with** `--require-baseline` (what CI passes)
+//! it is a hard failure, so the gate can never silently run unarmed.
+//! Refresh `BENCH_baseline.json` from a trusted CI-class bench run to
+//! arm it. Comparison logic lives in
 //! [`swiftkv::util::bench::compare_bench_json`] (unit-tested in-tree).
 
 use swiftkv::util::bench::compare_bench_json;
@@ -34,16 +39,17 @@ fn main() {
 }
 
 fn run() -> Result<bool, String> {
-    let args = Args::parse(&["max-regress-pct", "gate"], &["help"])?;
+    let args = Args::parse(&["max-regress-pct", "gate"], &["help", "require-baseline"])?;
     if args.get_bool("help") || args.positional().len() != 2 {
         return Err(
             "usage: bench_gate <baseline.json> <current.json> \
-             [--max-regress-pct 15] [--gate fused]"
+             [--max-regress-pct 15] [--gate fused] [--require-baseline]"
                 .into(),
         );
     }
     let max_regress_pct = args.get_f64("max-regress-pct", 15.0)?;
     let gate = args.get_or("gate", "fused");
+    let require_baseline = args.get_bool("require-baseline");
     let load = |path: &str| -> Result<Json, String> {
         let text =
             std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
@@ -53,5 +59,16 @@ fn run() -> Result<bool, String> {
     let current = load(&args.positional()[1])?;
     let report = compare_bench_json(&baseline, &current, gate, max_regress_pct)?;
     println!("{}", report.to_markdown());
+    if report.baseline_empty() {
+        // loud on stderr too, so the warning survives summary-only readers
+        eprintln!(
+            "bench_gate: BASELINE EMPTY — gate is vacuous ({} gated nothing)",
+            args.positional()[0]
+        );
+        if require_baseline {
+            eprintln!("bench_gate: --require-baseline set: failing the run");
+            return Ok(false);
+        }
+    }
     Ok(report.passed())
 }

@@ -25,6 +25,24 @@ impl LaneState {
     }
 }
 
+/// One lane's input for a chunked engine step
+/// ([`Batcher::gather_chunks`]): the slice of tokens to feed this
+/// iteration — a prompt chunk during prefill, the single last-sampled
+/// token during decode, empty when the lane is idle.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneChunk<'a> {
+    /// Whether the lane holds a session this step.
+    pub active: bool,
+    /// KV position of the chunk's first token.
+    pub pos: usize,
+    /// The tokens to feed (borrowed from the session's prompt or its
+    /// generated tail; valid until the next `&mut` use of the batcher).
+    pub tokens: &'a [u32],
+    /// Whether this chunk ends on a sampling position — when `false`
+    /// the engine skips the logits projection and the sampler.
+    pub samples: bool,
+}
+
 /// The dynamic batcher.
 pub struct Batcher {
     lanes: Vec<LaneState>,
@@ -93,6 +111,37 @@ impl Batcher {
         self.queue.is_empty() && self.active() == 0
     }
 
+    /// Build the chunked step inputs: one [`LaneChunk`] per lane.
+    /// Prefill lanes expose up to `max_prefill` remaining prompt tokens
+    /// (the whole tail when it is shorter); decode lanes expose their
+    /// single last-sampled token; idle lanes an empty, inactive chunk.
+    /// `samples` is precomputed so the engine can skip the logits
+    /// projection and the sampler for prefill chunks that stop short of
+    /// the last prompt token.
+    pub fn gather_chunks(&self, max_prefill: usize) -> Vec<LaneChunk<'_>> {
+        assert!(max_prefill >= 1, "chunks must hold at least one token");
+        self.lanes
+            .iter()
+            .map(|lane| match lane {
+                LaneState::Idle => LaneChunk {
+                    active: false,
+                    pos: 0,
+                    tokens: &[],
+                    samples: false,
+                },
+                LaneState::Busy(s) => {
+                    let tokens = s.next_chunk(max_prefill);
+                    LaneChunk {
+                        active: true,
+                        pos: s.pos,
+                        tokens,
+                        samples: s.samples_after(tokens.len()),
+                    }
+                }
+            })
+            .collect()
+    }
+
     /// Build the engine step inputs: `(tokens, positions, active_mask)`.
     /// Idle lanes carry `(0, 0)` — harmless, masked by their own restart.
     pub fn gather_inputs(&self) -> (Vec<i32>, Vec<i32>, Vec<bool>) {
@@ -120,11 +169,27 @@ impl Batcher {
     /// lane `i`). Finished sessions are retired and their lanes freed.
     /// Returns the ids of requests that finished this step.
     pub fn scatter_outputs(&mut self, samples: &[u32], iteration: u64) -> Vec<u64> {
+        let fed = vec![1usize; self.lanes.len()];
+        self.scatter_chunk_outputs(&fed, samples, iteration)
+    }
+
+    /// Apply one chunked step's outcome: lane `i` consumed `fed[i]`
+    /// tokens (its [`LaneChunk`]'s length) and — when the chunk reached
+    /// a sampling position — produced `samples[i]`. Finished sessions
+    /// are retired and their lanes freed. Returns the ids of requests
+    /// that finished this step.
+    pub fn scatter_chunk_outputs(
+        &mut self,
+        fed: &[usize],
+        samples: &[u32],
+        iteration: u64,
+    ) -> Vec<u64> {
+        assert_eq!(fed.len(), self.lanes.len());
         assert_eq!(samples.len(), self.lanes.len());
         let mut done = Vec::new();
-        for (lane, &tok) in self.lanes.iter_mut().zip(samples) {
+        for ((lane, &n), &tok) in self.lanes.iter_mut().zip(fed).zip(samples) {
             if let LaneState::Busy(s) = lane {
-                if s.advance(tok, iteration) {
+                if s.advance_chunk(n, tok, iteration) {
                     done.push(s.request.id);
                     let finished = std::mem::replace(lane, LaneState::Idle);
                     if let LaneState::Busy(s) = finished {
@@ -213,6 +278,56 @@ mod tests {
         assert_eq!(b.admit(1), 1); // request 1 takes the lane
         let (_, p, _) = b.gather_inputs();
         assert_eq!(p[0], 0, "recycled lane must restart at position 0");
+    }
+
+    #[test]
+    fn chunked_lifecycle_single_lane() {
+        let mut b = Batcher::new(2, 64);
+        b.submit(req(7, 5, 2)).unwrap();
+        b.admit(0);
+        // step 1: prompt chunk capped at 3, no sample
+        let chunks = b.gather_chunks(3);
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks[0].active && !chunks[1].active);
+        assert_eq!(chunks[0].tokens, &[0, 1, 2]);
+        assert_eq!(chunks[0].pos, 0);
+        assert!(!chunks[0].samples);
+        assert!(chunks[1].tokens.is_empty());
+        assert!(b.scatter_chunk_outputs(&[3, 0], &[99, 0], 0).is_empty());
+        // step 2: prompt tail [3, 4] → first sample
+        let chunks = b.gather_chunks(3);
+        assert_eq!(chunks[0].tokens, &[3, 4]);
+        assert_eq!(chunks[0].pos, 3);
+        assert!(chunks[0].samples);
+        assert!(b.scatter_chunk_outputs(&[2, 0], &[42, 0], 1).is_empty());
+        // step 3: decode chunk is the sampled token → finishes
+        let chunks = b.gather_chunks(3);
+        assert_eq!(chunks[0].tokens, &[42]);
+        assert!(chunks[0].samples);
+        let done = b.scatter_chunk_outputs(&[1, 0], &[43, 0], 2);
+        assert_eq!(done, vec![7]);
+        assert!(b.is_drained());
+        assert_eq!(b.finished[0].generated, vec![42, 43]);
+        // chunked prefill reaches the first sample in 2 iterations, not 5
+        assert_eq!(b.finished[0].first_token_at, Some(1));
+    }
+
+    #[test]
+    fn scatter_outputs_is_the_single_token_chunk_case() {
+        let mut a = Batcher::new(1, 64);
+        let mut c = Batcher::new(1, 64);
+        a.submit(req(0, 2, 2)).unwrap();
+        c.submit(req(0, 2, 2)).unwrap();
+        a.admit(0);
+        c.admit(0);
+        for it in 0..3 {
+            a.scatter_outputs(&[it as u32 + 10], it);
+            c.scatter_chunk_outputs(&[1], &[it as u32 + 10], it);
+        }
+        assert_eq!(a.finished.len(), c.finished.len());
+        if let (Some(x), Some(y)) = (a.finished.first(), c.finished.first()) {
+            assert_eq!(x.generated, y.generated);
+        }
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //!
 //! Same continuous-batching shape as the PJRT [`super::server`]: queue →
 //! [`super::batcher::Batcher`] → one batch step → greedy sample → retire.
+//! Prompt tokens are consumed **chunked**: a prefill lane feeds up to
+//! [`CpuServeOptions::prefill_chunk`] prompt tokens per iteration through
+//! the fused causal sweep ([`TinyModel::prefill_into`]) instead of one
+//! decode step per token, computing the logits projection only when the
+//! chunk reaches the last prompt token — the TTFT win of chunked
+//! prefill. The chunk is bounded by default so one long prompt cannot
+//! stall the decode lanes sharing the iteration.
 //! The batch step fans the active lanes out across OS threads with
 //! `std::thread::scope`; each lane owns its [`DecodeState`] (per-layer
 //! block tables + [`crate::kernels::DecodeScratch`]), so a steady-state
@@ -30,6 +37,13 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Default prompt tokens a lane may consume in one chunked-prefill step
+/// (`swiftkv serve --prefill-chunk` overrides; `0` = whole prompt).
+/// Bounded so one long prompt cannot monopolize an iteration: step wall
+/// time is the max over lanes, so an unbounded prefill chunk would stall
+/// every decode lane for the whole prompt instead of `8` tokens' worth.
+pub const DEFAULT_PREFILL_CHUNK: usize = 8;
+
 /// CPU serving configuration.
 #[derive(Debug, Clone)]
 pub struct CpuServeOptions {
@@ -46,6 +60,11 @@ pub struct CpuServeOptions {
     /// Total blocks in the shared pool; `0` sizes it for the worst case
     /// (`lanes × blocks_per_seq`, i.e. every lane at full context).
     pub kv_pool_blocks: usize,
+    /// Max prompt tokens per lane per iteration (chunked prefill
+    /// through the fused causal sweep); `0` = whole remaining prompt in
+    /// one step. `1` reproduces the old one-decode-step-per-prompt-token
+    /// prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for CpuServeOptions {
@@ -57,6 +76,7 @@ impl Default for CpuServeOptions {
             sim_model: LlmConfig::llama2_7b(),
             kv_block_len: DEFAULT_KV_BLOCK_LEN,
             kv_pool_blocks: 0,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
         }
     }
 }
@@ -124,14 +144,26 @@ impl<'m> CpuServer<'m> {
         let arch = ArchConfig::default();
         let mut iter_end_ms: Vec<f64> = Vec::new();
 
+        // 0 = unbounded: a whole remaining prompt in one chunked step
+        let max_prefill = if self.opts.prefill_chunk == 0 {
+            usize::MAX
+        } else {
+            self.opts.prefill_chunk
+        };
+
         loop {
             // admit every request whose arrival time has passed
             let now_ms = t0.elapsed().as_secs_f64() * 1e3;
             while let Some(r) = pending.front() {
                 if r.arrival_ms as f64 <= now_ms {
                     let r = pending.pop_front().unwrap();
-                    // oversized requests are rejected by the batcher; drop
-                    let _ = batcher.submit(r);
+                    if let Err(rejected) = batcher.submit(r) {
+                        // oversized for the context window: dropped by
+                        // design, but never silently — the batcher
+                        // counted it and ServeMetrics::requests_rejected
+                        // surfaces it at the end of the run
+                        drop(rejected);
+                    }
                 } else {
                     break;
                 }
@@ -146,7 +178,10 @@ impl<'m> CpuServer<'m> {
                 continue;
             }
 
-            let (tokens, positions, active) = batcher.gather_inputs();
+            let chunks = batcher.gather_chunks(max_prefill);
+            let fed: Vec<usize> = chunks.iter().map(|c| c.tokens.len()).collect();
+            let sampling: Vec<bool> = chunks.iter().map(|c| c.active && c.samples).collect();
+            let was_active: Vec<bool> = chunks.iter().map(|c| c.active).collect();
             occupancy_acc += batcher.occupancy();
 
             // lanes starting a fresh session restart their decode state
@@ -154,23 +189,38 @@ impl<'m> CpuServer<'m> {
             // at retirement below; this also covers any future path that
             // hands a lane a new session without an idle iteration)
             for (i, st) in states.iter_mut().enumerate() {
-                if active[i] && positions[i] == 0 && st.pos != 0 {
+                if chunks[i].active && chunks[i].pos == 0 && st.pos != 0 {
                     st.reset_for_reuse();
                 }
             }
 
             // fused batch step: one thread per active lane; a lone lane
-            // runs inline to skip the spawn overhead
+            // runs inline to skip the spawn overhead. Prefill lanes
+            // consume their whole chunk through the fused causal sweep
+            // and only compute the logits projection when the chunk ends
+            // on a sampling position.
             let ts = Instant::now();
-            let n_active = active.iter().filter(|a| **a).count();
+            let n_active = chunks.iter().filter(|c| c.active).count();
+            let lane_step = |chunk: &super::batcher::LaneChunk<'_>,
+                             st: &mut DecodeState,
+                             out: &mut [f32]| {
+                if chunk.tokens.len() == 1 && chunk.samples {
+                    // decode step (or final single-token prompt chunk):
+                    // the established single-token hot path
+                    model.decode_step_into(st, chunk.tokens[0], mode, out);
+                } else {
+                    let logits_out = if chunk.samples { Some(out) } else { None };
+                    model.prefill_into(st, chunk.tokens, mode, logits_out);
+                }
+            };
             if n_active <= 1 {
                 for (i, (st, out)) in states
                     .iter_mut()
                     .zip(logits.chunks_mut(vocab))
                     .enumerate()
                 {
-                    if active[i] {
-                        model.decode_step_into(st, tokens[i] as u32, mode, out);
+                    if chunks[i].active {
+                        lane_step(&chunks[i], st, out);
                     }
                 }
             } else {
@@ -180,34 +230,56 @@ impl<'m> CpuServer<'m> {
                         .zip(logits.chunks_mut(vocab))
                         .enumerate()
                     {
-                        if !active[i] {
+                        if !chunks[i].active {
                             continue;
                         }
-                        let tok = tokens[i] as u32;
+                        let chunk = chunks[i];
+                        let lane_step = &lane_step;
                         scope.spawn(move || {
-                            model.decode_step_into(st, tok, mode, out);
+                            lane_step(&chunk, st, out);
                         });
                     }
                 });
             }
             step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
 
-            // simulated accelerator cost for this step
-            let max_ctx = positions
+            // simulated accelerator cost: a chunked iteration is billed
+            // one simulated decode step per consumed token position —
+            // lanes run in lockstep, so the batch pays the longest chunk
+            // at the largest live context, token by token. With fed == 1
+            // everywhere this reduces exactly to the old
+            // one-simulate_token-per-iteration accounting.
+            let max_fed = chunks
                 .iter()
-                .zip(&active)
-                .filter(|(_, a)| **a)
-                .map(|(p, _)| *p as usize + 1)
+                .filter(|c| c.active)
+                .map(|c| c.tokens.len())
                 .max()
                 .unwrap_or(1);
-            sim_cycles +=
-                layer_sched::simulate_token(&arch, &self.opts.sim_model, max_ctx).total_cycles;
+            let base_ctx = chunks
+                .iter()
+                .filter(|c| c.active)
+                .map(|c| c.pos)
+                .max()
+                .unwrap_or(0);
+            for k in 1..=max_fed {
+                let sim = layer_sched::simulate_token(&arch, &self.opts.sim_model, base_ctx + k);
+                sim_cycles += sim.total_cycles;
+            }
 
-            // greedy sample per lane
+            // greedy sample — only for lanes whose chunk ended on a
+            // sampling position; idle lanes and mid-prompt prefill
+            // chunks skip the argmax entirely (their logits are stale
+            // or were never computed)
             let samples: Vec<u32> = (0..lanes)
-                .map(|i| argmax(&logits[i * vocab..(i + 1) * vocab]) as u32)
+                .map(|i| {
+                    if sampling[i] {
+                        argmax(&logits[i * vocab..(i + 1) * vocab]) as u32
+                    } else {
+                        0
+                    }
+                })
                 .collect();
-            let retired = batcher.scatter_outputs(&samples, iteration);
+            let retired = batcher.scatter_chunk_outputs(&fed, &samples, iteration);
             if !retired.is_empty() {
                 // reclaim at retirement, not at the lane's next admission:
                 // an idle lane must not pin a dead sequence's blocks while
@@ -215,7 +287,7 @@ impl<'m> CpuServer<'m> {
                 // session, so its blocks are unreachable)
                 let (_, _, still_active) = batcher.gather_inputs();
                 for (i, st) in states.iter_mut().enumerate() {
-                    if active[i] && !still_active[i] && st.pos != 0 {
+                    if was_active[i] && !still_active[i] && st.pos != 0 {
                         st.reset_for_reuse();
                     }
                 }
@@ -235,6 +307,9 @@ impl<'m> CpuServer<'m> {
         debug_assert_eq!(kv_pool.free_blocks(), kv_pool.total_blocks());
 
         let wall_s = t0.elapsed().as_secs_f64();
+        // admission accounting must reach the metrics: a rejected
+        // (oversized) request is dropped by design, never silently
+        let (requests_admitted, requests_rejected) = batcher.counters();
         let sessions = batcher.finished;
         let total_tokens: usize = sessions.iter().map(|s| s.generated.len()).sum();
         let at_ms = |it: u64| -> f64 {
@@ -262,6 +337,8 @@ impl<'m> CpuServer<'m> {
         let sim_ms = arch.cycles_to_ms(sim_cycles);
         let metrics = ServeMetrics {
             requests: sessions.len(),
+            requests_admitted,
+            requests_rejected,
             total_tokens_generated: total_tokens,
             iterations: iteration,
             wall_s,

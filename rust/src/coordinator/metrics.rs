@@ -33,6 +33,12 @@ impl Percentiles {
 #[derive(Debug, Clone)]
 pub struct ServeMetrics {
     pub requests: usize,
+    /// Requests the batcher accepted into the queue.
+    pub requests_admitted: u64,
+    /// Requests rejected at submission (oversized for the context
+    /// window). Dropped by design — but never silently: this counter is
+    /// the serving loop's only record of them.
+    pub requests_rejected: u64,
     pub total_tokens_generated: usize,
     pub iterations: u64,
     /// Wall-clock duration of the serving loop (seconds).
@@ -61,6 +67,10 @@ impl ServeMetrics {
         out.push_str(&format!(
             "requests                {:>10}\n",
             self.requests
+        ));
+        out.push_str(&format!(
+            "admitted / rejected     {:>7} / {}\n",
+            self.requests_admitted, self.requests_rejected
         ));
         out.push_str(&format!(
             "tokens generated        {:>10}\n",

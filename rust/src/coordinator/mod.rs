@@ -24,8 +24,8 @@ pub mod metrics;
 pub mod server;
 pub mod session;
 
-pub use batcher::{Batcher, LaneState};
-pub use cpu::{CpuServeOptions, CpuServeReport, CpuServer};
+pub use batcher::{Batcher, LaneChunk, LaneState};
+pub use cpu::{CpuServeOptions, CpuServeReport, CpuServer, DEFAULT_PREFILL_CHUNK};
 pub use metrics::{Percentiles, ServeMetrics};
 #[cfg(feature = "pjrt")]
 pub use server::{ServeOptions, ServeReport, Server};

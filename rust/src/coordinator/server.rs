@@ -131,6 +131,7 @@ impl<'e> Server<'e> {
         }
 
         let wall_s = t0.elapsed().as_secs_f64();
+        let (requests_admitted, requests_rejected) = batcher.counters();
         let sessions = batcher.finished;
         let total_tokens: usize = sessions.iter().map(|s| s.generated.len()).sum();
         let at_ms = |it: u64| -> f64 {
@@ -151,6 +152,8 @@ impl<'e> Server<'e> {
         let sim_ms = arch.cycles_to_ms(sim_cycles);
         let metrics = ServeMetrics {
             requests: sessions.len(),
+            requests_admitted,
+            requests_rejected,
             total_tokens_generated: total_tokens,
             iterations: iteration,
             wall_s,

@@ -5,8 +5,8 @@ use crate::model::Request;
 /// Lifecycle phase of a session.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SessionPhase {
-    /// Feeding prompt tokens (one per engine step — decode-path prefill,
-    /// matching the decode-only accelerator).
+    /// Feeding prompt tokens (a chunk per engine step through the fused
+    /// causal sweep; chunk length is the scheduler's choice).
     Prefill,
     /// Sampling new tokens.
     Decode,
@@ -67,14 +67,60 @@ impl Session {
         }
     }
 
+    /// The tokens to feed this engine step, at most `max_chunk` of them:
+    /// during prefill, the next slice of the remaining prompt (chunked
+    /// prefill consumes it whole-chunk through the fused causal sweep);
+    /// during decode, the single last-sampled token.
+    pub fn next_chunk(&self, max_chunk: usize) -> &[u32] {
+        assert!(max_chunk >= 1, "chunk must hold at least one token");
+        let prompt = &self.request.prompt;
+        if self.pos < prompt.len() {
+            // saturating: max_chunk = usize::MAX means "whole prompt"
+            &prompt[self.pos..prompt.len().min(self.pos.saturating_add(max_chunk))]
+        } else {
+            std::slice::from_ref(
+                self.generated
+                    .last()
+                    .expect("decode phase requires a sampled token"),
+            )
+        }
+    }
+
+    /// Whether a step that feeds `fed` tokens from here ends on a
+    /// position whose logits are sampled (the last prompt token, or any
+    /// decode position). When `false` the engine can skip the logits
+    /// projection and the sampler entirely for this lane.
+    pub fn samples_after(&self, fed: usize) -> bool {
+        self.pos + fed >= self.request.prompt.len()
+    }
+
     /// Record the outcome of one engine step. During prefill before the
     /// last prompt token, logits are discarded; otherwise `sampled` is
     /// appended. Returns `true` if the session just finished.
     pub fn advance(&mut self, sampled: u32, iteration: u64) -> bool {
+        self.advance_chunk(1, sampled, iteration)
+    }
+
+    /// Record the outcome of one engine step that fed `fed` tokens (a
+    /// prompt chunk, or one decode token). `sampled` is appended only
+    /// when the chunk reached the last prompt token or was a decode
+    /// step ([`Session::samples_after`]). Returns `true` if the session
+    /// just finished.
+    pub fn advance_chunk(&mut self, fed: usize, sampled: u32, iteration: u64) -> bool {
+        assert!(fed >= 1, "a step must feed at least one token");
         let prompt_len = self.request.prompt.len();
-        let was_last_prompt_or_decode = self.pos + 1 >= prompt_len;
-        self.pos += 1;
-        if was_last_prompt_or_decode {
+        assert!(
+            self.pos >= prompt_len || self.pos + fed <= prompt_len,
+            "prefill chunk must not run past the prompt (pos {}, fed {fed}, prompt {prompt_len})",
+            self.pos
+        );
+        assert!(
+            self.pos < prompt_len || fed == 1,
+            "decode steps feed exactly one token"
+        );
+        let sampling = self.samples_after(fed);
+        self.pos += fed;
+        if sampling {
             self.generated.push(sampled);
             if self.first_token_at.is_none() {
                 self.first_token_at = Some(iteration);
@@ -141,6 +187,45 @@ mod tests {
         assert_eq!(s.next_input(), 5);
         assert!(s.advance(9, 0));
         assert_eq!(s.generated, vec![9]);
+    }
+
+    #[test]
+    fn chunked_prefill_lifecycle() {
+        let mut s = Session::new(req(&[1, 2, 3, 4, 5], 2), 0);
+        // chunk capped at 3: feed [1, 2, 3], no sample
+        assert_eq!(s.next_chunk(3), &[1, 2, 3]);
+        assert!(!s.samples_after(3));
+        assert!(!s.advance_chunk(3, 99, 0));
+        assert_eq!(s.pos, 3);
+        assert!(s.generated.is_empty());
+        assert_eq!(s.phase(), SessionPhase::Prefill);
+        // remaining prompt fits the next chunk: [4, 5] → first sample
+        assert_eq!(s.next_chunk(8), &[4, 5]);
+        assert!(s.samples_after(2));
+        assert!(!s.advance_chunk(2, 42, 1));
+        assert_eq!(s.generated, vec![42]);
+        assert_eq!(s.first_token_at, Some(1));
+        assert_eq!(s.phase(), SessionPhase::Decode);
+        // decode: chunks are single tokens
+        assert_eq!(s.next_chunk(8), &[42]);
+        assert!(s.advance_chunk(1, 7, 2));
+        assert_eq!(s.generated, vec![42, 7]);
+        assert_eq!(s.finished_at, Some(2));
+    }
+
+    #[test]
+    fn whole_prompt_chunk_samples_immediately() {
+        let mut s = Session::new(req(&[1, 2, 3], 1), 0);
+        assert_eq!(s.next_chunk(16), &[1, 2, 3]);
+        assert!(s.advance_chunk(3, 5, 0), "gen_len 1 finishes on the first sample");
+        assert_eq!(s.generated, vec![5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must not run past the prompt")]
+    fn chunk_past_prompt_end_rejected() {
+        let mut s = Session::new(req(&[1, 2, 3], 2), 0);
+        s.advance_chunk(4, 9, 0);
     }
 
     #[test]

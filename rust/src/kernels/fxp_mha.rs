@@ -201,6 +201,61 @@ impl FxpMhaSwiftKv {
         }
     }
 
+    /// Causal multi-token Q15.17 sweep over a contiguous cache — the
+    /// accelerator half of chunked prefill. Query row `j` of `qs`
+    /// (`[chunk, n_heads * d]`) sits at token position `start + j` and
+    /// attends over cache rows `[0, start + j + 1)` through the same
+    /// reset → [`FxpMhaSwiftKv::extend`] → finalize pipeline as the
+    /// single-token decode path, so the chunked sweep is **bit-exact**
+    /// versus feeding the tokens one step at a time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_chunk(
+        &mut self,
+        lut: &Exp2Lut,
+        qs: &[Fxp32],
+        k: &[Fxp32],
+        v: &[Fxp32],
+        start: usize,
+        chunk: usize,
+        scale: Fxp32,
+        outs: &mut [Fxp32],
+    ) {
+        let qw = self.q_width();
+        assert_eq!(qs.len(), chunk * qw, "qs must hold chunk packed query rows");
+        assert_eq!(outs.len(), chunk * qw, "outs must hold chunk packed output rows");
+        for j in 0..chunk {
+            self.reset();
+            self.extend(lut, &qs[j * qw..(j + 1) * qw], k, v, 0, start + j + 1, scale);
+            self.finalize_into(&mut outs[j * qw..(j + 1) * qw]);
+        }
+    }
+
+    /// [`FxpMhaSwiftKv::attend_chunk`] over a block-gathered paged
+    /// Q15.17 mirror — the chunked-prefill sweep of the serving path,
+    /// bit-exact versus both the contiguous chunk sweep and the
+    /// per-token decode path over equal rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_chunk_paged(
+        &mut self,
+        lut: &Exp2Lut,
+        qs: &[Fxp32],
+        table: &super::paged::BlockTable,
+        start: usize,
+        chunk: usize,
+        scale: Fxp32,
+        outs: &mut [Fxp32],
+    ) {
+        let qw = self.q_width();
+        assert_eq!(qs.len(), chunk * qw, "qs must hold chunk packed query rows");
+        assert_eq!(outs.len(), chunk * qw, "outs must hold chunk packed output rows");
+        assert!(table.capacity_tokens() >= start + chunk, "block table too short");
+        for j in 0..chunk {
+            self.reset();
+            self.extend_paged(lut, &qs[j * qw..(j + 1) * qw], table, 0, start + j + 1, scale);
+            self.finalize_into(&mut outs[j * qw..(j + 1) * qw]);
+        }
+    }
+
     /// Eq. (8) on the divide unit, into a caller-owned buffer.
     pub fn finalize_into(&self, out: &mut [Fxp32]) {
         assert!(self.consumed > 0, "finalize before any token");
@@ -335,6 +390,79 @@ mod tests {
         paged.extend_paged(&lut, &qq, &table, 7, len, scale);
         let mut b = vec![Fxp32::ZERO; h * d];
         paged.finalize_into(&mut b);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.raw(), y.raw(), "flat dim {i} diverged");
+        }
+        table.release_into(&pool);
+    }
+
+    #[test]
+    fn chunk_sweep_bit_exact_vs_per_token_attend() {
+        let lut = Exp2Lut::new();
+        let mut rng = Rng::seed_from_u64(25);
+        let (h, hkv, d, start, chunk) = (4usize, 2usize, 8usize, 7usize, 4usize);
+        let row = hkv * d;
+        let len = start + chunk;
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qs = vector::quantize(&rng.uniform_vec(chunk * h * d, 1.0));
+        let k = vector::quantize(&rng.uniform_vec(len * row, 1.0));
+        let v = vector::quantize(&rng.uniform_vec(len * row, 1.0));
+
+        let mut mha = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut outs = vec![Fxp32::ZERO; chunk * h * d];
+        mha.attend_chunk(&lut, &qs, &k, &v, start, chunk, scale, &mut outs);
+
+        let mut reference = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut want = vec![Fxp32::ZERO; h * d];
+        for j in 0..chunk {
+            reference.attend(
+                &lut,
+                &qs[j * h * d..(j + 1) * h * d],
+                &k,
+                &v,
+                start + j + 1,
+                scale,
+                &mut want,
+            );
+            for (i, (a, b)) in outs[j * h * d..(j + 1) * h * d].iter().zip(&want).enumerate() {
+                assert_eq!(a.raw(), b.raw(), "chunk query {j} dim {i} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sweep_paged_bit_exact_vs_contiguous() {
+        use crate::kernels::paged::{BlockPool, BlockTable};
+        let lut = Exp2Lut::new();
+        let mut rng = Rng::seed_from_u64(26);
+        let (h, hkv, d, start, chunk) = (4usize, 1usize, 8usize, 3usize, 7usize);
+        let row = hkv * d;
+        let len = start + chunk;
+        let scale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qsf = rng.uniform_vec(chunk * h * d, 1.0);
+        let kf = rng.uniform_vec(len * row, 1.0);
+        let vf = rng.uniform_vec(len * row, 1.0);
+        let qs = vector::quantize(&qsf);
+        let k = vector::quantize(&kf);
+        let v = vector::quantize(&vf);
+
+        // block_len 3 → ragged last block (10 = 3·3 + 1)
+        let pool = BlockPool::new(4, 3, row);
+        let mut table = BlockTable::new(&pool, len);
+        table.ensure_tokens(&pool, len);
+        for t in 0..len {
+            table.k_row_mut(t).copy_from_slice(&kf[t * row..(t + 1) * row]);
+            table.v_row_mut(t).copy_from_slice(&vf[t * row..(t + 1) * row]);
+            table.quantize_row(t);
+        }
+
+        let mut contiguous = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut a = vec![Fxp32::ZERO; chunk * h * d];
+        contiguous.attend_chunk(&lut, &qs, &k, &v, start, chunk, scale, &mut a);
+
+        let mut paged = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut b = vec![Fxp32::ZERO; chunk * h * d];
+        paged.attend_chunk_paged(&lut, &qs, &table, start, chunk, scale, &mut b);
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert_eq!(x.raw(), y.raw(), "flat dim {i} diverged");
         }

@@ -200,6 +200,64 @@ impl MhaSwiftKv {
         }
     }
 
+    /// Causal multi-token sweep over a contiguous cache — the kernel
+    /// half of chunked prefill. `qs` holds `chunk` packed query rows
+    /// (`[chunk, n_heads * d]`); query row `j` sits at token position
+    /// `start + j` and attends over cache rows `[0, start + j + 1)`
+    /// (its causal prefix, which includes the chunk rows written before
+    /// it). Each query runs the *same* reset → [`MhaSwiftKv::extend`] →
+    /// [`MhaSwiftKv::finalize_into`] pipeline as the single-token decode
+    /// path, in the same per-head op order, so the chunked sweep is
+    /// bit-identical to feeding the tokens one `decode_step` at a time.
+    /// Outputs land row-by-row in `outs` (`[chunk, n_heads * d]`); no
+    /// allocation. The state is left as the last query's sweep.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_chunk(
+        &mut self,
+        qs: &[f32],
+        k: &[f32],
+        v: &[f32],
+        start: usize,
+        chunk: usize,
+        scale: f32,
+        outs: &mut [f32],
+    ) {
+        let qw = self.q_width();
+        assert_eq!(qs.len(), chunk * qw, "qs must hold chunk packed query rows");
+        assert_eq!(outs.len(), chunk * qw, "outs must hold chunk packed output rows");
+        for j in 0..chunk {
+            self.reset();
+            self.extend(&qs[j * qw..(j + 1) * qw], k, v, 0, start + j + 1, scale);
+            self.finalize_into(&mut outs[j * qw..(j + 1) * qw]);
+        }
+    }
+
+    /// [`MhaSwiftKv::attend_chunk`] over a block-gathered paged cache:
+    /// the chunked-prefill sweep of the serving path. Identical op order
+    /// per query (reset → [`MhaSwiftKv::extend_paged`] → finalize), so
+    /// results are bit-identical to the contiguous chunk sweep and to
+    /// the per-token decode path over equal rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_chunk_paged(
+        &mut self,
+        qs: &[f32],
+        table: &super::paged::BlockTable,
+        start: usize,
+        chunk: usize,
+        scale: f32,
+        outs: &mut [f32],
+    ) {
+        let qw = self.q_width();
+        assert_eq!(qs.len(), chunk * qw, "qs must hold chunk packed query rows");
+        assert_eq!(outs.len(), chunk * qw, "outs must hold chunk packed output rows");
+        assert!(table.capacity_tokens() >= start + chunk, "block table too short");
+        for j in 0..chunk {
+            self.reset();
+            self.extend_paged(&qs[j * qw..(j + 1) * qw], table, 0, start + j + 1, scale);
+            self.finalize_into(&mut outs[j * qw..(j + 1) * qw]);
+        }
+    }
+
     /// Eq. (8): the deferred one-time normalization, written into a
     /// caller-owned `[n_heads * d]` buffer (no allocation).
     pub fn finalize_into(&self, out: &mut [f32]) {
@@ -427,6 +485,69 @@ mod tests {
         let mut b = vec![0.0f32; h * d];
         paged.finalize_into(&mut b);
         assert_eq!(a, b, "paged sweep must be bit-identical to contiguous");
+        table.release_into(&pool);
+    }
+
+    #[test]
+    fn chunk_sweep_matches_per_token_attend() {
+        // causal chunk of 5 queries starting after a 6-row prefix: each
+        // chunk query must be bit-identical to a one-shot attend over its
+        // own causal prefix (the per-token decode path's op order)
+        let mut rng = Rng::seed_from_u64(19);
+        let (h, hkv, d, start, chunk) = (4usize, 2usize, 8usize, 6usize, 5usize);
+        let row = hkv * d;
+        let len = start + chunk;
+        let scale = 1.0 / (d as f32).sqrt();
+        let qs = rng.uniform_vec(chunk * h * d, 1.0);
+        let k = rng.uniform_vec(len * row, 1.0);
+        let v = rng.uniform_vec(len * row, 1.0);
+
+        let mut mha = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut outs = vec![0.0f32; chunk * h * d];
+        mha.attend_chunk(&qs, &k, &v, start, chunk, scale, &mut outs);
+
+        let mut reference = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut want = vec![0.0f32; h * d];
+        for j in 0..chunk {
+            let q = &qs[j * h * d..(j + 1) * h * d];
+            reference.attend(q, &k, &v, start + j + 1, scale, &mut want);
+            assert_eq!(
+                &outs[j * h * d..(j + 1) * h * d],
+                want.as_slice(),
+                "chunk query {j} diverged from the per-token sweep"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_sweep_paged_bit_identical_to_contiguous() {
+        use crate::kernels::paged::{BlockPool, BlockTable};
+        let mut rng = Rng::seed_from_u64(20);
+        let (h, hkv, d, start, chunk) = (4usize, 4usize, 8usize, 5usize, 6usize);
+        let row = hkv * d;
+        let len = start + chunk;
+        let scale = 1.0 / (d as f32).sqrt();
+        let qs = rng.uniform_vec(chunk * h * d, 1.0);
+        let k = rng.uniform_vec(len * row, 1.0);
+        let v = rng.uniform_vec(len * row, 1.0);
+
+        // block_len 4 → the chunk spans a block boundary (11 = 2·4 + 3)
+        let pool = BlockPool::new(3, 4, row);
+        let mut table = BlockTable::new(&pool, len);
+        table.ensure_tokens(&pool, len);
+        for t in 0..len {
+            table.k_row_mut(t).copy_from_slice(&k[t * row..(t + 1) * row]);
+            table.v_row_mut(t).copy_from_slice(&v[t * row..(t + 1) * row]);
+        }
+
+        let mut contiguous = MhaSwiftKv::new(h, d);
+        let mut a = vec![0.0f32; chunk * h * d];
+        contiguous.attend_chunk(&qs, &k, &v, start, chunk, scale, &mut a);
+
+        let mut paged = MhaSwiftKv::new(h, d);
+        let mut b = vec![0.0f32; chunk * h * d];
+        paged.attend_chunk_paged(&qs, &table, start, chunk, scale, &mut b);
+        assert_eq!(a, b, "paged chunk sweep must be bit-identical to contiguous");
         table.release_into(&pool);
     }
 

@@ -47,6 +47,25 @@ pub struct DecodeScratch {
     pub mha: MhaSwiftKv,
     /// Fused multi-head Q15.17 SwiftKV state (accelerator numerics).
     pub fxp_mha: FxpMhaSwiftKv,
+    // --- chunked-prefill buffers, sized for `chunk_cap` tokens by
+    // `ensure_chunk` (empty until the first prefill; growth allocates,
+    // steady-state prefill steps at or below the capacity do not) ------
+    /// Residual streams of the chunk tokens, `[chunk_cap, d_model]`.
+    pub xs: Vec<f32>,
+    /// Position-encoded queries of the chunk tokens, `[chunk_cap, d_model]`.
+    pub q_rots: Vec<f32>,
+    /// Fused attention outputs of the chunk tokens, `[chunk_cap, d_model]`.
+    pub attn_outs: Vec<f32>,
+    /// Per-chunk-token RoPE caches, `[chunk_cap, d_head / 2]` each.
+    pub rope_cos: Vec<f32>,
+    pub rope_sin: Vec<f32>,
+    /// Q15.17 chunk queries / attention outputs, `[chunk_cap, d_model]`.
+    pub q_fxps: Vec<Fxp32>,
+    pub attn_fxps: Vec<Fxp32>,
+    /// Chunk tokens the prefill buffers are currently sized for.
+    chunk_cap: usize,
+    /// Head dimension (sizes the per-token RoPE cache rows).
+    d_head: usize,
 }
 
 impl DecodeScratch {
@@ -78,7 +97,42 @@ impl DecodeScratch {
             attn_fxp: vec![Fxp32::ZERO; d_model],
             mha: MhaSwiftKv::new_grouped(n_heads, n_kv_heads, d_head),
             fxp_mha: FxpMhaSwiftKv::new_grouped(n_heads, n_kv_heads, d_head),
+            xs: Vec::new(),
+            q_rots: Vec::new(),
+            attn_outs: Vec::new(),
+            rope_cos: Vec::new(),
+            rope_sin: Vec::new(),
+            q_fxps: Vec::new(),
+            attn_fxps: Vec::new(),
+            chunk_cap: 0,
+            d_head,
         }
+    }
+
+    /// Grow the chunked-prefill buffers to hold at least `chunk` tokens.
+    /// Allocates only when the capacity actually grows — the warm-up
+    /// allocation of the chunked-prefill path; prefill steps at or below
+    /// the capacity stay heap-free (`tests/alloc_hotpath.rs`).
+    pub fn ensure_chunk(&mut self, chunk: usize) {
+        if chunk <= self.chunk_cap {
+            return;
+        }
+        let d_model = self.d_model();
+        let d_half = self.d_head / 2;
+        self.xs.resize(chunk * d_model, 0.0);
+        self.q_rots.resize(chunk * d_model, 0.0);
+        self.attn_outs.resize(chunk * d_model, 0.0);
+        self.rope_cos.resize(chunk * d_half, 0.0);
+        self.rope_sin.resize(chunk * d_half, 0.0);
+        self.q_fxps.resize(chunk * d_model, Fxp32::ZERO);
+        self.attn_fxps.resize(chunk * d_model, Fxp32::ZERO);
+        self.chunk_cap = chunk;
+    }
+
+    /// Chunk tokens the prefill buffers currently hold
+    /// (0 before the first [`DecodeScratch::ensure_chunk`]).
+    pub fn chunk_capacity(&self) -> usize {
+        self.chunk_cap
     }
 
     /// Model width the scratch was sized for.
@@ -126,5 +180,28 @@ mod tests {
     #[should_panic(expected = "multiple of n_kv_heads")]
     fn indivisible_group_panics() {
         let _ = DecodeScratch::new(6, 4, 8, 32);
+    }
+
+    #[test]
+    fn ensure_chunk_grows_once_and_never_shrinks() {
+        let mut s = DecodeScratch::new(4, 2, 8, 64);
+        assert_eq!(s.chunk_capacity(), 0);
+        assert!(s.xs.is_empty());
+        s.ensure_chunk(5);
+        assert_eq!(s.chunk_capacity(), 5);
+        assert_eq!(s.xs.len(), 5 * 32);
+        assert_eq!(s.q_rots.len(), 5 * 32);
+        assert_eq!(s.attn_outs.len(), 5 * 32);
+        assert_eq!(s.rope_cos.len(), 5 * 4);
+        assert_eq!(s.rope_sin.len(), 5 * 4);
+        assert_eq!(s.q_fxps.len(), 5 * 32);
+        assert_eq!(s.attn_fxps.len(), 5 * 32);
+        // smaller requests keep the existing buffers
+        s.ensure_chunk(2);
+        assert_eq!(s.chunk_capacity(), 5);
+        assert_eq!(s.xs.len(), 5 * 32);
+        s.ensure_chunk(8);
+        assert_eq!(s.chunk_capacity(), 8);
+        assert_eq!(s.xs.len(), 8 * 32);
     }
 }

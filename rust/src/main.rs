@@ -5,13 +5,14 @@
 //! swiftkv exhibits [--only fig7a|fig7b|table2|table3|table4|fig8a|fig8b|explut]
 //! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
 //! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
-//!                  [--kv-block-len 16] [--kv-pool-blocks 0]
+//!                  [--kv-block-len 16] [--kv-pool-blocks 0] [--prefill-chunk 8]
+//!                  [--prompt-len 0]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 
 #[cfg(feature = "pjrt")]
 use swiftkv::coordinator::{ServeOptions, Server};
-use swiftkv::coordinator::{CpuServeOptions, CpuServer};
+use swiftkv::coordinator::{CpuServeOptions, CpuServer, DEFAULT_PREFILL_CHUNK};
 use swiftkv::model::{
     LlmConfig, NumericsMode, TinyModel, WeightStore, WorkloadGen, WorkloadSpec,
     DEFAULT_KV_BLOCK_LEN,
@@ -42,10 +43,17 @@ fn model_by_name(name: &str) -> Result<LlmConfig, String> {
 }
 
 fn workload_spec(args: &Args, vocab: usize) -> Result<WorkloadSpec, String> {
+    // --prompt-len N pins every request to an N-token prompt (TTFT
+    // experiments with chunked prefill); 0 keeps the default 4–24 range
+    let prompt_len = args.get_usize("prompt-len", 0)?;
     Ok(WorkloadSpec {
         num_requests: args.get_usize("requests", 16)?,
         vocab,
-        prompt_len: (4, 24),
+        prompt_len: if prompt_len > 0 {
+            (prompt_len, prompt_len)
+        } else {
+            (4, 24)
+        },
         gen_len: (8, 48),
         mean_gap_ms: args.get_f64("gap-ms", 0.0)?,
         seed: args.get_usize("seed", 0)? as u64,
@@ -108,6 +116,9 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
         return Err("--kv-block-len must be at least 1".into());
     }
     let kv_pool_blocks = args.get_usize("kv-pool-blocks", 0)?;
+    // prompt tokens per lane per iteration through the fused chunked
+    // prefill (0 = whole prompt in one step; 1 = legacy per-token)
+    let prefill_chunk = args.get_usize("prefill-chunk", DEFAULT_PREFILL_CHUNK)?;
     let report = CpuServer::new(
         &tm,
         CpuServeOptions {
@@ -117,6 +128,7 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
             sim_model: LlmConfig::llama2_7b(),
             kv_block_len,
             kv_pool_blocks,
+            prefill_chunk,
         },
     )
     .serve(reqs);
@@ -136,7 +148,7 @@ fn run() -> Result<(), String> {
     let args = Args::parse(
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
-            "kv-heads", "kv-block-len", "kv-pool-blocks",
+            "kv-heads", "kv-block-len", "kv-pool-blocks", "prefill-chunk", "prompt-len",
         ],
         &["help"],
     )?;

@@ -174,8 +174,6 @@ pub struct DecodeState {
     fxp_rows: usize,
     rope: RopeState,
     pub pos: usize,
-    d_head: usize,
-    rope_base: f64,
     scratch: DecodeScratch,
 }
 
@@ -190,7 +188,8 @@ impl DecodeState {
         }
         self.pos = 0;
         self.fxp_rows = 0;
-        self.rope = RopeState::new(self.d_head, self.rope_base);
+        // in-place rewind: lane recycling allocates nothing
+        self.rope.reset();
     }
 
     /// The pool this state draws its KV blocks from.
@@ -390,8 +389,6 @@ impl TinyModel {
             fxp_rows: 0,
             rope: RopeState::new(self.d_head, self.rope_base),
             pos: 0,
-            d_head: self.d_head,
-            rope_base: self.rope_base,
             scratch: DecodeScratch::new(self.n_heads, self.n_kv_heads, self.d_head, self.d_ffn),
         }
     }
@@ -541,6 +538,203 @@ impl TinyModel {
         st.pos += 1;
     }
 
+    /// Chunked prefill: feed a whole chunk of prompt tokens through the
+    /// fused causal sweep in one call, instead of one [`Self::decode_step_into`]
+    /// per token. Per layer the chunk runs in three passes — (1) per
+    /// token: norm, QKV projections, RoPE, append the interleaved cache
+    /// row; (2) one causal fused multi-head sweep per chunk query over
+    /// its own prefix ([`crate::kernels::MhaSwiftKv::attend_chunk_paged`] /
+    /// [`crate::kernels::FxpMhaSwiftKv::attend_chunk_paged`]); (3) per
+    /// token: output projection, residual, MLP — so each layer's weights
+    /// are streamed once per *chunk* rather than once per token, and the
+    /// final-norm + logits projection run **only for the last chunk
+    /// token** (pass `None` to skip them entirely for non-final chunks —
+    /// the TTFT win of the serving path). Every per-token op is issued in
+    /// the same order as the single-token decode path, so chunked
+    /// prefill is bit-identical in `DesktopF32` and bit-exact in
+    /// `Accelerator` numerics versus feeding the same tokens one
+    /// `decode_step` at a time (`tests/prop_prefill.rs`).
+    ///
+    /// The per-token layer pipeline is intentionally *not* shared with
+    /// [`Self::decode_step_into`]: the two bodies are independent
+    /// implementations of the same op order, and the prefill property
+    /// sweep cross-validates them against each other — a change that
+    /// breaks the order in one path fails `prop_prefill.rs` instead of
+    /// silently shifting both.
+    ///
+    /// Steady-state chunks (at or below the scratch's warmed-up chunk
+    /// capacity) perform **zero heap allocation**, like the decode step.
+    pub fn prefill_into(
+        &self,
+        st: &mut DecodeState,
+        tokens: &[u32],
+        mode: NumericsMode,
+        logits: Option<&mut [f32]>,
+    ) {
+        let chunk = tokens.len();
+        assert!(chunk > 0, "empty prefill chunk");
+        assert!(
+            tokens.iter().all(|&t| (t as usize) < self.vocab),
+            "token out of range"
+        );
+        assert!(st.pos + chunk <= self.n_ctx, "context overflow");
+        if let Some(ref out) = logits {
+            assert_eq!(out.len(), self.vocab, "logits buffer size");
+        }
+        let d = self.d_model;
+        let (h, dh) = (self.n_heads, self.d_head);
+        let h_kv = self.n_kv_heads;
+        let d_half = dh / 2;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let fxp_scale = Fxp32::from_f64(1.0 / (dh as f64).sqrt());
+
+        let pos = st.pos;
+        let len = pos + chunk;
+        let fxp_from = st.fxp_rows.min(pos);
+
+        let DecodeState {
+            tables,
+            pool,
+            rope,
+            scratch: sc,
+            ..
+        } = st;
+        debug_assert_eq!(pool.row_width(), h_kv * dh);
+        sc.ensure_chunk(chunk);
+
+        // advance the shared RoPE recurrence once per chunk token,
+        // capturing each position's (cos, sin) row — the same recurrence
+        // steps the per-token decode path takes, so the captured values
+        // are bit-identical
+        for j in 0..chunk {
+            rope.advance();
+            sc.rope_cos[j * d_half..(j + 1) * d_half].copy_from_slice(&rope.cos);
+            sc.rope_sin[j * d_half..(j + 1) * d_half].copy_from_slice(&rope.sin);
+        }
+
+        // map every chunk row in every layer up front (blocks are
+        // pre-allocated; this only moves them off the pool's free list)
+        for table in tables.iter_mut() {
+            table.ensure_tokens(pool, len);
+        }
+
+        // embed the whole chunk into its residual streams
+        for (j, &t) in tokens.iter().enumerate() {
+            sc.xs[j * d..(j + 1) * d]
+                .copy_from_slice(&self.embedding[t as usize * d..(t as usize + 1) * d]);
+        }
+
+        for (l, lw) in self.layers.iter().enumerate() {
+            let table = &mut tables[l];
+
+            // pass 1 — per chunk token: norm, QKV, RoPE, cache-row append.
+            // Row pos+j is written before any later chunk query sweeps it,
+            // so causality within the chunk holds by construction.
+            for j in 0..chunk {
+                rms_norm_into(&sc.xs[j * d..(j + 1) * d], &lw.attn_norm, &mut sc.xn);
+                lw.wq.forward_into(&sc.xn, &mut sc.qi8, &mut sc.q);
+                lw.wk.forward_into(&sc.xn, &mut sc.qi8, &mut sc.k);
+                lw.wv.forward_into(&sc.xn, &mut sc.qi8, &mut sc.v);
+                let cos = &sc.rope_cos[j * d_half..(j + 1) * d_half];
+                let sin = &sc.rope_sin[j * d_half..(j + 1) * d_half];
+                for head in 0..h {
+                    let o = head * dh;
+                    rope_apply_cached_into(
+                        &sc.q[o..o + dh],
+                        cos,
+                        sin,
+                        &mut sc.q_rots[j * d + o..j * d + o + dh],
+                    );
+                }
+                let krow = table.k_row_mut(pos + j);
+                for head in 0..h_kv {
+                    let o = head * dh;
+                    rope_apply_cached_into(&sc.k[o..o + dh], cos, sin, &mut krow[o..o + dh]);
+                }
+                table.v_row_mut(pos + j).copy_from_slice(&sc.v);
+            }
+
+            // pass 2 — the fused causal chunk sweep: every chunk query
+            // advances all heads over its own prefix, same op order as
+            // the per-token path
+            match mode {
+                NumericsMode::DesktopF32 => {
+                    sc.mha.attend_chunk_paged(
+                        &sc.q_rots[..chunk * d],
+                        table,
+                        pos,
+                        chunk,
+                        scale,
+                        &mut sc.attn_outs[..chunk * d],
+                    );
+                }
+                NumericsMode::Accelerator => {
+                    // quantize the rotated chunk queries once per layer and
+                    // append the missing (k, v) rows to the Q15.17 mirror —
+                    // steady state that is exactly this chunk's rows; after
+                    // DesktopF32 steps the gap is backfilled. Mirrored
+                    // history is never re-quantized.
+                    vector::quantize_into(&sc.q_rots[..chunk * d], &mut sc.q_fxps[..chunk * d]);
+                    for t in fxp_from..len {
+                        table.quantize_row(t);
+                    }
+                    sc.fxp_mha.attend_chunk_paged(
+                        &self.lut,
+                        &sc.q_fxps[..chunk * d],
+                        table,
+                        pos,
+                        chunk,
+                        fxp_scale,
+                        &mut sc.attn_fxps[..chunk * d],
+                    );
+                    vector::dequantize_into(
+                        &sc.attn_fxps[..chunk * d],
+                        &mut sc.attn_outs[..chunk * d],
+                    );
+                }
+            }
+
+            // pass 3 — per chunk token: output projection, residual, MLP
+            for j in 0..chunk {
+                lw.wo
+                    .forward_into(&sc.attn_outs[j * d..(j + 1) * d], &mut sc.qi8, &mut sc.o);
+                for (xi, oi) in sc.xs[j * d..(j + 1) * d].iter_mut().zip(&sc.o) {
+                    *xi += oi;
+                }
+                rms_norm_into(&sc.xs[j * d..(j + 1) * d], &lw.mlp_norm, &mut sc.xn);
+                lw.w_gate.forward_into(&sc.xn, &mut sc.qi8, &mut sc.gate);
+                lw.w_up.forward_into(&sc.xn, &mut sc.qi8, &mut sc.up);
+                for ((a, &g), &u) in sc.act.iter_mut().zip(&sc.gate).zip(&sc.up) {
+                    *a = silu(g) * u;
+                }
+                lw.w_down.forward_into(&sc.act, &mut sc.qi8, &mut sc.down);
+                for (xi, di) in sc.xs[j * d..(j + 1) * d].iter_mut().zip(&sc.down) {
+                    *xi += di;
+                }
+            }
+        }
+
+        // the logits projection runs only for the final chunk token —
+        // every earlier position's logits would be discarded anyway
+        if let Some(out) = logits {
+            rms_norm_into(&sc.xs[(chunk - 1) * d..chunk * d], &self.final_norm, &mut sc.xn);
+            self.lm_head.forward_into(&sc.xn, &mut sc.qi8, out);
+        }
+
+        if mode == NumericsMode::Accelerator {
+            st.fxp_rows = len;
+        }
+        st.pos = len;
+    }
+
+    /// [`Self::prefill_into`] returning freshly-allocated logits for the
+    /// final chunk token.
+    pub fn prefill(&self, st: &mut DecodeState, tokens: &[u32], mode: NumericsMode) -> Vec<f32> {
+        let mut logits = vec![0.0f32; self.vocab];
+        self.prefill_into(st, tokens, mode, Some(&mut logits[..]));
+        logits
+    }
+
     /// Debug access to cache rows (cross-validation against the JAX side).
     /// Returns the `[d_head]` K/V slices of (layer, **KV** head, position),
     /// read through the layer's block table.
@@ -564,22 +758,36 @@ impl TinyModel {
         (&st.rope.cos, &st.rope.sin)
     }
 
-    /// Greedy generation: feed `prompt`, then generate `steps` tokens.
-    /// The logits buffer is allocated once and reused across steps.
+    /// Greedy generation: prefill `prompt` through the fused chunked
+    /// sweep ([`Self::prefill_into`], one pass, logits only for the last
+    /// prompt token), then generate `steps` tokens one decode step at a
+    /// time. The logits buffer is allocated once and reused.
+    ///
+    /// # Panics
+    /// When `prompt.len() + steps > n_ctx` — the request cannot fit the
+    /// context window. Checked up front so the caller always receives
+    /// exactly `steps` tokens instead of a silently truncated tail.
     pub fn generate(&self, prompt: &[u32], steps: usize, mode: NumericsMode) -> Vec<u32> {
+        assert!(
+            prompt.len() + steps <= self.n_ctx,
+            "generate would overflow the context window: prompt {} + steps {steps} > n_ctx {}",
+            prompt.len(),
+            self.n_ctx
+        );
         let mut st = self.new_state();
         let mut logits = vec![0.0f32; self.vocab];
-        for &t in prompt {
-            self.decode_step_into(&mut st, t, mode, &mut logits);
+        if !prompt.is_empty() {
+            self.prefill_into(&mut st, prompt, mode, Some(&mut logits[..]));
         }
         let mut out = Vec::with_capacity(steps);
-        for _ in 0..steps {
+        for i in 0..steps {
             let next = argmax(&logits) as u32;
             out.push(next);
-            if st.pos >= self.n_ctx {
-                break;
+            // the final sampled token is never fed back — its logits
+            // would be discarded
+            if i + 1 < steps {
+                self.decode_step_into(&mut st, next, mode, &mut logits);
             }
-            self.decode_step_into(&mut st, next, mode, &mut logits);
         }
         out
     }
@@ -609,19 +817,29 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Index of the maximum logit (greedy sampling).
+/// Index of the maximum logit (greedy sampling). Total over all f32
+/// values: NaNs never win a comparison, so a NaN-poisoned logit row
+/// yields the best finite index (0 if every entry is NaN) instead of
+/// panicking mid-serve.
 pub fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best = i;
+            best_v = x;
+        }
+    }
+    best
 }
 
-/// Indices of the top-k logits, descending.
+/// Indices of the top-k logits, descending. Same NaN contract as
+/// [`argmax`]: NaNs never outrank a finite value (they sort as −∞
+/// regardless of sign bit) and never panic the sort.
 pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let nan_last = |x: f32| if x.is_nan() { f32::NEG_INFINITY } else { x };
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.sort_by(|&a, &b| nan_last(xs[b]).total_cmp(&nan_last(xs[a])));
     idx.truncate(k);
     idx
 }
@@ -961,6 +1179,129 @@ mod tests {
         let xs = vec![0.1f32, 3.0, -1.0, 2.0];
         assert_eq!(top_k(&xs, 3), vec![1, 3, 0]);
         assert_eq!(argmax(&xs), 1);
+    }
+
+    #[test]
+    fn argmax_is_nan_total() {
+        // NaNs must never panic the sampler and must never win
+        assert_eq!(argmax(&[f32::NAN, 1.0, f32::NAN, 0.5]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0, f32::NAN]), 1);
+        assert_eq!(argmax(&[]), 0);
+        // top_k shares the contract: NaN never outranks a finite value
+        assert_eq!(top_k(&[1.0, f32::NAN, 2.0], 2), vec![2, 0]);
+        assert_eq!(top_k(&[f32::NAN, 7.0], 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn prefill_matches_per_token_decode_both_modes() {
+        for m in [tiny_synth(), tiny_synth_gqa()] {
+            let prompt = [1u32, 9, 30, 2, 2, 17, 5];
+            for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+                // reference: one decode step per prompt token
+                let mut ref_st = m.new_state();
+                let mut want = vec![0.0f32; m.vocab];
+                for &t in &prompt {
+                    m.decode_step_into(&mut ref_st, t, mode, &mut want);
+                }
+                // whole-prompt chunk
+                let mut st = m.new_state();
+                let got = m.prefill(&mut st, &prompt, mode);
+                assert_eq!(got, want, "{mode:?}: whole-prompt prefill diverged");
+                assert_eq!(st.pos, prompt.len());
+                // split chunks (3 + 4), logits skipped for the first
+                let mut st2 = m.new_state();
+                m.prefill_into(&mut st2, &prompt[..3], mode, None);
+                let got2 = m.prefill(&mut st2, &prompt[3..], mode);
+                assert_eq!(got2, want, "{mode:?}: split-chunk prefill diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_pure_decode() {
+        let m = tiny_synth_gqa();
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut ref_st = m.new_state();
+            let mut want = vec![0.0f32; m.vocab];
+            for &t in &[4u32, 8, 15, 16, 23] {
+                m.decode_step_into(&mut ref_st, t, mode, &mut want);
+            }
+            let mut st = m.new_state();
+            m.prefill_into(&mut st, &[4, 8, 15, 16], mode, None);
+            let got = m.decode_step(&mut st, 23, mode);
+            assert_eq!(got, want, "{mode:?}: decode after chunked prefill diverged");
+        }
+    }
+
+    #[test]
+    fn generate_uses_chunked_prefill_deterministically() {
+        let m = tiny_synth();
+        // generate (chunked prefill) vs a hand-rolled per-token loop
+        let prompt = [1u32, 2, 3, 30];
+        let steps = 6;
+        let mut st = m.new_state();
+        let mut logits = vec![0.0f32; m.vocab];
+        for &t in &prompt {
+            m.decode_step_into(&mut st, t, NumericsMode::Accelerator, &mut logits);
+        }
+        let mut want = Vec::new();
+        for i in 0..steps {
+            let next = argmax(&logits) as u32;
+            want.push(next);
+            if i + 1 < steps {
+                m.decode_step_into(&mut st, next, NumericsMode::Accelerator, &mut logits);
+            }
+        }
+        assert_eq!(m.generate(&prompt, steps, NumericsMode::Accelerator), want);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow the context window")]
+    fn generate_rejects_oversized_request_up_front() {
+        let m = tiny_synth(); // n_ctx = 48
+        let prompt: Vec<u32> = (0..40).map(|i| i % m.vocab as u32).collect();
+        let _ = m.generate(&prompt, 9, NumericsMode::DesktopF32);
+    }
+
+    #[test]
+    fn generate_fills_the_context_window_exactly() {
+        let m = tiny_synth(); // n_ctx = 48
+        let prompt: Vec<u32> = (0..40).map(|i| i % m.vocab as u32).collect();
+        let out = m.generate(&prompt, 8, NumericsMode::DesktopF32);
+        assert_eq!(out.len(), 8, "a request that exactly fits must not truncate");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prefill chunk")]
+    fn prefill_rejects_empty_chunk() {
+        let m = tiny_synth();
+        let mut st = m.new_state();
+        m.prefill_into(&mut st, &[], NumericsMode::DesktopF32, None);
+    }
+
+    #[test]
+    fn prefill_backfills_quantized_mirror_after_desktop_steps() {
+        // DesktopF32 chunk, then an Accelerator chunk: the fxp mirror
+        // must be backfilled for the desktop rows before the fused
+        // Q15.17 sweep reads them
+        let m = tiny_synth();
+        let mut st = m.new_state();
+        m.prefill_into(&mut st, &[3, 9, 27], NumericsMode::DesktopF32, None);
+        assert_eq!(st.fxp_rows, 0);
+        let logits = m.prefill(&mut st, &[11, 4], NumericsMode::Accelerator);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(st.fxp_rows, 5);
+        // and it must agree with the pure per-token mixed-mode run
+        let mut ref_st = m.new_state();
+        let mut want = vec![0.0f32; m.vocab];
+        for &t in &[3u32, 9, 27] {
+            m.decode_step_into(&mut ref_st, t, NumericsMode::DesktopF32, &mut want);
+        }
+        for &t in &[11u32, 4] {
+            m.decode_step_into(&mut ref_st, t, NumericsMode::Accelerator, &mut want);
+        }
+        assert_eq!(logits, want);
     }
 
     #[test]

@@ -43,6 +43,17 @@ impl RopeState {
         }
     }
 
+    /// Rewind to the pre-position-0 seed state in place — identical to a
+    /// fresh [`RopeState::new`] but without allocating (lane recycling in
+    /// the serving path reuses the four buffers).
+    pub fn reset(&mut self) {
+        self.cos.copy_from_slice(&self.a);
+        for (s, &b) in self.sin.iter_mut().zip(&self.b) {
+            *s = -b;
+        }
+        self.pos = None;
+    }
+
     /// One angle-addition step (Eq. 11's recurrence core):
     /// `cos((m+1)θ) = cos(mθ)·a − sin(mθ)·b`,
     /// `sin((m+1)θ) = cos(mθ)·b + sin(mθ)·a`.
@@ -102,6 +113,21 @@ mod tests {
             assert!((c - 1.0).abs() < 1e-6, "cos[{i}] = {c}");
             assert!(s.abs() < 1e-6, "sin[{i}] = {s}");
         }
+    }
+
+    #[test]
+    fn reset_matches_fresh_state() {
+        let mut st = RopeState::new(16, BASE);
+        for _ in 0..37 {
+            st.advance();
+        }
+        st.reset();
+        let fresh = RopeState::new(16, BASE);
+        assert_eq!(st.cos, fresh.cos);
+        assert_eq!(st.sin, fresh.sin);
+        assert_eq!(st.pos, None);
+        st.advance();
+        assert_eq!(st.pos, Some(0));
     }
 
     #[test]

@@ -205,6 +205,10 @@ pub struct GateReport {
     /// Gated rows past the threshold, plus gated baseline entries
     /// missing from the current run.
     pub failures: Vec<String>,
+    /// Benchmarks present in the baseline document. `0` means the gate
+    /// is **vacuous** — nothing can fail; `bench_gate --require-baseline`
+    /// turns that into a hard error so CI cannot silently run ungated.
+    pub baseline_count: usize,
     pub gate_substr: String,
     pub max_regress_pct: f64,
 }
@@ -212,6 +216,12 @@ pub struct GateReport {
 impl GateReport {
     pub fn passed(&self) -> bool {
         self.failures.is_empty()
+    }
+
+    /// Whether the baseline document contained no benchmarks at all —
+    /// the gate compared nothing and passes vacuously.
+    pub fn baseline_empty(&self) -> bool {
+        self.baseline_count == 0
     }
 
     /// Markdown delta table + verdict (the CI job-summary payload).
@@ -222,7 +232,16 @@ impl GateReport {
              bench regressing > {:.0}% in median ns/op fails the job.\n\n",
             self.gate_substr, self.max_regress_pct
         ));
-        if self.rows.is_empty() {
+        if self.baseline_empty() {
+            out.push_str(
+                "## ⚠️ BASELINE EMPTY — gate is vacuous\n\n\
+                 The baseline document contains **zero benchmarks**: nothing is \
+                 gated and any regression ships silently. Refresh \
+                 `BENCH_baseline.json` from a CI-class `cargo bench --bench \
+                 hotpath` run to arm the gate (CI runs `bench_gate \
+                 --require-baseline`, which fails on an empty baseline).\n",
+            );
+        } else if self.rows.is_empty() {
             out.push_str(
                 "No comparable baseline entries — gate passes vacuously. \
                  Refresh `BENCH_baseline.json` from a CI bench run to arm it.\n",
@@ -319,6 +338,7 @@ pub fn compare_bench_json(
         unmatched: Vec::new(),
         missing: Vec::new(),
         failures: Vec::new(),
+        baseline_count: base.len(),
         gate_substr: gate_substr.to_string(),
         max_regress_pct,
     };
@@ -515,8 +535,24 @@ mod tests {
         let r = compare_bench_json(&base, &cur, "fused", 15.0).unwrap();
         assert!(r.passed());
         assert!(r.rows.is_empty());
+        assert!(r.baseline_empty());
+        assert_eq!(r.baseline_count, 0);
         assert_eq!(r.unmatched, vec!["hot/mha_fused 8h".to_string()]);
-        assert!(r.to_markdown().contains("vacuously"));
+        // the empty-baseline state must be impossible to miss in the
+        // job summary
+        let md = r.to_markdown();
+        assert!(md.contains("BASELINE EMPTY"), "{md}");
+        assert!(md.contains("vacuous"), "{md}");
+    }
+
+    #[test]
+    fn nonempty_baseline_reports_count_and_no_empty_warning() {
+        let base = gate_doc(&[("hot/mha_fused 8h", 1000.0)]);
+        let cur = gate_doc(&[("hot/mha_fused 8h", 1000.0)]);
+        let r = compare_bench_json(&base, &cur, "fused", 15.0).unwrap();
+        assert!(!r.baseline_empty());
+        assert_eq!(r.baseline_count, 1);
+        assert!(!r.to_markdown().contains("BASELINE EMPTY"));
     }
 
     #[test]

@@ -174,6 +174,32 @@ fn fused_decode_hot_path_is_allocation_free() {
         }
     }
 
+    // --- model level, chunked prefill: after the chunk scratch is
+    // warmed up (first prefill grows it once), steady-state prefill
+    // chunks — multi-token causal sweeps, logits for the last token
+    // only — must be allocation-free in both numerics modes -------------
+    for (label, m) in [("mha", &tm), ("gqa", &tg)] {
+        let mut logits = vec![0.0f32; m.vocab];
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut st = m.new_state();
+            // warm up: grows the chunk scratch to 4 tokens and primes the
+            // runtime; leaves ≤ 28 of the 48 context positions used
+            m.prefill_into(&mut st, &[1, 2, 3, 4], mode, Some(&mut logits[..]));
+            m.prefill_into(&mut st, &[5, 6, 7, 8], mode, None);
+            let mut t = 9u32;
+            let prefill_allocs = min_allocs(5, || {
+                let v = m.vocab as u32;
+                let chunk = [t % v, (t + 1) % v, (t + 2) % v, (t + 3) % v];
+                m.prefill_into(&mut st, &chunk, mode, Some(&mut logits[..]));
+                t += 4;
+            });
+            assert_eq!(
+                prefill_allocs, 0,
+                "steady-state {label} chunked prefill allocated in {mode:?}"
+            );
+        }
+    }
+
     // --- model level, block boundaries: with 2-token blocks every other
     // step checks a fresh block out of the (pre-allocated) pool — that
     // crossing must also be allocation-free after warm-up ---------------

@@ -188,6 +188,7 @@ fn lanes_share_one_pool_with_reclamation() {
         sim_model: LlmConfig::llama2_7b(),
         kv_block_len,
         kv_pool_blocks,
+        ..CpuServeOptions::default()
     };
     let reqs: Vec<Request> = (0..7)
         .map(|i| Request {
@@ -238,6 +239,7 @@ fn idle_lanes_release_blocks_at_retirement() {
         sim_model: LlmConfig::llama2_7b(),
         kv_block_len: 4,
         kv_pool_blocks: 17,
+        ..CpuServeOptions::default()
     };
     let mut reqs: Vec<Request> = (0..3)
         .map(|i| Request {
@@ -274,6 +276,7 @@ fn undersized_pool_is_enough_for_short_sequences() {
         sim_model: LlmConfig::llama2_7b(),
         kv_block_len: 4,
         kv_pool_blocks: 8,
+        ..CpuServeOptions::default()
     };
     let reqs: Vec<Request> = (0..5)
         .map(|i| Request {
@@ -290,6 +293,150 @@ fn undersized_pool_is_enough_for_short_sequences() {
     for s in &report.sessions {
         assert_eq!(s.generated.len(), 4);
     }
+}
+
+#[test]
+fn rejected_requests_surface_in_metrics() {
+    // n_ctx is 48: a request with prompt + gen_len > 48 is rejected at
+    // submission. It is dropped by design — but the loop must count it,
+    // and the metrics must surface both counters.
+    let tm = model();
+    let mut reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![1 + i as u32, 2],
+            gen_len: 3,
+            arrival_ms: 0,
+        })
+        .collect();
+    reqs.push(Request {
+        id: 99,
+        prompt: (0..40).map(|t| t % tm.vocab as u32).collect(),
+        gen_len: 20, // 40 + 20 > 48 → rejected
+        arrival_ms: 0,
+    });
+    let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
+    assert_eq!(report.metrics.requests_admitted, 3);
+    assert_eq!(
+        report.metrics.requests_rejected, 1,
+        "the oversized request must be counted, not silently dropped"
+    );
+    assert_eq!(report.sessions.len(), 3);
+    assert!(report.sessions.iter().all(|s| s.request.id != 99));
+    // the counters also land in the human-readable table
+    let table = report.metrics.format_table();
+    assert!(table.contains("admitted / rejected"), "{table}");
+}
+
+#[test]
+fn nothing_rejected_reports_zero() {
+    let tm = model();
+    let reqs = vec![Request {
+        id: 0,
+        prompt: vec![3, 4],
+        gen_len: 2,
+        arrival_ms: 0,
+    }];
+    let report = CpuServer::new(&tm, opts(1, NumericsMode::DesktopF32)).serve(reqs);
+    assert_eq!(report.metrics.requests_admitted, 1);
+    assert_eq!(report.metrics.requests_rejected, 0);
+}
+
+#[test]
+fn prefill_chunk_lengths_do_not_change_outputs() {
+    // the scheduling contract changed; the numbers must not — serving
+    // with per-token prefill (chunk 1), odd chunks, the default, and
+    // whole-prompt chunks (0) generates identical tokens, all equal to
+    // solo generate
+    let tm = model();
+    let prompts: Vec<Vec<u32>> = vec![
+        vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11],
+        vec![50, 7],
+        vec![9],
+        vec![42; 14],
+    ];
+    let gen_len = 4;
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        for prefill_chunk in [1usize, 3, 8, 0] {
+            let reqs: Vec<Request> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Request {
+                    id: i as u64,
+                    prompt: p.clone(),
+                    gen_len,
+                    arrival_ms: 0,
+                })
+                .collect();
+            let opts = CpuServeOptions {
+                lanes: 2, // fewer lanes than requests → recycling mid-stream
+                mode,
+                max_iterations: 10_000,
+                sim_model: LlmConfig::llama2_7b(),
+                prefill_chunk,
+                ..CpuServeOptions::default()
+            };
+            let report = CpuServer::new(&tm, opts).serve(reqs);
+            assert_eq!(report.sessions.len(), prompts.len());
+            for (i, p) in prompts.iter().enumerate() {
+                let want = tm.generate(p, gen_len, mode);
+                let got = &report
+                    .sessions
+                    .iter()
+                    .find(|s| s.request.id == i as u64)
+                    .unwrap()
+                    .generated;
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "{mode:?} chunk={prefill_chunk} request {i}: chunked prefill \
+                     changed the generated tokens"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_takes_fewer_iterations() {
+    // one lane, one 16-token prompt: per-token prefill needs 16
+    // iterations before the first sample; chunk 8 needs 2. Iteration
+    // counts are deterministic (all requests arrive at t=0).
+    let tm = model();
+    let req = |id: u64| Request {
+        id,
+        prompt: (0..16).map(|t| (t * 3 + 1) % tm.vocab as u32).collect(),
+        gen_len: 2,
+        arrival_ms: 0,
+    };
+    let run = |prefill_chunk: usize| {
+        let opts = CpuServeOptions {
+            lanes: 1,
+            mode: NumericsMode::DesktopF32,
+            max_iterations: 10_000,
+            sim_model: LlmConfig::llama2_7b(),
+            prefill_chunk,
+            ..CpuServeOptions::default()
+        };
+        CpuServer::new(&tm, opts).serve(vec![req(0)])
+    };
+    let per_token = run(1);
+    let chunked = run(8);
+    let whole = run(0);
+    // same outputs…
+    assert_eq!(
+        per_token.sessions[0].generated,
+        chunked.sessions[0].generated
+    );
+    assert_eq!(per_token.sessions[0].generated, whole.sessions[0].generated);
+    // …in 16+1 vs 2+1 vs 1+1 engine iterations
+    assert_eq!(per_token.metrics.iterations, 17);
+    assert_eq!(chunked.metrics.iterations, 3);
+    assert_eq!(whole.metrics.iterations, 2);
+    // and the first token lands on an earlier iteration
+    assert_eq!(per_token.sessions[0].first_token_at, Some(15));
+    assert_eq!(chunked.sessions[0].first_token_at, Some(1));
+    assert_eq!(whole.sessions[0].first_token_at, Some(0));
 }
 
 #[test]

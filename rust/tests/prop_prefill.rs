@@ -1,0 +1,244 @@
+//! Property tests: chunked prefill (`TinyModel::prefill_into` batching
+//! prompt tokens through the fused causal chunk sweeps) versus the
+//! per-token decode path, swept over GQA/MQA/MHA shapes, KV block
+//! lengths {1, 3, 16} (so chunks routinely straddle paged block
+//! boundaries), and chunk lengths {1, 3, block_len, whole-prompt}.
+//!
+//! The chunked path issues every per-token op in the same order as
+//! `decode_step_into`, so the bar is strict: `DesktopF32` logits must
+//! match the per-token path within 1e-5 relative at every chunk
+//! boundary, and `Accelerator` (Q15.17) logits must be **bit-exact**.
+
+use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::{BlockPool, BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
+use swiftkv::model::{NumericsMode, TinyModel};
+use swiftkv::util::{prop, Rng};
+
+/// (n_heads, n_kv_heads) over d_model 32: MHA, GQA groups, MQA.
+const SHAPES: [(usize, usize); 4] = [(4, 4), (4, 2), (4, 1), (8, 2)];
+/// KV block lengths: degenerate, odd (ragged blocks), default.
+const BLOCK_LENS: [usize; 3] = [1, 3, 16];
+const N_CTX: usize = 32;
+
+struct PrefillCase {
+    model: TinyModel,
+    block_len: usize,
+    prompt: Vec<u32>,
+}
+
+impl PrefillCase {
+    fn random(rng: &mut Rng) -> PrefillCase {
+        let (h, hkv) = SHAPES[rng.gen_range(0, SHAPES.len())];
+        let block_len = BLOCK_LENS[rng.gen_range(0, BLOCK_LENS.len())];
+        let vocab = 64usize;
+        let model = TinyModel::synthetic(
+            rng.gen_range(0, 1 << 20) as u64,
+            vocab,
+            32,
+            h,
+            hkv,
+            2,
+            64,
+            N_CTX,
+        );
+        let prompt_len = rng.gen_range(2, 25);
+        let prompt = (0..prompt_len)
+            .map(|_| rng.gen_range(0, vocab) as u32)
+            .collect();
+        PrefillCase {
+            model,
+            block_len,
+            prompt,
+        }
+    }
+
+    /// The chunk lengths the issue sweeps: 1 (per-token through the
+    /// chunk path), 3 (straddles odd block boundaries), the KV block
+    /// length, and the whole prompt in one chunk.
+    fn chunk_lens(&self) -> Vec<usize> {
+        let mut lens = vec![1, 3, self.block_len, self.prompt.len()];
+        lens.sort_unstable();
+        lens.dedup();
+        lens
+    }
+
+    /// Per-position logits of the per-token reference path.
+    fn reference_logits(&self, mode: NumericsMode) -> Vec<Vec<f32>> {
+        let pool = self
+            .model
+            .new_pool(self.model.blocks_per_seq(self.block_len), self.block_len);
+        let mut st = self.model.new_state_in(pool);
+        self.prompt
+            .iter()
+            .map(|&t| self.model.decode_step(&mut st, t, mode))
+            .collect()
+    }
+
+    /// Feed the prompt in chunks of at most `chunk_len`, collecting the
+    /// logits `prefill_into` reports at every chunk's final token.
+    fn chunked_logits(&self, chunk_len: usize, mode: NumericsMode) -> Vec<(usize, Vec<f32>)> {
+        let pool = self
+            .model
+            .new_pool(self.model.blocks_per_seq(self.block_len), self.block_len);
+        let mut st = self.model.new_state_in(pool);
+        let mut out = Vec::new();
+        let mut logits = vec![0.0f32; self.model.vocab];
+        let mut at = 0usize;
+        while at < self.prompt.len() {
+            let end = self.prompt.len().min(at + chunk_len);
+            self.model
+                .prefill_into(&mut st, &self.prompt[at..end], mode, Some(&mut logits[..]));
+            out.push((end - 1, logits.clone()));
+            at = end;
+        }
+        assert_eq!(st.pos, self.prompt.len());
+        out
+    }
+}
+
+#[test]
+fn prop_chunked_prefill_matches_per_token_f32() {
+    prop::check("chunked prefill == per-token (DesktopF32, 1e-5)", 10, |rng, _| {
+        let case = PrefillCase::random(rng);
+        let reference = case.reference_logits(NumericsMode::DesktopF32);
+        for chunk_len in case.chunk_lens() {
+            for (tok, got) in case.chunked_logits(chunk_len, NumericsMode::DesktopF32) {
+                let want = &reference[tok];
+                for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                        "prompt_len={} chunk={chunk_len} bl={} token {tok} logit {i}: {a} vs {b}",
+                        case.prompt.len(),
+                        case.block_len
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_prefill_bit_exact_accelerator() {
+    prop::check("chunked prefill == per-token (Q15.17, bit-exact)", 8, |rng, _| {
+        let case = PrefillCase::random(rng);
+        let reference = case.reference_logits(NumericsMode::Accelerator);
+        for chunk_len in case.chunk_lens() {
+            for (tok, got) in case.chunked_logits(chunk_len, NumericsMode::Accelerator) {
+                assert_eq!(
+                    &got,
+                    &reference[tok],
+                    "prompt_len={} chunk={chunk_len} bl={} token {tok}: accelerator \
+                     logits must be bit-exact vs the per-token path",
+                    case.prompt.len(),
+                    case.block_len
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decode_after_chunked_prefill_matches_pure_decode() {
+    // the state a chunked prefill leaves behind (KV rows, Q15.17 mirror,
+    // RoPE recurrence, fxp_rows) must be indistinguishable from the
+    // per-token path's: generation after it stays identical
+    prop::check("decode after chunked prefill == pure decode", 8, |rng, _| {
+        let case = PrefillCase::random(rng);
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let pool = case
+                .model
+                .new_pool(case.model.blocks_per_seq(case.block_len), case.block_len);
+            let mut ref_st = case.model.new_state_in(pool);
+            let mut want = vec![0.0f32; case.model.vocab];
+            for &t in &case.prompt {
+                case.model
+                    .decode_step_into(&mut ref_st, t, mode, &mut want);
+            }
+            let next = (case.prompt[0] + 1) % case.model.vocab as u32;
+            let want_next = case.model.decode_step(&mut ref_st, next, mode);
+
+            let pool = case
+                .model
+                .new_pool(case.model.blocks_per_seq(case.block_len), case.block_len);
+            let mut st = case.model.new_state_in(pool);
+            case.model.prefill_into(&mut st, &case.prompt, mode, None);
+            let got_next = case.model.decode_step(&mut st, next, mode);
+            assert_eq!(
+                got_next, want_next,
+                "{mode:?} prompt_len={} bl={}: decode diverged after chunked prefill",
+                case.prompt.len(),
+                case.block_len
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_chunk_sweep_matches_per_query_sweeps() {
+    // kernel-level: the causal chunk sweep must equal one-shot per-query
+    // sweeps on both numerics, contiguous and paged
+    prop::check("attend_chunk == per-query attend", 25, |rng, _| {
+        let (h, hkv) = SHAPES[rng.gen_range(0, SHAPES.len())];
+        let d = [4usize, 8, 16][rng.gen_range(0, 3)];
+        let start = rng.gen_range(0, 9);
+        let chunk = rng.gen_range(1, 9);
+        let block_len = BLOCK_LENS[rng.gen_range(0, BLOCK_LENS.len())];
+        let row = hkv * d;
+        let len = start + chunk;
+        let scale = 1.0 / (d as f32).sqrt();
+        let qs = rng.uniform_vec(chunk * h * d, 1.0);
+        let k = rng.uniform_vec(len * row, 1.0);
+        let v = rng.uniform_vec(len * row, 1.0);
+
+        let pool = BlockPool::new(len.div_ceil(block_len), block_len, row);
+        let mut table = BlockTable::new(&pool, len);
+        table.ensure_tokens(&pool, len);
+        for t in 0..len {
+            table.k_row_mut(t).copy_from_slice(&k[t * row..(t + 1) * row]);
+            table.v_row_mut(t).copy_from_slice(&v[t * row..(t + 1) * row]);
+            table.quantize_row(t);
+        }
+
+        // f32: per-query one-shot reference, contiguous chunk, paged chunk
+        let mut reference = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut want = vec![0.0f32; chunk * h * d];
+        for j in 0..chunk {
+            let (qj, oj) = (j * h * d, (j + 1) * h * d);
+            let out = &mut want[qj..oj];
+            reference.attend(&qs[qj..oj], &k, &v, start + j + 1, scale, out);
+        }
+        let mut chunked = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut got = vec![0.0f32; chunk * h * d];
+        chunked.attend_chunk(&qs, &k, &v, start, chunk, scale, &mut got);
+        assert_eq!(got, want, "h={h} hkv={hkv} d={d} start={start} chunk={chunk}");
+        let mut paged = MhaSwiftKv::new_grouped(h, hkv, d);
+        let mut got_paged = vec![0.0f32; chunk * h * d];
+        paged.attend_chunk_paged(&qs, &table, start, chunk, scale, &mut got_paged);
+        assert_eq!(got_paged, want, "paged chunk sweep diverged (bl={block_len})");
+
+        // Q15.17: bit-exact on raw bits
+        let lut = Exp2Lut::new();
+        let fscale = Fxp32::from_f64(1.0 / (d as f64).sqrt());
+        let qq = vector::quantize(&qs);
+        let kq = vector::quantize(&k);
+        let vq = vector::quantize(&v);
+        let mut freference = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut fwant = vec![Fxp32::ZERO; chunk * h * d];
+        for j in 0..chunk {
+            let (qj, oj) = (j * h * d, (j + 1) * h * d);
+            let out = &mut fwant[qj..oj];
+            freference.attend(&lut, &qq[qj..oj], &kq, &vq, start + j + 1, fscale, out);
+        }
+        let mut fchunked = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut fgot = vec![Fxp32::ZERO; chunk * h * d];
+        fchunked.attend_chunk(&lut, &qq, &kq, &vq, start, chunk, fscale, &mut fgot);
+        let mut fpaged = FxpMhaSwiftKv::new_grouped(h, hkv, d);
+        let mut fgot_paged = vec![Fxp32::ZERO; chunk * h * d];
+        fpaged.attend_chunk_paged(&lut, &qq, &table, start, chunk, fscale, &mut fgot_paged);
+        for (i, ((a, b), c)) in fgot.iter().zip(&fwant).zip(&fgot_paged).enumerate() {
+            assert_eq!(a.raw(), b.raw(), "fxp chunk flat-dim {i} diverged");
+            assert_eq!(c.raw(), b.raw(), "fxp paged chunk flat-dim {i} diverged");
+        }
+        table.release_into(&pool);
+    });
+}
