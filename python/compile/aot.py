@@ -19,6 +19,7 @@ rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import json
 import os
@@ -66,9 +67,9 @@ def lower_decode(cfg: M.TinyConfig, params, batch: int) -> str:
     args = [
         _spec((batch,), jnp.int32),                                     # tokens
         _spec((batch,), jnp.int32),                                     # pos
-        _spec((batch, cfg.n_layers, cfg.n_heads, cfg.n_ctx, cfg.d_head),
+        _spec((batch, cfg.n_layers, cfg.n_kv_heads, cfg.n_ctx, cfg.d_head),
               jnp.float32),                                             # kc
-        _spec((batch, cfg.n_layers, cfg.n_heads, cfg.n_ctx, cfg.d_head),
+        _spec((batch, cfg.n_layers, cfg.n_kv_heads, cfg.n_ctx, cfg.d_head),
               jnp.float32),                                             # vc
         _spec((batch, cfg.d_head // 2), jnp.float32),                   # cos
         _spec((batch, cfg.d_head // 2), jnp.float32),                   # sin
@@ -104,12 +105,6 @@ def model_manifest(cfg: M.TinyConfig, seed: int) -> dict:
         raise ValueError(
             f"n_heads ({cfg.n_heads}) must be a positive multiple of "
             f"n_kv_heads ({cfg.n_kv_heads})")
-    if cfg.n_kv_heads != cfg.n_heads:
-        # the JAX reference decode path is MHA-only; a GQA manifest over
-        # MHA-shaped weights would be rejected by TinyModel::load anyway
-        raise ValueError(
-            "the JAX reference model is MHA-only: n_kv_heads "
-            f"({cfg.n_kv_heads}) must equal n_heads ({cfg.n_heads})")
     return {
         "vocab": cfg.vocab, "d_model": cfg.d_model,
         "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
@@ -149,10 +144,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--kv-heads", type=int, default=None, metavar="N",
+        help="KV heads for the emitted model (GQA/MQA when < n_heads; "
+             "must divide n_heads). Default: the config's n_kv_heads "
+             "(MHA). The manifest's model.n_kv_heads and the wk/wv "
+             "shapes in weights.bin both follow it, so the Rust "
+             "TinyModel::load path exercises grouped shapes from real "
+             "artifacts.")
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
 
     cfg = M.TinyConfig()
+    if args.kv_heads is not None:
+        cfg = dataclasses.replace(cfg, n_kv_heads=args.kv_heads)
+    model_manifest(cfg, args.seed)  # validate the GQA shape up front
     params = M.init_params(cfg, seed=args.seed)
     specs = M.param_specs(cfg)
 

@@ -43,10 +43,11 @@ class TinyConfig:
     vocab: int = 512
     d_model: int = 256
     n_heads: int = 8
-    # KV heads (GQA/MQA when < n_heads). The JAX reference model itself
-    # is MHA-only for now, so this must equal n_heads here; the manifest
-    # still carries it explicitly because the Rust loader
-    # (TinyModel::load) validates K/V projection widths against it.
+    # KV heads (GQA/MQA when < n_heads): the K/V projections and caches
+    # shrink to n_kv_heads * d_head, and each KV head serves its whole
+    # group of n_heads // n_kv_heads query heads. The manifest carries
+    # it explicitly because the Rust loader (TinyModel::load) validates
+    # K/V projection widths against it.
     n_kv_heads: int = 8
     d_head: int = 32
     n_layers: int = 4
@@ -80,6 +81,7 @@ def param_names(cfg: TinyConfig) -> List[str]:
 def param_specs(cfg: TinyConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
     """(name, shape, dtype) for every parameter, in signature order."""
     d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    d_kv = cfg.n_kv_heads * cfg.d_head  # GQA/MQA: K/V widths shrink
 
     def mat(name, din, dout):
         return [(name + ".q", (din, dout), "int8"),
@@ -90,8 +92,8 @@ def param_specs(cfg: TinyConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
     for l in range(cfg.n_layers):
         p = f"layer{l}."
         specs += [(p + "attn_norm", (d,), "float32")]
-        specs += mat(p + "wq", d, d) + mat(p + "wk", d, d) + \
-            mat(p + "wv", d, d) + mat(p + "wo", d, d)
+        specs += mat(p + "wq", d, d) + mat(p + "wk", d, d_kv) + \
+            mat(p + "wv", d, d_kv) + mat(p + "wo", d, d)
         specs += [(p + "mlp_norm", (d,), "float32")]
         specs += mat(p + "w_gate", d, f) + mat(p + "w_up", d, f) + \
             mat(p + "w_down", f, d)
@@ -117,12 +119,13 @@ def init_params(cfg: TinyConfig, seed: int = 0) -> Dict[str, jax.Array]:
         params[name + ".scale"] = ws
 
     d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    d_kv = cfg.n_kv_heads * cfg.d_head
     std = 0.6 / np.sqrt(d)
     params["embedding"] = jax.random.normal(take(), (v, d), jnp.float32) * 0.6
     for l in range(cfg.n_layers):
         p = f"layer{l}."
         params[p + "attn_norm"] = jnp.ones((d,), jnp.float32)
-        for w, dout in (("wq", d), ("wk", d), ("wv", d), ("wo", d)):
+        for w, dout in (("wq", d), ("wk", d_kv), ("wv", d_kv), ("wo", d)):
             qmat(p + w, d, dout, std)
         params[p + "mlp_norm"] = jnp.ones((d,), jnp.float32)
         qmat(p + "w_gate", d, f, std)
@@ -142,9 +145,10 @@ def rope_constants(cfg: TinyConfig):
 def init_state(cfg: TinyConfig, batch: int):
     """Fresh decode state: zero KV caches and the (cos, sin) recurrence
     seeds. The cache holds cos/sin for the *last processed* position, so
-    the pos=0 seed is cos(-theta)=a, sin(-theta)=-b (one step before 0)."""
+    the pos=0 seed is cos(-theta)=a, sin(-theta)=-b (one step before 0).
+    GQA/MQA caches hold n_kv_heads rows per token."""
     a, b = rope_constants(cfg)
-    kc = jnp.zeros((batch, cfg.n_layers, cfg.n_heads, cfg.n_ctx, cfg.d_head),
+    kc = jnp.zeros((batch, cfg.n_layers, cfg.n_kv_heads, cfg.n_ctx, cfg.d_head),
                    jnp.float32)
     vc = jnp.zeros_like(kc)
     cos = jnp.broadcast_to(a, (batch, cfg.d_head // 2))
@@ -178,11 +182,16 @@ def decode_step(params: Dict[str, jax.Array], cfg: TinyConfig,
     """One decode step for a batch of sequences.
 
     tokens: [B] int32; pos: [B] int32 (0-based position of this token);
-    kc, vc: [B, L, H, N, dh]; cos, sin: [B, dh/2] RoPE recurrence state.
+    kc, vc: [B, L, H_kv, N, dh] (n_kv_heads rows under GQA/MQA);
+    cos, sin: [B, dh/2] RoPE recurrence state.
     Returns (logits [B, vocab], kc', vc', cos', sin').
     """
     bsz = tokens.shape[0]
-    h, dh = cfg.n_heads, cfg.d_head
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if hkv <= 0 or h % hkv != 0:
+        raise ValueError(
+            f"n_heads ({h}) must be a positive multiple of n_kv_heads ({hkv})")
+    group = h // hkv
     a_const, b_const = rope_constants(cfg)
 
     x = params["embedding"][tokens]                     # [B, d]
@@ -201,26 +210,40 @@ def decode_step(params: Dict[str, jax.Array], cfg: TinyConfig,
         p = f"layer{l}."
         xn = rms_norm(x, params[p + "attn_norm"])
         q = _gemv(xn, params, p + "wq").reshape(bsz * h, dh)
-        k = _gemv(xn, params, p + "wk").reshape(bsz * h, dh)
-        v = _gemv(xn, params, p + "wv").reshape(bsz * h, dh)
+        k = _gemv(xn, params, p + "wk").reshape(bsz * hkv, dh)
+        v = _gemv(xn, params, p + "wv").reshape(bsz * hkv, dh)
 
         # decoder-specialized RoPE: rotate only the new token's q, k and
-        # advance the cached (cos, sin) one position (Eq. 11)
-        q, k, cos_next, sin_next = rope_decode_step(
-            q, k, cos, sin, a_const, b_const, heads_per_seq=h)
+        # advance the cached (cos, sin) one position (Eq. 11). Under
+        # GQA/MQA q and k have different row counts, so each rotates
+        # through its own kernel call off the same cached (cos, sin);
+        # both advance the recurrence identically and the q call's
+        # output is kept.
+        if hkv == h:
+            q, k, cos_next, sin_next = rope_decode_step(
+                q, k, cos, sin, a_const, b_const, heads_per_seq=h)
+        else:
+            q, _, cos_next, sin_next = rope_decode_step(
+                q, q, cos, sin, a_const, b_const, heads_per_seq=h)
+            _, k, _, _ = rope_decode_step(
+                k, k, cos, sin, a_const, b_const, heads_per_seq=hkv)
 
         # append the (already position-encoded) k, v to the cache
-        k_bh = k.reshape(bsz, h, dh)
-        v_bh = v.reshape(bsz, h, dh)
+        k_bh = k.reshape(bsz, hkv, dh)
+        v_bh = v.reshape(bsz, hkv, dh)
         upd = jax.vmap(
             lambda c, kv, s: jax.lax.dynamic_update_slice(c, kv[:, None, :],
                                                           (0, s, 0)))
         kc = kc.at[:, l].set(upd(kc[:, l], k_bh, pos))
         vc = vc.at[:, l].set(upd(vc[:, l], v_bh, pos))
 
-        # single-pass SwiftKV attention over the row-batched cache
-        k_rows = kc[:, l].reshape(bsz * h, cfg.n_ctx, dh)
-        v_rows = vc[:, l].reshape(bsz * h, cfg.n_ctx, dh)
+        # single-pass SwiftKV attention over the row-batched cache;
+        # each KV head's rows are repeated for its whole query group
+        # (consecutive query heads share a KV head, the Rust layout)
+        k_rows = jnp.repeat(kc[:, l], group, axis=1) \
+            .reshape(bsz * h, cfg.n_ctx, dh)
+        v_rows = jnp.repeat(vc[:, l], group, axis=1) \
+            .reshape(bsz * h, cfg.n_ctx, dh)
         attn = swiftkv_attention(q, k_rows, v_rows, row_lens,
                                  block_k=cfg.block_k)   # [B*H, dh]
         attn = attn.reshape(bsz, h * dh)

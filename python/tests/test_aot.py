@@ -48,10 +48,32 @@ def test_model_manifest_rejects_bad_kv_shapes():
     cfg = dataclasses.replace(M.TinyConfig(), n_kv_heads=0)
     with pytest.raises(ValueError, match="multiple of n_kv_heads"):
         aot.model_manifest(cfg, seed=0)
-    # divisible but grouped: the JAX reference model is MHA-only
+
+
+def test_model_manifest_accepts_grouped_shapes():
+    # GQA (group 4) and MQA manifests are first-class now — the emitted
+    # n_kv_heads is what TinyModel::load validates wk/wv widths against
+    for kv in (2, 1):
+        cfg = dataclasses.replace(M.TinyConfig(), n_kv_heads=kv)
+        m = aot.model_manifest(cfg, seed=3)
+        assert m["n_kv_heads"] == kv
+        assert m["n_heads"] == cfg.n_heads
+
+
+def test_gqa_param_specs_shrink_kv_projections():
+    # the weights.bin table and the manifest must agree on the grouped
+    # K/V widths, or TinyModel::load rejects the artifact
     cfg = dataclasses.replace(M.TinyConfig(), n_kv_heads=2)
-    with pytest.raises(ValueError, match="MHA-only"):
-        aot.model_manifest(cfg, seed=0)
+    d_kv = cfg.n_kv_heads * cfg.d_head
+    specs = {name: shape for name, shape, _ in aot.M.param_specs(cfg)}
+    assert specs["layer0.wk.q"] == (cfg.d_model, d_kv)
+    assert specs["layer0.wv.q"] == (cfg.d_model, d_kv)
+    assert specs["layer0.wk.scale"] == (d_kv,)
+    assert specs["layer0.wq.q"] == (cfg.d_model, cfg.d_model)
+    # and the emitted weights actually take those shapes
+    params = aot.M.init_params(cfg, seed=0)
+    assert params["layer0.wk.q"].shape == (cfg.d_model, d_kv)
+    assert params["layer0.wv.scale"].shape == (d_kv,)
 
 
 @requires_artifacts

@@ -10,13 +10,28 @@
 //! chunk reaches the last prompt token — the TTFT win of chunked
 //! prefill. The chunk is bounded by default so one long prompt cannot
 //! stall the decode lanes sharing the iteration.
-//! The batch step fans the active lanes out across OS threads with
-//! `std::thread::scope`; each lane owns its [`DecodeState`] (per-layer
-//! block tables + [`crate::kernels::DecodeScratch`]), so a steady-state
-//! lane step performs zero heap allocation and lanes never contend on
-//! memory — the KV rows live in **one shared
-//! [`crate::kernels::BlockPool`]** that every lane draws fixed-size
-//! blocks from, sized by [`CpuServeOptions::kv_block_len`] /
+//!
+//! Decoding is weight-bandwidth bound, so the batch step batches at the
+//! **operator** level instead of lane-per-thread: every decode-phase
+//! lane (single-token sampling chunk) joins one
+//! [`TinyModel::decode_steps_into`] call that streams each packed
+//! weight matrix **once for the whole batch** (B lanes pay 1 weight
+//! pass per step, not B — surfaced as
+//! [`ServeMetrics::weight_passes_per_step`]), while prefill lanes run
+//! their chunks per lane. Parallelism comes from a **persistent**
+//! [`crate::kernels::WorkerPool`] that lives for the whole run — the
+//! batched step splits its GEMMs by output-column range and its
+//! attention phase by lane, prefill chunks run one task per lane, and
+//! nothing spawns per iteration (the old `std::thread::scope` fan-out
+//! paid a spawn/join per step and re-streamed the weights per lane). A
+//! lone decode lane skips the pool and runs the inline solo step, so
+//! single-lane latency does not regress. Each lane owns its
+//! [`DecodeState`] (per-layer block tables +
+//! [`crate::kernels::DecodeScratch`]), so a steady-state lane step
+//! performs zero heap allocation and lanes never contend on memory —
+//! the KV rows live in **one shared [`crate::kernels::BlockPool`]**
+//! that every lane draws fixed-size blocks from, sized by
+//! [`CpuServeOptions::kv_block_len`] /
 //! [`CpuServeOptions::kv_pool_blocks`]; the only contended state is the
 //! pool's free list, touched once per `block_len` tokens per layer.
 //! Grouped-query models serve unchanged: the pool's rows are sized
@@ -26,11 +41,11 @@
 //! [`DecodeState::reset_for_reuse`], which returns their blocks to the
 //! pool for other lanes — reclamation, not re-allocation.
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, LaneChunk};
 use super::metrics::{Percentiles, ServeMetrics};
 use super::session::Session;
-use crate::kernels::BlockPool;
-use crate::model::tiny::{argmax, DecodeState};
+use crate::kernels::{BlockPool, SharedMut, WorkerPool};
+use crate::model::tiny::{argmax, BatchLane, DecodeState};
 use crate::model::{LlmConfig, NumericsMode, Request, TinyModel, DEFAULT_KV_BLOCK_LEN};
 use crate::sim::{layer_sched, ArchConfig};
 use std::collections::VecDeque;
@@ -65,6 +80,10 @@ pub struct CpuServeOptions {
     /// one step. `1` reproduces the old one-decode-step-per-prompt-token
     /// prefill.
     pub prefill_chunk: usize,
+    /// OS threads stepping the engine (the serving thread plus
+    /// `workers - 1` persistent pool workers); `0` = one per available
+    /// CPU, `1` = fully inline (no pool).
+    pub workers: usize,
 }
 
 impl Default for CpuServeOptions {
@@ -77,8 +96,19 @@ impl Default for CpuServeOptions {
             kv_block_len: DEFAULT_KV_BLOCK_LEN,
             kv_pool_blocks: 0,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            workers: 0,
         }
     }
+}
+
+/// One prefill-phase lane's work for an iteration: a prompt chunk fed
+/// through the fused causal sweep (`samples` = the chunk ends on the
+/// last prompt token, so its logits are wanted).
+struct PrefillTask<'a> {
+    st: &'a mut DecodeState,
+    tokens: &'a [u32],
+    samples: bool,
+    out: &'a mut [f32],
 }
 
 /// Result of a CPU serving run.
@@ -136,6 +166,19 @@ impl<'m> CpuServer<'m> {
         let mut logits = vec![0.0f32; lanes * vocab];
 
         let mut pending: VecDeque<Request> = requests.into();
+
+        // the persistent worker pool for the whole run: the batched
+        // decode step splits its GEMMs by output columns and its
+        // attention phase by lane, prefill chunks run one task per lane
+        // — no per-iteration thread spawns
+        let threads = if self.opts.workers > 0 {
+            self.opts.workers
+        } else {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        };
+        let worker_pool = (threads > 1).then(|| WorkerPool::new(threads - 1));
+        let mut batch_scratch = model.new_batch_scratch();
+
         let t0 = Instant::now();
         let mut iteration = 0u64;
         let mut step_ms: Vec<f64> = Vec::new();
@@ -143,6 +186,8 @@ impl<'m> CpuServer<'m> {
         let mut sim_cycles: u64 = 0;
         let arch = ArchConfig::default();
         let mut iter_end_ms: Vec<f64> = Vec::new();
+        let mut batch_widths: Vec<f64> = Vec::new();
+        let mut weight_passes: u64 = 0;
 
         // 0 = unbounded: a whole remaining prompt in one chunked step
         let max_prefill = if self.opts.prefill_chunk == 0 {
@@ -194,54 +239,94 @@ impl<'m> CpuServer<'m> {
                 }
             }
 
-            // fused batch step: one thread per active lane; a lone lane
-            // runs inline to skip the spawn overhead. Prefill lanes
-            // consume their whole chunk through the fused causal sweep
-            // and only compute the logits projection when the chunk ends
-            // on a sampling position.
+            // partition the active lanes: single-token sampling chunks
+            // are decode-phase and batch into ONE shared-weight step;
+            // multi-token or non-sampling chunks (prefill) run per lane.
+            // B batched lanes stream the weight set once, not B times.
+            let is_batched = |c: &LaneChunk<'_>| c.active && c.tokens.len() == 1 && c.samples;
+            let n_batched = chunks.iter().filter(|c| is_batched(c)).count();
+            let n_prefill = chunks.iter().filter(|c| c.active).count() - n_batched;
+
             let ts = Instant::now();
-            let n_active = chunks.iter().filter(|c| c.active).count();
-            let lane_step = |chunk: &super::batcher::LaneChunk<'_>,
-                             st: &mut DecodeState,
-                             out: &mut [f32]| {
-                if chunk.tokens.len() == 1 && chunk.samples {
-                    // decode step (or final single-token prompt chunk):
-                    // the established single-token hot path
-                    model.decode_step_into(st, chunk.tokens[0], mode, out);
-                } else {
-                    let logits_out = if chunk.samples { Some(out) } else { None };
-                    model.prefill_into(st, chunk.tokens, mode, logits_out);
-                }
-            };
-            if n_active <= 1 {
-                for (i, (st, out)) in states
+            // 1) prefill lanes: chunked prefill through the fused causal
+            //    sweep, one persistent-pool task per lane (logits only
+            //    when the chunk ends on a sampling position)
+            if n_prefill > 0 {
+                let mut tasks: Vec<PrefillTask> = states
                     .iter_mut()
                     .zip(logits.chunks_mut(vocab))
                     .enumerate()
-                {
-                    if chunks[i].active {
-                        lane_step(&chunks[i], st, out);
-                    }
-                }
-            } else {
-                std::thread::scope(|scope| {
-                    for (i, (st, out)) in states
-                        .iter_mut()
-                        .zip(logits.chunks_mut(vocab))
-                        .enumerate()
-                    {
-                        if !chunks[i].active {
-                            continue;
-                        }
-                        let chunk = chunks[i];
-                        let lane_step = &lane_step;
-                        scope.spawn(move || {
-                            lane_step(&chunk, st, out);
+                    .filter(|(i, _)| chunks[*i].active && !is_batched(&chunks[*i]))
+                    .map(|(i, (st, out))| PrefillTask {
+                        st,
+                        tokens: chunks[i].tokens,
+                        samples: chunks[i].samples,
+                        out,
+                    })
+                    .collect();
+                let run_one = |t: &mut PrefillTask<'_>| {
+                    let out = if t.samples { Some(&mut t.out[..]) } else { None };
+                    model.prefill_into(t.st, t.tokens, mode, out);
+                };
+                match &worker_pool {
+                    Some(p) if tasks.len() > 1 => {
+                        let ptr = SharedMut(tasks.as_mut_ptr());
+                        p.run(tasks.len(), |i| {
+                            // Safety: task indices are distinct, so each
+                            // task is this index's only reference
+                            run_one(unsafe { &mut *ptr.0.add(i) });
                         });
                     }
-                });
+                    _ => {
+                        for t in tasks.iter_mut() {
+                            run_one(t);
+                        }
+                    }
+                }
+            }
+            // 2) decode lanes: one batched step, weights streamed once
+            //    for the whole batch; a lone lane runs the inline solo
+            //    path (operator splitting cannot beat it at width 1)
+            if n_batched > 0 {
+                let mut lanes: Vec<BatchLane> = states
+                    .iter_mut()
+                    .zip(logits.chunks_mut(vocab))
+                    .enumerate()
+                    .filter(|(i, _)| is_batched(&chunks[*i]))
+                    .map(|(i, (st, out))| BatchLane {
+                        state: st,
+                        token: chunks[i].tokens[0],
+                        logits: out,
+                    })
+                    .collect();
+                if let [lane] = &mut lanes[..] {
+                    // a lone decode lane takes the solo step verbatim —
+                    // no batch-scratch gather/scatter, no pool
+                    model.decode_step_into(lane.state, lane.token, mode, lane.logits);
+                } else {
+                    model.decode_steps_into(
+                        &mut lanes,
+                        mode,
+                        &mut batch_scratch,
+                        worker_pool.as_ref(),
+                    );
+                }
             }
             step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+
+            // weight-streaming accounting: the batched decode group pays
+            // one layer-stack weight pass regardless of its width; a
+            // prefill lane pays one per chunk token (prefill_into runs
+            // the per-token QKV/O/MLP GEMVs for every token it feeds)
+            let prefill_passes: u64 = chunks
+                .iter()
+                .filter(|c| c.active && !is_batched(c))
+                .map(|c| c.tokens.len() as u64)
+                .sum();
+            weight_passes += prefill_passes + u64::from(n_batched > 0);
+            if n_batched > 0 {
+                batch_widths.push(n_batched as f64);
+            }
 
             // simulated accelerator cost: a chunked iteration is billed
             // one simulated decode step per consumed token position —
@@ -347,6 +432,13 @@ impl<'m> CpuServer<'m> {
             ttft_ms: Percentiles::compute(&ttfts).unwrap_or(zero),
             mean_occupancy: if iteration > 0 {
                 occupancy_acc / iteration as f64
+            } else {
+                0.0
+            },
+            batch_width: Percentiles::compute(&batch_widths).unwrap_or(zero),
+            weight_passes,
+            weight_passes_per_step: if iteration > 0 {
+                weight_passes as f64 / iteration as f64
             } else {
                 0.0
             },

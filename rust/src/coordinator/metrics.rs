@@ -51,6 +51,20 @@ pub struct ServeMetrics {
     pub ttft_ms: Percentiles,
     /// Mean lane occupancy over the run.
     pub mean_occupancy: f64,
+    /// Decode-batch width per iteration that stepped at least one
+    /// batched decode lane — the lane count whose projections shared
+    /// ONE weight pass that step.
+    pub batch_width: Percentiles,
+    /// Layer-stack weight passes streamed over the run: a batched
+    /// decode step pays exactly one regardless of its width; a prefill
+    /// lane pays one per chunk token it feeds (the per-token GEMVs of
+    /// `prefill_into` each stream the layer weights).
+    pub weight_passes: u64,
+    /// Mean weight passes per engine iteration. `1.0` on decode-heavy
+    /// traffic = perfectly amortized decode batching; `≈ lanes` would
+    /// be the old lane-per-thread decode behavior (every lane
+    /// re-streaming the weights each step).
+    pub weight_passes_per_step: f64,
     /// Tokens/second, wall-clock.
     pub tokens_per_s: f64,
     /// Modelled SwiftKV-MHA time for the same schedule (ms): every
@@ -97,6 +111,14 @@ impl ServeMetrics {
         out.push_str(&format!(
             "mean occupancy          {:>10.2}\n",
             self.mean_occupancy
+        ));
+        out.push_str(&format!(
+            "decode batch width p50  {:>10.1} (max {:.0})\n",
+            self.batch_width.p50, self.batch_width.max
+        ));
+        out.push_str(&format!(
+            "weight passes / step    {:>10.2} ({} total)\n",
+            self.weight_passes_per_step, self.weight_passes
         ));
         out.push_str(&format!(
             "simulated accel time    {:>10.2} ms ({:.1} tok/s)\n",

@@ -7,8 +7,9 @@
 //! - [`batcher`] — continuous batching over a fixed lane count: free
 //!   lanes are re-admitted from the queue every iteration,
 //! - [`cpu`] — the default serving backend: the pure-Rust tiny model on
-//!   the fused decode kernels, lanes stepped in parallel with
-//!   `std::thread::scope`,
+//!   the fused decode kernels; decode-phase lanes step through one
+//!   operator-batched `decode_steps_into` call (one shared weight pass
+//!   per batch step) over a persistent [`crate::kernels::WorkerPool`],
 //! - [`server`] — the PJRT serving loop over the AOT engine (behind the
 //!   `pjrt` feature): gather (token, position) per lane, one engine step,
 //!   scatter logits, greedy-sample, retire finished sessions,

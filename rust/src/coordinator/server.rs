@@ -168,6 +168,12 @@ impl<'e> Server<'e> {
             } else {
                 0.0
             },
+            // the PJRT executable is inherently batched: every iteration
+            // is one engine call over the whole lane array — one weight
+            // pass per step by construction (width not tracked here)
+            batch_width: Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 },
+            weight_passes: iteration,
+            weight_passes_per_step: if iteration > 0 { 1.0 } else { 0.0 },
             tokens_per_s: total_tokens as f64 / wall_s,
             simulated_accel_ms: sim_ms,
             simulated_tokens_per_s: if sim_ms > 0.0 {

@@ -24,7 +24,15 @@
 //!   contiguous path),
 //! - [`scratch::DecodeScratch`] — caller-owned buffers making a
 //!   steady-state [`crate::model::TinyModel`] decode step allocation-free
-//!   (KV-side buffers sized `n_kv_heads · d_head` under GQA/MQA).
+//!   (KV-side buffers sized `n_kv_heads · d_head` under GQA/MQA),
+//! - [`scratch::BatchScratch`] — the batch-width twin: gathered INT8
+//!   activation rows and batched GEMM outputs for
+//!   [`crate::model::TinyModel::decode_steps_into`], grown once to the
+//!   high-water batch width (`ensure_batch`), allocation-free after,
+//! - [`pool::WorkerPool`] — persistent worker threads for operator-level
+//!   parallelism (batched GEMMs split by output columns, the attention
+//!   phase by lanes) with zero-alloc job dispatch, replacing the
+//!   per-iteration `std::thread::scope` spawns of the old serving loop.
 //!
 //! Ground truth for all of the above is the deliberately naive scalar
 //! oracle in [`crate::util::oracle`] (materialized scores, two-pass
@@ -39,6 +47,7 @@
 pub mod fxp_mha;
 pub mod mha;
 pub mod paged;
+pub mod pool;
 pub mod scratch;
 pub mod simd;
 
@@ -46,7 +55,8 @@ pub use crate::quant::{gemv_w4a8_into, quantize_int8_into};
 pub use fxp_mha::FxpMhaSwiftKv;
 pub use mha::MhaSwiftKv;
 pub use paged::{BlockPool, BlockTable, KvBlock};
-pub use scratch::DecodeScratch;
+pub use pool::{SharedMut, WorkerPool};
+pub use scratch::{BatchScratch, DecodeScratch};
 pub use simd::{axpy, dot, scale, scale_axpy};
 
 /// Gather one head of a token-major interleaved cache

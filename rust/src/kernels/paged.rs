@@ -22,8 +22,8 @@
 //!   `t / block_len`, row `t % block_len`.
 //!
 //! Blocks own their storage (`Vec`s moved in and out of the pool), so
-//! sharing one pool across `std::thread::scope` lanes is plain safe
-//! Rust: the free list is the only contended state, touched once per
+//! sharing one pool across the serving lanes' worker threads is plain
+//! safe Rust: the free list is the only contended state, touched once per
 //! `block_len` tokens per layer. After pool warm-up (construction
 //! allocates every block eagerly) the decode hot path stays
 //! **allocation-free**: `alloc`/`release` move blocks through a

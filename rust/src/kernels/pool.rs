@@ -1,0 +1,372 @@
+//! Persistent worker pool for operator-level parallelism on the serving
+//! hot path.
+//!
+//! The CPU batch server used to fan lanes out with one
+//! `std::thread::scope` spawn per iteration — thread creation and
+//! teardown on every engine step, and no way to parallelize *inside* an
+//! operator. This pool keeps its workers alive for the whole serving
+//! run and hands them index-addressed task batches: a batched GEMM
+//! splits its output columns across workers, the per-lane attention
+//! phase splits lanes across workers, and between jobs the workers spin
+//! briefly then park on a condvar. Dispatch performs **zero heap
+//! allocation** (a raw closure pointer plus atomics), so pooled steps
+//! keep the hot path's allocation-free guarantee.
+//!
+//! Scheduling is dynamic (workers pull task indices from a shared
+//! atomic counter) but the tasks themselves write disjoint data, so
+//! results never depend on which worker ran what —
+//! `tests/prop_batched_decode.rs` asserts pooled and serial batched
+//! decode steps are bit-identical.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Spins a waiting worker performs before parking on the condvar. Sized
+/// to cover the few-microsecond gaps between the pooled operators of one
+/// decode step, so a step's jobs rarely pay a futex round trip.
+const SPIN_LIMIT: u32 = 8_192;
+
+/// A raw mutable pointer that may cross worker threads. The *caller* is
+/// responsible for ensuring concurrent tasks touch disjoint data behind
+/// it — this wrapper only carries the pointer through the `Send + Sync`
+/// bounds of [`WorkerPool::run`] closures.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedMut<T>(pub *mut T);
+
+// Safety: see the type docs — disjointness is the caller's contract.
+unsafe impl<T> Send for SharedMut<T> {}
+unsafe impl<T> Sync for SharedMut<T> {}
+
+/// Type-erased job: a caller-stack closure plus its task count. Valid
+/// only while the submitting [`WorkerPool::run`] call is on the stack —
+/// `run` does not return until every worker has checked out of the job.
+#[derive(Clone, Copy)]
+struct RawJob {
+    call: unsafe fn(*const (), usize),
+    data: *const (),
+    tasks: usize,
+}
+
+unsafe fn invoke<F: Fn(usize) + Sync>(data: *const (), idx: usize) {
+    (*(data as *const F))(idx)
+}
+
+unsafe fn invoke_nothing(_data: *const (), _idx: usize) {}
+
+struct Shared {
+    /// Bumped (under `sleep`'s mutex) to publish a new job; workers spin
+    /// on it between jobs.
+    epoch: AtomicU64,
+    shutdown: AtomicBool,
+    /// The current job; written by the submitter before the epoch bump,
+    /// read by workers after observing it (Release/Acquire pairing).
+    job: UnsafeCell<RawJob>,
+    /// Next task index to claim (dynamic scheduling).
+    next: AtomicUsize,
+    /// Workers that finished the current epoch.
+    done: AtomicUsize,
+    /// Any task of the current epoch panicked on a worker.
+    panicked: AtomicBool,
+    /// Reentrancy guard: `run` must never be called from inside a task.
+    in_run: AtomicBool,
+    /// Count of workers parked on `start` (guarded by the mutex so a
+    /// worker deciding to park cannot miss a publication).
+    sleep: Mutex<usize>,
+    start: Condvar,
+}
+
+// Safety: `job` is only written while every worker is quiescent (the
+// previous `run` waited for all of them) and read after an Acquire load
+// of `epoch` that the publishing Release bump synchronizes with.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+/// A fixed set of persistent worker threads executing index-addressed
+/// task batches. See the module docs for the intended use.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+// The pool is panic-robust by design: task panics are caught on the
+// workers and re-raised on the submitter, leaving the pool reusable
+// (tested below) — so observing it across an unwind boundary is fine.
+// (The `UnsafeCell` job slot would otherwise opt it out of the auto
+// traits and poison every closure capturing a pool reference.)
+impl std::panic::RefUnwindSafe for WorkerPool {}
+impl std::panic::UnwindSafe for WorkerPool {}
+
+impl WorkerPool {
+    /// Spawn `workers` background threads. `0` is valid: every
+    /// [`WorkerPool::run`] then executes inline on the caller.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            job: UnsafeCell::new(RawJob {
+                call: invoke_nothing,
+                data: std::ptr::null(),
+                tasks: 0,
+            }),
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            in_run: AtomicBool::new(false),
+            sleep: Mutex::new(0),
+            start: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Background workers in the pool (the submitting thread also runs
+    /// tasks, so total parallelism is `workers() + 1`).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Threads that execute a job: the workers plus the submitter.
+    pub fn parallelism(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `f(0), f(1), …, f(tasks - 1)` across the pool (the
+    /// calling thread participates) and return once all of them
+    /// finished. Task indices are claimed dynamically; the closure must
+    /// make concurrent calls with distinct indices safe (write disjoint
+    /// data). Panics if any task panicked. Must not be called from
+    /// inside a task of the same pool.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        let workers = self.handles.len();
+        if workers == 0 || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        assert!(
+            !self.shared.in_run.swap(true, Ordering::Acquire),
+            "WorkerPool::run called from inside one of its own tasks"
+        );
+        // publish the job: slot + counters first, then the epoch bump
+        // (Release) under the sleep mutex so a parking worker cannot
+        // miss it
+        unsafe {
+            *self.shared.job.get() = RawJob {
+                call: invoke::<F>,
+                data: &f as *const F as *const (),
+                tasks,
+            };
+        }
+        self.shared.next.store(0, Ordering::Relaxed);
+        self.shared.done.store(0, Ordering::Relaxed);
+        self.shared.panicked.store(false, Ordering::Relaxed);
+        {
+            let sleepers = self.shared.sleep.lock().unwrap();
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            if *sleepers > 0 {
+                self.shared.start.notify_all();
+            }
+        }
+        // the submitter pulls tasks like any worker
+        let mine = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            f(i);
+        }));
+        // wait for every worker to check out of this epoch — only then
+        // is `f` (on our stack) safe to drop or unwind past
+        let mut spins = 0u32;
+        while self.shared.done.load(Ordering::Acquire) < workers {
+            spins = spins.saturating_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                thread::yield_now();
+            }
+        }
+        self.shared.in_run.store(false, Ordering::Release);
+        if let Err(payload) = mine {
+            resume_unwind(payload);
+        }
+        if self.shared.panicked.load(Ordering::Relaxed) {
+            panic!("a WorkerPool task panicked on a worker thread");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        {
+            let sleepers = self.shared.sleep.lock().unwrap();
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            if *sleepers > 0 {
+                self.shared.start.notify_all();
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        // wait for the next epoch: spin briefly, then park
+        let mut spins = 0u32;
+        loop {
+            let e = shared.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break;
+            }
+            spins = spins.saturating_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                let mut sleepers = shared.sleep.lock().unwrap();
+                // re-check under the mutex: the publisher bumps the
+                // epoch while holding it, so this cannot race
+                while shared.epoch.load(Ordering::Acquire) == seen {
+                    *sleepers += 1;
+                    sleepers = shared.start.wait(sleepers).unwrap();
+                    *sleepers -= 1;
+                }
+                spins = 0;
+            }
+        }
+        if shared.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        // Safety: the epoch Acquire load above synchronizes with the
+        // publishing Release bump, making the job slot write visible;
+        // the submitter keeps the closure alive until `done` says every
+        // worker finished.
+        let job = unsafe { *shared.job.get() };
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.tasks {
+                break;
+            }
+            unsafe { (job.call)(job.data, i) };
+        }));
+        if result.is_err() {
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+        shared.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for tasks in [1usize, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicU32> = (0..tasks).map(|_| AtomicU32::new(0)).collect();
+            pool.run(tasks, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "{tasks} tasks: some index ran zero or multiple times"
+            );
+        }
+    }
+
+    #[test]
+    fn tasks_write_disjoint_slices_through_shared_mut() {
+        let pool = WorkerPool::new(2);
+        let mut out = vec![0u64; 257];
+        let ptr = SharedMut(out.as_mut_ptr());
+        pool.run(out.len(), |i| {
+            // Safety: one task per index
+            unsafe { ptr.0.add(i).write(i as u64 * 3 + 1) };
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        // jobs spaced by sleeps long enough to park the workers — the
+        // wakeup path must not lose a job
+        let pool = WorkerPool::new(2);
+        let counter = AtomicU32::new(0);
+        for round in 0..50u32 {
+            pool.run(5, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 5);
+            if round % 16 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.parallelism(), 1);
+        let counter = AtomicU32::new(0);
+        pool.run(9, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_submitter() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, |i| {
+                if i == 40 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "task panic must fail the run");
+        // and the pool must still work afterwards
+        let counter = AtomicU32::new(0);
+        pool.run(8, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = WorkerPool::new(3);
+        let xs: Vec<u64> = (0..10_000).collect();
+        let partials: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        let parts = partials.len();
+        pool.run(parts, |t| {
+            let lo = xs.len() * t / parts;
+            let hi = xs.len() * (t + 1) / parts;
+            let s: u64 = xs[lo..hi].iter().sum();
+            partials[t].store(s, Ordering::Relaxed);
+        });
+        let total: u64 = partials.iter().map(|p| p.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, xs.iter().sum::<u64>());
+    }
+}

@@ -147,6 +147,129 @@ impl DecodeScratch {
     }
 }
 
+/// Batch-width scratch for one **batched** decode step
+/// ([`crate::model::TinyModel::decode_steps_into`]): the gathered INT8
+/// activation rows and the batched GEMM outputs that all lanes share.
+///
+/// Per-lane intermediates (residual streams, RoPE'd queries, attention
+/// outputs, the fused SwiftKV states) stay in each lane's
+/// [`DecodeScratch`]; this struct holds only what the shared weight
+/// passes consume and produce, laid out row-major `[batch, width]` so
+/// one GEMM call covers every lane. Buffers are empty until the first
+/// [`BatchScratch::ensure_batch`] and grow monotonically to the
+/// high-water batch width — steady-state batched steps at or below the
+/// capacity perform zero heap allocation (`tests/alloc_hotpath.rs`).
+#[derive(Debug, Clone)]
+pub struct BatchScratch {
+    /// INT8 activation rows for the `d_model`-wide GEMM inputs,
+    /// `[cap, d_model]`.
+    pub qi8: Vec<i8>,
+    /// INT8 activation rows for the down-projection input,
+    /// `[cap, d_ffn]`.
+    pub qi8_ffn: Vec<i8>,
+    /// Per-lane activation quantization scales, `[cap]`.
+    pub scales: Vec<f32>,
+    /// Batched Q projection, `[cap, d_model]`.
+    pub q: Vec<f32>,
+    /// Batched K/V projections, `[cap, n_kv_heads * d_head]` each.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Batched O and down projections (reused for both), `[cap, d_model]`.
+    pub o: Vec<f32>,
+    /// Batched MLP gate/up projections, `[cap, d_ffn]` each.
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    /// Batched logits, `[cap, vocab]`, scattered to the lanes' buffers.
+    pub logits: Vec<f32>,
+    /// Lanes the buffers are currently sized for.
+    cap: usize,
+    d_model: usize,
+    d_kv: usize,
+    d_ffn: usize,
+    vocab: usize,
+}
+
+impl BatchScratch {
+    /// Empty scratch for a model shape (`d_model = n_heads · d_head`,
+    /// KV rows `n_kv_heads · d_head` wide). Nothing is allocated until
+    /// the first [`BatchScratch::ensure_batch`].
+    pub fn new(
+        n_heads: usize,
+        n_kv_heads: usize,
+        d_head: usize,
+        d_ffn: usize,
+        vocab: usize,
+    ) -> Self {
+        assert!(
+            n_kv_heads > 0 && n_heads % n_kv_heads == 0,
+            "n_heads must be a multiple of n_kv_heads"
+        );
+        BatchScratch {
+            qi8: Vec::new(),
+            qi8_ffn: Vec::new(),
+            scales: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            o: Vec::new(),
+            gate: Vec::new(),
+            up: Vec::new(),
+            logits: Vec::new(),
+            cap: 0,
+            d_model: n_heads * d_head,
+            d_kv: n_kv_heads * d_head,
+            d_ffn,
+            vocab,
+        }
+    }
+
+    /// Grow every buffer to hold at least `batch` lanes. Allocates only
+    /// when the capacity actually grows; smaller batches reuse the
+    /// existing buffers untouched.
+    pub fn ensure_batch(&mut self, batch: usize) {
+        if batch <= self.cap {
+            return;
+        }
+        self.qi8.resize(batch * self.d_model, 0);
+        self.qi8_ffn.resize(batch * self.d_ffn, 0);
+        self.scales.resize(batch, 0.0);
+        self.q.resize(batch * self.d_model, 0.0);
+        self.k.resize(batch * self.d_kv, 0.0);
+        self.v.resize(batch * self.d_kv, 0.0);
+        self.o.resize(batch * self.d_model, 0.0);
+        self.gate.resize(batch * self.d_ffn, 0.0);
+        self.up.resize(batch * self.d_ffn, 0.0);
+        self.logits.resize(batch * self.vocab, 0.0);
+        self.cap = batch;
+    }
+
+    /// Lanes the buffers currently hold (0 before the first
+    /// [`BatchScratch::ensure_batch`]).
+    pub fn batch_capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Model width the scratch was sized for.
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// KV projection width the scratch was sized for.
+    pub fn d_kv(&self) -> usize {
+        self.d_kv
+    }
+
+    /// MLP width the scratch was sized for.
+    pub fn d_ffn(&self) -> usize {
+        self.d_ffn
+    }
+
+    /// Vocabulary width the scratch was sized for.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +326,38 @@ mod tests {
         s.ensure_chunk(8);
         assert_eq!(s.chunk_capacity(), 8);
         assert_eq!(s.xs.len(), 8 * 32);
+    }
+
+    #[test]
+    fn batch_scratch_grows_once_and_never_shrinks() {
+        // 4 query heads over 2 KV heads, d_head 8, d_ffn 64, vocab 96
+        let mut s = BatchScratch::new(4, 2, 8, 64, 96);
+        assert_eq!(s.batch_capacity(), 0);
+        assert_eq!((s.d_model(), s.d_kv(), s.d_ffn(), s.vocab()), (32, 16, 64, 96));
+        assert!(s.qi8.is_empty() && s.logits.is_empty());
+        s.ensure_batch(3);
+        assert_eq!(s.batch_capacity(), 3);
+        assert_eq!(s.qi8.len(), 3 * 32);
+        assert_eq!(s.qi8_ffn.len(), 3 * 64);
+        assert_eq!(s.scales.len(), 3);
+        assert_eq!(s.q.len(), 3 * 32);
+        assert_eq!(s.k.len(), 3 * 16);
+        assert_eq!(s.v.len(), 3 * 16);
+        assert_eq!(s.o.len(), 3 * 32);
+        assert_eq!(s.gate.len(), 3 * 64);
+        assert_eq!(s.up.len(), 3 * 64);
+        assert_eq!(s.logits.len(), 3 * 96);
+        // smaller batches reuse the buffers; larger ones grow them
+        s.ensure_batch(2);
+        assert_eq!(s.batch_capacity(), 3);
+        s.ensure_batch(8);
+        assert_eq!(s.batch_capacity(), 8);
+        assert_eq!(s.logits.len(), 8 * 96);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of n_kv_heads")]
+    fn batch_scratch_rejects_indivisible_group() {
+        let _ = BatchScratch::new(6, 4, 8, 32, 16);
     }
 }

@@ -6,7 +6,7 @@
 //! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
 //! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
 //!                  [--kv-block-len 16] [--kv-pool-blocks 0] [--prefill-chunk 8]
-//!                  [--prompt-len 0]
+//!                  [--prompt-len 0] [--workers 0]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 
@@ -119,6 +119,9 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
     // prompt tokens per lane per iteration through the fused chunked
     // prefill (0 = whole prompt in one step; 1 = legacy per-token)
     let prefill_chunk = args.get_usize("prefill-chunk", DEFAULT_PREFILL_CHUNK)?;
+    // engine threads (serving thread + persistent pool workers);
+    // 0 = one per available CPU, 1 = fully inline
+    let workers = args.get_usize("workers", 0)?;
     let report = CpuServer::new(
         &tm,
         CpuServeOptions {
@@ -129,6 +132,7 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
             kv_block_len,
             kv_pool_blocks,
             prefill_chunk,
+            workers,
         },
     )
     .serve(reqs);
@@ -148,7 +152,7 @@ fn run() -> Result<(), String> {
     let args = Args::parse(
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
-            "kv-heads", "kv-block-len", "kv-pool-blocks", "prefill-chunk", "prompt-len",
+            "kv-heads", "kv-block-len", "kv-pool-blocks", "prefill-chunk", "prompt-len", "workers",
         ],
         &["help"],
     )?;

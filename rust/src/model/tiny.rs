@@ -35,11 +35,23 @@
 //! (asserted by `tests/alloc_hotpath.rs`), block-boundary crossings
 //! included — the pool allocates every block eagerly and `alloc`/
 //! `release` only move them through a pre-reserved free list.
+//!
+//! Multi-lane serving decodes through the **batched** step
+//! ([`TinyModel::decode_steps_into`]): decoding is weight-bandwidth
+//! bound, so the batch step streams every packed weight matrix once for
+//! the whole batch (gather activations → one shared W4A8 GEMM per
+//! projection → per-lane fused attention) instead of once per lane,
+//! while each lane keeps its own KV state and the attention kernels run
+//! unchanged. Per lane the batched step is bit-identical to the solo
+//! one (`tests/prop_batched_decode.rs`), and with a
+//! [`crate::kernels::WorkerPool`] the shared GEMMs split across workers
+//! by output-column range and the attention phase by lane.
 
 use super::weights::WeightStore;
 use crate::fxp::{vector, Exp2Lut, Fxp32};
-use crate::kernels::{BlockPool, BlockTable, DecodeScratch};
-use crate::quant::{Int4Matrix, QuantLinear};
+use crate::kernels::{BatchScratch, BlockPool, BlockTable, DecodeScratch, SharedMut, WorkerPool};
+use crate::quant::gemv::gemm_w4a8_raw_cols_ptr;
+use crate::quant::{gemm_w4a8_raw_into, quantize_int8_into, Int4Matrix, QuantLinear};
 use crate::rope::{rope_apply_cached_into, RopeState};
 use crate::util::Rng;
 use anyhow::{bail, Result};
@@ -211,6 +223,17 @@ impl Drop for DecodeState {
             table.release_into(&self.pool);
         }
     }
+}
+
+/// One lane of a batched decode step ([`TinyModel::decode_steps_into`]):
+/// the lane's sequence state, the token it appends this step, and the
+/// buffer its logits land in. Lanes may sit at different positions —
+/// each keeps its own KV tables, RoPE recurrence, and scratch.
+pub struct BatchLane<'a> {
+    pub state: &'a mut DecodeState,
+    pub token: u32,
+    /// Receives this lane's logits, `[vocab]`.
+    pub logits: &'a mut [f32],
 }
 
 impl TinyModel {
@@ -538,6 +561,277 @@ impl TinyModel {
         st.pos += 1;
     }
 
+    /// Batch scratch shaped for this model — the shared-GEMM companion
+    /// of one [`TinyModel::decode_steps_into`] call site. Keep one per
+    /// serving loop; it grows once to the high-water batch width.
+    pub fn new_batch_scratch(&self) -> BatchScratch {
+        BatchScratch::new(
+            self.n_heads,
+            self.n_kv_heads,
+            self.d_head,
+            self.d_ffn,
+            self.vocab,
+        )
+    }
+
+    /// Packed weight bytes one decode step must stream through the
+    /// GEMMs (all layer projections plus `lm_head`; INT4 payload +
+    /// per-column f32 scales; the embedding row lookup is excluded).
+    /// This is the per-step weight traffic a batched step pays **once**
+    /// for the whole batch, where per-lane stepping pays it `B` times —
+    /// the arithmetic in EXPERIMENTS.md §batched-weight-streaming.
+    pub fn weight_stream_bytes(&self) -> usize {
+        // packed_bytes already includes the per-column f32 scales
+        let lin = |l: &DualLinear| l.quant.weight.packed_bytes();
+        let per_layer: usize = self
+            .layers
+            .iter()
+            .map(|lw| {
+                lin(&lw.wq)
+                    + lin(&lw.wk)
+                    + lin(&lw.wv)
+                    + lin(&lw.wo)
+                    + lin(&lw.w_gate)
+                    + lin(&lw.w_up)
+                    + lin(&lw.w_down)
+            })
+            .sum();
+        per_layer + lin(&self.lm_head)
+    }
+
+    /// One **batched** decode step: append each lane's token and fill
+    /// each lane's logits, streaming every weight matrix **once for the
+    /// whole batch** instead of once per lane.
+    ///
+    /// Per layer the step runs gather → shared pass → scatter: (1) per
+    /// lane: RMS-norm and INT8-quantize the activation into the batch
+    /// scratch's row block; (2) one batched W4A8 GEMM per projection
+    /// ([`crate::quant::gemm_w4a8_raw_into`]) — Q/K/V here, O and the
+    /// MLP matrices below — so the packed weights are read and
+    /// nibble-unpacked once per batch step; (3) per lane: RoPE, cache
+    /// append, and the fused SwiftKV attention sweep over the lane's own
+    /// paged KV state, exactly as in [`Self::decode_step_into`]. The
+    /// logits projection is one shared `lm_head` pass scattered to the
+    /// lanes' buffers at the end.
+    ///
+    /// Every per-lane op runs in the same order as the solo step and the
+    /// batched GEMM is bit-identical per lane to the solo GEMV, so each
+    /// lane's logits are **bit-identical** to what
+    /// [`Self::decode_step_into`] produces for the same sequence — in
+    /// both numerics modes, across GQA shapes and paged block lengths
+    /// (`tests/prop_batched_decode.rs`).
+    ///
+    /// With `pool` set, the shared GEMMs split by output-column range
+    /// and the attention phase by lane across the persistent workers;
+    /// tasks write disjoint data, so pooled results equal serial ones
+    /// bit for bit. Steady state (batch scratch at capacity) the step
+    /// performs **zero heap allocation** (`tests/alloc_hotpath.rs`).
+    pub fn decode_steps_into(
+        &self,
+        lanes: &mut [BatchLane<'_>],
+        mode: NumericsMode,
+        batch: &mut BatchScratch,
+        pool: Option<&WorkerPool>,
+    ) {
+        let b = lanes.len();
+        if b == 0 {
+            return;
+        }
+        let d = self.d_model;
+        let (h, dh) = (self.n_heads, self.d_head);
+        let h_kv = self.n_kv_heads;
+        let d_kv = h_kv * dh;
+        let d_ffn = self.d_ffn;
+        let vocab = self.vocab;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let fxp_scale = Fxp32::from_f64(1.0 / (dh as f64).sqrt());
+        batch.ensure_batch(b);
+        assert_eq!(batch.d_model(), d, "batch scratch d_model mismatch");
+        assert_eq!(batch.d_kv(), d_kv, "batch scratch d_kv mismatch");
+        assert_eq!(batch.d_ffn(), d_ffn, "batch scratch d_ffn mismatch");
+        assert_eq!(batch.vocab(), vocab, "batch scratch vocab mismatch");
+
+        // per-lane step setup: advance the RoPE recurrence, map this
+        // step's cache row in every layer, embed the token
+        for lane in lanes.iter_mut() {
+            assert!((lane.token as usize) < vocab, "token out of range");
+            assert!(lane.state.pos < self.n_ctx, "context overflow");
+            assert_eq!(lane.logits.len(), vocab, "logits buffer size");
+            let st = &mut *lane.state;
+            st.rope.advance();
+            let len = st.pos + 1;
+            let DecodeState {
+                tables,
+                pool: kv_pool,
+                scratch: sc,
+                ..
+            } = st;
+            debug_assert_eq!(kv_pool.row_width(), d_kv);
+            for table in tables.iter_mut() {
+                table.ensure_tokens(kv_pool, len);
+            }
+            let at = lane.token as usize * d;
+            sc.x.copy_from_slice(&self.embedding[at..at + d]);
+        }
+
+        for (l, lw) in self.layers.iter().enumerate() {
+            // gather: norm + INT8-quantize every lane's activation row
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let sc = &mut lane.state.scratch;
+                rms_norm_into(&sc.x, &lw.attn_norm, &mut sc.xn);
+                let s = quantize_int8_into(&sc.xn, &mut batch.qi8[i * d..(i + 1) * d]);
+                batch.scales[i] = s;
+            }
+            // one shared weight pass each for Q, K, V
+            let (qs, scales) = (&batch.qi8[..b * d], &batch.scales[..b]);
+            batched_gemm(pool, qs, scales, &lw.wq.quant.weight, &mut batch.q[..b * d]);
+            batched_gemm(pool, qs, scales, &lw.wk.quant.weight, &mut batch.k[..b * d_kv]);
+            batched_gemm(pool, qs, scales, &lw.wv.quant.weight, &mut batch.v[..b * d_kv]);
+
+            // scatter: RoPE, cache-row append, and the fused per-lane
+            // attention sweep — one task per lane
+            {
+                let lanes_ptr = SharedMut(lanes.as_mut_ptr());
+                let (bq, bk, bv) = (&batch.q, &batch.k, &batch.v);
+                let attend_lane = |i: usize| {
+                    // Safety: task indices are distinct, so each task
+                    // holds the only reference to its lane
+                    let lane = unsafe { &mut *lanes_ptr.0.add(i) };
+                    let pos = lane.state.pos;
+                    let len = pos + 1;
+                    let fxp_from = lane.state.fxp_rows.min(pos);
+                    let DecodeState {
+                        tables,
+                        rope,
+                        scratch: sc,
+                        ..
+                    } = &mut *lane.state;
+                    let table = &mut tables[l];
+                    let qrow = &bq[i * d..(i + 1) * d];
+                    for head in 0..h {
+                        let o = head * dh;
+                        rope_apply_cached_into(
+                            &qrow[o..o + dh],
+                            &rope.cos,
+                            &rope.sin,
+                            &mut sc.q_rot[o..o + dh],
+                        );
+                    }
+                    let ksrc = &bk[i * d_kv..(i + 1) * d_kv];
+                    let krow = table.k_row_mut(pos);
+                    for head in 0..h_kv {
+                        let o = head * dh;
+                        rope_apply_cached_into(
+                            &ksrc[o..o + dh],
+                            &rope.cos,
+                            &rope.sin,
+                            &mut krow[o..o + dh],
+                        );
+                    }
+                    table.v_row_mut(pos).copy_from_slice(&bv[i * d_kv..(i + 1) * d_kv]);
+                    match mode {
+                        NumericsMode::DesktopF32 => {
+                            sc.mha.reset();
+                            sc.mha.extend_paged(&sc.q_rot, table, 0, len, scale);
+                            sc.mha.finalize_into(&mut sc.attn_out);
+                        }
+                        NumericsMode::Accelerator => {
+                            vector::quantize_into(&sc.q_rot, &mut sc.q_fxp);
+                            for t in fxp_from..len {
+                                table.quantize_row(t);
+                            }
+                            sc.fxp_mha.reset();
+                            sc.fxp_mha
+                                .extend_paged(&self.lut, &sc.q_fxp, table, 0, len, fxp_scale);
+                            sc.fxp_mha.finalize_into(&mut sc.attn_fxp);
+                            vector::dequantize_into(&sc.attn_fxp, &mut sc.attn_out);
+                        }
+                    }
+                };
+                for_each_lane(pool, b, attend_lane);
+            }
+
+            // gather the attention outputs → one shared O-projection pass
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let sc = &mut lane.state.scratch;
+                let s = quantize_int8_into(&sc.attn_out, &mut batch.qi8[i * d..(i + 1) * d]);
+                batch.scales[i] = s;
+            }
+            batched_gemm(
+                pool,
+                &batch.qi8[..b * d],
+                &batch.scales[..b],
+                &lw.wo.quant.weight,
+                &mut batch.o[..b * d],
+            );
+
+            // residual + MLP norm, gathered for the gate/up passes
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let sc = &mut lane.state.scratch;
+                for (xi, oi) in sc.x.iter_mut().zip(&batch.o[i * d..(i + 1) * d]) {
+                    *xi += oi;
+                }
+                rms_norm_into(&sc.x, &lw.mlp_norm, &mut sc.xn);
+                let s = quantize_int8_into(&sc.xn, &mut batch.qi8[i * d..(i + 1) * d]);
+                batch.scales[i] = s;
+            }
+            let (qs, scales) = (&batch.qi8[..b * d], &batch.scales[..b]);
+            batched_gemm(pool, qs, scales, &lw.w_gate.quant.weight, &mut batch.gate[..b * d_ffn]);
+            batched_gemm(pool, qs, scales, &lw.w_up.quant.weight, &mut batch.up[..b * d_ffn]);
+
+            // SwiGLU per lane, gathered for the shared down pass
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let sc = &mut lane.state.scratch;
+                let gate = &batch.gate[i * d_ffn..(i + 1) * d_ffn];
+                let up = &batch.up[i * d_ffn..(i + 1) * d_ffn];
+                for ((a, &g), &u) in sc.act.iter_mut().zip(gate).zip(up) {
+                    *a = silu(g) * u;
+                }
+                let s =
+                    quantize_int8_into(&sc.act, &mut batch.qi8_ffn[i * d_ffn..(i + 1) * d_ffn]);
+                batch.scales[i] = s;
+            }
+            batched_gemm(
+                pool,
+                &batch.qi8_ffn[..b * d_ffn],
+                &batch.scales[..b],
+                &lw.w_down.quant.weight,
+                &mut batch.o[..b * d],
+            );
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let sc = &mut lane.state.scratch;
+                for (xi, di) in sc.x.iter_mut().zip(&batch.o[i * d..(i + 1) * d]) {
+                    *xi += di;
+                }
+            }
+        }
+
+        // final norm per lane → ONE shared lm_head pass → scatter the
+        // logits rows into the lanes' buffers
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let sc = &mut lane.state.scratch;
+            rms_norm_into(&sc.x, &self.final_norm, &mut sc.xn);
+            let s = quantize_int8_into(&sc.xn, &mut batch.qi8[i * d..(i + 1) * d]);
+            batch.scales[i] = s;
+        }
+        batched_gemm(
+            pool,
+            &batch.qi8[..b * d],
+            &batch.scales[..b],
+            &self.lm_head.quant.weight,
+            &mut batch.logits[..b * vocab],
+        );
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            lane.logits
+                .copy_from_slice(&batch.logits[i * vocab..(i + 1) * vocab]);
+            let st = &mut *lane.state;
+            if mode == NumericsMode::Accelerator {
+                st.fxp_rows = st.pos + 1;
+            }
+            st.pos += 1;
+        }
+    }
+
     /// Chunked prefill: feed a whole chunk of prompt tokens through the
     /// fused causal sweep in one call, instead of one [`Self::decode_step_into`]
     /// per token. Per layer the chunk runs in three passes — (1) per
@@ -790,6 +1084,52 @@ impl TinyModel {
             }
         }
         out
+    }
+}
+
+/// One shared W4A8 weight pass over `xscales.len()` gathered INT8
+/// activation rows, optionally split across the worker pool by
+/// output-column range. Tasks write disjoint columns of `out`, so the
+/// pooled result is identical to the serial call for any worker count
+/// or schedule.
+fn batched_gemm(
+    pool: Option<&WorkerPool>,
+    qs: &[i8],
+    xscales: &[f32],
+    w: &Int4Matrix,
+    out: &mut [f32],
+) {
+    match pool {
+        None => gemm_w4a8_raw_into(qs, xscales, w, out),
+        Some(p) => {
+            let dout = w.dout;
+            let parts = p.parallelism().min(dout);
+            let out_ptr = SharedMut(out.as_mut_ptr());
+            let out_len = out.len();
+            p.run(parts, |t| {
+                let j0 = dout * t / parts;
+                let j1 = dout * (t + 1) / parts;
+                // Safety: tasks cover disjoint column ranges of `out`,
+                // whose exclusive borrow the caller holds across the run
+                unsafe {
+                    gemm_w4a8_raw_cols_ptr(qs, xscales, w, j0, j1, out_ptr.0, out_len);
+                }
+            });
+        }
+    }
+}
+
+/// Run `f(0) … f(lanes - 1)` inline, or one task per lane across the
+/// worker pool. `f` must make concurrent calls with distinct indices
+/// safe (each touches only its own lane).
+fn for_each_lane<F: Fn(usize) + Sync>(pool: Option<&WorkerPool>, lanes: usize, f: F) {
+    match pool {
+        None => {
+            for i in 0..lanes {
+                f(i);
+            }
+        }
+        Some(p) => p.run(lanes, f),
     }
 }
 
@@ -1118,6 +1458,73 @@ mod tests {
                 assert_eq!(a, buf, "{mode:?} diverged at token {t}");
             }
         }
+    }
+
+    #[test]
+    fn batched_decode_steps_match_solo_steps() {
+        // 3 lanes with different token streams: every lane of the
+        // batched step must be bit-identical to its solo twin
+        for m in [tiny_synth(), tiny_synth_gqa()] {
+            for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+                let mut solo: Vec<DecodeState> = (0..3).map(|_| m.new_state()).collect();
+                let mut batched: Vec<DecodeState> = (0..3).map(|_| m.new_state()).collect();
+                let mut batch = m.new_batch_scratch();
+                let mut want = vec![0.0f32; m.vocab];
+                let mut got = vec![0.0f32; 3 * m.vocab];
+                for step in 0..5u32 {
+                    let tokens: Vec<u32> =
+                        (0..3u32).map(|i| (step * 7 + i * 13 + 1) % m.vocab as u32).collect();
+                    let mut lanes: Vec<BatchLane> = batched
+                        .iter_mut()
+                        .zip(got.chunks_mut(m.vocab))
+                        .zip(&tokens)
+                        .map(|((state, logits), &token)| BatchLane {
+                            state,
+                            token,
+                            logits,
+                        })
+                        .collect();
+                    m.decode_steps_into(&mut lanes, mode, &mut batch, None);
+                    for (i, st) in solo.iter_mut().enumerate() {
+                        m.decode_step_into(st, tokens[i], mode, &mut want);
+                        assert_eq!(
+                            &got[i * m.vocab..(i + 1) * m.vocab],
+                            &want[..],
+                            "{mode:?} step {step} lane {i}: batched decode diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_width_one_matches_solo() {
+        let m = tiny_synth();
+        let mut solo_st = m.new_state();
+        let mut batch_st = m.new_state();
+        let mut batch = m.new_batch_scratch();
+        let mut want = vec![0.0f32; m.vocab];
+        let mut got = vec![0.0f32; m.vocab];
+        for &t in &[5u32, 9, 1, 30] {
+            m.decode_step_into(&mut solo_st, t, NumericsMode::Accelerator, &mut want);
+            let mut lanes = [BatchLane {
+                state: &mut batch_st,
+                token: t,
+                logits: &mut got[..],
+            }];
+            m.decode_steps_into(&mut lanes, NumericsMode::Accelerator, &mut batch, None);
+            assert_eq!(got, want, "width-1 batched step diverged at token {t}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_empty_is_a_noop() {
+        let m = tiny_synth();
+        let mut batch = m.new_batch_scratch();
+        let mut lanes: [BatchLane; 0] = [];
+        m.decode_steps_into(&mut lanes, NumericsMode::DesktopF32, &mut batch, None);
+        assert_eq!(batch.batch_capacity(), 0);
     }
 
     #[test]

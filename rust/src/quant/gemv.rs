@@ -72,6 +72,129 @@ pub fn gemv_w4a8_raw_into(xs: &[i8], xscale: f32, w: &Int4Matrix, out: &mut [f32
     }
 }
 
+/// The batched GEMM core on raw quantized lanes: `b` INT8 activation
+/// rows share **one** pass over the packed INT4 weight matrix —
+/// `out[i] = (Wᵀ xs[i]) · xscales[i] · wscale` for every lane at once.
+///
+/// Hot path (§Perf): decoding is weight-bandwidth bound, and `b`
+/// independent [`gemv_w4a8_raw_into`] calls stream (and nibble-unpack)
+/// the packed matrix `b` times per batch step. Here every packed column
+/// byte is unpacked once and MAC'd against all lanes' activation rows
+/// from registers (lane blocks of 4, one i32 accumulator pair per
+/// lane), so weight bytes moved — and unpack work done — per batch step
+/// are constant in `b`. The i32 accumulation is exact and the writeback
+/// uses the same expression as the GEMV, so every lane's output is
+/// **bit-identical** to a solo [`gemv_w4a8_raw_into`] over the same
+/// quantized inputs (unit tests below; `tests/prop_batched_decode.rs`
+/// asserts it end-to-end through the model).
+///
+/// `xs` is row-major `[b, din]`, `out` row-major `[b, dout]`, with
+/// `b = xscales.len()`.
+pub fn gemm_w4a8_raw_into(xs: &[i8], xscales: &[f32], w: &Int4Matrix, out: &mut [f32]) {
+    gemm_w4a8_raw_cols_into(xs, xscales, w, 0, w.dout, out);
+}
+
+/// [`gemm_w4a8_raw_into`] restricted to output columns `j0..j1` — the
+/// operator-splitting unit of the serving path's worker pool: disjoint
+/// column ranges of one batched GEMM run on different workers, each
+/// writing only its own columns of every lane's output row.
+pub fn gemm_w4a8_raw_cols_into(
+    xs: &[i8],
+    xscales: &[f32],
+    w: &Int4Matrix,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    // Safety: `out` is a valid exclusive borrow of the whole buffer.
+    unsafe { gemm_w4a8_raw_cols_ptr(xs, xscales, w, j0, j1, out.as_mut_ptr(), out.len()) }
+}
+
+/// Raw-pointer form of [`gemm_w4a8_raw_cols_into`], for callers that
+/// split one output buffer across worker threads by column range.
+///
+/// # Safety
+/// `out` must point to a live `[b * w.dout]` f32 buffer (`b =
+/// xscales.len()`, `out_len` its exact length) for the duration of the
+/// call, and concurrent callers over the same buffer must use disjoint
+/// `j0..j1` ranges — each call writes exactly the elements
+/// `out[i * w.dout + j]` for `j0 <= j < j1`, nothing else.
+pub unsafe fn gemm_w4a8_raw_cols_ptr(
+    xs: &[i8],
+    xscales: &[f32],
+    w: &Int4Matrix,
+    j0: usize,
+    j1: usize,
+    out: *mut f32,
+    out_len: usize,
+) {
+    let b = xscales.len();
+    assert_eq!(xs.len(), b * w.din, "activation batch dimension mismatch");
+    assert_eq!(out_len, b * w.dout, "output batch length mismatch");
+    assert!(j0 <= j1 && j1 <= w.dout, "column range out of bounds");
+    let stride = w.din.div_ceil(2);
+    for j in j0..j1 {
+        let col = &w.packed[j * stride..(j + 1) * stride];
+        let wscale = w.scales[j];
+        let mut lane = 0;
+        while lane + 4 <= b {
+            let accs = gemm_col::<4>(col, w.din, xs, lane);
+            for (t, &acc) in accs.iter().enumerate() {
+                out.add((lane + t) * w.dout + j)
+                    .write(acc as f32 * xscales[lane + t] * wscale);
+            }
+            lane += 4;
+        }
+        let write_accs = |accs: &[i32], out: *mut f32| {
+            for (t, &acc) in accs.iter().enumerate() {
+                // Safety (caller contract): in-bounds column j of lane row
+                unsafe {
+                    out.add((lane + t) * w.dout + j)
+                        .write(acc as f32 * xscales[lane + t] * wscale);
+                }
+            }
+        };
+        match b - lane {
+            0 => {}
+            1 => write_accs(&gemm_col::<1>(col, w.din, xs, lane), out),
+            2 => write_accs(&gemm_col::<2>(col, w.din, xs, lane), out),
+            _ => write_accs(&gemm_col::<3>(col, w.din, xs, lane), out),
+        }
+    }
+}
+
+/// One packed column against `NL` activation lanes: each byte is
+/// unpacked once and both nibbles MAC into per-lane accumulator pairs.
+/// The i32 accumulation is exact, so the per-lane sums equal what
+/// [`gemv_w4a8_raw_into`]'s four-accumulator loop produces.
+#[inline(always)]
+fn gemm_col<const NL: usize>(col: &[u8], din: usize, xs: &[i8], lane0: usize) -> [i32; NL] {
+    let mut acc_lo = [0i32; NL];
+    let mut acc_hi = [0i32; NL];
+    let pairs = din / 2;
+    // per-lane activation rows, fixed for the whole column walk
+    let rows: [&[i8]; NL] = std::array::from_fn(|t| {
+        let at = (lane0 + t) * din;
+        &xs[at..at + din]
+    });
+    for (i, &byte) in col[..pairs].iter().enumerate() {
+        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
+        let hi = ((byte >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+        for ((al, ah), row) in acc_lo.iter_mut().zip(acc_hi.iter_mut()).zip(rows.iter()) {
+            *al += row[2 * i] as i32 * lo;
+            *ah += row[2 * i + 1] as i32 * hi;
+        }
+    }
+    if din % 2 == 1 {
+        let byte = col[pairs];
+        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
+        for (al, row) in acc_lo.iter_mut().zip(rows.iter()) {
+            *al += row[din - 1] as i32 * lo;
+        }
+    }
+    std::array::from_fn(|t| acc_lo[t] + acc_hi[t])
+}
+
 /// A quantized linear layer: packed weights + the f32 forward that first
 /// quantizes its activation (the full SFU→Array round trip of Fig. 5(c)).
 #[derive(Debug, Clone)]
@@ -179,5 +302,82 @@ mod tests {
         let (_, m) = random_mat(5, 16, 8);
         let xq = quantize_int8(&[1.0; 8]);
         gemv_w4a8(&xq, &m);
+    }
+
+    /// Build `b` quantized activation rows for a `din`-wide matrix.
+    fn random_batch(seed: u64, b: usize, din: usize) -> (Vec<i8>, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut qs = vec![0i8; b * din];
+        let mut scales = vec![0.0f32; b];
+        for i in 0..b {
+            let x = rng.uniform_vec(din, 1.0 + i as f32 * 0.25);
+            scales[i] = crate::quant::int8::quantize_int8_into(&x, &mut qs[i * din..(i + 1) * din]);
+        }
+        (qs, scales)
+    }
+
+    #[test]
+    fn gemm_bit_identical_to_per_lane_gemv() {
+        // the whole point of the batched kernel: one shared weight pass
+        // must reproduce every lane's GEMV output bit for bit — across
+        // batch widths (incl. the 4-lane block boundary and remainders)
+        // and an odd `din` (exercises the tail nibble)
+        for (din, dout) in [(64usize, 32usize), (33, 17), (256, 96)] {
+            let (_, m) = random_mat(11, din, dout);
+            for b in [1usize, 2, 3, 4, 5, 8] {
+                let (qs, scales) = random_batch(100 + b as u64, b, din);
+                let mut batched = vec![0.0f32; b * dout];
+                gemm_w4a8_raw_into(&qs, &scales, &m, &mut batched);
+                let mut solo = vec![0.0f32; dout];
+                for i in 0..b {
+                    gemv_w4a8_raw_into(&qs[i * din..(i + 1) * din], scales[i], &m, &mut solo);
+                    assert_eq!(
+                        &batched[i * dout..(i + 1) * dout],
+                        &solo[..],
+                        "{din}x{dout} b={b}: lane {i} diverged from its GEMV"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_column_ranges_compose_to_the_full_pass() {
+        // the worker-pool split: disjoint column ranges must tile the
+        // same output the single full-range call produces
+        let (din, dout) = (48usize, 40usize);
+        let (_, m) = random_mat(21, din, dout);
+        let b = 5;
+        let (qs, scales) = random_batch(77, b, din);
+        let mut full = vec![0.0f32; b * dout];
+        gemm_w4a8_raw_into(&qs, &scales, &m, &mut full);
+        let mut tiled = vec![0.0f32; b * dout];
+        for (j0, j1) in [(0usize, 7usize), (7, 13), (13, 40)] {
+            gemm_w4a8_raw_cols_into(&qs, &scales, &m, j0, j1, &mut tiled);
+        }
+        assert_eq!(full, tiled);
+        // an empty range writes nothing
+        gemm_w4a8_raw_cols_into(&qs, &scales, &m, 9, 9, &mut tiled);
+        assert_eq!(full, tiled);
+    }
+
+    #[test]
+    #[should_panic(expected = "column range out of bounds")]
+    fn gemm_rejects_out_of_range_columns() {
+        let (_, m) = random_mat(5, 16, 8);
+        let (qs, scales) = random_batch(5, 2, 16);
+        let mut out = vec![0.0f32; 2 * 8];
+        gemm_w4a8_raw_cols_into(&qs, &scales, &m, 4, 9, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "activation batch dimension mismatch")]
+    fn gemm_rejects_wrong_batch_shape() {
+        let (_, m) = random_mat(5, 16, 8);
+        let (qs, scales) = random_batch(5, 2, 16);
+        let mut out = vec![0.0f32; 3 * 8];
+        // 3 scales over 2 rows of activations
+        let three = [scales[0], scales[1], 1.0];
+        gemm_w4a8_raw_into(&qs, &three, &m, &mut out);
     }
 }

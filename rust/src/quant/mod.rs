@@ -11,6 +11,9 @@ pub mod gemv;
 pub mod int4;
 pub mod int8;
 
-pub use gemv::{gemv_w4a8, gemv_w4a8_into, gemv_w4a8_raw_into, QuantLinear};
+pub use gemv::{
+    gemm_w4a8_raw_cols_into, gemm_w4a8_raw_into, gemv_w4a8, gemv_w4a8_into, gemv_w4a8_raw_into,
+    QuantLinear,
+};
 pub use int4::{pack_int4, quantize_int4, unpack_int4, Int4Matrix};
 pub use int8::{quantize_int8, quantize_int8_into, QuantizedVec};

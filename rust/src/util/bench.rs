@@ -228,8 +228,9 @@ impl GateReport {
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "### Hotpath bench vs committed baseline\n\nGate: any `*{}*` \
-             bench regressing > {:.0}% in median ns/op fails the job.\n\n",
+            "### Hotpath bench vs committed baseline\n\nGate: any bench whose \
+             name contains one of `{}` regressing > {:.0}% in median ns/op \
+             fails the job.\n\n",
             self.gate_substr, self.max_regress_pct
         ));
         if self.baseline_empty() {
@@ -297,19 +298,27 @@ impl GateReport {
 /// Compare two `swiftkv-bench-v1` JSON documents by median ns/op.
 ///
 /// Every current benchmark that also appears in `baseline` becomes a
-/// delta row; rows whose name contains `gate_substr` (the fused-sweep
-/// hot paths) fail the gate when they regress by more than
-/// `max_regress_pct` percent. Current-only benches (new ones) are
-/// reported but never gated; baseline-only benches are reported, and
-/// the **gated** ones among them fail — renaming or deleting a gated
-/// bench must come with a baseline refresh, otherwise a 40% regression
-/// could hide behind a rename.
+/// delta row; rows whose name contains **any** of the comma-separated
+/// substrings in `gate_substr` (default `fused,gemm_w4a8`: the
+/// fused-sweep hot paths plus the batch-amortized GEMM) fail the gate
+/// when they regress by more than `max_regress_pct` percent.
+/// Current-only benches (new ones) are reported but never gated;
+/// baseline-only benches are reported, and the **gated** ones among
+/// them fail — renaming or deleting a gated bench must come with a
+/// baseline refresh, otherwise a 40% regression could hide behind a
+/// rename.
 pub fn compare_bench_json(
     baseline: &Json,
     current: &Json,
     gate_substr: &str,
     max_regress_pct: f64,
 ) -> Result<GateReport, String> {
+    let is_gated = |name: &str| {
+        gate_substr
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .any(|s| name.contains(s))
+    };
     let entries = |doc: &Json, which: &str| -> Result<Vec<(String, f64)>, String> {
         let arr = doc
             .get("benchmarks")
@@ -348,7 +357,7 @@ pub fn compare_bench_json(
         match base.get(&name) {
             Some(&base_ns) => {
                 let delta_pct = (cur_ns / base_ns - 1.0) * 100.0;
-                let gated = name.contains(gate_substr);
+                let gated = is_gated(&name);
                 if gated && delta_pct > max_regress_pct {
                     report.failures.push(name.clone());
                 }
@@ -365,7 +374,7 @@ pub fn compare_bench_json(
     }
     for name in base.keys() {
         if !seen.contains(name) {
-            if name.contains(gate_substr) {
+            if is_gated(name) {
                 report.failures.push(format!("{name} (missing from current run)"));
             }
             report.missing.push(name.clone());
@@ -526,6 +535,38 @@ mod tests {
         assert_eq!(r.unmatched, vec!["hot/mha_fused 8h renamed".to_string()]);
         let md = r.to_markdown();
         assert!(md.contains("missing from the current run"), "{md}");
+    }
+
+    #[test]
+    fn gate_matches_any_comma_separated_substring() {
+        // the regression set is a union: fused sweeps AND the batched
+        // GEMM entries are gated; everything else is only reported
+        let base = gate_doc(&[
+            ("hot/mha_fused 8h", 1000.0),
+            ("hot/gemm_w4a8 512x512 batch=4", 800.0),
+            ("hot/gemv_w4a8 512x512 lanes=4", 900.0),
+        ]);
+        let cur = gate_doc(&[
+            ("hot/mha_fused 8h", 1000.0),
+            ("hot/gemm_w4a8 512x512 batch=4", 1200.0), // +50% → gated FAIL
+            ("hot/gemv_w4a8 512x512 lanes=4", 2000.0), // ungated, reported only
+        ]);
+        let r = compare_bench_json(&base, &cur, "fused,gemm_w4a8", 15.0).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.failures, vec!["hot/gemm_w4a8 512x512 batch=4".to_string()]);
+        let gated: Vec<bool> = r.rows.iter().map(|row| row.gated).collect();
+        // rows are in current-document order
+        assert_eq!(gated, vec![true, true, false]);
+        // a vanished gated GEMM bench fails too
+        let r = compare_bench_json(
+            &base,
+            &gate_doc(&[("hot/mha_fused 8h", 1000.0)]),
+            "fused,gemm_w4a8",
+            15.0,
+        )
+        .unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("gemm_w4a8"));
     }
 
     #[test]

@@ -11,8 +11,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
 use swiftkv::kernels::{BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
-use swiftkv::model::{NumericsMode, TinyModel};
-use swiftkv::quant::{Int4Matrix, QuantLinear};
+use swiftkv::model::{BatchLane, NumericsMode, TinyModel};
+use swiftkv::quant::{gemm_w4a8_raw_into, quantize_int8_into, Int4Matrix, QuantLinear};
 use swiftkv::util::Rng;
 
 struct CountingAlloc;
@@ -149,6 +149,23 @@ fn fused_decode_hot_path_is_allocation_free() {
     });
     assert_eq!(gemv_allocs, 0, "forward_into allocated");
 
+    // --- GEMM level: one shared weight pass over 4 activation rows -----
+    {
+        let b = 4usize;
+        let mut qrows = vec![0i8; b * 64];
+        let mut scales = vec![0.0f32; b];
+        for i in 0..b {
+            let xr = rng.uniform_vec(64, 1.0);
+            scales[i] = quantize_int8_into(&xr, &mut qrows[i * 64..(i + 1) * 64]);
+        }
+        let mut bout = vec![0.0f32; b * 96];
+        gemm_w4a8_raw_into(&qrows, &scales, &lin.weight, &mut bout);
+        let gemm_allocs = min_allocs(5, || {
+            gemm_w4a8_raw_into(&qrows, &scales, &lin.weight, &mut bout);
+        });
+        assert_eq!(gemm_allocs, 0, "batched GEMM allocated");
+    }
+
     // --- model level: a steady-state decode step, both numerics modes,
     // MHA and grouped-query (8q/2kv-style group of 2 on the tiny shape) --
     let tm = TinyModel::synthetic(3, 64, 32, 4, 4, 2, 64, 48);
@@ -229,5 +246,58 @@ fn fused_decode_hot_path_is_allocation_free() {
             crossing_allocs, 0,
             "decode step allocated while crossing KV block boundaries"
         );
+    }
+
+    // --- model level, batched decode: 3 lanes sharing one weight pass
+    // per projection (decode_steps_into). After the batch scratch is
+    // grown once, steady-state batched steps must be allocation-free in
+    // both numerics modes (pool=None keeps the audit on this thread) ----
+    for (label, m) in [("mha", &tm), ("gqa", &tg)] {
+        let mut batch = m.new_batch_scratch();
+        let mut states = [m.new_state(), m.new_state(), m.new_state()];
+        let mut logits = vec![0.0f32; 3 * m.vocab];
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let mut t = 0u32;
+            let step = |states: &mut [swiftkv::model::DecodeState; 3],
+                            logits: &mut [f32],
+                            batch: &mut swiftkv::kernels::BatchScratch,
+                            t: &mut u32| {
+                let v = m.vocab as u32;
+                let [s0, s1, s2] = states;
+                let (l0, rest) = logits.split_at_mut(m.vocab);
+                let (l1, l2) = rest.split_at_mut(m.vocab);
+                let mut lanes = [
+                    BatchLane {
+                        state: s0,
+                        token: *t % v,
+                        logits: l0,
+                    },
+                    BatchLane {
+                        state: s1,
+                        token: (*t + 1) % v,
+                        logits: l1,
+                    },
+                    BatchLane {
+                        state: s2,
+                        token: (*t + 2) % v,
+                        logits: l2,
+                    },
+                ];
+                m.decode_steps_into(&mut lanes, mode, batch, None);
+                *t += 3;
+            };
+            // warm up: grows the batch scratch once and primes the
+            // runtime; leaves headroom inside the 48-token context
+            for _ in 0..4 {
+                step(&mut states, &mut logits[..], &mut batch, &mut t);
+            }
+            let batched_allocs = min_allocs(5, || {
+                step(&mut states, &mut logits[..], &mut batch, &mut t);
+            });
+            assert_eq!(
+                batched_allocs, 0,
+                "steady-state {label} batched decode step allocated in {mode:?}"
+            );
+        }
     }
 }

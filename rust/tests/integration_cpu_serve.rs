@@ -1,7 +1,9 @@
 //! Integration: the CPU serving loop end-to-end over the synthetic tiny
-//! model — continuous batching, `std::thread::scope` lane parallelism,
-//! lane recycling, and correctness of batched generation against solo
-//! generation. Runs on the default feature set (no PJRT, no artifacts).
+//! model — continuous batching, the operator-level batched decode step
+//! (one shared weight pass per batch step) over the persistent worker
+//! pool, lane recycling, and correctness of batched generation against
+//! solo generation. Runs on the default feature set (no PJRT, no
+//! artifacts).
 
 use swiftkv::coordinator::{CpuServeOptions, CpuServer};
 use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
@@ -437,6 +439,116 @@ fn chunked_prefill_takes_fewer_iterations() {
     assert_eq!(per_token.sessions[0].first_token_at, Some(15));
     assert_eq!(chunked.sessions[0].first_token_at, Some(1));
     assert_eq!(whole.sessions[0].first_token_at, Some(0));
+}
+
+#[test]
+fn decode_heavy_run_pays_one_weight_pass_per_step() {
+    // 4 lanes × 1-token prompts: every iteration is a pure decode batch
+    // of width 4, so the whole run must stream the weights exactly once
+    // per iteration — the point of operator-level batching (B lanes
+    // report 1 weight pass, not B)
+    let tm = model();
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![(i as u32 * 9 + 1) % tm.vocab as u32],
+            gen_len: 6,
+            arrival_ms: 0,
+        })
+        .collect();
+    let report = CpuServer::new(&tm, opts(4, NumericsMode::DesktopF32)).serve(reqs);
+    let m = &report.metrics;
+    assert_eq!(
+        m.weight_passes, m.iterations,
+        "a decode-only run must pay exactly one weight pass per iteration"
+    );
+    assert!(
+        (m.weight_passes_per_step - 1.0).abs() < 1e-9,
+        "weight_passes_per_step = {}",
+        m.weight_passes_per_step
+    );
+    // all 4 lanes decode together until the first retirements
+    assert_eq!(m.batch_width.max, 4.0);
+    assert!(m.batch_width.p50 >= 1.0);
+    // and the counters land in the human-readable table
+    let table = m.format_table();
+    assert!(table.contains("weight passes / step"), "{table}");
+    assert!(table.contains("decode batch width p50"), "{table}");
+}
+
+#[test]
+fn prefill_lanes_pay_their_own_weight_passes() {
+    // 2 lanes × 16-token prompts, chunk 8: prefill iterations run per
+    // lane and stream the layer weights once per chunk *token* (the
+    // per-token GEMVs of prefill_into), decode iterations batch into
+    // one shared pass each
+    let tm = model();
+    let reqs: Vec<Request> = (0..2)
+        .map(|i| Request {
+            id: i,
+            prompt: (0..16).map(|t| (t * 3 + i as u32) % tm.vocab as u32).collect(),
+            gen_len: 4,
+            arrival_ms: 0,
+        })
+        .collect();
+    let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
+    let m = &report.metrics;
+    // chunked prefill: iteration 0 feeds prompt[0..8), iteration 1
+    // feeds prompt[8..16) and samples token 1, iterations 2–4 decode
+    // tokens 2–4 as width-2 batches
+    assert_eq!(m.iterations, 5);
+    // 2 prefill iterations at 2 lanes × 8 chunk tokens + 3 batched
+    // decode iterations at 1 shared pass
+    assert_eq!(m.weight_passes, 2 * (2 * 8) + 3);
+    assert_eq!(m.batch_width.max, 2.0);
+}
+
+#[test]
+fn explicit_worker_counts_do_not_change_outputs() {
+    // the worker pool is a scheduling choice, never a numerics one:
+    // inline (1), tiny pool (2), and oversubscribed (6) runs must all
+    // reproduce solo generation exactly
+    let tm = gqa_model();
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![1, 2, 3, 4, 5, 6, 7], vec![50, 7], vec![9; 12], vec![33]];
+    let gen_len = 5;
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        for workers in [1usize, 2, 6] {
+            let reqs: Vec<Request> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Request {
+                    id: i as u64,
+                    prompt: p.clone(),
+                    gen_len,
+                    arrival_ms: 0,
+                })
+                .collect();
+            let opts = CpuServeOptions {
+                lanes: 3,
+                mode,
+                max_iterations: 10_000,
+                sim_model: LlmConfig::llama2_7b(),
+                workers,
+                ..CpuServeOptions::default()
+            };
+            let report = CpuServer::new(&tm, opts).serve(reqs);
+            for (i, p) in prompts.iter().enumerate() {
+                let want = tm.generate(p, gen_len, mode);
+                let got = &report
+                    .sessions
+                    .iter()
+                    .find(|s| s.request.id == i as u64)
+                    .unwrap()
+                    .generated;
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "{mode:?} workers={workers} request {i}: worker count changed the output"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,232 @@
+//! Property tests: the batched decode step
+//! (`TinyModel::decode_steps_into` — gather activations → one shared
+//! W4A8 weight pass per projection → per-lane fused attention) versus
+//! the solo `decode_step_into`, swept over batch widths {1, 2, 3, 8},
+//! GQA/MQA/MHA shapes, paged KV block lengths {1, 3, 16}, staggered
+//! lane positions, and both numerics modes. Only the weight-streaming
+//! schedule changed, so the bar is strict: every lane's logits must be
+//! **bit-identical** to its solo twin, in `DesktopF32` *and*
+//! `Accelerator` numerics, with and without the worker pool.
+
+use swiftkv::kernels::WorkerPool;
+use swiftkv::model::{BatchLane, DecodeState, NumericsMode, TinyModel};
+use swiftkv::util::{prop, Rng};
+
+/// Batch widths under test: solo, the 4-lane GEMM block edge on both
+/// sides, and two full blocks.
+const WIDTHS: [usize; 4] = [1, 2, 3, 8];
+/// (n_heads, n_kv_heads): MHA, group-2 GQA, MQA.
+const GROUPS: [(usize, usize); 3] = [(4, 4), (4, 2), (4, 1)];
+/// KV block lengths: degenerate, odd, default-ish.
+const BLOCK_LENS: [usize; 3] = [1, 3, 16];
+
+const VOCAB: usize = 48;
+const D_MODEL: usize = 32;
+const N_LAYERS: usize = 2;
+const D_FFN: usize = 48;
+const N_CTX: usize = 24;
+
+struct Case {
+    model: TinyModel,
+    width: usize,
+    block_len: usize,
+    /// Solo steps lane `i` takes before the batched phase (staggered
+    /// positions: the batch must handle lanes at different depths).
+    warmup: Vec<usize>,
+    /// Batched steps to run after the warmup.
+    steps: usize,
+    /// Token fed to lane `i` at batched step `s`: `tokens[s][i]`.
+    tokens: Vec<Vec<u32>>,
+}
+
+impl Case {
+    fn random(rng: &mut Rng, case: u64) -> Case {
+        let (h, hkv) = GROUPS[rng.gen_range(0, GROUPS.len())];
+        let width = WIDTHS[rng.gen_range(0, WIDTHS.len())];
+        let block_len = BLOCK_LENS[rng.gen_range(0, BLOCK_LENS.len())];
+        let model = TinyModel::synthetic(
+            0xBA7C4 + case,
+            VOCAB,
+            D_MODEL,
+            h,
+            hkv,
+            N_LAYERS,
+            D_FFN,
+            N_CTX,
+        );
+        let warmup: Vec<usize> = (0..width).map(|_| rng.gen_range(0, 4)).collect();
+        let steps = 1 + rng.gen_range(0, 5);
+        let tokens = (0..steps)
+            .map(|_| (0..width).map(|_| rng.gen_range(0, VOCAB) as u32).collect())
+            .collect();
+        Case {
+            model,
+            width,
+            block_len,
+            warmup,
+            steps,
+            tokens,
+        }
+    }
+
+    /// A lane state over its own pool at this case's block length.
+    fn new_state(&self) -> DecodeState {
+        let pool = self
+            .model
+            .new_pool(self.model.blocks_per_seq(self.block_len), self.block_len);
+        self.model.new_state_in(pool)
+    }
+}
+
+/// Run the case: warm each lane up with solo steps on both state sets,
+/// then `steps` batched steps against per-lane solo references.
+fn check_case(case: &Case, mode: NumericsMode, pool: Option<&WorkerPool>) {
+    let m = &case.model;
+    let mut solo: Vec<DecodeState> = (0..case.width).map(|_| case.new_state()).collect();
+    let mut batched: Vec<DecodeState> = (0..case.width).map(|_| case.new_state()).collect();
+    let mut batch = m.new_batch_scratch();
+    let mut want = vec![0.0f32; m.vocab];
+    let mut got = vec![0.0f32; case.width * m.vocab];
+
+    // stagger: lane i starts the batched phase at position warmup[i]
+    for (i, &n) in case.warmup.iter().enumerate() {
+        for s in 0..n {
+            let t = ((i * 11 + s * 5) % VOCAB) as u32;
+            m.decode_step_into(&mut solo[i], t, mode, &mut want);
+            m.decode_step_into(&mut batched[i], t, mode, &mut want);
+        }
+    }
+
+    for (s, step_tokens) in case.tokens.iter().enumerate() {
+        let mut lanes: Vec<BatchLane> = batched
+            .iter_mut()
+            .zip(got.chunks_mut(m.vocab))
+            .zip(step_tokens)
+            .map(|((state, logits), &token)| BatchLane {
+                state,
+                token,
+                logits,
+            })
+            .collect();
+        m.decode_steps_into(&mut lanes, mode, &mut batch, pool);
+        for (i, st) in solo.iter_mut().enumerate() {
+            m.decode_step_into(st, step_tokens[i], mode, &mut want);
+            assert_eq!(
+                &got[i * m.vocab..(i + 1) * m.vocab],
+                &want[..],
+                "width {} bl {} {mode:?} step {s} lane {i}: batched decode diverged",
+                case.width,
+                case.block_len
+            );
+            assert_eq!(st.pos, batched[i].pos, "lane {i} position drifted");
+        }
+    }
+    assert_eq!(batch.batch_capacity(), case.width);
+}
+
+#[test]
+fn batched_decode_bit_identical_to_solo_desktop() {
+    prop::check("batched decode == solo (f32)", 24, |rng, case| {
+        let c = Case::random(rng, case);
+        check_case(&c, NumericsMode::DesktopF32, None);
+    });
+}
+
+#[test]
+fn batched_decode_bit_identical_to_solo_accelerator() {
+    prop::check("batched decode == solo (fxp)", 24, |rng, case| {
+        let c = Case::random(rng, case);
+        check_case(&c, NumericsMode::Accelerator, None);
+    });
+}
+
+#[test]
+fn pooled_batched_decode_matches_serial() {
+    // operator splitting across the worker pool must not change a bit:
+    // same sweep, now with GEMM columns and attention lanes distributed
+    // over 3 workers (dynamic schedule — determinism comes from tasks
+    // writing disjoint data, which this asserts end-to-end)
+    let pool = WorkerPool::new(3);
+    prop::check("pooled batched decode == solo", 10, |rng, case| {
+        let c = Case::random(rng, case);
+        check_case(&c, NumericsMode::DesktopF32, Some(&pool));
+        check_case(&c, NumericsMode::Accelerator, Some(&pool));
+    });
+}
+
+#[test]
+fn batched_decode_across_block_boundaries() {
+    // pin the shape: 2-token blocks force a block checkout every other
+    // step; 8 lanes × 10 steps crosses boundaries in every lane
+    let m = TinyModel::synthetic(77, VOCAB, D_MODEL, 4, 2, N_LAYERS, D_FFN, N_CTX);
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        let width = 8;
+        let mk = |m: &TinyModel| {
+            let pool = m.new_pool(m.blocks_per_seq(2), 2);
+            m.new_state_in(pool)
+        };
+        let mut solo: Vec<DecodeState> = (0..width).map(|_| mk(&m)).collect();
+        let mut batched: Vec<DecodeState> = (0..width).map(|_| mk(&m)).collect();
+        let mut batch = m.new_batch_scratch();
+        let mut want = vec![0.0f32; m.vocab];
+        let mut got = vec![0.0f32; width * m.vocab];
+        for s in 0..10u32 {
+            let tokens: Vec<u32> = (0..width as u32)
+                .map(|i| (s * 13 + i * 7 + 2) % VOCAB as u32)
+                .collect();
+            let mut lanes: Vec<BatchLane> = batched
+                .iter_mut()
+                .zip(got.chunks_mut(m.vocab))
+                .zip(&tokens)
+                .map(|((state, logits), &token)| BatchLane {
+                    state,
+                    token,
+                    logits,
+                })
+                .collect();
+            m.decode_steps_into(&mut lanes, mode, &mut batch, None);
+            for (i, st) in solo.iter_mut().enumerate() {
+                m.decode_step_into(st, tokens[i], mode, &mut want);
+                assert_eq!(
+                    &got[i * m.vocab..(i + 1) * m.vocab],
+                    &want[..],
+                    "{mode:?} step {s} lane {i}: diverged across block boundary"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_after_reset_matches_fresh() {
+    // lane recycling under batching: a reset state batched with fresh
+    // ones must decode like a fresh solo state
+    let m = TinyModel::synthetic(5, VOCAB, D_MODEL, 4, 4, N_LAYERS, D_FFN, N_CTX);
+    let mut batch = m.new_batch_scratch();
+    let mut recycled = m.new_state();
+    let mut want = vec![0.0f32; m.vocab];
+    for &t in &[3u32, 9, 27] {
+        m.decode_step_into(&mut recycled, t, NumericsMode::Accelerator, &mut want);
+    }
+    recycled.reset_for_reuse();
+    let mut fresh_ref = m.new_state();
+    m.decode_step_into(&mut fresh_ref, 11, NumericsMode::Accelerator, &mut want);
+
+    let mut other = m.new_state();
+    let mut got = vec![0.0f32; 2 * m.vocab];
+    let (g0, g1) = got.split_at_mut(m.vocab);
+    let mut lanes = [
+        BatchLane {
+            state: &mut recycled,
+            token: 11,
+            logits: g0,
+        },
+        BatchLane {
+            state: &mut other,
+            token: 30,
+            logits: g1,
+        },
+    ];
+    m.decode_steps_into(&mut lanes, NumericsMode::Accelerator, &mut batch, None);
+    assert_eq!(&got[..m.vocab], &want[..], "recycled batched lane diverged");
+}
