@@ -450,6 +450,7 @@ fn main() {
                 prompt: (0..24).map(|t| (t * 5 + i as u32 + 1) % sm.vocab as u32).collect(),
                 gen_len: 2,
                 arrival_ms: 0,
+                deadline_ms: 0,
             })
             .collect();
         for prefill_chunk in [1usize, 8, 0] {
@@ -495,6 +496,7 @@ fn main() {
                 prompt: vec![(i as u32 * 13 + 1) % tm.vocab as u32],
                 gen_len: 8,
                 arrival_ms: 0,
+                deadline_ms: 0,
             })
             .collect();
         let step_bytes = tm.weight_stream_bytes() as f64;

@@ -26,14 +26,27 @@ use swiftkv::util::cli::Args;
 use swiftkv::util::Json;
 
 fn main() {
-    match run() {
-        Ok(passed) => {
+    // Last-resort net: a malformed input that slips past the explicit
+    // validation must still fail the job with a one-line diagnostic and
+    // a nonzero exit, never a raw backtrace.
+    let outcome = std::panic::catch_unwind(run);
+    match outcome {
+        Ok(Ok(passed)) => {
             if !passed {
                 std::process::exit(1);
             }
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             eprintln!("bench_gate: {e}");
+            std::process::exit(2);
+        }
+        Err(cause) => {
+            let msg = cause
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| cause.downcast_ref::<&str>().copied())
+                .unwrap_or("unknown panic");
+            eprintln!("bench_gate: internal error while comparing benchmarks: {msg}");
             std::process::exit(2);
         }
     }
@@ -54,7 +67,13 @@ fn run() -> Result<bool, String> {
     let load = |path: &str| -> Result<Json, String> {
         let text =
             std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
-        Json::parse(&text).map_err(|e| format!("{path}: {e:?}"))
+        Json::parse(&text).map_err(|e| {
+            format!(
+                "{path}: not valid swiftkv-bench-v1 JSON ({e}); \
+                 the file may be truncated or hand-edited — refresh it \
+                 from a trusted bench run"
+            )
+        })
     };
     let baseline = load(&args.positional()[0])?;
     let current = load(&args.positional()[1])?;

@@ -8,9 +8,9 @@
 //! the lane's RoPE state on `pos == 0`, and attention masks by length, so
 //! stale cache rows are never read).
 
-use super::session::Session;
+use super::session::{Session, SessionOutcome};
 use crate::model::Request;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// What occupies a lane.
 #[derive(Debug, Clone)]
@@ -41,6 +41,36 @@ pub struct LaneChunk<'a> {
     /// Whether this chunk ends on a sampling position — when `false`
     /// the engine skips the logits projection and the sampler.
     pub samples: bool,
+    /// Id of the request the lane serves (0 when idle — check `active`).
+    pub request_id: u64,
+    /// Tokens the lane's session has generated so far (fault-plan
+    /// trigger coordinate: `s<STEP>` fires when `generated == STEP` on a
+    /// sampling chunk).
+    pub generated: usize,
+}
+
+/// Outcome of [`Batcher::preempt_lane`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptOutcome {
+    /// The request went back to the front of the queue for re-prefill.
+    Requeued,
+    /// The request had already been requeued `max_requeues` times and
+    /// was retired as failed instead.
+    FailedRetryBudget,
+}
+
+/// Fault-tolerance counters the batcher accumulates over a run
+/// (surfaced through [`super::metrics::ServeMetrics`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Requests retired with [`SessionOutcome::Failed`].
+    pub failed: u64,
+    /// Lanes preempted mid-flight to free KV blocks.
+    pub preemptions: u64,
+    /// Preempted requests returned to the queue for re-prefill.
+    pub requeues: u64,
+    /// Requests cancelled past their wall-clock deadline.
+    pub deadline_expired: u64,
 }
 
 /// The dynamic batcher.
@@ -53,6 +83,10 @@ pub struct Batcher {
     pub finished: Vec<Session>,
     admitted: u64,
     rejected: u64,
+    faults: FaultCounters,
+    /// Times each request id has been preempted-and-requeued (bounded
+    /// retry accounting for [`Batcher::preempt_lane`]).
+    requeue_counts: BTreeMap<u64, u32>,
 }
 
 impl Batcher {
@@ -65,6 +99,8 @@ impl Batcher {
             finished: Vec::new(),
             admitted: 0,
             rejected: 0,
+            faults: FaultCounters::default(),
+            requeue_counts: BTreeMap::new(),
         }
     }
 
@@ -128,6 +164,8 @@ impl Batcher {
                     pos: 0,
                     tokens: &[],
                     samples: false,
+                    request_id: 0,
+                    generated: 0,
                 },
                 LaneState::Busy(s) => {
                     let tokens = s.next_chunk(max_prefill);
@@ -136,6 +174,8 @@ impl Batcher {
                         pos: s.pos,
                         tokens,
                         samples: s.samples_after(tokens.len()),
+                        request_id: s.request.id,
+                        generated: s.generated.len(),
                     }
                 }
             })
@@ -175,9 +215,11 @@ impl Batcher {
 
     /// Apply one chunked step's outcome: lane `i` consumed `fed[i]`
     /// tokens (its [`LaneChunk`]'s length) and — when the chunk reached
-    /// a sampling position — produced `samples[i]`. Finished sessions
-    /// are retired and their lanes freed. Returns the ids of requests
-    /// that finished this step.
+    /// a sampling position — produced `samples[i]`. A lane with
+    /// `fed[i] == 0` made no progress this iteration (stalled on KV
+    /// capacity, or retired early by the fault path) and is left
+    /// untouched. Finished sessions are retired and their lanes freed.
+    /// Returns the ids of requests that finished this step.
     pub fn scatter_chunk_outputs(
         &mut self,
         fed: &[usize],
@@ -188,6 +230,9 @@ impl Batcher {
         assert_eq!(samples.len(), self.lanes.len());
         let mut done = Vec::new();
         for ((lane, &n), &tok) in self.lanes.iter_mut().zip(fed).zip(samples) {
+            if n == 0 {
+                continue;
+            }
             if let LaneState::Busy(s) = lane {
                 if s.advance_chunk(n, tok, iteration) {
                     done.push(s.request.id);
@@ -199,6 +244,113 @@ impl Batcher {
             }
         }
         done
+    }
+
+    /// The session occupying lane `i`, if any.
+    pub fn lane_session(&self, lane: usize) -> Option<&Session> {
+        match &self.lanes[lane] {
+            LaneState::Busy(s) => Some(s),
+            LaneState::Idle => None,
+        }
+    }
+
+    /// Retire lane `i`'s session as failed (contained lane panic,
+    /// non-finite logits, …). The lane is freed for the next admission;
+    /// the session lands in [`Batcher::finished`] with
+    /// [`SessionOutcome::Failed`]. Returns the failed request's id.
+    pub fn fail_lane(&mut self, lane: usize, iteration: u64, reason: &str) -> Option<u64> {
+        match std::mem::replace(&mut self.lanes[lane], LaneState::Idle) {
+            LaneState::Idle => None,
+            LaneState::Busy(mut s) => {
+                let id = s.request.id;
+                s.finished_at = Some(iteration);
+                s.outcome = SessionOutcome::Failed(reason.to_string());
+                self.faults.failed += 1;
+                self.finished.push(s);
+                Some(id)
+            }
+        }
+    }
+
+    /// Preempt lane `i` to free its KV blocks: the session's progress is
+    /// discarded and its request goes back to the **front** of the queue
+    /// for re-prefill once capacity frees — unless the request has
+    /// already been requeued `max_requeues` times, in which case it is
+    /// retired as failed (bounded retry, no preemption livelock).
+    pub fn preempt_lane(
+        &mut self,
+        lane: usize,
+        iteration: u64,
+        max_requeues: u32,
+    ) -> Option<PreemptOutcome> {
+        match std::mem::replace(&mut self.lanes[lane], LaneState::Idle) {
+            LaneState::Idle => None,
+            LaneState::Busy(mut s) => {
+                self.faults.preemptions += 1;
+                let count = self.requeue_counts.entry(s.request.id).or_insert(0);
+                if *count >= max_requeues {
+                    s.finished_at = Some(iteration);
+                    s.outcome = SessionOutcome::Failed(format!(
+                        "preempted with requeue budget exhausted ({max_requeues} requeues)"
+                    ));
+                    self.faults.failed += 1;
+                    self.finished.push(s);
+                    Some(PreemptOutcome::FailedRetryBudget)
+                } else {
+                    *count += 1;
+                    self.faults.requeues += 1;
+                    self.queue.push_front(s.request);
+                    Some(PreemptOutcome::Requeued)
+                }
+            }
+        }
+    }
+
+    /// Cancel every session (running or queued) whose wall-clock
+    /// deadline has passed (`now_ms` is stream-relative, the clock
+    /// arrivals are measured on). Expired lanes are freed; expired
+    /// queued requests retire without ever running. Returns the indices
+    /// of lanes that were cancelled, so the server can reclaim their KV
+    /// blocks.
+    pub fn expire_deadlines(&mut self, now_ms: f64, iteration: u64) -> Vec<usize> {
+        let mut expired_lanes = Vec::new();
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let expired = matches!(
+                lane,
+                LaneState::Busy(s) if s.deadline_at_ms().is_some_and(|d| (d as f64) <= now_ms)
+            );
+            if expired {
+                if let LaneState::Busy(mut s) = std::mem::replace(lane, LaneState::Idle) {
+                    s.finished_at = Some(iteration);
+                    s.outcome = SessionOutcome::DeadlineExpired;
+                    self.faults.deadline_expired += 1;
+                    self.finished.push(s);
+                }
+                expired_lanes.push(i);
+            }
+        }
+        // queued requests can expire without ever reaching a lane (e.g.
+        // a preempted request waiting out its requeue)
+        let mut still_queued = VecDeque::with_capacity(self.queue.len());
+        for req in self.queue.drain(..) {
+            let deadline = (req.deadline_ms > 0).then(|| req.arrival_ms + req.deadline_ms);
+            if deadline.is_some_and(|d| (d as f64) <= now_ms) {
+                let mut s = Session::new(req, iteration);
+                s.finished_at = Some(iteration);
+                s.outcome = SessionOutcome::DeadlineExpired;
+                self.faults.deadline_expired += 1;
+                self.finished.push(s);
+            } else {
+                still_queued.push_back(req);
+            }
+        }
+        self.queue = still_queued;
+        expired_lanes
+    }
+
+    /// Fault-tolerance counters accumulated so far.
+    pub fn fault_counters(&self) -> FaultCounters {
+        self.faults
     }
 
     /// (admitted, rejected) counters.
@@ -222,6 +374,7 @@ mod tests {
             prompt: (0..prompt_len as u32).collect(),
             gen_len,
             arrival_ms: 0,
+            deadline_ms: 0,
         }
     }
 

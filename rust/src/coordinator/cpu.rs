@@ -41,14 +41,16 @@
 //! [`DecodeState::reset_for_reuse`], which returns their blocks to the
 //! pool for other lanes — reclamation, not re-allocation.
 
-use super::batcher::{Batcher, LaneChunk};
+use super::batcher::Batcher;
+use super::faults::{FaultKind, FaultPlan};
 use super::metrics::{Percentiles, ServeMetrics};
 use super::session::Session;
 use crate::kernels::{BlockPool, SharedMut, WorkerPool};
-use crate::model::tiny::{argmax, BatchLane, DecodeState};
+use crate::model::tiny::{argmax, panic_message, BatchLane, DecodeState};
 use crate::model::{LlmConfig, NumericsMode, Request, TinyModel, DEFAULT_KV_BLOCK_LEN};
 use crate::sim::{layer_sched, ArchConfig};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -84,6 +86,14 @@ pub struct CpuServeOptions {
     /// `workers - 1` persistent pool workers); `0` = one per available
     /// CPU, `1` = fully inline (no pool).
     pub workers: usize,
+    /// Deterministic fault plan injected into the run (`swiftkv serve
+    /// --faults`, `SWIFTKV_FAULTS`, `SWIFTKV_FAULT_SEED`); `None` (the
+    /// default) serves faithfully.
+    pub faults: Option<FaultPlan>,
+    /// Times one request may be preempted-and-requeued before it is
+    /// retired as failed (bounded retry — no preemption livelock when
+    /// the pool cannot ever fit the request).
+    pub max_requeues: u32,
 }
 
 impl Default for CpuServeOptions {
@@ -97,6 +107,8 @@ impl Default for CpuServeOptions {
             kv_pool_blocks: 0,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             workers: 0,
+            faults: None,
+            max_requeues: 3,
         }
     }
 }
@@ -105,10 +117,17 @@ impl Default for CpuServeOptions {
 /// through the fused causal sweep (`samples` = the chunk ends on the
 /// last prompt token, so its logits are wanted).
 struct PrefillTask<'a> {
+    /// Global lane index (maps a contained fault back to its lane).
+    lane: usize,
     st: &'a mut DecodeState,
     tokens: &'a [u32],
     samples: bool,
     out: &'a mut [f32],
+    /// Fault injection: panic inside this task (contained by the
+    /// runner, like any organic panic would be).
+    inject_panic: bool,
+    /// A contained panic's message, when the task faulted.
+    fault: Option<String>,
 }
 
 /// Result of a CPU serving run.
@@ -196,12 +215,15 @@ impl<'m> CpuServer<'m> {
             self.opts.prefill_chunk
         };
 
+        let faults = self.opts.faults.as_ref().filter(|p| !p.is_empty());
         loop {
             // admit every request whose arrival time has passed
             let now_ms = t0.elapsed().as_secs_f64() * 1e3;
-            while let Some(r) = pending.front() {
-                if r.arrival_ms as f64 <= now_ms {
-                    let r = pending.pop_front().unwrap();
+            while pending
+                .front()
+                .is_some_and(|r| r.arrival_ms as f64 <= now_ms)
+            {
+                if let Some(r) = pending.pop_front() {
                     if let Err(rejected) = batcher.submit(r) {
                         // oversized for the context window: dropped by
                         // design, but never silently — the batcher
@@ -209,8 +231,15 @@ impl<'m> CpuServer<'m> {
                         // surfaces it at the end of the run
                         drop(rejected);
                     }
-                } else {
-                    break;
+                }
+            }
+            // deadline pass before admission: an expired queued request
+            // must not take a lane, and an expired running lane's KV
+            // blocks are reclaimed in time for this same iteration's
+            // admissions
+            for i in batcher.expire_deadlines(now_ms, iteration) {
+                if states[i].pos != 0 || states[i].kv_blocks_in_use() > 0 {
+                    states[i].reset_for_reuse();
                 }
             }
             batcher.admit(iteration);
@@ -224,28 +253,94 @@ impl<'m> CpuServer<'m> {
             }
 
             let chunks = batcher.gather_chunks(max_prefill);
-            let fed: Vec<usize> = chunks.iter().map(|c| c.tokens.len()).collect();
-            let sampling: Vec<bool> = chunks.iter().map(|c| c.active && c.samples).collect();
+            let mut fed: Vec<usize> = chunks.iter().map(|c| c.tokens.len()).collect();
             let was_active: Vec<bool> = chunks.iter().map(|c| c.active).collect();
+            let pos_v: Vec<usize> = chunks.iter().map(|c| c.pos).collect();
             occupancy_acc += batcher.occupancy();
 
             // lanes starting a fresh session restart their decode state
-            // (their retired predecessor's blocks were already reclaimed
-            // at retirement below; this also covers any future path that
-            // hands a lane a new session without an idle iteration)
+            // BEFORE the capacity precheck, so a recycled lane's old
+            // blocks are back on the free list when grants are computed
             for (i, st) in states.iter_mut().enumerate() {
-                if chunks[i].active && chunks[i].pos == 0 && st.pos != 0 {
+                if was_active[i] && pos_v[i] == 0 && st.pos != 0 {
                     st.reset_for_reuse();
                 }
             }
 
-            // partition the active lanes: single-token sampling chunks
-            // are decode-phase and batch into ONE shared-weight step;
-            // multi-token or non-sampling chunks (prefill) run per lane.
-            // B batched lanes stream the weight set once, not B times.
-            let is_batched = |c: &LaneChunk<'_>| c.active && c.tokens.len() == 1 && c.samples;
-            let n_batched = chunks.iter().filter(|c| is_batched(c)).count();
-            let n_prefill = chunks.iter().filter(|c| c.active).count() - n_batched;
+            // KV-capacity precheck: grant block growth oldest-lane-first
+            // from the pool's free list. A lane whose growth cannot be
+            // granted stalls (`fed = 0`, no progress this iteration)
+            // instead of panicking the pool mid-step; it retries every
+            // iteration as retirements return blocks. An armed `oom@`
+            // fault makes the free list look empty, forcing this path
+            // deterministically.
+            let oom_armed = faults.is_some_and(|p| p.oom_armed(iteration));
+            let mut free = if oom_armed { 0 } else { kv_pool.free_blocks() };
+            let mut order: Vec<usize> = (0..lanes).filter(|&i| was_active[i]).collect();
+            order.sort_by_key(|&i| {
+                (batcher.lane_session(i).map_or(u64::MAX, |s| s.admitted_at), i)
+            });
+            for &i in &order {
+                let need = states[i].kv_blocks_needed(pos_v[i] + fed[i]);
+                if need <= free {
+                    free -= need;
+                } else {
+                    fed[i] = 0;
+                }
+            }
+            if !order.is_empty() && order.iter().all(|&i| fed[i] == 0) {
+                // no lane can take a step: preempt the youngest-admitted
+                // lane — discard its progress, return its KV blocks,
+                // requeue its request (bounded retries) — and rerun the
+                // scheduler with the freed capacity
+                if let Some(&victim) = order.last() {
+                    drop(chunks);
+                    states[victim].reset_for_reuse();
+                    batcher.preempt_lane(victim, iteration, self.opts.max_requeues);
+                    if oom_armed {
+                        if let Some(p) = faults {
+                            p.oom_fired(iteration);
+                        }
+                    }
+                    iteration += 1;
+                    if self.opts.max_iterations > 0 && iteration >= self.opts.max_iterations {
+                        break;
+                    }
+                    continue;
+                }
+            }
+            let sampling: Vec<bool> =
+                (0..lanes).map(|i| fed[i] > 0 && chunks[i].samples).collect();
+
+            // per-lane fault triggers: a plan entry aimed at (request,
+            // step) fires on the sampling chunk for that step
+            let mut inject_panic = vec![false; lanes];
+            if let Some(plan) = faults {
+                for i in 0..lanes {
+                    if !sampling[i] {
+                        continue;
+                    }
+                    match plan.fire_lane_fault(chunks[i].request_id, chunks[i].generated) {
+                        Some(FaultKind::LanePanic) => inject_panic[i] = true,
+                        Some(FaultKind::NanActivations) => {
+                            // poison the f32 KV rows this step attends
+                            // over — surfaces as non-finite logits below
+                            states[i].poison_kv_nan();
+                        }
+                        None => {}
+                    }
+                }
+            }
+
+            // partition the progressing lanes: single-token sampling
+            // chunks are decode-phase and batch into ONE shared-weight
+            // step; multi-token or non-sampling chunks (prefill) run per
+            // lane. B batched lanes stream the weight set once, not B.
+            let is_batched = |i: usize| fed[i] == 1 && chunks[i].samples;
+            let n_batched = (0..lanes).filter(|&i| is_batched(i)).count();
+            let n_prefill = (0..lanes).filter(|&i| fed[i] > 0).count() - n_batched;
+            // contained per-lane faults from this iteration's step
+            let mut lane_faults: Vec<Option<String>> = vec![None; lanes];
 
             let ts = Instant::now();
             // 1) prefill lanes: chunked prefill through the fused causal
@@ -256,17 +351,30 @@ impl<'m> CpuServer<'m> {
                     .iter_mut()
                     .zip(logits.chunks_mut(vocab))
                     .enumerate()
-                    .filter(|(i, _)| chunks[*i].active && !is_batched(&chunks[*i]))
+                    .filter(|(i, _)| fed[*i] > 0 && !is_batched(*i))
                     .map(|(i, (st, out))| PrefillTask {
+                        lane: i,
                         st,
                         tokens: chunks[i].tokens,
                         samples: chunks[i].samples,
                         out,
+                        inject_panic: inject_panic[i],
+                        fault: None,
                     })
                     .collect();
                 let run_one = |t: &mut PrefillTask<'_>| {
-                    let out = if t.samples { Some(&mut t.out[..]) } else { None };
-                    model.prefill_into(t.st, t.tokens, mode, out);
+                    // containment: a panic inside one lane's chunk
+                    // (injected or organic) faults that lane only — the
+                    // worker running it survives, co-scheduled lanes
+                    // never notice
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        assert!(!t.inject_panic, "injected fault: lane panic during prefill");
+                        let out = if t.samples { Some(&mut t.out[..]) } else { None };
+                        model.prefill_into(t.st, t.tokens, mode, out);
+                    }));
+                    if let Err(cause) = r {
+                        t.fault = Some(panic_message(&*cause));
+                    }
                 };
                 match &worker_pool {
                     Some(p) if tasks.len() > 1 => {
@@ -283,33 +391,54 @@ impl<'m> CpuServer<'m> {
                         }
                     }
                 }
+                for t in &tasks {
+                    if let Some(msg) = &t.fault {
+                        lane_faults[t.lane] = Some(msg.clone());
+                    }
+                }
             }
             // 2) decode lanes: one batched step, weights streamed once
             //    for the whole batch; a lone lane runs the inline solo
             //    path (operator splitting cannot beat it at width 1)
             if n_batched > 0 {
-                let mut lanes: Vec<BatchLane> = states
+                let batched_idx: Vec<usize> = (0..lanes).filter(|&i| is_batched(i)).collect();
+                let mut blanes: Vec<BatchLane> = states
                     .iter_mut()
                     .zip(logits.chunks_mut(vocab))
                     .enumerate()
-                    .filter(|(i, _)| is_batched(&chunks[*i]))
+                    .filter(|(i, _)| is_batched(*i))
                     .map(|(i, (st, out))| BatchLane {
                         state: st,
-                        token: chunks[i].tokens[0],
+                        // u32::MAX is out of range for every vocab: an
+                        // injected panic rides the step's own token
+                        // validation, like real poisoned input would
+                        token: if inject_panic[i] {
+                            u32::MAX
+                        } else {
+                            chunks[i].tokens[0]
+                        },
                         logits: out,
                     })
                     .collect();
-                if let [lane] = &mut lanes[..] {
+                if let [lane] = &mut blanes[..] {
                     // a lone decode lane takes the solo step verbatim —
-                    // no batch-scratch gather/scatter, no pool
-                    model.decode_step_into(lane.state, lane.token, mode, lane.logits);
+                    // no batch-scratch gather/scatter, no pool — behind
+                    // the same per-lane containment as the batched path
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        model.decode_step_into(lane.state, lane.token, mode, lane.logits);
+                    }));
+                    if let Err(cause) = r {
+                        lane_faults[batched_idx[0]] = Some(panic_message(&*cause));
+                    }
                 } else {
-                    model.decode_steps_into(
-                        &mut lanes,
+                    for f in model.try_decode_steps_into(
+                        &mut blanes,
                         mode,
                         &mut batch_scratch,
                         worker_pool.as_ref(),
-                    );
+                    ) {
+                        lane_faults[batched_idx[f.lane]] = Some(f.message);
+                    }
                 }
             }
             step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
@@ -318,10 +447,9 @@ impl<'m> CpuServer<'m> {
             // one layer-stack weight pass regardless of its width; a
             // prefill lane pays one per chunk token (prefill_into runs
             // the per-token QKV/O/MLP GEMVs for every token it feeds)
-            let prefill_passes: u64 = chunks
-                .iter()
-                .filter(|c| c.active && !is_batched(c))
-                .map(|c| c.tokens.len() as u64)
+            let prefill_passes: u64 = (0..lanes)
+                .filter(|&i| fed[i] > 0 && !is_batched(i))
+                .map(|i| fed[i] as u64)
                 .sum();
             weight_passes += prefill_passes + u64::from(n_batched > 0);
             if n_batched > 0 {
@@ -334,16 +462,14 @@ impl<'m> CpuServer<'m> {
             // at the largest live context, token by token. With fed == 1
             // everywhere this reduces exactly to the old
             // one-simulate_token-per-iteration accounting.
-            let max_fed = chunks
-                .iter()
-                .filter(|c| c.active)
-                .map(|c| c.tokens.len())
+            let max_fed = (0..lanes)
+                .filter(|&i| fed[i] > 0)
+                .map(|i| fed[i])
                 .max()
                 .unwrap_or(1);
-            let base_ctx = chunks
-                .iter()
-                .filter(|c| c.active)
-                .map(|c| c.pos)
+            let base_ctx = (0..lanes)
+                .filter(|&i| fed[i] > 0)
+                .map(|i| pos_v[i])
                 .max()
                 .unwrap_or(0);
             for k in 1..=max_fed {
@@ -351,13 +477,43 @@ impl<'m> CpuServer<'m> {
                 sim_cycles += sim.total_cycles;
             }
 
+            // fault retirement: a contained lane panic fails *that*
+            // request only — its KV blocks go back to the pool, the lane
+            // is recycled for the next admission, and every co-batched
+            // lane's output this iteration is bit-exact (the fault
+            // integration tests assert this)
+            drop(chunks);
+            for i in 0..lanes {
+                let Some(msg) = lane_faults[i].take() else {
+                    continue;
+                };
+                fed[i] = 0;
+                batcher.fail_lane(i, iteration, &msg);
+                states[i].reset_for_reuse();
+            }
+            // NaN firewall: a lane whose logits went non-finite (e.g.
+            // poisoned activations) fails per-request instead of
+            // emitting garbage tokens for the rest of its generation
+            for i in 0..lanes {
+                if fed[i] > 0
+                    && sampling[i]
+                    && logits[i * vocab..(i + 1) * vocab]
+                        .iter()
+                        .any(|v| !v.is_finite())
+                {
+                    fed[i] = 0;
+                    batcher.fail_lane(i, iteration, "non-finite logits");
+                    states[i].reset_for_reuse();
+                }
+            }
+
             // greedy sample — only for lanes whose chunk ended on a
-            // sampling position; idle lanes and mid-prompt prefill
-            // chunks skip the argmax entirely (their logits are stale
-            // or were never computed)
+            // sampling position; idle, stalled, and faulted lanes and
+            // mid-prompt prefill chunks skip the argmax entirely (their
+            // logits are stale or were never computed)
             let samples: Vec<u32> = (0..lanes)
                 .map(|i| {
-                    if sampling[i] {
+                    if fed[i] > 0 && sampling[i] {
                         argmax(&logits[i * vocab..(i + 1) * vocab]) as u32
                     } else {
                         0
@@ -395,6 +551,7 @@ impl<'m> CpuServer<'m> {
         // admission accounting must reach the metrics: a rejected
         // (oversized) request is dropped by design, never silently
         let (requests_admitted, requests_rejected) = batcher.counters();
+        let fc = batcher.fault_counters();
         let sessions = batcher.finished;
         let total_tokens: usize = sessions.iter().map(|s| s.generated.len()).sum();
         let at_ms = |it: u64| -> f64 {
@@ -424,6 +581,10 @@ impl<'m> CpuServer<'m> {
             requests: sessions.len(),
             requests_admitted,
             requests_rejected,
+            requests_failed: fc.failed,
+            preemptions: fc.preemptions,
+            requeues: fc.requeues,
+            deadline_expired: fc.deadline_expired,
             total_tokens_generated: total_tokens,
             iterations: iteration,
             wall_s,

@@ -1,0 +1,301 @@
+//! Deterministic fault injection for the serving loop.
+//!
+//! A [`FaultPlan`] names faults to inject at exact points of a serve run
+//! so the fault-tolerance paths (panic containment, preemption/requeue,
+//! NaN detection) can be exercised deterministically in tests and from
+//! the CLI (`swiftkv serve --faults ...`). Three fault kinds:
+//!
+//! - `panic@r<ID>:s<STEP>` — the lane serving request `ID` panics on the
+//!   step that would sample its `STEP`-th generated token (`s0` is the
+//!   final prefill chunk's sample). The server must contain the panic to
+//!   that lane: the request fails, its KV blocks are reclaimed, the lane
+//!   is recycled, and co-batched lanes keep bit-exact outputs.
+//! - `nan@r<ID>:s<STEP>` — same trigger point, but instead of panicking
+//!   the lane's newest KV rows are poisoned with NaN, driving the lane's
+//!   logits non-finite. The server's sampler must detect and fail the
+//!   request rather than emit garbage tokens. (Effective in `DesktopF32`
+//!   numerics; the Q15.17 mirror saturates NaN away, which is itself the
+//!   accelerator datapath's defense.)
+//! - `oom@i<ITER>` — from iteration `ITER` on, the server's KV-capacity
+//!   precheck sees zero free blocks, forcing the preemption path. The
+//!   fault stays armed until it actually causes a preemption (an
+//!   iteration where no lane asks for a new block is a no-op), then
+//!   disarms.
+//!
+//! Every fault fires **at most once** (atomic fired flags), so a plan is
+//! a finite perturbation: the run must converge back to normal service.
+//! Plans come from an explicit spec string or from a seed
+//! ([`FaultPlan::seeded`], env `SWIFTKV_FAULT_SEED`) that draws a small
+//! random plan through [`crate::util::Rng`] — the CI fault matrix runs
+//! the same tests under several seeds.
+
+use crate::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// What a per-lane fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the lane's step (contained by the server).
+    LanePanic,
+    /// Poison the lane's newest KV rows with NaN before the step.
+    NanActivations,
+}
+
+/// One per-lane fault: fires when request `request_id` reaches the step
+/// that samples its `step`-th generated token.
+#[derive(Debug)]
+struct LaneFault {
+    kind: FaultKind,
+    request_id: u64,
+    step: usize,
+    fired: AtomicBool,
+}
+
+/// One forced pool-exhaustion window, armed from `iteration` until it
+/// causes a preemption.
+#[derive(Debug)]
+struct OomFault {
+    iteration: u64,
+    fired: AtomicBool,
+}
+
+/// A deterministic set of faults to inject into one serve run.
+///
+/// Interior mutability (atomic fired flags) lets the server consult the
+/// plan from `&self` mid-run; every fault fires at most once.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    lane_faults: Vec<LaneFault>,
+    oom_faults: Vec<OomFault>,
+}
+
+impl Clone for FaultPlan {
+    fn clone(&self) -> Self {
+        FaultPlan {
+            lane_faults: self
+                .lane_faults
+                .iter()
+                .map(|f| LaneFault {
+                    kind: f.kind,
+                    request_id: f.request_id,
+                    step: f.step,
+                    fired: AtomicBool::new(f.fired.load(Ordering::Relaxed)),
+                })
+                .collect(),
+            oom_faults: self
+                .oom_faults
+                .iter()
+                .map(|f| OomFault {
+                    iteration: f.iteration,
+                    fired: AtomicBool::new(f.fired.load(Ordering::Relaxed)),
+                })
+                .collect(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec: `panic@r<ID>:s<STEP>`,
+    /// `nan@r<ID>:s<STEP>`, `oom@i<ITER>`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, at) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{entry}': expected '<kind>@<where>'"))?;
+            match kind {
+                "panic" | "nan" => {
+                    let (r, s) = at.split_once(':').ok_or_else(|| {
+                        format!("fault '{entry}': expected '{kind}@r<ID>:s<STEP>'")
+                    })?;
+                    let request_id = r
+                        .strip_prefix('r')
+                        .and_then(|n| n.parse::<u64>().ok())
+                        .ok_or_else(|| format!("fault '{entry}': bad request id '{r}'"))?;
+                    let step = s
+                        .strip_prefix('s')
+                        .and_then(|n| n.parse::<usize>().ok())
+                        .ok_or_else(|| format!("fault '{entry}': bad step '{s}'"))?;
+                    plan.lane_faults.push(LaneFault {
+                        kind: if kind == "panic" {
+                            FaultKind::LanePanic
+                        } else {
+                            FaultKind::NanActivations
+                        },
+                        request_id,
+                        step,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "oom" => {
+                    let iteration = at
+                        .strip_prefix('i')
+                        .and_then(|n| n.parse::<u64>().ok())
+                        .ok_or_else(|| format!("fault '{entry}': expected 'oom@i<ITER>'"))?;
+                    plan.oom_faults.push(OomFault {
+                        iteration,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                other => return Err(format!("fault '{entry}': unknown kind '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// A small random plan drawn deterministically from `seed`: one or
+    /// two lane faults (panic or NaN) aimed at requests `0..8`, steps
+    /// `0..4`, plus — for odd seeds — a forced pool exhaustion in the
+    /// first iterations. Whether a given fault actually fires depends on
+    /// the workload (a fault aimed at a request that never reaches its
+    /// step is a no-op); the server must survive either way.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xFA_17_5E_ED);
+        let mut plan = FaultPlan::default();
+        let n_lane = 1 + rng.gen_range(0, 2);
+        for _ in 0..n_lane {
+            plan.lane_faults.push(LaneFault {
+                kind: if rng.gen_range(0, 2) == 0 {
+                    FaultKind::LanePanic
+                } else {
+                    FaultKind::NanActivations
+                },
+                request_id: rng.gen_range(0, 8) as u64,
+                step: rng.gen_range(0, 4),
+                fired: AtomicBool::new(false),
+            });
+        }
+        if seed % 2 == 1 {
+            plan.oom_faults.push(OomFault {
+                iteration: rng.gen_range(1, 8) as u64,
+                fired: AtomicBool::new(false),
+            });
+        }
+        plan
+    }
+
+    /// Plan from the environment: `SWIFTKV_FAULTS` (explicit spec) wins,
+    /// else `SWIFTKV_FAULT_SEED` (seeded plan), else `None`.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        if let Ok(spec) = std::env::var("SWIFTKV_FAULTS") {
+            if !spec.trim().is_empty() {
+                return FaultPlan::parse(&spec).map(Some);
+            }
+        }
+        if let Ok(seed) = std::env::var("SWIFTKV_FAULT_SEED") {
+            let seed: u64 = seed
+                .trim()
+                .parse()
+                .map_err(|_| format!("SWIFTKV_FAULT_SEED: bad integer '{seed}'"))?;
+            return Ok(Some(FaultPlan::seeded(seed)));
+        }
+        Ok(None)
+    }
+
+    /// No faults at all?
+    pub fn is_empty(&self) -> bool {
+        self.lane_faults.is_empty() && self.oom_faults.is_empty()
+    }
+
+    /// Check-and-fire a per-lane fault: the unfired fault (if any) aimed
+    /// at `request_id`'s `step`-th sample. Marks it fired, so each fault
+    /// perturbs exactly one step.
+    pub fn fire_lane_fault(&self, request_id: u64, step: usize) -> Option<FaultKind> {
+        for f in &self.lane_faults {
+            if f.request_id == request_id
+                && f.step == step
+                && f.fired
+                    .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return Some(f.kind);
+            }
+        }
+        None
+    }
+
+    /// Is a forced pool exhaustion armed at `iteration`? (Armed = its
+    /// start iteration has passed and it has not yet caused a
+    /// preemption.)
+    pub fn oom_armed(&self, iteration: u64) -> bool {
+        self.oom_faults
+            .iter()
+            .any(|f| iteration >= f.iteration && !f.fired.load(Ordering::Relaxed))
+    }
+
+    /// Disarm the armed pool-exhaustion fault after it caused a
+    /// preemption.
+    pub fn oom_fired(&self, iteration: u64) {
+        for f in &self.oom_faults {
+            if iteration >= f.iteration {
+                f.fired.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let p = FaultPlan::parse("panic@r2:s5, nan@r1:s0 ,oom@i10").unwrap();
+        assert_eq!(p.lane_faults.len(), 2);
+        assert_eq!(p.oom_faults.len(), 1);
+        assert_eq!(p.fire_lane_fault(2, 5), Some(FaultKind::LanePanic));
+        assert_eq!(p.fire_lane_fault(1, 0), Some(FaultKind::NanActivations));
+        assert!(p.oom_armed(10) && p.oom_armed(11) && !p.oom_armed(9));
+    }
+
+    #[test]
+    fn faults_fire_at_most_once() {
+        let p = FaultPlan::parse("panic@r0:s1").unwrap();
+        assert_eq!(p.fire_lane_fault(0, 1), Some(FaultKind::LanePanic));
+        assert_eq!(p.fire_lane_fault(0, 1), None, "second fire must be a no-op");
+        let p = FaultPlan::parse("oom@i3").unwrap();
+        assert!(p.oom_armed(3));
+        p.oom_fired(3);
+        assert!(!p.oom_armed(4), "oom disarms after causing a preemption");
+    }
+
+    #[test]
+    fn misses_are_no_ops() {
+        let p = FaultPlan::parse("panic@r7:s2").unwrap();
+        assert_eq!(p.fire_lane_fault(7, 1), None);
+        assert_eq!(p.fire_lane_fault(6, 2), None);
+        assert_eq!(p.fire_lane_fault(7, 2), Some(FaultKind::LanePanic));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["panic", "panic@x1:s2", "panic@r1", "oom@7", "boom@i1", "nan@r1:sx"] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_nonempty() {
+        for seed in [0u64, 1, 0xC0FFEE, 0xD15EA5E] {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            assert!(!a.is_empty());
+            assert_eq!(a.lane_faults.len(), b.lane_faults.len());
+            for (x, y) in a.lane_faults.iter().zip(&b.lane_faults) {
+                assert_eq!((x.kind, x.request_id, x.step), (y.kind, y.request_id, y.step));
+            }
+            assert_eq!(a.oom_faults.len(), b.oom_faults.len());
+        }
+        // odd seeds arm a pool-exhaustion fault
+        assert!(!FaultPlan::seeded(1).oom_faults.is_empty());
+    }
+
+    #[test]
+    fn clone_preserves_fired_state() {
+        let p = FaultPlan::parse("panic@r0:s0").unwrap();
+        assert!(p.fire_lane_fault(0, 0).is_some());
+        let q = p.clone();
+        assert_eq!(q.fire_lane_fault(0, 0), None, "clone keeps the fired flag");
+    }
+}

@@ -17,14 +17,16 @@ impl Percentiles {
             return None;
         }
         let mut s: Vec<f64> = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order (NaN sorts last) — a poisoned sample must not
+        // panic the metrics pass of an otherwise-survived run
+        s.sort_by(f64::total_cmp);
         let at = |q: f64| s[((s.len() - 1) as f64 * q).floor() as usize];
         Some(Percentiles {
             p50: at(0.50),
             p90: at(0.90),
             p99: at(0.99),
             mean: s.iter().sum::<f64>() / s.len() as f64,
-            max: *s.last().unwrap(),
+            max: s[s.len() - 1],
         })
     }
 }
@@ -39,6 +41,19 @@ pub struct ServeMetrics {
     /// window). Dropped by design — but never silently: this counter is
     /// the serving loop's only record of them.
     pub requests_rejected: u64,
+    /// Requests retired with a `Failed` outcome: a contained lane panic,
+    /// non-finite logits, or an exhausted preemption-requeue budget.
+    /// Every other lane of the same batch kept its bit-exact output.
+    pub requests_failed: u64,
+    /// Lanes preempted mid-flight (KV blocks released, request
+    /// requeued) because the shared block pool could not grow any lane.
+    pub preemptions: u64,
+    /// Preempted requests returned to the queue for re-prefill (≤
+    /// `preemptions`; a preemption past the retry budget fails instead).
+    pub requeues: u64,
+    /// Requests cancelled at an iteration boundary after their
+    /// wall-clock deadline passed (running or still queued).
+    pub deadline_expired: u64,
     pub total_tokens_generated: usize,
     pub iterations: u64,
     /// Wall-clock duration of the serving loop (seconds).
@@ -86,6 +101,16 @@ impl ServeMetrics {
             "admitted / rejected     {:>7} / {}\n",
             self.requests_admitted, self.requests_rejected
         ));
+        if self.requests_failed + self.preemptions + self.deadline_expired > 0 {
+            out.push_str(&format!(
+                "failed / expired        {:>7} / {}\n",
+                self.requests_failed, self.deadline_expired
+            ));
+            out.push_str(&format!(
+                "preempted / requeued    {:>7} / {}\n",
+                self.preemptions, self.requeues
+            ));
+        }
         out.push_str(&format!(
             "tokens generated        {:>10}\n",
             self.total_tokens_generated

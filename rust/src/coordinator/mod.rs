@@ -1,5 +1,9 @@
 //! L3 coordinator — the decode serving layer.
 //!
+//! The whole module tree is compiled with `clippy::unwrap_used` denied
+//! (outside tests): serving-loop code must contain faults per-request,
+//! never convert one into a process-wide panic via a stray `.unwrap()`.
+//!
 //! Shaped like a serving-system router (the SwiftKV-MHA accelerator is a
 //! decode engine; this is the host side that keeps it fed):
 //!
@@ -18,16 +22,20 @@
 //!   [`crate::sim::layer_sched`]), so the E2E example reports both
 //!   wall-clock and modelled-accelerator numbers.
 
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod batcher;
 pub mod cpu;
+pub mod faults;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod session;
 
-pub use batcher::{Batcher, LaneChunk, LaneState};
+pub use batcher::{Batcher, FaultCounters, LaneChunk, LaneState, PreemptOutcome};
 pub use cpu::{CpuServeOptions, CpuServeReport, CpuServer, DEFAULT_PREFILL_CHUNK};
+pub use faults::{FaultKind, FaultPlan};
 pub use metrics::{Percentiles, ServeMetrics};
 #[cfg(feature = "pjrt")]
 pub use server::{ServeOptions, ServeReport, Server};
-pub use session::{Session, SessionPhase};
+pub use session::{Session, SessionOutcome, SessionPhase};

@@ -78,14 +78,11 @@ impl<'e> Server<'e> {
         loop {
             // admit every request whose arrival time has passed
             let now_ms = t0.elapsed().as_secs_f64() * 1e3;
-            while let Some(r) = pending.front() {
-                if r.arrival_ms as f64 <= now_ms {
-                    let r = pending.pop_front().unwrap();
+            while pending.front().is_some_and(|r| r.arrival_ms as f64 <= now_ms) {
+                if let Some(r) = pending.pop_front() {
                     if batcher.submit(r).is_err() {
                         // rejected (oversized); drop
                     }
-                } else {
-                    break;
                 }
             }
             batcher.admit(iteration);
@@ -132,6 +129,7 @@ impl<'e> Server<'e> {
 
         let wall_s = t0.elapsed().as_secs_f64();
         let (requests_admitted, requests_rejected) = batcher.counters();
+        let fc = batcher.fault_counters();
         let sessions = batcher.finished;
         let total_tokens: usize = sessions.iter().map(|s| s.generated.len()).sum();
         let at_ms = |it: u64| -> f64 {
@@ -154,6 +152,10 @@ impl<'e> Server<'e> {
             requests: sessions.len(),
             requests_admitted,
             requests_rejected,
+            requests_failed: fc.failed,
+            preemptions: fc.preemptions,
+            requeues: fc.requeues,
+            deadline_expired: fc.deadline_expired,
             total_tokens_generated: total_tokens,
             iterations: iteration,
             wall_s,

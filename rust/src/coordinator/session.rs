@@ -14,6 +14,28 @@ pub enum SessionPhase {
     Finished,
 }
 
+/// How a retired session left the server. `Completed` is the normal
+/// path; the other variants are the fault-tolerance layer's per-request
+/// failure surface — a fault in one lane retires *that* session with a
+/// non-`Completed` outcome instead of crashing the serve loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionOutcome {
+    /// Generated every requested token.
+    Completed,
+    /// Retired early by a contained lane fault (panic, non-finite
+    /// logits, or exhausted requeue budget); the reason says which.
+    Failed(String),
+    /// Cancelled at an iteration boundary after its wall-clock deadline
+    /// passed.
+    DeadlineExpired,
+}
+
+impl SessionOutcome {
+    pub fn is_completed(&self) -> bool {
+        matches!(self, SessionOutcome::Completed)
+    }
+}
+
 /// One request being decoded on a lane.
 #[derive(Debug, Clone)]
 pub struct Session {
@@ -28,6 +50,9 @@ pub struct Session {
     pub first_token_at: Option<u64>,
     /// Iteration at which the session finished.
     pub finished_at: Option<u64>,
+    /// How the session left the server (meaningful once retired;
+    /// `Completed` while still running).
+    pub outcome: SessionOutcome,
 }
 
 impl Session {
@@ -41,7 +66,15 @@ impl Session {
             admitted_at,
             first_token_at: None,
             finished_at: None,
+            outcome: SessionOutcome::Completed,
         }
+    }
+
+    /// Wall-clock deadline as absolute stream milliseconds, when the
+    /// request carries one (`deadline_ms == 0` means none).
+    pub fn deadline_at_ms(&self) -> Option<u64> {
+        (self.request.deadline_ms > 0)
+            .then(|| self.request.arrival_ms + self.request.deadline_ms)
     }
 
     pub fn phase(&self) -> SessionPhase {
@@ -149,6 +182,7 @@ mod tests {
             prompt: prompt.to_vec(),
             gen_len,
             arrival_ms: 0,
+            deadline_ms: 0,
         }
     }
 

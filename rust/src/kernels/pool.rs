@@ -173,7 +173,14 @@ impl WorkerPool {
         self.shared.done.store(0, Ordering::Relaxed);
         self.shared.panicked.store(false, Ordering::Relaxed);
         {
-            let sleepers = self.shared.sleep.lock().unwrap();
+            // poison-recovering: the sections guarding this counter
+            // never run user code, but a fault-containing server must
+            // not let a poisoned sleep count wedge the whole pool
+            let sleepers = self
+                .shared
+                .sleep
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             self.shared.epoch.fetch_add(1, Ordering::Release);
             if *sleepers > 0 {
                 self.shared.start.notify_all();
@@ -212,7 +219,11 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Relaxed);
         {
-            let sleepers = self.shared.sleep.lock().unwrap();
+            let sleepers = self
+                .shared
+                .sleep
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             self.shared.epoch.fetch_add(1, Ordering::Release);
             if *sleepers > 0 {
                 self.shared.start.notify_all();
@@ -239,12 +250,15 @@ fn worker_loop(shared: &Shared) {
             if spins < SPIN_LIMIT {
                 std::hint::spin_loop();
             } else {
-                let mut sleepers = shared.sleep.lock().unwrap();
+                let mut sleepers = shared.sleep.lock().unwrap_or_else(|e| e.into_inner());
                 // re-check under the mutex: the publisher bumps the
                 // epoch while holding it, so this cannot race
                 while shared.epoch.load(Ordering::Acquire) == seen {
                     *sleepers += 1;
-                    sleepers = shared.start.wait(sleepers).unwrap();
+                    sleepers = shared
+                        .start
+                        .wait(sleepers)
+                        .unwrap_or_else(|e| e.into_inner());
                     *sleepers -= 1;
                 }
                 spins = 0;

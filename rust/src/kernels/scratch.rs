@@ -159,7 +159,7 @@ impl DecodeScratch {
 /// [`BatchScratch::ensure_batch`] and grow monotonically to the
 /// high-water batch width — steady-state batched steps at or below the
 /// capacity perform zero heap allocation (`tests/alloc_hotpath.rs`).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct BatchScratch {
     /// INT8 activation rows for the `d_model`-wide GEMM inputs,
     /// `[cap, d_model]`.
@@ -181,6 +181,15 @@ pub struct BatchScratch {
     pub up: Vec<f32>,
     /// Batched logits, `[cap, vocab]`, scattered to the lanes' buffers.
     pub logits: Vec<f32>,
+    /// Per-lane fault flags for
+    /// [`crate::model::TinyModel::try_decode_steps_into`]: a lane whose
+    /// per-lane phase panicked is marked here and skipped by every later
+    /// phase of the step (the shared GEMMs are row-independent, so the
+    /// surviving lanes' outputs stay bit-identical). Atomic because the
+    /// attention phase runs one task per lane across the worker pool.
+    /// Pre-allocated alongside the buffers so the no-fault steady state
+    /// stays allocation-free.
+    pub faulted: Vec<std::sync::atomic::AtomicBool>,
     /// Lanes the buffers are currently sized for.
     cap: usize,
     d_model: usize,
@@ -215,6 +224,7 @@ impl BatchScratch {
             gate: Vec::new(),
             up: Vec::new(),
             logits: Vec::new(),
+            faulted: Vec::new(),
             cap: 0,
             d_model: n_heads * d_head,
             d_kv: n_kv_heads * d_head,
@@ -240,6 +250,8 @@ impl BatchScratch {
         self.gate.resize(batch * self.d_ffn, 0.0);
         self.up.resize(batch * self.d_ffn, 0.0);
         self.logits.resize(batch * self.vocab, 0.0);
+        self.faulted
+            .resize_with(batch, || std::sync::atomic::AtomicBool::new(false));
         self.cap = batch;
     }
 

@@ -6,13 +6,14 @@
 //! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
 //! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
 //!                  [--kv-block-len 16] [--kv-pool-blocks 0] [--prefill-chunk 8]
-//!                  [--prompt-len 0] [--workers 0]
+//!                  [--prompt-len 0] [--workers 0] [--deadline-ms 0]
+//!                  [--faults panic@r0:s1,oom@i4] [--max-requeues 3]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 
 #[cfg(feature = "pjrt")]
 use swiftkv::coordinator::{ServeOptions, Server};
-use swiftkv::coordinator::{CpuServeOptions, CpuServer, DEFAULT_PREFILL_CHUNK};
+use swiftkv::coordinator::{CpuServeOptions, CpuServer, FaultPlan, DEFAULT_PREFILL_CHUNK};
 use swiftkv::model::{
     LlmConfig, NumericsMode, TinyModel, WeightStore, WorkloadGen, WorkloadSpec,
     DEFAULT_KV_BLOCK_LEN,
@@ -56,6 +57,7 @@ fn workload_spec(args: &Args, vocab: usize) -> Result<WorkloadSpec, String> {
         },
         gen_len: (8, 48),
         mean_gap_ms: args.get_f64("gap-ms", 0.0)?,
+        deadline_ms: args.get_usize("deadline-ms", 0)? as u64,
         seed: args.get_usize("seed", 0)? as u64,
     })
 }
@@ -122,6 +124,16 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
     // engine threads (serving thread + persistent pool workers);
     // 0 = one per available CPU, 1 = fully inline
     let workers = args.get_usize("workers", 0)?;
+    // fault injection: --faults takes an explicit spec; otherwise the
+    // SWIFTKV_FAULTS / SWIFTKV_FAULT_SEED environment is honoured
+    let faults = match args.get("faults") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => FaultPlan::from_env()?,
+    };
+    if let Some(plan) = faults.as_ref().filter(|p| !p.is_empty()) {
+        println!("(fault injection armed: {plan:?})");
+    }
+    let max_requeues = args.get_usize("max-requeues", 3)? as u32;
     let report = CpuServer::new(
         &tm,
         CpuServeOptions {
@@ -133,6 +145,8 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
             kv_pool_blocks,
             prefill_chunk,
             workers,
+            faults,
+            max_requeues,
         },
     )
     .serve(reqs);
@@ -153,6 +167,7 @@ fn run() -> Result<(), String> {
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
             "kv-heads", "kv-block-len", "kv-pool-blocks", "prefill-chunk", "prompt-len", "workers",
+            "deadline-ms", "faults", "max-requeues",
         ],
         &["help"],
     )?;

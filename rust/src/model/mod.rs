@@ -17,6 +17,6 @@ pub mod workload;
 
 pub use config::LlmConfig;
 pub use ops::TokenCost;
-pub use tiny::{BatchLane, DecodeState, NumericsMode, TinyModel, DEFAULT_KV_BLOCK_LEN};
+pub use tiny::{BatchLane, DecodeState, LaneFault, NumericsMode, TinyModel, DEFAULT_KV_BLOCK_LEN};
 pub use weights::WeightStore;
 pub use workload::{Request, WorkloadGen, WorkloadSpec};

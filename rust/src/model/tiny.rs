@@ -55,7 +55,9 @@ use crate::quant::{gemm_w4a8_raw_into, quantize_int8_into, Int4Matrix, QuantLine
 use crate::rope::{rope_apply_cached_into, RopeState};
 use crate::util::Rng;
 use anyhow::{bail, Result};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 
 /// Default tokens per KV cache block (`swiftkv serve --kv-block-len`
 /// overrides). 16 rows keeps block-table overhead ≪ 1 % of the sweep
@@ -213,6 +215,37 @@ impl DecodeState {
     pub fn kv_blocks_in_use(&self) -> usize {
         self.tables.iter().map(BlockTable::num_blocks).sum()
     }
+
+    /// Blocks this state would have to take from the pool to hold
+    /// `tokens` total context — the serving loop's admission/preemption
+    /// precheck. Summed per layer so a partially-grown state (e.g. after
+    /// a contained fault mid-setup) is accounted exactly.
+    pub fn kv_blocks_needed(&self, tokens: usize) -> usize {
+        let per_layer = tokens.div_ceil(self.pool.block_len());
+        self.tables
+            .iter()
+            .map(|t| per_layer.saturating_sub(t.num_blocks()))
+            .sum()
+    }
+
+    /// Fault injection: overwrite the most recently written KV row with
+    /// NaN in every layer (f32 rows only — the Q15.17 mirror has no NaN
+    /// encoding, so `Accelerator`-mode decoding is unaffected by design).
+    /// Returns `false` (no-op) if nothing has been written yet. The NaNs
+    /// flow through the fused f32 attention sweep into this lane's
+    /// logits, which the serving loop detects as a non-finite sample and
+    /// retires per-request.
+    pub fn poison_kv_nan(&mut self) -> bool {
+        if self.pos == 0 {
+            return false;
+        }
+        let t = self.pos - 1;
+        for table in &mut self.tables {
+            table.k_row_mut(t).fill(f32::NAN);
+            table.v_row_mut(t).fill(f32::NAN);
+        }
+        true
+    }
 }
 
 impl Drop for DecodeState {
@@ -234,6 +267,39 @@ pub struct BatchLane<'a> {
     pub token: u32,
     /// Receives this lane's logits, `[vocab]`.
     pub logits: &'a mut [f32],
+}
+
+/// A contained per-lane failure from
+/// [`TinyModel::try_decode_steps_into`]: the lane index that faulted and
+/// the panic payload (or other cause) as text. The lane's `DecodeState`
+/// is left partially stepped — reset it with
+/// [`DecodeState::reset_for_reuse`] before reusing the lane.
+#[derive(Debug, Clone)]
+pub struct LaneFault {
+    pub lane: usize,
+    pub message: String,
+}
+
+/// Render a caught panic payload as text (`&str` and `String` payloads
+/// cover every `panic!`/`assert!` in this crate).
+pub(crate) fn panic_message(cause: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = cause.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = cause.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Append a contained panic to the step's fault log. Lock poisoning is
+/// impossible here by construction (pushes never panic mid-hold), but
+/// recover anyway — the log must survive anything.
+fn record_fault(log: &Mutex<Vec<LaneFault>>, lane: usize, cause: Box<dyn std::any::Any + Send>) {
+    log.lock().unwrap_or_else(|e| e.into_inner()).push(LaneFault {
+        lane,
+        message: panic_message(&*cause),
+    });
 }
 
 impl TinyModel {
@@ -633,9 +699,41 @@ impl TinyModel {
         batch: &mut BatchScratch,
         pool: Option<&WorkerPool>,
     ) {
+        let faults = self.try_decode_steps_into(lanes, mode, batch, pool);
+        if let Some(f) = faults.first() {
+            panic!("batched decode lane {} faulted: {}", f.lane, f.message);
+        }
+    }
+
+    /// Fault-contained variant of [`Self::decode_steps_into`]: a panic
+    /// inside one lane's per-lane work (step setup, KV cache growth, or
+    /// the attention sweep) marks **that lane** faulted and is returned
+    /// as a [`LaneFault`] instead of unwinding the caller. Faulted lanes
+    /// are skipped by every later phase of the step — their logits
+    /// buffers are left untouched and their `pos` does not advance —
+    /// while each surviving lane's output stays bit-identical to the
+    /// fault-free step (every per-lane op touches only that lane's rows,
+    /// and the shared GEMMs are row-independent, so a garbage row from a
+    /// faulted lane cannot perturb its neighbors). A faulted lane's
+    /// `DecodeState` is partially stepped — reset it with
+    /// [`DecodeState::reset_for_reuse`] before recycling the lane.
+    ///
+    /// Fault-free calls return an empty `Vec` and keep the steady-state
+    /// **zero-heap-allocation** guarantee (`tests/alloc_hotpath.rs`);
+    /// the containment bookkeeping lives in pre-allocated
+    /// [`BatchScratch::faulted`] flags. The shared weight passes are
+    /// *not* guarded — a panic there is a whole-batch programming error
+    /// and propagates.
+    pub fn try_decode_steps_into(
+        &self,
+        lanes: &mut [BatchLane<'_>],
+        mode: NumericsMode,
+        batch: &mut BatchScratch,
+        pool: Option<&WorkerPool>,
+    ) -> Vec<LaneFault> {
         let b = lanes.len();
         if b == 0 {
-            return;
+            return Vec::new();
         }
         let d = self.d_model;
         let (h, dh) = (self.n_heads, self.d_head);
@@ -650,33 +748,53 @@ impl TinyModel {
         assert_eq!(batch.d_kv(), d_kv, "batch scratch d_kv mismatch");
         assert_eq!(batch.d_ffn(), d_ffn, "batch scratch d_ffn mismatch");
         assert_eq!(batch.vocab(), vocab, "batch scratch vocab mismatch");
+        for f in &batch.faulted[..b] {
+            f.store(false, Ordering::Relaxed);
+        }
+        // `Mutex::new(Vec::new())` allocates nothing — the fault log
+        // costs heap only when a fault actually fires
+        let fault_log: Mutex<Vec<LaneFault>> = Mutex::new(Vec::new());
 
         // per-lane step setup: advance the RoPE recurrence, map this
-        // step's cache row in every layer, embed the token
-        for lane in lanes.iter_mut() {
-            assert!((lane.token as usize) < vocab, "token out of range");
-            assert!(lane.state.pos < self.n_ctx, "context overflow");
-            assert_eq!(lane.logits.len(), vocab, "logits buffer size");
-            let st = &mut *lane.state;
-            st.rope.advance();
-            let len = st.pos + 1;
-            let DecodeState {
-                tables,
-                pool: kv_pool,
-                scratch: sc,
-                ..
-            } = st;
-            debug_assert_eq!(kv_pool.row_width(), d_kv);
-            for table in tables.iter_mut() {
-                table.ensure_tokens(kv_pool, len);
+        // step's cache row in every layer, embed the token. Contained:
+        // an out-of-range token or an exhausted KV pool faults only the
+        // offending lane.
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                assert!((lane.token as usize) < vocab, "token out of range");
+                assert!(lane.state.pos < self.n_ctx, "context overflow");
+                assert_eq!(lane.logits.len(), vocab, "logits buffer size");
+                let st = &mut *lane.state;
+                st.rope.advance();
+                let len = st.pos + 1;
+                let DecodeState {
+                    tables,
+                    pool: kv_pool,
+                    scratch: sc,
+                    ..
+                } = st;
+                debug_assert_eq!(kv_pool.row_width(), d_kv);
+                for table in tables.iter_mut() {
+                    table.ensure_tokens(kv_pool, len);
+                }
+                let at = lane.token as usize * d;
+                sc.x.copy_from_slice(&self.embedding[at..at + d]);
+            }));
+            if let Err(cause) = r {
+                batch.faulted[i].store(true, Ordering::Relaxed);
+                record_fault(&fault_log, i, cause);
             }
-            let at = lane.token as usize * d;
-            sc.x.copy_from_slice(&self.embedding[at..at + d]);
         }
 
         for (l, lw) in self.layers.iter().enumerate() {
-            // gather: norm + INT8-quantize every lane's activation row
+            // gather: norm + INT8-quantize every lane's activation row.
+            // Faulted lanes are skipped; their stale scratch rows flow
+            // through the shared GEMMs as dead rows (row-independent)
+            // and are never scattered back.
             for (i, lane) in lanes.iter_mut().enumerate() {
+                if batch.faulted[i].load(Ordering::Relaxed) {
+                    continue;
+                }
                 let sc = &mut lane.state.scratch;
                 rms_norm_into(&sc.x, &lw.attn_norm, &mut sc.xn);
                 let s = quantize_int8_into(&sc.xn, &mut batch.qi8[i * d..(i + 1) * d]);
@@ -693,59 +811,73 @@ impl TinyModel {
             {
                 let lanes_ptr = SharedMut(lanes.as_mut_ptr());
                 let (bq, bk, bv) = (&batch.q, &batch.k, &batch.v);
+                let flags = &batch.faulted;
                 let attend_lane = |i: usize| {
-                    // Safety: task indices are distinct, so each task
-                    // holds the only reference to its lane
-                    let lane = unsafe { &mut *lanes_ptr.0.add(i) };
-                    let pos = lane.state.pos;
-                    let len = pos + 1;
-                    let fxp_from = lane.state.fxp_rows.min(pos);
-                    let DecodeState {
-                        tables,
-                        rope,
-                        scratch: sc,
-                        ..
-                    } = &mut *lane.state;
-                    let table = &mut tables[l];
-                    let qrow = &bq[i * d..(i + 1) * d];
-                    for head in 0..h {
-                        let o = head * dh;
-                        rope_apply_cached_into(
-                            &qrow[o..o + dh],
-                            &rope.cos,
-                            &rope.sin,
-                            &mut sc.q_rot[o..o + dh],
-                        );
+                    if flags[i].load(Ordering::Relaxed) {
+                        return;
                     }
-                    let ksrc = &bk[i * d_kv..(i + 1) * d_kv];
-                    let krow = table.k_row_mut(pos);
-                    for head in 0..h_kv {
-                        let o = head * dh;
-                        rope_apply_cached_into(
-                            &ksrc[o..o + dh],
-                            &rope.cos,
-                            &rope.sin,
-                            &mut krow[o..o + dh],
-                        );
-                    }
-                    table.v_row_mut(pos).copy_from_slice(&bv[i * d_kv..(i + 1) * d_kv]);
-                    match mode {
-                        NumericsMode::DesktopF32 => {
-                            sc.mha.reset();
-                            sc.mha.extend_paged(&sc.q_rot, table, 0, len, scale);
-                            sc.mha.finalize_into(&mut sc.attn_out);
+                    // Contained: a panic in one lane's attention work
+                    // (e.g. a poisoned block mapping) faults that lane
+                    // only — worker-pool tasks for other lanes are
+                    // untouched.
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        // Safety: task indices are distinct, so each task
+                        // holds the only reference to its lane
+                        let lane = unsafe { &mut *lanes_ptr.0.add(i) };
+                        let pos = lane.state.pos;
+                        let len = pos + 1;
+                        let fxp_from = lane.state.fxp_rows.min(pos);
+                        let DecodeState {
+                            tables,
+                            rope,
+                            scratch: sc,
+                            ..
+                        } = &mut *lane.state;
+                        let table = &mut tables[l];
+                        let qrow = &bq[i * d..(i + 1) * d];
+                        for head in 0..h {
+                            let o = head * dh;
+                            rope_apply_cached_into(
+                                &qrow[o..o + dh],
+                                &rope.cos,
+                                &rope.sin,
+                                &mut sc.q_rot[o..o + dh],
+                            );
                         }
-                        NumericsMode::Accelerator => {
-                            vector::quantize_into(&sc.q_rot, &mut sc.q_fxp);
-                            for t in fxp_from..len {
-                                table.quantize_row(t);
+                        let ksrc = &bk[i * d_kv..(i + 1) * d_kv];
+                        let krow = table.k_row_mut(pos);
+                        for head in 0..h_kv {
+                            let o = head * dh;
+                            rope_apply_cached_into(
+                                &ksrc[o..o + dh],
+                                &rope.cos,
+                                &rope.sin,
+                                &mut krow[o..o + dh],
+                            );
+                        }
+                        table.v_row_mut(pos).copy_from_slice(&bv[i * d_kv..(i + 1) * d_kv]);
+                        match mode {
+                            NumericsMode::DesktopF32 => {
+                                sc.mha.reset();
+                                sc.mha.extend_paged(&sc.q_rot, table, 0, len, scale);
+                                sc.mha.finalize_into(&mut sc.attn_out);
                             }
-                            sc.fxp_mha.reset();
-                            sc.fxp_mha
-                                .extend_paged(&self.lut, &sc.q_fxp, table, 0, len, fxp_scale);
-                            sc.fxp_mha.finalize_into(&mut sc.attn_fxp);
-                            vector::dequantize_into(&sc.attn_fxp, &mut sc.attn_out);
+                            NumericsMode::Accelerator => {
+                                vector::quantize_into(&sc.q_rot, &mut sc.q_fxp);
+                                for t in fxp_from..len {
+                                    table.quantize_row(t);
+                                }
+                                sc.fxp_mha.reset();
+                                sc.fxp_mha
+                                    .extend_paged(&self.lut, &sc.q_fxp, table, 0, len, fxp_scale);
+                                sc.fxp_mha.finalize_into(&mut sc.attn_fxp);
+                                vector::dequantize_into(&sc.attn_fxp, &mut sc.attn_out);
+                            }
                         }
+                    }));
+                    if let Err(cause) = r {
+                        flags[i].store(true, Ordering::Relaxed);
+                        record_fault(&fault_log, i, cause);
                     }
                 };
                 for_each_lane(pool, b, attend_lane);
@@ -753,6 +885,9 @@ impl TinyModel {
 
             // gather the attention outputs → one shared O-projection pass
             for (i, lane) in lanes.iter_mut().enumerate() {
+                if batch.faulted[i].load(Ordering::Relaxed) {
+                    continue;
+                }
                 let sc = &mut lane.state.scratch;
                 let s = quantize_int8_into(&sc.attn_out, &mut batch.qi8[i * d..(i + 1) * d]);
                 batch.scales[i] = s;
@@ -767,6 +902,9 @@ impl TinyModel {
 
             // residual + MLP norm, gathered for the gate/up passes
             for (i, lane) in lanes.iter_mut().enumerate() {
+                if batch.faulted[i].load(Ordering::Relaxed) {
+                    continue;
+                }
                 let sc = &mut lane.state.scratch;
                 for (xi, oi) in sc.x.iter_mut().zip(&batch.o[i * d..(i + 1) * d]) {
                     *xi += oi;
@@ -781,6 +919,9 @@ impl TinyModel {
 
             // SwiGLU per lane, gathered for the shared down pass
             for (i, lane) in lanes.iter_mut().enumerate() {
+                if batch.faulted[i].load(Ordering::Relaxed) {
+                    continue;
+                }
                 let sc = &mut lane.state.scratch;
                 let gate = &batch.gate[i * d_ffn..(i + 1) * d_ffn];
                 let up = &batch.up[i * d_ffn..(i + 1) * d_ffn];
@@ -799,6 +940,9 @@ impl TinyModel {
                 &mut batch.o[..b * d],
             );
             for (i, lane) in lanes.iter_mut().enumerate() {
+                if batch.faulted[i].load(Ordering::Relaxed) {
+                    continue;
+                }
                 let sc = &mut lane.state.scratch;
                 for (xi, di) in sc.x.iter_mut().zip(&batch.o[i * d..(i + 1) * d]) {
                     *xi += di;
@@ -809,6 +953,9 @@ impl TinyModel {
         // final norm per lane → ONE shared lm_head pass → scatter the
         // logits rows into the lanes' buffers
         for (i, lane) in lanes.iter_mut().enumerate() {
+            if batch.faulted[i].load(Ordering::Relaxed) {
+                continue;
+            }
             let sc = &mut lane.state.scratch;
             rms_norm_into(&sc.x, &self.final_norm, &mut sc.xn);
             let s = quantize_int8_into(&sc.xn, &mut batch.qi8[i * d..(i + 1) * d]);
@@ -822,6 +969,11 @@ impl TinyModel {
             &mut batch.logits[..b * vocab],
         );
         for (i, lane) in lanes.iter_mut().enumerate() {
+            // a faulted lane's step never happened: logits untouched,
+            // position unadvanced
+            if batch.faulted[i].load(Ordering::Relaxed) {
+                continue;
+            }
             lane.logits
                 .copy_from_slice(&batch.logits[i * vocab..(i + 1) * vocab]);
             let st = &mut *lane.state;
@@ -830,6 +982,7 @@ impl TinyModel {
             }
             st.pos += 1;
         }
+        fault_log.into_inner().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Chunked prefill: feed a whole chunk of prompt tokens through the

@@ -11,6 +11,11 @@ pub struct Request {
     pub gen_len: usize,
     /// Arrival time in milliseconds from stream start (Poisson process).
     pub arrival_ms: u64,
+    /// Wall-clock deadline in milliseconds after arrival; `0` = none.
+    /// An admitted session still running past its deadline is cancelled
+    /// cleanly by the server (KV blocks reclaimed, lane recycled) and
+    /// surfaces as [`crate::coordinator::ServeMetrics::deadline_expired`].
+    pub deadline_ms: u64,
 }
 
 /// Workload shape parameters.
@@ -22,6 +27,8 @@ pub struct WorkloadSpec {
     pub gen_len: (usize, usize),
     /// Mean inter-arrival gap in ms (0 = all arrive at t=0).
     pub mean_gap_ms: f64,
+    /// Per-request deadline in ms after arrival (0 = none).
+    pub deadline_ms: u64,
     pub seed: u64,
 }
 
@@ -33,6 +40,7 @@ impl Default for WorkloadSpec {
             prompt_len: (4, 32),
             gen_len: (8, 64),
             mean_gap_ms: 0.0,
+            deadline_ms: 0,
             seed: 0,
         }
     }
@@ -70,6 +78,7 @@ impl WorkloadGen {
                     prompt,
                     gen_len: glen,
                     arrival_ms: t_ms as u64,
+                    deadline_ms: self.spec.deadline_ms,
                 }
             })
             .collect()

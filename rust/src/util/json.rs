@@ -231,6 +231,10 @@ impl<'a> Parser<'a> {
                             0xE0..=0xEF => 3,
                             _ => 4,
                         };
+                        if start + width > self.bytes.len() {
+                            // input ends mid-sequence (e.g. a truncated file)
+                            return Err(self.err("truncated utf-8 sequence"));
+                        }
                         self.pos = start + width;
                         let s = std::str::from_utf8(&self.bytes[start..self.pos])
                             .map_err(|_| self.err("invalid utf-8"))?;
@@ -353,6 +357,19 @@ mod tests {
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn truncated_documents_error_cleanly() {
+        // Truncation at any byte offset of a realistic document must
+        // yield Err, never a panic (the bench gate feeds this parser
+        // whatever half-written baseline file it finds on disk).
+        let doc = r#"{"benchmarks":[{"name":"fused é","median_ns":12.5}]}"#;
+        for cut in 0..doc.len() {
+            if let Some(prefix) = doc.get(..cut) {
+                assert!(Json::parse(prefix).is_err(), "cut at {cut} parsed");
+            }
+        }
     }
 
     #[test]

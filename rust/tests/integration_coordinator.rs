@@ -35,6 +35,7 @@ fn serves_a_workload_to_completion() {
         prompt_len: (2, 6),
         gen_len: (3, 8),
         mean_gap_ms: 0.0,
+        deadline_ms: 0,
         seed: 42,
     })
     .generate();
@@ -74,6 +75,7 @@ fn batched_serving_matches_solo_generation() {
             prompt: p.clone(),
             gen_len,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = Server::new(&eng, opts(4)).serve(reqs).unwrap();
@@ -106,6 +108,7 @@ fn lane_recycling_more_requests_than_lanes() {
             prompt: vec![(i as u32 * 31 + 5) % 512],
             gen_len: 3,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = Server::new(&eng, opts(2)).serve(reqs).unwrap();
@@ -121,6 +124,7 @@ fn lane_recycling_more_requests_than_lanes() {
             prompt: vec![5],
             gen_len: 3,
             arrival_ms: 0,
+            deadline_ms: 0,
         }])
         .unwrap();
     let first = report
@@ -142,6 +146,7 @@ fn staggered_arrivals_all_served() {
             prompt: vec![10 + i as u32],
             gen_len: 2,
             arrival_ms: i * 30, // spread over ~100ms
+            deadline_ms: 0,
         })
         .collect();
     let report = Server::new(&eng, opts(2)).serve(reqs).unwrap();

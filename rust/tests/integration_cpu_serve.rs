@@ -36,6 +36,7 @@ fn serves_a_workload_to_completion() {
         prompt_len: (2, 6),
         gen_len: (3, 8),
         mean_gap_ms: 0.0,
+        deadline_ms: 0,
         seed: 42,
     })
     .generate();
@@ -73,6 +74,7 @@ fn batched_serving_matches_solo_generation_both_modes() {
                 prompt: p.clone(),
                 gen_len,
                 arrival_ms: 0,
+                deadline_ms: 0,
             })
             .collect();
         let report = CpuServer::new(&tm, opts(4, mode)).serve(reqs);
@@ -113,6 +115,7 @@ fn gqa_batched_serving_matches_solo_generation_both_modes() {
                 prompt: p.clone(),
                 gen_len,
                 arrival_ms: 0,
+                deadline_ms: 0,
             })
             .collect();
         // llama3-8b sim config: the GQA shape the sim layer prices
@@ -153,6 +156,7 @@ fn lane_recycling_more_requests_than_lanes() {
             prompt: vec![(i as u32 * 31 + 5) % tm.vocab as u32],
             gen_len: 3,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
@@ -166,6 +170,7 @@ fn lane_recycling_more_requests_than_lanes() {
         prompt: vec![5],
         gen_len: 3,
         arrival_ms: 0,
+        deadline_ms: 0,
     }]);
     let first = report.sessions.iter().find(|s| s.request.id == 0).unwrap();
     assert_eq!(first.generated, solo.sessions[0].generated);
@@ -198,6 +203,7 @@ fn lanes_share_one_pool_with_reclamation() {
             prompt: vec![(i as u32 * 17 + 3) % tm.vocab as u32],
             gen_len: 5,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = CpuServer::new(&tm, opts).serve(reqs);
@@ -249,6 +255,7 @@ fn idle_lanes_release_blocks_at_retirement() {
             prompt: vec![1 + i as u32],
             gen_len: 3, // 3 cache rows → 1 block per layer
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     reqs.push(Request {
@@ -256,6 +263,7 @@ fn idle_lanes_release_blocks_at_retirement() {
         prompt: vec![9],
         gen_len: 30, // 30 cache rows → 8 blocks per layer = 16 blocks
         arrival_ms: 0,
+        deadline_ms: 0,
     });
     let report = CpuServer::new(&tm, opts).serve(reqs);
     assert_eq!(report.sessions.len(), 4);
@@ -286,6 +294,7 @@ fn undersized_pool_is_enough_for_short_sequences() {
             prompt: vec![1 + i as u32, 2],
             gen_len: 4,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = CpuServer::new(&tm, opts).serve(reqs);
@@ -309,6 +318,7 @@ fn rejected_requests_surface_in_metrics() {
             prompt: vec![1 + i as u32, 2],
             gen_len: 3,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     reqs.push(Request {
@@ -316,6 +326,7 @@ fn rejected_requests_surface_in_metrics() {
         prompt: (0..40).map(|t| t % tm.vocab as u32).collect(),
         gen_len: 20, // 40 + 20 > 48 → rejected
         arrival_ms: 0,
+        deadline_ms: 0,
     });
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
     assert_eq!(report.metrics.requests_admitted, 3);
@@ -338,6 +349,7 @@ fn nothing_rejected_reports_zero() {
         prompt: vec![3, 4],
         gen_len: 2,
         arrival_ms: 0,
+        deadline_ms: 0,
     }];
     let report = CpuServer::new(&tm, opts(1, NumericsMode::DesktopF32)).serve(reqs);
     assert_eq!(report.metrics.requests_admitted, 1);
@@ -368,6 +380,7 @@ fn prefill_chunk_lengths_do_not_change_outputs() {
                     prompt: p.clone(),
                     gen_len,
                     arrival_ms: 0,
+                    deadline_ms: 0,
                 })
                 .collect();
             let opts = CpuServeOptions {
@@ -410,6 +423,7 @@ fn chunked_prefill_takes_fewer_iterations() {
         prompt: (0..16).map(|t| (t * 3 + 1) % tm.vocab as u32).collect(),
         gen_len: 2,
         arrival_ms: 0,
+        deadline_ms: 0,
     };
     let run = |prefill_chunk: usize| {
         let opts = CpuServeOptions {
@@ -454,6 +468,7 @@ fn decode_heavy_run_pays_one_weight_pass_per_step() {
             prompt: vec![(i as u32 * 9 + 1) % tm.vocab as u32],
             gen_len: 6,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = CpuServer::new(&tm, opts(4, NumericsMode::DesktopF32)).serve(reqs);
@@ -489,6 +504,7 @@ fn prefill_lanes_pay_their_own_weight_passes() {
             prompt: (0..16).map(|t| (t * 3 + i as u32) % tm.vocab as u32).collect(),
             gen_len: 4,
             arrival_ms: 0,
+            deadline_ms: 0,
         })
         .collect();
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
@@ -522,6 +538,7 @@ fn explicit_worker_counts_do_not_change_outputs() {
                     prompt: p.clone(),
                     gen_len,
                     arrival_ms: 0,
+                    deadline_ms: 0,
                 })
                 .collect();
             let opts = CpuServeOptions {
@@ -560,6 +577,7 @@ fn staggered_arrivals_all_served() {
             prompt: vec![10 + i as u32],
             gen_len: 2,
             arrival_ms: i * 20,
+            deadline_ms: 0,
         })
         .collect();
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
@@ -576,6 +594,7 @@ fn single_lane_runs_inline() {
         prompt: vec![3, 4],
         gen_len: 4,
         arrival_ms: 0,
+        deadline_ms: 0,
     }];
     let report = CpuServer::new(&tm, opts(1, NumericsMode::Accelerator)).serve(reqs);
     assert_eq!(report.sessions.len(), 1);

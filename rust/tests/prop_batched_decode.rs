@@ -230,3 +230,88 @@ fn batched_decode_after_reset_matches_fresh() {
     m.decode_steps_into(&mut lanes, NumericsMode::Accelerator, &mut batch, None);
     assert_eq!(&got[..m.vocab], &want[..], "recycled batched lane diverged");
 }
+
+#[test]
+fn panicking_lane_is_contained_and_recyclable() {
+    // fault containment inside the batched step: one lane panics
+    // mid-batch (out-of-range token trips its own assert), the fault is
+    // caught per-lane and reported, co-batched lanes stay bit-identical
+    // to their solo twins, and the faulted lane — once reset — decodes
+    // like a fresh state again
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        let m = TinyModel::synthetic(13, VOCAB, D_MODEL, 4, 2, N_LAYERS, D_FFN, N_CTX);
+        let width = 4;
+        let bad = 2usize; // the lane that faults
+        let mut batch = m.new_batch_scratch();
+        let mut solo: Vec<DecodeState> = (0..width).map(|_| m.new_state()).collect();
+        let mut batched: Vec<DecodeState> = (0..width).map(|_| m.new_state()).collect();
+        let mut want = vec![0.0f32; m.vocab];
+        let mut got = vec![0.0f32; width * m.vocab];
+
+        // warm every lane so the faulted lane has KV history to lose
+        for (i, (s, b)) in solo.iter_mut().zip(batched.iter_mut()).enumerate() {
+            for t in 0..2u32 {
+                let tok = (i as u32 * 7 + t * 3 + 1) % VOCAB as u32;
+                m.decode_step_into(s, tok, mode, &mut want);
+                m.decode_step_into(b, tok, mode, &mut want);
+            }
+        }
+
+        let tokens: Vec<u32> = (0..width as u32)
+            .map(|i| if i as usize == bad { u32::MAX } else { (i * 5 + 2) % VOCAB as u32 })
+            .collect();
+        let mut lanes: Vec<BatchLane> = batched
+            .iter_mut()
+            .zip(got.chunks_mut(m.vocab))
+            .zip(&tokens)
+            .map(|((state, logits), &token)| BatchLane { state, token, logits })
+            .collect();
+        let faults = m.try_decode_steps_into(&mut lanes, mode, &mut batch, None);
+        assert_eq!(faults.len(), 1, "{mode:?}: exactly the one injected fault");
+        assert_eq!(faults[0].lane, bad);
+        assert!(
+            faults[0].message.contains("token out of range"),
+            "{mode:?}: fault message '{}' lost the panic payload",
+            faults[0].message
+        );
+
+        // survivors: bit-identical logits and advanced positions
+        for (i, st) in solo.iter_mut().enumerate() {
+            if i == bad {
+                continue;
+            }
+            m.decode_step_into(st, tokens[i], mode, &mut want);
+            assert_eq!(
+                &got[i * m.vocab..(i + 1) * m.vocab],
+                &want[..],
+                "{mode:?} lane {i}: co-batched lane diverged after a contained fault"
+            );
+            assert_eq!(st.pos, batched[i].pos, "{mode:?} lane {i}: position drifted");
+        }
+        // the faulted lane made no progress
+        assert_eq!(batched[bad].pos, 2, "{mode:?}: faulted lane must not advance");
+
+        // recycle the faulted lane: reset, then batch it with a healthy
+        // lane — it must decode exactly like a fresh solo state
+        batched[bad].reset_for_reuse();
+        let mut fresh_ref = m.new_state();
+        m.decode_step_into(&mut fresh_ref, 11, mode, &mut want);
+        let (g0, rest) = got.split_at_mut(m.vocab);
+        let (batched_bad, batched_rest) = batched.split_at_mut(bad + 1);
+        let mut lanes = [
+            BatchLane { state: &mut batched_bad[bad], token: 11, logits: g0 },
+            BatchLane {
+                state: &mut batched_rest[0],
+                token: 30,
+                logits: &mut rest[..m.vocab],
+            },
+        ];
+        let faults = m.try_decode_steps_into(&mut lanes, mode, &mut batch, None);
+        assert!(faults.is_empty(), "{mode:?}: recycled batch must run fault-free");
+        assert_eq!(
+            &got[..m.vocab],
+            &want[..],
+            "{mode:?}: recycled faulted lane diverged from a fresh state"
+        );
+    }
+}

@@ -93,6 +93,7 @@ fn prop_batcher_conservation() {
                 prompt: (0..plen as u32).collect(),
                 gen_len: glen,
                 arrival_ms: 0,
+                deadline_ms: 0,
             };
             match b.submit(r) {
                 Ok(()) => submitted += 1,
