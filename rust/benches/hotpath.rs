@@ -24,15 +24,22 @@
 //! throughput (`serve/cpu_throughput lanes={1,4}` with measured
 //! `weight_passes_per_step` / `weight_bytes_per_step` annotations).
 //!
-//! CI gates on this file's output: `bench_gate` compares every `*fused*`
-//! and `*gemm_w4a8*` entry against the committed `BENCH_baseline.json`
-//! and fails the job on a >15% median-ns regression (see EXPERIMENTS.md
-//! §Perf).
+//! Microkernel twins (`simd/… ` vs `simd/… scalar`) time the dispatched
+//! native kernel next to the portable scalar table on the same buffers,
+//! so the per-kernel ISA speedup (AVX2 vs scalar, or 1.0× when only
+//! scalar is available) is a recorded ratio. The active ISA is printed
+//! and annotated (`native_simd=1/0`) into the JSON.
+//!
+//! CI gates on this file's output: `bench_gate` compares every `*fused*`,
+//! `*gemm_w4a8*` and `simd/`-prefixed entry against the committed
+//! `BENCH_baseline.json` and fails the job on a >15% median-ns
+//! regression (see EXPERIMENTS.md §Perf).
 
 use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
 use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
 use swiftkv::coordinator::{CpuServeOptions, CpuServer};
 use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
+use swiftkv::kernels::isa::{self, Isa};
 use swiftkv::kernels::{BlockPool, BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
 use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WeightStore};
 use swiftkv::quant::{
@@ -316,6 +323,65 @@ fn main() {
             "hot/gemv_w4a8 512x512 lanes=8",
             "hot/gemm_w4a8 512x512 batch=8",
         );
+    }
+
+    // --- dispatched SIMD microkernels next to the portable scalar
+    // table, on identical buffers: each `simd/<kernel>` entry times the
+    // runtime-selected native kernel, its ` scalar` twin the fallback,
+    // so the per-kernel ISA win is a recorded ratio (1.0x when only
+    // scalar is available). The FXP32 and integer kernels are bit-exact
+    // across tables (tests/prop_simd_dispatch.rs), so every ratio is
+    // pure speed, not a numerics trade.
+    {
+        let native = isa::active();
+        let scalar = isa::table_for(Isa::Scalar).expect("scalar table is always available");
+        println!("  (kernel dispatch: {} — override with SWIFTKV_ISA)", native.name);
+        let is_native_simd = if native.isa == Isa::Scalar { 0.0 } else { 1.0 };
+        let dv = 768usize;
+        let xa = rng.uniform_vec(dv, 1.0);
+        let xb = rng.uniform_vec(dv, 1.0);
+        let mut yacc = vec![0.0f32; dv];
+        let fa = vector::quantize(&xa);
+        let fb = vector::quantize(&xb);
+        let mut fy = vec![Fxp32::ZERO; dv];
+        let di = 512usize;
+        let ia: Vec<i8> = (0..di).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+        let ib: Vec<i8> = (0..di).map(|i| ((i * 53 + 7) % 255) as i8).collect();
+        let wcol = Int4Matrix::quantize(&rng.uniform_vec(di, 0.5), di, 1);
+        for (tag, t) in [("", native), (" scalar", scalar)] {
+            let name = format!("simd/dot f32 d={dv}{tag}");
+            b.bench(&name, || (t.dot_f32)(&xa, &xb));
+            b.annotate(&name, "native_simd", is_native_simd);
+            let name = format!("simd/axpy f32 d={dv}{tag}");
+            b.bench(&name, || {
+                (t.axpy_f32)(0.5, &mut yacc, &xb);
+                yacc[0]
+            });
+            b.annotate(&name, "native_simd", is_native_simd);
+            let name = format!("simd/fxp_dot d={dv}{tag}");
+            b.bench(&name, || (t.dot_fxp_wide)(&fa, &fb));
+            b.annotate(&name, "native_simd", is_native_simd);
+            let name = format!("simd/fxp_axpy d={dv}{tag}");
+            b.bench(&name, || {
+                (t.axpy_fxp)(Fxp32::from_f64(0.5), &mut fy, &fb);
+                fy[0].raw()
+            });
+            b.annotate(&name, "native_simd", is_native_simd);
+            let name = format!("simd/i8dot d={di}{tag}");
+            b.bench(&name, || (t.dot_i8)(&ia, &ib));
+            b.annotate(&name, "native_simd", is_native_simd);
+            let name = format!("simd/w4a8_col d={di}{tag}");
+            b.bench(&name, || (t.w4a8_col)(&wcol.packed, di, &ia));
+            b.annotate(&name, "native_simd", is_native_simd);
+        }
+        for kernel in ["dot f32 d=768", "fxp_dot d=768", "i8dot d=512", "w4a8_col d=512"] {
+            report_speedup(
+                &b,
+                "simd dispatch speedup",
+                &format!("simd/{kernel} scalar"),
+                &format!("simd/{kernel}"),
+            );
+        }
     }
 
     // full decode step on the synthetic tiny model (no artifacts needed):

@@ -2,16 +2,19 @@
 //!
 //! ```text
 //! bench_gate <BENCH_baseline.json> <BENCH_current.json> \
-//!     [--max-regress-pct 15] [--gate fused,gemm_w4a8] [--require-baseline]
+//!     [--max-regress-pct 15] [--gate fused,gemm_w4a8,simd/] [--require-baseline]
 //! ```
 //!
 //! Compares median ns/op of every benchmark present in both documents
 //! and prints a markdown delta table (pipe it into `$GITHUB_STEP_SUMMARY`
 //! for the job summary). Exits non-zero when any benchmark whose name
 //! contains one of the comma-separated gate substrings (default
-//! `fused,gemm_w4a8` — the fused-sweep hot paths plus the
-//! batch-amortized W4A8 GEMM) regressed by more than the threshold, so
-//! a slow hot path fails the job instead of shipping silently.
+//! `fused,gemm_w4a8,simd/` — the fused-sweep hot paths, the
+//! batch-amortized W4A8 GEMM, and the dispatched SIMD microkernel
+//! benches) regressed by more than the threshold, so a slow hot path
+//! fails the job instead of shipping silently. A gate substring that
+//! matches zero benchmarks in either document is reported as a loud
+//! warning in the table — the gate may have silently lost coverage.
 //!
 //! An empty baseline gates nothing. Without `--require-baseline` that is
 //! a vacuous pass, flagged by a loud `BASELINE EMPTY — gate is vacuous`
@@ -57,12 +60,12 @@ fn run() -> Result<bool, String> {
     if args.get_bool("help") || args.positional().len() != 2 {
         return Err(
             "usage: bench_gate <baseline.json> <current.json> \
-             [--max-regress-pct 15] [--gate fused,gemm_w4a8] [--require-baseline]"
+             [--max-regress-pct 15] [--gate fused,gemm_w4a8,simd/] [--require-baseline]"
                 .into(),
         );
     }
     let max_regress_pct = args.get_f64("max-regress-pct", 15.0)?;
-    let gate = args.get_or("gate", "fused,gemm_w4a8");
+    let gate = args.get_or("gate", "fused,gemm_w4a8,simd/");
     let require_baseline = args.get_bool("require-baseline");
     let load = |path: &str| -> Result<Json, String> {
         let text =

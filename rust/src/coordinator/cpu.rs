@@ -569,13 +569,7 @@ impl<'m> CpuServer<'m> {
             .filter_map(|s| s.first_token_at.map(|f| at_ms(f) - at_ms(s.admitted_at)))
             .collect();
 
-        let zero = Percentiles {
-            p50: 0.0,
-            p90: 0.0,
-            p99: 0.0,
-            mean: 0.0,
-            max: 0.0,
-        };
+        let zero = Percentiles::ZERO;
         let sim_ms = arch.cycles_to_ms(sim_cycles);
         let metrics = ServeMetrics {
             requests: sessions.len(),

@@ -2,23 +2,51 @@
 //! (SwiftKV-MHA cycle model) views of the same schedule.
 
 /// Simple percentile summary over a set of samples.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// Non-finite samples (NaN/±∞ — e.g. timestamps from a faulted lane)
+/// are excluded from the statistics and counted in [`non_finite`]
+/// instead: `f64::total_cmp` sorts NaN *last*, so including them would
+/// silently poison `max` (and, with enough of them, `p90`/`p99`) and
+/// turn `mean` into NaN for the whole run.
+///
+/// [`non_finite`]: Percentiles::non_finite
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Percentiles {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
     pub mean: f64,
     pub max: f64,
+    /// Samples dropped from the statistics for being NaN or ±∞.
+    pub non_finite: usize,
 }
 
 impl Percentiles {
+    /// All-zero summary — the "no samples" placeholder.
+    pub const ZERO: Percentiles = Percentiles {
+        p50: 0.0,
+        p90: 0.0,
+        p99: 0.0,
+        mean: 0.0,
+        max: 0.0,
+        non_finite: 0,
+    };
+
     pub fn compute(samples: &[f64]) -> Option<Percentiles> {
         if samples.is_empty() {
             return None;
         }
-        let mut s: Vec<f64> = samples.to_vec();
-        // total order (NaN sorts last) — a poisoned sample must not
-        // panic the metrics pass of an otherwise-survived run
+        // a poisoned sample must not panic — or silently poison — the
+        // metrics pass of an otherwise-survived run: keep the finite
+        // samples, count the rest
+        let mut s: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        let non_finite = samples.len() - s.len();
+        if s.is_empty() {
+            return Some(Percentiles {
+                non_finite,
+                ..Percentiles::ZERO
+            });
+        }
         s.sort_by(f64::total_cmp);
         let at = |q: f64| s[((s.len() - 1) as f64 * q).floor() as usize];
         Some(Percentiles {
@@ -27,6 +55,7 @@ impl Percentiles {
             p99: at(0.99),
             mean: s.iter().sum::<f64>() / s.len() as f64,
             max: s[s.len() - 1],
+            non_finite,
         })
     }
 }
@@ -149,6 +178,16 @@ impl ServeMetrics {
             "simulated accel time    {:>10.2} ms ({:.1} tok/s)\n",
             self.simulated_accel_ms, self.simulated_tokens_per_s
         ));
+        let dropped = self.step_ms.non_finite
+            + self.request_latency_ms.non_finite
+            + self.ttft_ms.non_finite
+            + self.batch_width.non_finite;
+        if dropped > 0 {
+            out.push_str(&format!(
+                "non-finite samples      {:>10} (dropped from the stats above)\n",
+                dropped
+            ));
+        }
         out
     }
 }
@@ -178,5 +217,68 @@ mod tests {
         let p = Percentiles::compute(&[7.0]).unwrap();
         assert_eq!(p.p50, 7.0);
         assert_eq!(p.p99, 7.0);
+    }
+
+    #[test]
+    fn nan_samples_are_dropped_not_poisoning() {
+        // regression: total_cmp sorts NaN last, so one NaN used to make
+        // `max` (and `mean`) print as NaN in the serve table
+        let samples = [1.0, f64::NAN, 3.0, 2.0];
+        let p = Percentiles::compute(&samples).unwrap();
+        assert_eq!(p.non_finite, 1);
+        assert_eq!(p.max, 3.0);
+        assert_eq!(p.p50, 2.0);
+        assert!((p.mean - 2.0).abs() < 1e-12);
+        assert!(p.p90.is_finite() && p.p99.is_finite());
+    }
+
+    #[test]
+    fn infinities_count_as_non_finite() {
+        let samples = [f64::INFINITY, 5.0, f64::NEG_INFINITY, f64::NAN, 1.0];
+        let p = Percentiles::compute(&samples).unwrap();
+        assert_eq!(p.non_finite, 3);
+        assert_eq!(p.max, 5.0);
+        assert_eq!(p.p50, 1.0);
+        assert!((p.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_non_finite_yields_zeroed_stats_with_count() {
+        let p = Percentiles::compute(&[f64::NAN, f64::INFINITY]).unwrap();
+        assert_eq!(p.non_finite, 2);
+        assert_eq!(p.max, 0.0);
+        assert_eq!(p.mean, 0.0);
+        // empty input still reports "no data", distinct from "all bad"
+        assert!(Percentiles::compute(&[]).is_none());
+    }
+
+    #[test]
+    fn format_table_surfaces_dropped_samples() {
+        let mut m = ServeMetrics {
+            requests: 1,
+            requests_admitted: 1,
+            requests_rejected: 0,
+            requests_failed: 0,
+            preemptions: 0,
+            requeues: 0,
+            deadline_expired: 0,
+            total_tokens_generated: 4,
+            iterations: 4,
+            wall_s: 0.1,
+            step_ms: Percentiles::compute(&[1.0, f64::NAN, 2.0]).unwrap(),
+            request_latency_ms: Percentiles::ZERO,
+            ttft_ms: Percentiles::ZERO,
+            mean_occupancy: 1.0,
+            batch_width: Percentiles::ZERO,
+            weight_passes: 4,
+            weight_passes_per_step: 1.0,
+            tokens_per_s: 40.0,
+            simulated_accel_ms: 0.5,
+            simulated_tokens_per_s: 8000.0,
+        };
+        assert!(m.format_table().contains("non-finite samples"));
+        assert!(!m.format_table().contains("NaN"), "stats must stay finite");
+        m.step_ms = Percentiles::ZERO;
+        assert!(!m.format_table().contains("non-finite samples"));
     }
 }

@@ -159,12 +159,9 @@ impl<'e> Server<'e> {
             total_tokens_generated: total_tokens,
             iterations: iteration,
             wall_s,
-            step_ms: Percentiles::compute(&step_ms)
-                .unwrap_or(Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }),
-            request_latency_ms: Percentiles::compute(&latencies)
-                .unwrap_or(Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }),
-            ttft_ms: Percentiles::compute(&ttfts)
-                .unwrap_or(Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }),
+            step_ms: Percentiles::compute(&step_ms).unwrap_or(Percentiles::ZERO),
+            request_latency_ms: Percentiles::compute(&latencies).unwrap_or(Percentiles::ZERO),
+            ttft_ms: Percentiles::compute(&ttfts).unwrap_or(Percentiles::ZERO),
             mean_occupancy: if iteration > 0 {
                 occupancy_acc / iteration as f64
             } else {
@@ -173,7 +170,7 @@ impl<'e> Server<'e> {
             // the PJRT executable is inherently batched: every iteration
             // is one engine call over the whole lane array — one weight
             // pass per step by construction (width not tracked here)
-            batch_width: Percentiles { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 },
+            batch_width: Percentiles::ZERO,
             weight_passes: iteration,
             weight_passes_per_step: if iteration > 0 { 1.0 } else { 0.0 },
             tokens_per_s: total_tokens as f64 / wall_s,

@@ -19,7 +19,12 @@ pub const ONE: i32 = 1 << FRAC_BITS;
 pub const RESOLUTION: f64 = 1.0 / ONE as f64;
 
 /// A Q15.17 fixed-point number stored in an `i32`.
+///
+/// `repr(transparent)` guarantees the layout matches `i32` exactly, so
+/// the SIMD microkernels (`kernels::simd_avx2`) may reinterpret
+/// `&[Fxp32]` as a run of raw `i32` lanes.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+#[repr(transparent)]
 pub struct Fxp32(pub i32);
 
 impl Fxp32 {

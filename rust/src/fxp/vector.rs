@@ -10,8 +10,25 @@ use super::q1517::{Fxp32, FRAC_BITS};
 
 /// Dot product with a wide (i64) accumulator and a single rounding on
 /// writeback — the DSP-cascade behaviour of the MAC array.
+///
+/// The wide accumulation is dispatched through
+/// [`crate::kernels::isa::active`]; integer sums reassociate freely, so
+/// the result is **bit-exact across every dispatch target**. The single
+/// Q34 → Q17 rounding happens here, after the table call.
 #[inline]
 pub fn dot(a: &[Fxp32], b: &[Fxp32]) -> Fxp32 {
+    debug_assert_eq!(a.len(), b.len());
+    let acc = (crate::kernels::isa::active().dot_fxp_wide)(a, b);
+    // one rounding at the end: Q34 → Q17
+    let rounded = (acc + (1i64 << (FRAC_BITS - 1))) >> FRAC_BITS;
+    Fxp32::from_raw(rounded.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+}
+
+/// Scalar body of the wide dot: the unrounded `Σ raw(a)·raw(b)` sum.
+/// Registered as the `dot_fxp_wide` fallback in the dispatch table; the
+/// SIMD kernels must match it bit-for-bit.
+#[inline]
+pub(crate) fn dot_wide_scalar(a: &[Fxp32], b: &[Fxp32]) -> i64 {
     debug_assert_eq!(a.len(), b.len());
     // 4 independent accumulators let the compiler vectorize the widening
     // multiply-add chain (§Perf)
@@ -29,9 +46,7 @@ pub fn dot(a: &[Fxp32], b: &[Fxp32]) -> Fxp32 {
     for i in 4 * chunks..n {
         acc += a[i].raw() as i64 * b[i].raw() as i64;
     }
-    // one rounding at the end: Q34 → Q17
-    let rounded = (acc + (1i64 << (FRAC_BITS - 1))) >> FRAC_BITS;
-    Fxp32::from_raw(rounded.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+    acc
 }
 
 /// `y ← a·y + b·x` elementwise — the combined rescale-and-accumulate of the
@@ -46,9 +61,19 @@ pub fn axpby_inplace(a: Fxp32, y: &mut [Fxp32], b: Fxp32, x: &[Fxp32]) {
 }
 
 /// `y ← y + b·x` (the β-branch of Eq. 6 — history untouched, one multiply
-/// per lane; §Perf specialization of `axpby_inplace`).
+/// per lane; §Perf specialization of `axpby_inplace`). Dispatched; the
+/// per-element round/clamp/saturate sequence is **bit-exact across every
+/// dispatch target**.
 #[inline]
 pub fn axpy_inplace(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
+    debug_assert_eq!(y.len(), x.len());
+    (crate::kernels::isa::active().axpy_fxp)(b, y, x)
+}
+
+/// Scalar body of [`axpy_inplace`] — the dispatch fallback and the
+/// bit-exactness reference for the SIMD kernels.
+#[inline]
+pub(crate) fn axpy_scalar(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
     debug_assert_eq!(y.len(), x.len());
     let braw = b.raw() as i64;
     for (yi, xi) in y.iter_mut().zip(x.iter()) {
@@ -58,8 +83,17 @@ pub fn axpy_inplace(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
 }
 
 /// `y ← a·y + x` (the α-branch of Eq. 7 — one multiply per lane).
+/// Dispatched; **bit-exact across every dispatch target**.
 #[inline]
 pub fn scale_axpy_inplace(a: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
+    debug_assert_eq!(y.len(), x.len());
+    (crate::kernels::isa::active().scale_axpy_fxp)(a, y, x)
+}
+
+/// Scalar body of [`scale_axpy_inplace`] — the dispatch fallback and the
+/// bit-exactness reference for the SIMD kernels.
+#[inline]
+pub(crate) fn scale_axpy_scalar(a: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
     debug_assert_eq!(y.len(), x.len());
     let araw = a.raw() as i64;
     for (yi, xi) in y.iter_mut().zip(x.iter()) {

@@ -12,7 +12,10 @@
 //! [`crate::attention::fxp_swiftkv::FxpSwiftKvState`], the fused sweep is
 //! **bit-for-bit identical** to running each query head separately against
 //! its shared KV head — the property `tests/prop_mha_fused.rs` and
-//! `tests/prop_gqa_fused.rs` assert on raw bits.
+//! `tests/prop_gqa_fused.rs` assert on raw bits. The Q15.17 dot/AXPY
+//! inner loops dispatch through [`super::isa`]; every table implements
+//! them bit-exactly (`tests/prop_simd_dispatch.rs`), so the raw-bits
+//! property holds under any `SWIFTKV_ISA` setting.
 
 use crate::fxp::{vector, Exp2Lut, Fxp32};
 

@@ -1,0 +1,243 @@
+//! Runtime ISA dispatch for the hot-loop microkernels.
+//!
+//! Every inner loop the fused decode path leans on — the f32
+//! `dot`/`axpy`/`scale_axpy`/`scale` primitives, the Q15.17 wide-dot and
+//! AXPY updates, the INT8 dot and the INT4-unpack W4A8 column MAC — is
+//! reached through one [`KernelTable`] of plain `fn` pointers. The table
+//! is selected exactly once per process (CPU feature probing via
+//! `is_x86_feature_detected!`, overridable with `SWIFTKV_ISA`) and cached
+//! in a [`OnceLock`], so steady-state dispatch is a single relaxed load —
+//! no per-call feature re-detection, no allocation
+//! (`tests/alloc_hotpath.rs` enforces both).
+//!
+//! ## Numerics contract (per entry, across every dispatch target)
+//!
+//! - `dot_f32`: within normal f32 re-association noise of the scalar
+//!   multi-accumulator version (the AVX2 kernel uses FMA); **not**
+//!   bit-identical across ISAs.
+//! - `axpy_f32` / `scale_axpy_f32` / `scale_f32`: element-wise, one
+//!   IEEE multiply + add per element in scalar program order —
+//!   **bit-identical** across all ISAs (the AVX2 kernels deliberately
+//!   use mul-then-add, not FMA).
+//! - `dot_fxp_wide`, `axpy_fxp`, `scale_axpy_fxp`, `dot_i8`, `w4a8_col`:
+//!   exact integer arithmetic — **bit-exact** across all ISAs.
+//!
+//! `tests/prop_simd_dispatch.rs` enforces the contract by running the
+//! scalar table against the natively selected one on the same inputs.
+//!
+//! ## Override
+//!
+//! `SWIFTKV_ISA=scalar|avx2|neon` pins the table (panicking with a clear
+//! message when the requested ISA is not available on this machine);
+//! empty or `native` keeps autodetection. CI runs the tier-1 suite under
+//! both `scalar` and `native`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::fxp::Fxp32;
+
+/// The instruction sets a [`KernelTable`] can be built for. All variants
+/// exist on every architecture (selection, not compilation, is gated) so
+/// `SWIFTKV_ISA` parsing and diagnostics behave identically everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar fallback (the `chunks_exact` multi-accumulator
+    /// loops) — always available.
+    Scalar,
+    /// x86-64 AVX2 + FMA microkernels.
+    Avx2,
+    /// aarch64 NEON microkernels (f32 lanes; integer entries fall back
+    /// to scalar — see `simd_neon.rs`).
+    Neon,
+}
+
+impl Isa {
+    /// Parse a `SWIFTKV_ISA` value. `None` for unknown names; the
+    /// special value `native` (or empty) is handled by [`active`], not
+    /// here.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// One fn pointer per dispatched microkernel. Selected once per process;
+/// see the module docs for each entry's cross-ISA numerics guarantee.
+pub struct KernelTable {
+    /// Human-readable ISA name (`"scalar"`, `"avx2"`, `"neon"`).
+    pub name: &'static str,
+    /// Which ISA this table implements.
+    pub isa: Isa,
+    /// `Σ a[i]·b[i]` (f32, re-association tolerance).
+    pub dot_f32: fn(&[f32], &[f32]) -> f32,
+    /// `y ← y + β·x` (f32, bit-identical).
+    pub axpy_f32: fn(f32, &mut [f32], &[f32]),
+    /// `y ← α·y + x` (f32, bit-identical).
+    pub scale_axpy_f32: fn(f32, &mut [f32], &[f32]),
+    /// `y ← α·y` (f32, bit-identical).
+    pub scale_f32: fn(f32, &mut [f32]),
+    /// `Σ raw(a[i])·raw(b[i])` as an unrounded wide i64 — the caller
+    /// rounds Q34→Q17 once on writeback (bit-exact).
+    pub dot_fxp_wide: fn(&[Fxp32], &[Fxp32]) -> i64,
+    /// `y ← y sat+ round(β·x)` per element (bit-exact).
+    pub axpy_fxp: fn(Fxp32, &mut [Fxp32], &[Fxp32]),
+    /// `y ← round(α·y) sat+ x` per element (bit-exact).
+    pub scale_axpy_fxp: fn(Fxp32, &mut [Fxp32], &[Fxp32]),
+    /// `Σ a[i]·b[i]` over i8 with an i32 accumulator (bit-exact; callers
+    /// keep `len·|a|·|b| ≪ 2³¹` — the W4A8 panels do by construction).
+    pub dot_i8: fn(&[i8], &[i8]) -> i32,
+    /// One packed-INT4 column MAC'd against an INT8 activation row:
+    /// `(packed_col, din, xs) → Σ w[k]·x[k]` (bit-exact).
+    pub w4a8_col: fn(&[u8], usize, &[i8]) -> i32,
+}
+
+/// The portable fallback table — scalar on every architecture.
+pub static SCALAR: KernelTable = KernelTable {
+    name: "scalar",
+    isa: Isa::Scalar,
+    dot_f32: super::simd::scalar::dot,
+    axpy_f32: super::simd::scalar::axpy,
+    scale_axpy_f32: super::simd::scalar::scale_axpy,
+    scale_f32: super::simd::scalar::scale,
+    dot_fxp_wide: crate::fxp::vector::dot_wide_scalar,
+    axpy_fxp: crate::fxp::vector::axpy_scalar,
+    scale_axpy_fxp: crate::fxp::vector::scale_axpy_scalar,
+    dot_i8: crate::quant::gemv::dot_i8_scalar,
+    w4a8_col: crate::quant::gemv::w4a8_col_scalar,
+};
+
+static ACTIVE: OnceLock<&'static KernelTable> = OnceLock::new();
+static DETECTIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide kernel table: env override or best available ISA,
+/// selected on first call and cached forever.
+#[inline]
+pub fn active() -> &'static KernelTable {
+    ACTIVE.get_or_init(select)
+}
+
+/// Name of the active table (for startup logging / bench annotations).
+pub fn active_name() -> &'static str {
+    active().name
+}
+
+/// How many times the selection path (env read + CPU feature probing)
+/// has run in this process. `tests/alloc_hotpath.rs` asserts this stays
+/// at 1 no matter how many kernel calls are made.
+pub fn detections() -> usize {
+    DETECTIONS.load(Ordering::Relaxed)
+}
+
+/// The table for a specific ISA, or `None` when this machine (or this
+/// build target) cannot run it. `Scalar` always succeeds — tests use
+/// `table_for(Isa::Scalar)` as the reference implementation.
+pub fn table_for(isa: Isa) -> Option<&'static KernelTable> {
+    match isa {
+        Isa::Scalar => Some(&SCALAR),
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            let t = if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                Some(&super::simd_avx2::TABLE)
+            } else {
+                None
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            let t = None;
+            t
+        }
+        Isa::Neon => {
+            // NEON is baseline on aarch64 — no runtime probe needed.
+            #[cfg(target_arch = "aarch64")]
+            let t = Some(&super::simd_neon::TABLE);
+            #[cfg(not(target_arch = "aarch64"))]
+            let t = None;
+            t
+        }
+    }
+}
+
+/// Best table this machine can run (ignoring the env override).
+fn best_available() -> &'static KernelTable {
+    for isa in [Isa::Avx2, Isa::Neon] {
+        if let Some(t) = table_for(isa) {
+            return t;
+        }
+    }
+    &SCALAR
+}
+
+fn select() -> &'static KernelTable {
+    DETECTIONS.fetch_add(1, Ordering::Relaxed);
+    let raw = std::env::var("SWIFTKV_ISA").unwrap_or_default();
+    let want = raw.trim();
+    if want.is_empty() || want == "native" {
+        return best_available();
+    }
+    let isa = Isa::parse(want).unwrap_or_else(|| {
+        panic!("SWIFTKV_ISA='{want}' is not a known ISA (expected scalar|avx2|neon|native)")
+    });
+    table_for(isa).unwrap_or_else(|| {
+        panic!("SWIFTKV_ISA='{want}' requested but this machine/build cannot run it")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_isa_names_only() {
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("avx2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("neon"), Some(Isa::Neon));
+        assert_eq!(Isa::parse("avx512"), None);
+        assert_eq!(Isa::parse("AVX2"), None);
+        assert_eq!(Isa::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_table_is_always_available() {
+        let t = table_for(Isa::Scalar).expect("scalar must exist");
+        assert_eq!(t.name, "scalar");
+        assert_eq!(t.isa, Isa::Scalar);
+    }
+
+    #[test]
+    fn active_selects_once_and_matches_a_real_table() {
+        let a = active();
+        let b = active();
+        assert!(std::ptr::eq(a, b), "active() must cache its selection");
+        assert!(
+            table_for(a.isa).is_some_and(|t| std::ptr::eq(t, a)),
+            "active table must be reachable via table_for"
+        );
+        let before = detections();
+        assert!(before >= 1);
+        for _ in 0..64 {
+            let _ = active();
+        }
+        assert_eq!(detections(), before, "repeat calls must not re-detect");
+    }
+
+    #[test]
+    fn unavailable_tables_are_none_not_panics() {
+        // At most one of avx2/neon can exist on a given target; the
+        // other must report None rather than panicking or mis-selecting.
+        let have: Vec<Isa> = [Isa::Avx2, Isa::Neon]
+            .into_iter()
+            .filter(|&i| table_for(i).is_some())
+            .collect();
+        assert!(have.len() <= 1, "avx2 and neon are mutually exclusive");
+        for isa in have {
+            let t = table_for(isa).expect("checked above");
+            assert_eq!(t.isa, isa);
+        }
+    }
+}

@@ -24,8 +24,11 @@
 //! Per query head the recurrence is identical (same branch structure,
 //! same element-wise update order) to the per-head
 //! [`crate::attention::swiftkv::SwiftKvState`]; only the dot product uses
-//! the multi-accumulator [`super::simd::dot`], so outputs agree with the
-//! per-head path to within f32 re-association noise (≪ 1e-5 relative).
+//! the runtime-dispatched [`super::simd::dot`] (scalar multi-accumulator
+//! or the native SIMD microkernel picked by [`super::isa`]), so outputs
+//! agree with the per-head path to within f32 re-association noise
+//! (≪ 1e-5 relative). The AXPY-shaped row updates dispatch too, but
+//! those are bit-identical across ISAs by contract.
 
 use super::simd;
 

@@ -6,9 +6,15 @@
 //! a uniform pipeline; no per-head re-scan, no intermediate buffers. This
 //! module is the same restructuring applied to the Rust model:
 //!
-//! - [`simd`] — `chunks_exact`-based multi-accumulator `dot`/`axpy`/
-//!   `scale_axpy` primitives (the 4-lane trick of `quant::gemv`,
-//!   generalized),
+//! - [`isa`] — the runtime ISA dispatch table: every hot microkernel
+//!   (f32 `dot`/`axpy`/`scale_axpy`/`scale`, the Q15.17 wide dot and
+//!   AXPY updates, the INT8 dot and W4A8 column MAC) is a `fn` pointer
+//!   selected once per process from CPU feature detection
+//!   (`SWIFTKV_ISA=scalar|avx2|neon` overrides for testing),
+//! - [`simd`] — the f32 primitive facade over the dispatch table, with
+//!   the portable `chunks_exact` multi-accumulator scalar fallback
+//!   (hand-written AVX2 and NEON implementations live in `simd_avx2` /
+//!   `simd_neon`),
 //! - [`mha::MhaSwiftKv`] — all heads' `(μ, Z, Y)` state packed
 //!   contiguously, advanced per interleaved cache row in a single sweep
 //!   (f32 numerics). Grouped-query attention is first-class: with
@@ -45,11 +51,16 @@
 //! the whole fused-kernel surface is reachable from one path.
 
 pub mod fxp_mha;
+pub mod isa;
 pub mod mha;
 pub mod paged;
 pub mod pool;
 pub mod scratch;
 pub mod simd;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod simd_avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod simd_neon;
 
 pub use crate::quant::{gemv_w4a8_into, quantize_int8_into};
 pub use fxp_mha::FxpMhaSwiftKv;

@@ -1,86 +1,126 @@
-//! SIMD-width f32 primitives for the fused decode kernels.
+//! SIMD-width f32 primitives for the fused decode kernels, dispatched
+//! at runtime through [`super::isa`].
 //!
-//! Every loop is written over `chunks_exact(LANES)` with independent
-//! accumulators/lanes so the compiler auto-vectorizes the body (the same
-//! 4-lane trick [`crate::quant::gemv`] uses for the INT4 MAC loop and
-//! [`crate::fxp::vector::dot`] uses for the wide-accumulator dot). The
-//! remainder loops keep every function correct for arbitrary lengths —
-//! odd `d`, `d` not a multiple of the unroll width, `d < LANES`.
+//! Each public function forwards to the process-wide [`super::isa::active`]
+//! kernel table: hand-written AVX2 on x86-64 with AVX2+FMA, NEON on
+//! aarch64, and the portable [`scalar`] fallback everywhere else (or
+//! under `SWIFTKV_ISA=scalar`). The scalar bodies are the original
+//! `chunks_exact(LANES)` multi-accumulator loops.
 //!
-//! Numerics note: [`dot`] sums in four partial accumulators and combines
-//! them pairwise, so it is *not* bit-identical to a sequential reduction
-//! (`attention::dot_f32`); the difference is bounded by normal f32
-//! re-association noise (≤ a few ulp per element). [`axpy`] and
-//! [`scale_axpy`] are element-wise and bit-identical to their scalar
-//! counterparts.
+//! Cross-ISA numerics guarantees (enforced by
+//! `tests/prop_simd_dispatch.rs` against the scalar table):
+//!
+//! - [`dot`]: partial-sum order differs per ISA (and the AVX2 kernel
+//!   uses FMA), so results agree only within normal f32 re-association
+//!   noise (≤ a few ulp per element) — same caveat the scalar version
+//!   already carried vs a sequential reduction.
+//! - [`axpy`], [`scale_axpy`], [`scale`]: element-wise with one IEEE
+//!   multiply and one add per element in scalar program order on every
+//!   ISA — **bit-identical** across dispatch targets.
 
-/// Unroll width of the inner loops (f32 lanes per step).
+/// Unroll width of the scalar fallback's inner loops (f32 lanes per
+/// step). Vector ISAs use wider hardware lanes (8 on AVX2, 4 on NEON);
+/// property tests sweep lengths around all of these widths.
 pub const LANES: usize = 4;
 
-/// Dot product with four independent accumulators (vectorizable).
+/// Dot product — dispatched; re-association tolerance across ISAs.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let ca = a.chunks_exact(LANES);
-    let cb = b.chunks_exact(LANES);
-    let ra = ca.remainder();
-    let rb = cb.remainder();
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for (x, y) in ca.zip(cb) {
-        a0 += x[0] * y[0];
-        a1 += x[1] * y[1];
-        a2 += x[2] * y[2];
-        a3 += x[3] * y[3];
-    }
-    let mut s = (a0 + a1) + (a2 + a3);
-    for (x, y) in ra.iter().zip(rb) {
-        s += x * y;
-    }
-    s
+    (super::isa::active().dot_f32)(a, b)
 }
 
 /// `y ← y + β·x` — the β-branch of Eq. (6) (history untouched).
+/// Dispatched; bit-identical across ISAs.
 #[inline]
 pub fn axpy(beta: f32, y: &mut [f32], x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    let split = y.len() - y.len() % LANES;
-    let (yv, yr) = y.split_at_mut(split);
-    let (xv, xr) = x.split_at(split);
-    for (yc, xc) in yv.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
-        yc[0] += beta * xc[0];
-        yc[1] += beta * xc[1];
-        yc[2] += beta * xc[2];
-        yc[3] += beta * xc[3];
-    }
-    for (yi, xi) in yr.iter_mut().zip(xr) {
-        *yi += beta * xi;
-    }
+    (super::isa::active().axpy_f32)(beta, y, x)
 }
 
 /// `y ← α·y + x` — the α-branch of Eq. (7) (history rescaled, new token
-/// folded in at weight 1).
+/// folded in at weight 1). Dispatched; bit-identical across ISAs.
 #[inline]
 pub fn scale_axpy(alpha: f32, y: &mut [f32], x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    let split = y.len() - y.len() % LANES;
-    let (yv, yr) = y.split_at_mut(split);
-    let (xv, xr) = x.split_at(split);
-    for (yc, xc) in yv.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
-        yc[0] = alpha * yc[0] + xc[0];
-        yc[1] = alpha * yc[1] + xc[1];
-        yc[2] = alpha * yc[2] + xc[2];
-        yc[3] = alpha * yc[3] + xc[3];
-    }
-    for (yi, xi) in yr.iter_mut().zip(xr) {
-        *yi = alpha * *yi + xi;
-    }
+    (super::isa::active().scale_axpy_f32)(alpha, y, x)
 }
 
-/// `y ← α·y` in place.
+/// `y ← α·y` in place. Dispatched; bit-identical across ISAs.
 #[inline]
 pub fn scale(alpha: f32, y: &mut [f32]) {
-    for yi in y.iter_mut() {
-        *yi *= alpha;
+    (super::isa::active().scale_f32)(alpha, y)
+}
+
+/// The portable scalar kernels — the dispatch fallback and the reference
+/// implementation the property tests compare every other ISA against.
+///
+/// Every loop is written over `chunks_exact(LANES)` with independent
+/// accumulators/lanes so the compiler auto-vectorizes the body (the same
+/// 4-lane trick [`crate::quant::gemv`] uses for the INT4 MAC loop and
+/// [`crate::fxp::vector::dot`] uses for the wide-accumulator dot). The
+/// remainder loops keep every function correct for arbitrary lengths —
+/// odd `d`, `d` not a multiple of the unroll width, `d < LANES`.
+pub(crate) mod scalar {
+    use super::LANES;
+
+    /// Dot product with four independent accumulators (vectorizable).
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let ca = a.chunks_exact(LANES);
+        let cb = b.chunks_exact(LANES);
+        let ra = ca.remainder();
+        let rb = cb.remainder();
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (x, y) in ca.zip(cb) {
+            a0 += x[0] * y[0];
+            a1 += x[1] * y[1];
+            a2 += x[2] * y[2];
+            a3 += x[3] * y[3];
+        }
+        let mut s = (a0 + a1) + (a2 + a3);
+        for (x, y) in ra.iter().zip(rb) {
+            s += x * y;
+        }
+        s
+    }
+
+    /// `y ← y + β·x`, one multiply + add per element.
+    pub fn axpy(beta: f32, y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let split = y.len() - y.len() % LANES;
+        let (yv, yr) = y.split_at_mut(split);
+        let (xv, xr) = x.split_at(split);
+        for (yc, xc) in yv.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
+            yc[0] += beta * xc[0];
+            yc[1] += beta * xc[1];
+            yc[2] += beta * xc[2];
+            yc[3] += beta * xc[3];
+        }
+        for (yi, xi) in yr.iter_mut().zip(xr) {
+            *yi += beta * xi;
+        }
+    }
+
+    /// `y ← α·y + x`, one multiply + add per element.
+    pub fn scale_axpy(alpha: f32, y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let split = y.len() - y.len() % LANES;
+        let (yv, yr) = y.split_at_mut(split);
+        let (xv, xr) = x.split_at(split);
+        for (yc, xc) in yv.chunks_exact_mut(LANES).zip(xv.chunks_exact(LANES)) {
+            yc[0] = alpha * yc[0] + xc[0];
+            yc[1] = alpha * yc[1] + xc[1];
+            yc[2] = alpha * yc[2] + xc[2];
+            yc[3] = alpha * yc[3] + xc[3];
+        }
+        for (yi, xi) in yr.iter_mut().zip(xr) {
+            *yi = alpha * *yi + xi;
+        }
+    }
+
+    /// `y ← α·y` in place.
+    pub fn scale(alpha: f32, y: &mut [f32]) {
+        for yi in y.iter_mut() {
+            *yi *= alpha;
+        }
     }
 }
 

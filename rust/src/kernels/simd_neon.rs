@@ -1,0 +1,138 @@
+//! NEON microkernels behind [`super::isa`] (aarch64).
+//!
+//! NEON is part of the aarch64 baseline, so [`super::isa::table_for`]
+//! registers this table unconditionally on that architecture. The f32
+//! entries are vectorized 4-wide; the Q15.17 and integer entries
+//! deliberately reuse the scalar kernels — they are bit-exact by
+//! definition, and this keeps the amount of unsafe code that CI can only
+//! type-check (via `cargo check --target aarch64-unknown-linux-gnu`)
+//! to the minimum. Widening them is a follow-up once an aarch64 runner
+//! can execute the property suite.
+//!
+//! Numerics: [`dot_f32`] uses `vfmaq_f32` (FMA) — re-association
+//! tolerance like the AVX2 kernel; `axpy`/`scale_axpy`/`scale` use
+//! mul-then-add and are bit-identical to scalar.
+
+use std::arch::aarch64::*;
+
+use super::isa::{Isa, KernelTable};
+
+/// The NEON kernel table (see module docs for the numerics contract).
+pub static TABLE: KernelTable = KernelTable {
+    name: "neon",
+    isa: Isa::Neon,
+    dot_f32,
+    axpy_f32,
+    scale_axpy_f32,
+    scale_f32,
+    dot_fxp_wide: crate::fxp::vector::dot_wide_scalar,
+    axpy_fxp: crate::fxp::vector::axpy_scalar,
+    scale_axpy_fxp: crate::fxp::vector::scale_axpy_scalar,
+    dot_i8: crate::quant::gemv::dot_i8_scalar,
+    w4a8_col: crate::quant::gemv::w4a8_col_scalar,
+};
+
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: NEON is baseline on every aarch64 target this module
+    // compiles for.
+    unsafe { dot_f32_neon(a, b) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        i += 8;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        i += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        s += *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+    s
+}
+
+fn axpy_f32(beta: f32, y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    // SAFETY: NEON is baseline on aarch64.
+    unsafe { axpy_f32_neon(beta, y, x) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32_neon(beta: f32, y: &mut [f32], x: &[f32]) {
+    let n = y.len();
+    let py = y.as_mut_ptr();
+    let px = x.as_ptr();
+    let vb = vdupq_n_f32(beta);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        // mul then add — NOT vfmaq — bit-identical to the scalar kernel
+        let yv = vld1q_f32(py.add(i));
+        let xv = vld1q_f32(px.add(i));
+        vst1q_f32(py.add(i), vaddq_f32(yv, vmulq_f32(vb, xv)));
+        i += 4;
+    }
+    while i < n {
+        *py.add(i) += beta * *px.add(i);
+        i += 1;
+    }
+}
+
+fn scale_axpy_f32(alpha: f32, y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    // SAFETY: NEON is baseline on aarch64.
+    unsafe { scale_axpy_f32_neon(alpha, y, x) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn scale_axpy_f32_neon(alpha: f32, y: &mut [f32], x: &[f32]) {
+    let n = y.len();
+    let py = y.as_mut_ptr();
+    let px = x.as_ptr();
+    let va = vdupq_n_f32(alpha);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        // mul then add (no FMA): bit-identical to `y[i] = alpha*y[i] + x[i]`
+        let yv = vld1q_f32(py.add(i));
+        let xv = vld1q_f32(px.add(i));
+        vst1q_f32(py.add(i), vaddq_f32(vmulq_f32(va, yv), xv));
+        i += 4;
+    }
+    while i < n {
+        *py.add(i) = alpha * *py.add(i) + *px.add(i);
+        i += 1;
+    }
+}
+
+fn scale_f32(alpha: f32, y: &mut [f32]) {
+    // SAFETY: NEON is baseline on aarch64.
+    unsafe { scale_f32_neon(alpha, y) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn scale_f32_neon(alpha: f32, y: &mut [f32]) {
+    let n = y.len();
+    let py = y.as_mut_ptr();
+    let va = vdupq_n_f32(alpha);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vst1q_f32(py.add(i), vmulq_f32(va, vld1q_f32(py.add(i))));
+        i += 4;
+    }
+    while i < n {
+        *py.add(i) *= alpha;
+        i += 1;
+    }
+}

@@ -89,6 +89,10 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
     // the synthetic fallback model's query-head count; --kv-heads must
     // divide it (only meaningful when artifacts are absent)
     const SYNTH_HEADS: usize = 8;
+    println!(
+        "(kernel dispatch: {} microkernels — override with SWIFTKV_ISA)",
+        swiftkv::kernels::isa::active_name()
+    );
     let tm = if artifacts_available() {
         if args.get("kv-heads").is_some() {
             println!(

@@ -3,9 +3,24 @@
 //! `INT8 activation × INT4 weight → INT32` accumulate, dequantized on
 //! writeback — exact integer arithmetic, so results are bit-identical to
 //! the Pallas GEMV kernel for identical quantized inputs.
+//!
+//! The inner MAC loops are dispatched through
+//! [`crate::kernels::isa::active`] (AVX2 nibble-unpack + `madd` kernels
+//! when available, the scalar four-accumulator loops otherwise); every
+//! entry is exact integer arithmetic, so outputs are **bit-exact across
+//! all dispatch targets**. The batched GEMM additionally blocks the
+//! reduction dimension into [`GEMM_KC`]-lane panels, unpacking each
+//! packed-nibble panel once and reusing it across every lane
+//! (GotoBLAS-style cache blocking — see EXPERIMENTS.md §SIMD-dispatch).
 
-use super::int4::Int4Matrix;
+use super::int4::{unpack_int4, Int4Matrix};
 use super::int8::QuantizedVec;
+
+/// Reduction-dimension (K) panel length of the batched GEMM: the nibble
+/// panel unpacked per column (`GEMM_KC` i8 lanes = 1 KiB) plus one
+/// activation row segment per lane stay resident in L1 while every lane
+/// MACs against them. Even, so panels start on a packed-byte boundary.
+pub const GEMM_KC: usize = 1024;
 
 /// `y = dequant(Wᵀ x)` for a packed INT4 matrix and an INT8 vector.
 pub fn gemv_w4a8(x: &QuantizedVec, w: &Int4Matrix) -> Vec<f32> {
@@ -31,45 +46,78 @@ pub fn gemv_w4a8_into(x: &QuantizedVec, w: &Int4Matrix, out: &mut [f32]) {
 pub fn gemv_w4a8_raw_into(xs: &[i8], xscale: f32, w: &Int4Matrix, out: &mut [f32]) {
     assert_eq!(xs.len(), w.din, "dimension mismatch");
     assert_eq!(out.len(), w.dout, "output length mismatch");
+    let t = crate::kernels::isa::active();
     let stride = w.din.div_ceil(2);
     for (j, o) in out.iter_mut().enumerate() {
         let col = &w.packed[j * stride..(j + 1) * stride];
-        let mut acc0 = 0i32;
-        let mut acc1 = 0i32;
-        let mut acc2 = 0i32;
-        let mut acc3 = 0i32;
-        let pairs = w.din / 2;
-        let mut b = 0;
-        // 2 bytes (4 lanes) per step
-        while b + 2 <= pairs {
-            let byte0 = col[b];
-            let byte1 = col[b + 1];
-            let lo0 = (((byte0 & 0x0F) << 4) as i8 >> 4) as i32;
-            let hi0 = ((byte0 >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
-            let lo1 = (((byte1 & 0x0F) << 4) as i8 >> 4) as i32;
-            let hi1 = ((byte1 >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
-            acc0 += xs[2 * b] as i32 * lo0;
-            acc1 += xs[2 * b + 1] as i32 * hi0;
-            acc2 += xs[2 * b + 2] as i32 * lo1;
-            acc3 += xs[2 * b + 3] as i32 * hi1;
-            b += 2;
-        }
-        while b < pairs {
-            let byte = col[b];
-            let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
-            let hi = ((byte >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
-            acc0 += xs[2 * b] as i32 * lo;
-            acc1 += xs[2 * b + 1] as i32 * hi;
-            b += 1;
-        }
-        if w.din % 2 == 1 {
-            let byte = col[pairs];
-            let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
-            acc0 += xs[w.din - 1] as i32 * lo;
-        }
-        let acc = acc0 + acc1 + acc2 + acc3;
+        let acc = (t.w4a8_col)(col, w.din, xs);
         *o = acc as f32 * xscale * w.scales[j];
     }
+}
+
+/// Scalar body of one packed column's fused nibble-unpack + MAC loop —
+/// the `w4a8_col` dispatch fallback and the bit-exactness reference for
+/// the SIMD kernels. 2 bytes (4 lanes) per step with four independent
+/// i32 accumulators so the compiler vectorizes the reduction.
+pub(crate) fn w4a8_col_scalar(col: &[u8], din: usize, xs: &[i8]) -> i32 {
+    debug_assert_eq!(xs.len(), din);
+    debug_assert!(col.len() >= din.div_ceil(2));
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    let mut acc2 = 0i32;
+    let mut acc3 = 0i32;
+    let pairs = din / 2;
+    let mut b = 0;
+    // 2 bytes (4 lanes) per step
+    while b + 2 <= pairs {
+        let byte0 = col[b];
+        let byte1 = col[b + 1];
+        let lo0 = (((byte0 & 0x0F) << 4) as i8 >> 4) as i32;
+        let hi0 = ((byte0 >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+        let lo1 = (((byte1 & 0x0F) << 4) as i8 >> 4) as i32;
+        let hi1 = ((byte1 >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+        acc0 += xs[2 * b] as i32 * lo0;
+        acc1 += xs[2 * b + 1] as i32 * hi0;
+        acc2 += xs[2 * b + 2] as i32 * lo1;
+        acc3 += xs[2 * b + 3] as i32 * hi1;
+        b += 2;
+    }
+    while b < pairs {
+        let byte = col[b];
+        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
+        let hi = ((byte >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
+        acc0 += xs[2 * b] as i32 * lo;
+        acc1 += xs[2 * b + 1] as i32 * hi;
+        b += 1;
+    }
+    if din % 2 == 1 {
+        let byte = col[pairs];
+        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
+        acc0 += xs[din - 1] as i32 * lo;
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// Scalar i8·i8 → i32 dot — the `dot_i8` dispatch fallback (the batched
+/// GEMM's panel MAC) and the bit-exactness reference for the SIMD
+/// kernels. Four independent accumulators, exact integer arithmetic.
+pub(crate) fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+    for i in 0..chunks {
+        let k = 4 * i;
+        a0 += a[k] as i32 * b[k] as i32;
+        a1 += a[k + 1] as i32 * b[k + 1] as i32;
+        a2 += a[k + 2] as i32 * b[k + 2] as i32;
+        a3 += a[k + 3] as i32 * b[k + 3] as i32;
+    }
+    let mut acc = a0 + a1 + a2 + a3;
+    for i in 4 * chunks..n {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
 }
 
 /// The batched GEMM core on raw quantized lanes: `b` INT8 activation
@@ -113,11 +161,20 @@ pub fn gemm_w4a8_raw_cols_into(
 /// Raw-pointer form of [`gemm_w4a8_raw_cols_into`], for callers that
 /// split one output buffer across worker threads by column range.
 ///
+/// GotoBLAS-style K blocking: per column, the packed nibbles are
+/// unpacked once per [`GEMM_KC`]-lane panel into a stack-resident i8
+/// panel, and every lane MACs its activation-row segment against that
+/// panel through the dispatched `dot_i8` microkernel. The i32 partial
+/// sums are exact (integer adds reassociate freely), so lane outputs
+/// stay **bit-identical** to a solo [`gemv_w4a8_raw_into`]; partials for
+/// multi-panel `din` ride in the output slot bit-cast (i32 in the f32
+/// bits) so the hot path stays allocation-free.
+///
 /// # Safety
 /// `out` must point to a live `[b * w.dout]` f32 buffer (`b =
 /// xscales.len()`, `out_len` its exact length) for the duration of the
 /// call, and concurrent callers over the same buffer must use disjoint
-/// `j0..j1` ranges — each call writes exactly the elements
+/// `j0..j1` ranges — each call writes only the elements
 /// `out[i * w.dout + j]` for `j0 <= j < j1`, nothing else.
 pub unsafe fn gemm_w4a8_raw_cols_ptr(
     xs: &[i8],
@@ -132,67 +189,46 @@ pub unsafe fn gemm_w4a8_raw_cols_ptr(
     assert_eq!(xs.len(), b * w.din, "activation batch dimension mismatch");
     assert_eq!(out_len, b * w.dout, "output batch length mismatch");
     assert!(j0 <= j1 && j1 <= w.dout, "column range out of bounds");
+    let t = crate::kernels::isa::active();
     let stride = w.din.div_ceil(2);
+    let mut panel = [0i8; GEMM_KC];
     for j in j0..j1 {
         let col = &w.packed[j * stride..(j + 1) * stride];
         let wscale = w.scales[j];
-        let mut lane = 0;
-        while lane + 4 <= b {
-            let accs = gemm_col::<4>(col, w.din, xs, lane);
-            for (t, &acc) in accs.iter().enumerate() {
-                out.add((lane + t) * w.dout + j)
-                    .write(acc as f32 * xscales[lane + t] * wscale);
+        if w.din == 0 {
+            for i in 0..b {
+                out.add(i * w.dout + j).write(0.0);
             }
-            lane += 4;
+            continue;
         }
-        let write_accs = |accs: &[i32], out: *mut f32| {
-            for (t, &acc) in accs.iter().enumerate() {
-                // Safety (caller contract): in-bounds column j of lane row
-                unsafe {
-                    out.add((lane + t) * w.dout + j)
-                        .write(acc as f32 * xscales[lane + t] * wscale);
+        let mut k0 = 0usize;
+        while k0 < w.din {
+            let k1 = (k0 + GEMM_KC).min(w.din);
+            let klen = k1 - k0;
+            // GEMM_KC is even, so each panel starts on a byte boundary
+            unpack_int4(&col[k0 / 2..], &mut panel[..klen]);
+            let first = k0 == 0;
+            let last = k1 == w.din;
+            for i in 0..b {
+                let row = &xs[i * w.din + k0..i * w.din + k1];
+                let part = (t.dot_i8)(&panel[..klen], row);
+                let idx = i * w.dout + j;
+                // i32 partials live in the f32 slot's bits between
+                // panels; the last panel dequantizes on writeback
+                let acc = if first {
+                    part
+                } else {
+                    (out.add(idx) as *mut u32).read() as i32 + part
+                };
+                if last {
+                    out.add(idx).write(acc as f32 * xscales[i] * wscale);
+                } else {
+                    (out.add(idx) as *mut u32).write(acc as u32);
                 }
             }
-        };
-        match b - lane {
-            0 => {}
-            1 => write_accs(&gemm_col::<1>(col, w.din, xs, lane), out),
-            2 => write_accs(&gemm_col::<2>(col, w.din, xs, lane), out),
-            _ => write_accs(&gemm_col::<3>(col, w.din, xs, lane), out),
+            k0 = k1;
         }
     }
-}
-
-/// One packed column against `NL` activation lanes: each byte is
-/// unpacked once and both nibbles MAC into per-lane accumulator pairs.
-/// The i32 accumulation is exact, so the per-lane sums equal what
-/// [`gemv_w4a8_raw_into`]'s four-accumulator loop produces.
-#[inline(always)]
-fn gemm_col<const NL: usize>(col: &[u8], din: usize, xs: &[i8], lane0: usize) -> [i32; NL] {
-    let mut acc_lo = [0i32; NL];
-    let mut acc_hi = [0i32; NL];
-    let pairs = din / 2;
-    // per-lane activation rows, fixed for the whole column walk
-    let rows: [&[i8]; NL] = std::array::from_fn(|t| {
-        let at = (lane0 + t) * din;
-        &xs[at..at + din]
-    });
-    for (i, &byte) in col[..pairs].iter().enumerate() {
-        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
-        let hi = ((byte >> 4) as i8).wrapping_shl(4).wrapping_shr(4) as i32;
-        for ((al, ah), row) in acc_lo.iter_mut().zip(acc_hi.iter_mut()).zip(rows.iter()) {
-            *al += row[2 * i] as i32 * lo;
-            *ah += row[2 * i + 1] as i32 * hi;
-        }
-    }
-    if din % 2 == 1 {
-        let byte = col[pairs];
-        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as i32;
-        for (al, row) in acc_lo.iter_mut().zip(rows.iter()) {
-            *al += row[din - 1] as i32 * lo;
-        }
-    }
-    std::array::from_fn(|t| acc_lo[t] + acc_hi[t])
 }
 
 /// A quantized linear layer: packed weights + the f32 forward that first

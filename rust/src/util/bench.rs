@@ -205,6 +205,13 @@ pub struct GateReport {
     /// Gated rows past the threshold, plus gated baseline entries
     /// missing from the current run.
     pub failures: Vec<String>,
+    /// Gate substrings that matched **zero** benchmarks in the baseline
+    /// or in the current document (entries read `"<substr> (no match in
+    /// <which>)"`). A dead substring means the gate silently lost
+    /// coverage — e.g. the gated benches were renamed, or a new gate
+    /// entry predates its benches landing in the baseline. Reported as
+    /// a loud warning in the markdown, never a failure.
+    pub dead_gate_substrings: Vec<String>,
     /// Benchmarks present in the baseline document. `0` means the gate
     /// is **vacuous** — nothing can fail; `bench_gate --require-baseline`
     /// turns that into a hard error so CI cannot silently run ungated.
@@ -283,6 +290,14 @@ impl GateReport {
                 self.missing.join(", ")
             ));
         }
+        if !self.dead_gate_substrings.is_empty() {
+            out.push_str(&format!(
+                "\n⚠ gate substring(s) matching zero benchmarks: {} — \
+                 the gate may have lost coverage (renamed benches, or a \
+                 stale baseline missing the new ones)\n",
+                self.dead_gate_substrings.join(", ")
+            ));
+        }
         if self.passed() {
             out.push_str("\n**GATE OK**\n");
         } else {
@@ -342,17 +357,31 @@ pub fn compare_bench_json(
         Ok(out)
     };
     let base: BTreeMap<String, f64> = entries(baseline, "baseline")?.into_iter().collect();
+    let cur_entries = entries(current, "current")?;
+    // surface gate substrings that gate nothing in either document — a
+    // dead substring means a rename (or a stale baseline) silently
+    // removed coverage from the gate
+    let mut dead_gate_substrings = Vec::new();
+    for s in gate_substr.split(',').filter(|s| !s.is_empty()) {
+        if !base.keys().any(|n| n.contains(s)) {
+            dead_gate_substrings.push(format!("`{s}` (no match in baseline)"));
+        }
+        if !cur_entries.iter().any(|(n, _)| n.contains(s)) {
+            dead_gate_substrings.push(format!("`{s}` (no match in current)"));
+        }
+    }
     let mut report = GateReport {
         rows: Vec::new(),
         unmatched: Vec::new(),
         missing: Vec::new(),
         failures: Vec::new(),
+        dead_gate_substrings,
         baseline_count: base.len(),
         gate_substr: gate_substr.to_string(),
         max_regress_pct,
     };
     let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
-    for (name, cur_ns) in entries(current, "current")? {
+    for (name, cur_ns) in cur_entries {
         seen.insert(name.clone());
         match base.get(&name) {
             Some(&base_ns) => {
@@ -567,6 +596,35 @@ mod tests {
         .unwrap();
         assert!(!r.passed());
         assert!(r.failures[0].contains("gemm_w4a8"));
+    }
+
+    #[test]
+    fn gate_warns_on_substrings_matching_zero_benches() {
+        // regression: a gate substring with no matching bench in either
+        // document (rename, or a stale baseline predating new benches)
+        // used to pass without a trace — now it is loudly reported
+        let base = gate_doc(&[("hot/mha_fused 8h", 1000.0)]);
+        let cur = gate_doc(&[
+            ("hot/mha_fused 8h", 1000.0),
+            ("simd/dot f32 d=768", 90.0), // new in current, absent in baseline
+        ]);
+        let r = compare_bench_json(&base, &cur, "fused,gemm_w4a8,simd/", 15.0).unwrap();
+        assert!(r.passed(), "dead substrings warn, never fail");
+        assert_eq!(
+            r.dead_gate_substrings,
+            vec![
+                "`gemm_w4a8` (no match in baseline)".to_string(),
+                "`gemm_w4a8` (no match in current)".to_string(),
+                "`simd/` (no match in baseline)".to_string(),
+            ]
+        );
+        let md = r.to_markdown();
+        assert!(md.contains("matching zero benchmarks"), "{md}");
+        assert!(md.contains("`gemm_w4a8` (no match in current)"), "{md}");
+        // fully-covered substrings stay quiet
+        let r = compare_bench_json(&cur, &cur, "fused,simd/", 15.0).unwrap();
+        assert!(r.dead_gate_substrings.is_empty());
+        assert!(!r.to_markdown().contains("matching zero benchmarks"));
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Tiny CLI flag parser (offline replacement for `clap`).
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
-//! positional arguments. Unknown flags are an error (catches typos).
+//! positional arguments. Unknown flags are an error (catches typos), a
+//! repeated flag is an error (no silent last-wins), and boolean flags
+//! reject values outside `true|false|1|0|yes|no` at parse time — a typo
+//! like `--require-baseline=off` must not silently disarm a gate.
 
 use std::collections::BTreeMap;
 
@@ -38,7 +41,14 @@ impl Args {
                 } else {
                     it.next().ok_or_else(|| format!("--{name} needs a value"))?
                 };
-                out.flags.insert(name, value);
+                if bool_flags.contains(&name.as_str()) && !is_bool_value(&value) {
+                    return Err(format!(
+                        "--{name}: invalid boolean '{value}' (expected true|false|1|0|yes|no)"
+                    ));
+                }
+                if out.flags.insert(name.clone(), value).is_some() {
+                    return Err(format!("--{name} given more than once"));
+                }
             } else {
                 out.positional.push(arg);
             }
@@ -73,6 +83,8 @@ impl Args {
         }
     }
 
+    /// True for `true|1|yes`, false for `false|0|no` or an absent flag.
+    /// Other values cannot reach here: `parse_from` rejects them.
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true" | "1" | "yes"))
     }
@@ -80,6 +92,10 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+}
+
+fn is_bool_value(v: &str) -> bool {
+    matches!(v, "true" | "false" | "1" | "0" | "yes" | "no")
 }
 
 #[cfg(test)]
@@ -126,5 +142,42 @@ mod tests {
     fn bad_number_reported() {
         let a = parse(&["--ctx", "abc"], &["ctx"], &[]).unwrap();
         assert!(a.get_usize("ctx", 0).is_err());
+    }
+
+    #[test]
+    fn invalid_bool_value_rejected_at_parse_time() {
+        // regression: `--require-baseline=off` used to parse fine and
+        // silently return false from get_bool — disarming the perf gate
+        let err = parse(&["--verbose=off"], &[], &["verbose"]).unwrap_err();
+        assert!(err.contains("invalid boolean"), "got: {err}");
+        assert!(err.contains("off"), "got: {err}");
+        assert!(parse(&["--verbose=maybe"], &[], &["verbose"]).is_err());
+    }
+
+    #[test]
+    fn explicit_false_spellings_parse_and_read_false() {
+        for v in ["false", "0", "no"] {
+            let flag = format!("--verbose={v}");
+            let a = parse(&[flag.as_str()], &[], &["verbose"]).unwrap();
+            assert!(!a.get_bool("verbose"), "--verbose={v} must be false");
+        }
+        for v in ["true", "1", "yes"] {
+            let flag = format!("--verbose={v}");
+            let a = parse(&[flag.as_str()], &[], &["verbose"]).unwrap();
+            assert!(a.get_bool("verbose"), "--verbose={v} must be true");
+        }
+        // bare flag still means true
+        assert!(parse(&["--verbose"], &[], &["verbose"]).unwrap().get_bool("verbose"));
+    }
+
+    #[test]
+    fn repeated_flag_rejected() {
+        // regression: `--ctx 8 --ctx 9` used to silently keep 9
+        let err = parse(&["--ctx", "8", "--ctx", "9"], &["ctx"], &[]).unwrap_err();
+        assert!(err.contains("more than once"), "got: {err}");
+        let err = parse(&["--verbose", "--verbose"], &[], &["verbose"]).unwrap_err();
+        assert!(err.contains("more than once"), "got: {err}");
+        let err = parse(&["--ctx=8", "--ctx", "9"], &["ctx"], &[]).unwrap_err();
+        assert!(err.contains("more than once"), "got: {err}");
     }
 }

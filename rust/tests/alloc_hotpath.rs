@@ -137,6 +137,39 @@ fn fused_decode_hot_path_is_allocation_free() {
     assert_eq!(paged_fxp_allocs, 0, "paged FXP32 GQA sweep allocated");
     ptable.release_into(&paged_pool);
 
+    // --- dispatch level: the runtime-selected SIMD microkernels called
+    // straight through the table — neither the calls nor the dispatch
+    // itself (a OnceLock read, detection runs exactly once per process)
+    // may allocate ---------------------------------------------------
+    {
+        use swiftkv::kernels::isa;
+        let t = isa::active();
+        let detections_before = isa::detections();
+        let a8 = rng.uniform_vec(67, 1.0);
+        let b8 = rng.uniform_vec(67, 1.0);
+        let mut y8 = rng.uniform_vec(67, 1.0);
+        let fa = vector::quantize(&a8);
+        let fb = vector::quantize(&b8);
+        let mut fy = vector::quantize(&y8);
+        let i8a: Vec<i8> = (0..67).map(|i| (i as i8).wrapping_mul(37)).collect();
+        let i8b: Vec<i8> = (0..67).map(|i| (i as i8).wrapping_mul(53)).collect();
+        let dispatch_allocs = min_allocs(5, || {
+            let _ = swiftkv::kernels::dot(&a8, &b8);
+            let _ = (t.dot_f32)(&a8, &b8);
+            (t.axpy_f32)(0.5, &mut y8, &b8);
+            let _ = (t.dot_fxp_wide)(&fa, &fb);
+            (t.axpy_fxp)(Fxp32::from_f64(0.5), &mut fy, &fb);
+            let _ = (t.dot_i8)(&i8a, &i8b);
+            let _ = isa::active();
+        });
+        assert_eq!(dispatch_allocs, 0, "dispatched microkernels allocated");
+        assert_eq!(
+            isa::detections(),
+            detections_before,
+            "ISA detection re-ran on the hot path"
+        );
+    }
+
     // --- GEMV level: forward_into through caller scratch ---------------
     let w = rng.uniform_vec(64 * 96, 0.5);
     let lin = QuantLinear::new(Int4Matrix::quantize(&w, 64, 96));

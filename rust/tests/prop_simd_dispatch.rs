@@ -1,0 +1,256 @@
+//! Property tests: the runtime-dispatched SIMD microkernels
+//! (`kernels::isa::active()`) versus the portable scalar table, swept
+//! over lengths straddling every vector width in play (0, 1, around 4/8
+//! f32 lanes, around the 16/32-wide integer strides, plus long odd
+//! tails). The numerics contract under test is the one the kernel docs
+//! promise:
+//!
+//! - FXP32 dot/axpy/scale_axpy and the INT8/W4A8 integer kernels are
+//!   **bit-exact** across every dispatch target (integer arithmetic
+//!   reassociates freely);
+//! - f32 `axpy`/`scale_axpy`/`scale` are **bit-identical** (the AVX2
+//!   kernels deliberately use mul-then-add, never FMA, in the same
+//!   element order);
+//! - f32 `dot` may re-associate (SIMD accumulators + FMA), so it gets a
+//!   documented relative tolerance instead of bit equality.
+//!
+//! On a machine where only the scalar table is available the native and
+//! scalar tables coincide and these checks pass trivially — the suite
+//! is meaningful on AVX2 hosts (CI runs it under both `SWIFTKV_ISA`
+//! settings) and harmless elsewhere.
+
+use swiftkv::fxp::{vector, Fxp32};
+use swiftkv::kernels::isa::{self, Isa};
+use swiftkv::quant::gemv::GEMM_KC;
+use swiftkv::quant::{
+    gemm_w4a8_raw_into, gemv_w4a8_raw_into, pack_int4, quantize_int8_into, Int4Matrix,
+};
+use swiftkv::util::{prop, Rng};
+
+/// Lengths straddling the lane counts of every kernel: empty, single,
+/// one-under/on/one-over the 4- and 8-wide f32 strides, the 16-byte
+/// packed-W4A8 stride, the 32-wide i8 stride, and long odd tails.
+const LENS: [usize; 22] = [
+    0, 1, 3, 4, 5, 7, 8, 9, 11, 16, 17, 19, 31, 32, 33, 35, 64, 67, 127, 128, 129, 259,
+];
+
+fn scalar_table() -> &'static isa::KernelTable {
+    isa::table_for(Isa::Scalar).expect("scalar table is always available")
+}
+
+fn rand_i8_vec(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_u64() & 0xFF) as u8 as i8).collect()
+}
+
+/// Quantized Q15.17 values with occasional saturation-edge raws mixed
+/// in, so the clamp/sat_add paths of the axpy kernels are exercised.
+fn rand_fxp_vec(rng: &mut Rng, n: usize, edges: bool) -> Vec<Fxp32> {
+    (0..n)
+        .map(|_| {
+            if edges && rng.gen_range(0, 16) == 0 {
+                if rng.gen_range(0, 2) == 0 {
+                    Fxp32::MAX
+                } else {
+                    Fxp32::MIN
+                }
+            } else {
+                Fxp32::from_f32(rng.gen_range_f32(-4.0, 4.0))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn f32_dot_matches_scalar_within_tolerance() {
+    let native = isa::active();
+    let scalar = scalar_table();
+    prop::check("f32 dot native ~= scalar (1e-5 rel)", 30, |rng, _| {
+        for &n in &LENS {
+            let a = rng.uniform_vec(n, 1.0);
+            let b = rng.uniform_vec(n, 1.0);
+            let got = (native.dot_f32)(&a, &b) as f64;
+            let want = (scalar.dot_f32)(&a, &b) as f64;
+            let tol = 1e-5 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() <= tol,
+                "dot n={n}: native {got} vs scalar {want} (isa {})",
+                native.name
+            );
+        }
+    });
+}
+
+#[test]
+fn f32_axpy_family_bit_identical_to_scalar() {
+    let native = isa::active();
+    let scalar = scalar_table();
+    prop::check("f32 axpy/scale_axpy/scale bit-identical", 30, |rng, _| {
+        for &n in &LENS {
+            let a = rng.gen_range_f32(-2.0, 2.0);
+            let x = rng.uniform_vec(n, 1.0);
+            let y0 = rng.uniform_vec(n, 1.0);
+
+            let (mut yn, mut ys) = (y0.clone(), y0.clone());
+            (native.axpy_f32)(a, &mut yn, &x);
+            (scalar.axpy_f32)(a, &mut ys, &x);
+            assert_bits_eq(&yn, &ys, "axpy_f32", n);
+
+            let (mut yn, mut ys) = (y0.clone(), y0.clone());
+            (native.scale_axpy_f32)(a, &mut yn, &x);
+            (scalar.scale_axpy_f32)(a, &mut ys, &x);
+            assert_bits_eq(&yn, &ys, "scale_axpy_f32", n);
+
+            let (mut yn, mut ys) = (y0.clone(), y0);
+            (native.scale_f32)(a, &mut yn);
+            (scalar.scale_f32)(a, &mut ys);
+            assert_bits_eq(&yn, &ys, "scale_f32", n);
+        }
+    });
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], kernel: &str, n: usize) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{kernel} n={n}: bit mismatch at {i} ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn fxp_kernels_bit_exact_vs_scalar() {
+    let native = isa::active();
+    let scalar = scalar_table();
+    prop::check("FXP32 dot/axpy/scale_axpy bit-exact", 30, |rng, _| {
+        for &n in &LENS {
+            let a = rand_fxp_vec(rng, n, true);
+            let b = rand_fxp_vec(rng, n, true);
+            assert_eq!(
+                (native.dot_fxp_wide)(&a, &b),
+                (scalar.dot_fxp_wide)(&a, &b),
+                "dot_fxp_wide n={n}"
+            );
+            for s in [
+                Fxp32::from_f32(rng.gen_range_f32(-2.0, 2.0)),
+                Fxp32::MAX,
+                Fxp32::MIN,
+            ] {
+                let (mut yn, mut ys) = (a.clone(), a.clone());
+                (native.axpy_fxp)(s, &mut yn, &b);
+                (scalar.axpy_fxp)(s, &mut ys, &b);
+                assert_raw_eq(&yn, &ys, "axpy_fxp", n);
+
+                let (mut yn, mut ys) = (a.clone(), a.clone());
+                (native.scale_axpy_fxp)(s, &mut yn, &b);
+                (scalar.scale_axpy_fxp)(s, &mut ys, &b);
+                assert_raw_eq(&yn, &ys, "scale_axpy_fxp", n);
+            }
+        }
+    });
+}
+
+fn assert_raw_eq(got: &[Fxp32], want: &[Fxp32], kernel: &str, n: usize) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.raw(), w.raw(), "{kernel} n={n}: raw mismatch at {i}");
+    }
+}
+
+#[test]
+fn integer_kernels_bit_exact_vs_scalar() {
+    let native = isa::active();
+    let scalar = scalar_table();
+    prop::check("i8 dot + W4A8 column bit-exact", 30, |rng, _| {
+        for &n in &LENS {
+            let a = rand_i8_vec(rng, n);
+            let b = rand_i8_vec(rng, n);
+            assert_eq!((native.dot_i8)(&a, &b), (scalar.dot_i8)(&a, &b), "dot_i8 n={n}");
+
+            // packed INT4 column at this din — both even and odd n hit
+            // the half-byte tail handling
+            let nibbles: Vec<i8> = (0..n).map(|_| rng.gen_range(0, 16) as i8 - 8).collect();
+            let mut packed = vec![0u8; n.div_ceil(2)];
+            pack_int4(&nibbles, &mut packed);
+            assert_eq!(
+                (native.w4a8_col)(&packed, n, &a),
+                (scalar.w4a8_col)(&packed, n, &a),
+                "w4a8_col din={n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn gemv_matches_scalar_column_walk() {
+    let scalar = scalar_table();
+    prop::check("gemv_w4a8_raw_into == scalar column walk", 20, |rng, _| {
+        let din = [1usize, 7, 16, 33, 64, 129][rng.gen_range(0, 6)];
+        let dout = [1usize, 3, 17, 32][rng.gen_range(0, 4)];
+        let w = Int4Matrix::quantize(&rng.uniform_vec(din * dout, 0.5), din, dout);
+        let x = rng.uniform_vec(din, 1.0);
+        let mut xq = vec![0i8; din];
+        let xscale = quantize_int8_into(&x, &mut xq);
+
+        let mut got = vec![0.0f32; dout];
+        gemv_w4a8_raw_into(&xq, xscale, &w, &mut got);
+
+        let stride = din.div_ceil(2);
+        for j in 0..dout {
+            let col = &w.packed[j * stride..(j + 1) * stride];
+            let want = (scalar.w4a8_col)(col, din, &xq) as f32 * xscale * w.scales[j];
+            assert_eq!(
+                got[j].to_bits(),
+                want.to_bits(),
+                "gemv {din}x{dout} col {j}: {} vs {want}",
+                got[j]
+            );
+        }
+    });
+}
+
+#[test]
+fn gemm_cross_panel_bit_identical_to_per_lane_gemv() {
+    // din spans two KC panels with an odd tail, so the blocked GEMM's
+    // partial-accumulator handoff between panels is on the line
+    let din = GEMM_KC + 37;
+    let dout = 48usize;
+    prop::check("blocked GEMM == per-lane GEMV across panels", 5, |rng, _| {
+        let w = Int4Matrix::quantize(&rng.uniform_vec(din * dout, 0.5), din, dout);
+        let b = 1 + rng.gen_range(0, 5);
+        let mut qrows = vec![0i8; b * din];
+        let mut scales = vec![0.0f32; b];
+        for i in 0..b {
+            let x = rng.uniform_vec(din, 1.0);
+            scales[i] = quantize_int8_into(&x, &mut qrows[i * din..(i + 1) * din]);
+        }
+        let mut got = vec![0.0f32; b * dout];
+        gemm_w4a8_raw_into(&qrows, &scales, &w, &mut got);
+        let mut want = vec![0.0f32; dout];
+        for i in 0..b {
+            gemv_w4a8_raw_into(&qrows[i * din..(i + 1) * din], scales[i], &w, &mut want);
+            for j in 0..dout {
+                assert_eq!(
+                    got[i * dout + j].to_bits(),
+                    want[j].to_bits(),
+                    "lane {i} col {j} (b={b})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn dispatch_is_selected_once_and_env_parse_is_strict() {
+    // active() must resolve to one of the constructable tables and
+    // never re-detect per call
+    let t = isa::active();
+    assert!(isa::table_for(t.isa).is_some(), "active table {} not constructable", t.name);
+    let before = isa::detections();
+    for _ in 0..64 {
+        let _ = isa::active();
+        let _ = isa::active_name();
+    }
+    assert_eq!(isa::detections(), before, "active() re-ran ISA detection");
+    assert!(Isa::parse("avx512").is_none());
+    assert!(Isa::parse("AVX2").is_none(), "ISA names are case-sensitive");
+}
