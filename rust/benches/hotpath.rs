@@ -37,7 +37,7 @@
 
 use swiftkv::attention::fxp_swiftkv::{attend_fxp, FxpHeadProblem};
 use swiftkv::attention::{swiftkv as swiftkv_attn, HeadProblem};
-use swiftkv::coordinator::{CpuServeOptions, CpuServer};
+use swiftkv::coordinator::{CpuServer, ServeConfig};
 use swiftkv::fxp::{vector, Exp2Lut, Fxp32};
 use swiftkv::kernels::isa::{self, Isa};
 use swiftkv::kernels::{BlockPool, BlockTable, FxpMhaSwiftKv, MhaSwiftKv};
@@ -511,26 +511,22 @@ fn main() {
     {
         let sm = TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48);
         let reqs: Vec<Request> = (0..4)
-            .map(|i| Request {
-                id: i,
-                prompt: (0..24).map(|t| (t * 5 + i as u32 + 1) % sm.vocab as u32).collect(),
-                gen_len: 2,
-                arrival_ms: 0,
-                deadline_ms: 0,
+            .map(|i| {
+                let prompt: Vec<u32> =
+                    (0..24).map(|t| (t * 5 + i as u32 + 1) % sm.vocab as u32).collect();
+                Request::new(i, prompt).gen_len(2)
             })
             .collect();
         for prefill_chunk in [1usize, 8, 0] {
-            let server = CpuServer::new(
-                &sm,
-                CpuServeOptions {
-                    lanes: 2,
-                    mode: NumericsMode::DesktopF32,
-                    max_iterations: 10_000,
-                    sim_model: LlmConfig::llama2_7b(),
-                    prefill_chunk,
-                    ..CpuServeOptions::default()
-                },
-            );
+            let cfg = ServeConfig::builder()
+                .lanes(2)
+                .mode(NumericsMode::DesktopF32)
+                .max_iterations(10_000)
+                .sim_model(LlmConfig::llama2_7b())
+                .prefill_chunk(prefill_chunk)
+                .build()
+                .expect("bench serve config is valid");
+            let server = CpuServer::new(&sm, cfg);
             let name = format!("serve/cpu_ttft prefill-chunk={prefill_chunk} prompt=24");
             let mut ttft_samples: Vec<f64> = Vec::new();
             b.bench(&name, || {
@@ -557,26 +553,20 @@ fn main() {
     // assumed).
     {
         let reqs: Vec<Request> = (0..8)
-            .map(|i| Request {
-                id: i,
-                prompt: vec![(i as u32 * 13 + 1) % tm.vocab as u32],
-                gen_len: 8,
-                arrival_ms: 0,
-                deadline_ms: 0,
+            .map(|i| {
+                Request::new(i, vec![(i as u32 * 13 + 1) % tm.vocab as u32]).gen_len(8)
             })
             .collect();
         let step_bytes = tm.weight_stream_bytes() as f64;
         for lanes in [1usize, 4] {
-            let server = CpuServer::new(
-                &tm,
-                CpuServeOptions {
-                    lanes,
-                    mode: NumericsMode::DesktopF32,
-                    max_iterations: 10_000,
-                    sim_model: LlmConfig::llama2_7b(),
-                    ..CpuServeOptions::default()
-                },
-            );
+            let cfg = ServeConfig::builder()
+                .lanes(lanes)
+                .mode(NumericsMode::DesktopF32)
+                .max_iterations(10_000)
+                .sim_model(LlmConfig::llama2_7b())
+                .build()
+                .expect("bench serve config is valid");
+            let server = CpuServer::new(&tm, cfg);
             let name = format!("serve/cpu_throughput lanes={lanes} decode-heavy");
             let mut tok_samples: Vec<f64> = Vec::new();
             let mut pass_samples: Vec<f64> = Vec::new();

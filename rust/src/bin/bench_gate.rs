@@ -16,12 +16,16 @@
 //! matches zero benchmarks in either document is reported as a loud
 //! warning in the table — the gate may have silently lost coverage.
 //!
-//! An empty baseline gates nothing. Without `--require-baseline` that is
-//! a vacuous pass, flagged by a loud `BASELINE EMPTY — gate is vacuous`
-//! banner in the output; **with** `--require-baseline` (what CI passes)
-//! it is a hard failure, so the gate can never silently run unarmed.
-//! Refresh `BENCH_baseline.json` from a trusted CI-class bench run to
-//! arm it. Comparison logic lives in
+//! An empty baseline gates nothing, and the report says **which kind**
+//! of empty it is: the committed placeholder (zero benchmarks plus a
+//! self-describing `note` — the gate was simply never armed) prints a
+//! `BASELINE PLACEHOLDER — never armed` banner, while an empty document
+//! without the note (an armed baseline that lost its data) prints
+//! `BASELINE EMPTY — gate is vacuous`. Without `--require-baseline`
+//! both are a vacuous pass; **with** `--require-baseline` (what CI
+//! passes) both are a hard failure, so the gate can never silently run
+//! unarmed. Refresh `BENCH_baseline.json` from a trusted CI-class bench
+//! run to arm it. Comparison logic lives in
 //! [`swiftkv::util::bench::compare_bench_json`] (unit-tested in-tree).
 
 use swiftkv::util::bench::compare_bench_json;
@@ -83,11 +87,23 @@ fn run() -> Result<bool, String> {
     let report = compare_bench_json(&baseline, &current, gate, max_regress_pct)?;
     println!("{}", report.to_markdown());
     if report.baseline_empty() {
-        // loud on stderr too, so the warning survives summary-only readers
-        eprintln!(
-            "bench_gate: BASELINE EMPTY — gate is vacuous ({} gated nothing)",
-            args.positional()[0]
-        );
+        // loud on stderr too, so the warning survives summary-only
+        // readers — and name which empty state this is: a never-armed
+        // placeholder reads very differently from a stripped baseline
+        if report.baseline_placeholder {
+            eprintln!(
+                "bench_gate: BASELINE PLACEHOLDER — never armed ({} is still \
+                 the committed placeholder; no bench run has populated it)",
+                args.positional()[0]
+            );
+        } else {
+            eprintln!(
+                "bench_gate: BASELINE EMPTY — gate is vacuous ({} has zero \
+                 benchmarks and is NOT the placeholder; an armed baseline may \
+                 have been stripped)",
+                args.positional()[0]
+            );
+        }
         if require_baseline {
             eprintln!("bench_gate: --require-baseline set: failing the run");
             return Ok(false);

@@ -1,0 +1,385 @@
+//! `loadgen` — open-loop serving load generator.
+//!
+//! ```text
+//! loadgen [--rates 100,200,400] [--requests 24] [--lanes 4] [--seed 0]
+//!         [--adaptive-prefill] [--out ../BENCH_hotpath.json] [--no-write]
+//! loadgen --target http://127.0.0.1:8080 [--duration-ms 3000]
+//!         [--concurrency 4] [--smoke]
+//! ```
+//!
+//! **In-process mode** (default): replays the same Poisson arrival
+//! stream (length mixes from `model/workload.rs`, inter-arrival gaps
+//! from `Rng::gen_exp`) against two serving disciplines at equal lane
+//! count —
+//!
+//! - `continuous`: requests are submitted through a [`ServeHandle`] at
+//!   their arrival instants and join the running engine mid-flight;
+//!   per-request latency is measured open-loop, submission → final
+//!   event.
+//! - `drain`: the pre-continuous discipline — requests accumulate into
+//!   groups of `lanes`, the group is served as one batch once its last
+//!   member has arrived, and nothing new starts until the batch drains;
+//!   per-request latency is batch-completion − arrival.
+//!
+//! Each (rate, discipline) point lands in `BENCH_hotpath.json` as a
+//! `serve/loadgen …` entry (median = p99 latency; p50 / throughput /
+//! outcome counts in `extras`), merged in next to the kernel benches —
+//! the throughput-vs-p99 curve the continuous engine is judged on. This
+//! is also what first **arms** the serving benches in CI's perf-gate
+//! baseline, the way `cargo bench --bench hotpath` arms the kernel ones.
+//!
+//! **HTTP mode** (`--target`): drives a live `swiftkv serve --listen`
+//! over the wire with a hand-rolled HTTP/SSE client for a bounded wall
+//! clock. With `--smoke` the exit code asserts the serving contract
+//! (every request completed, none failed) — CI's `serve-smoke` job.
+
+use swiftkv::coordinator::{CpuServer, ServeConfig, ServeHandle, SessionOutcome};
+use swiftkv::model::{NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
+use swiftkv::util::bench::{fmt_ns, merge_into_json_file, Measurement};
+use swiftkv::util::cli::Args;
+use swiftkv::util::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("loadgen: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse(
+        &[
+            "rates", "requests", "lanes", "seed", "out", "target", "duration-ms", "concurrency",
+        ],
+        &["help", "smoke", "no-write", "adaptive-prefill"],
+    )?;
+    if args.get_bool("help") {
+        println!(
+            "usage: loadgen [--rates 100,200,400] [--requests 24] [--lanes 4] [--seed 0]\n\
+             \x20              [--adaptive-prefill] [--out PATH] [--no-write]\n\
+             \x20      loadgen --target http://HOST:PORT [--duration-ms 3000] \
+             [--concurrency 4] [--smoke]"
+        );
+        return Ok(());
+    }
+    match args.get("target") {
+        Some(target) => drive_http(&args, target),
+        None => sweep_in_process(&args),
+    }
+}
+
+/// Latency/outcome summary of one (rate, discipline) run.
+struct RunStats {
+    latencies_ms: Vec<f64>,
+    completed: u64,
+    failed: u64,
+    tokens: u64,
+    wall_s: f64,
+}
+
+impl RunStats {
+    fn percentile(&self, q: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.latencies_ms.clone();
+        s.sort_by(f64::total_cmp);
+        s[((s.len() - 1) as f64 * q).floor() as usize]
+    }
+
+    fn tok_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+fn workload(rate_per_s: f64, requests: usize, vocab: usize, seed: u64) -> Vec<Request> {
+    WorkloadGen::new(WorkloadSpec {
+        num_requests: requests,
+        vocab,
+        prompt_len: (4, 12),
+        gen_len: (6, 16),
+        mean_gap_ms: 1000.0 / rate_per_s,
+        deadline_ms: 0,
+        seed,
+    })
+    .generate()
+}
+
+fn sleep_until(t0: Instant, target_ms: u64) {
+    let due = Duration::from_millis(target_ms);
+    let now = t0.elapsed();
+    if due > now {
+        std::thread::sleep(due - now);
+    }
+}
+
+/// Continuous discipline: open-loop submission through the ServeHandle
+/// at each request's arrival instant; one waiter thread per request
+/// records submission → final-event latency.
+fn run_continuous(model: &TinyModel, cfg: &ServeConfig, reqs: &[Request]) -> RunStats {
+    let server = CpuServer::new(model, cfg.clone());
+    let t0 = Instant::now();
+    let (report, results) = server.serve_continuous(|handle: &ServeHandle| {
+        std::thread::scope(|s| {
+            let mut waiters = Vec::with_capacity(reqs.len());
+            for req in reqs {
+                sleep_until(t0, req.arrival_ms);
+                let submitted = t0.elapsed();
+                // strip the arrival gate: the generator already paced
+                // this submission in real time
+                let wire = Request::new(req.id, req.prompt.clone()).gen_len(req.gen_len);
+                match handle.submit(wire) {
+                    Ok(pending) => waiters.push(s.spawn(move || {
+                        let fin = pending.wait();
+                        let lat_ms = (t0.elapsed() - submitted).as_secs_f64() * 1e3;
+                        (fin.outcome, fin.tokens.len() as u64, lat_ms)
+                    })),
+                    Err(e) => eprintln!("loadgen: submit failed: {e}"),
+                }
+            }
+            waiters
+                .into_iter()
+                .filter_map(|w| w.join().ok())
+                .collect::<Vec<_>>()
+        })
+    });
+    let mut stats = RunStats {
+        latencies_ms: Vec::new(),
+        completed: 0,
+        failed: 0,
+        tokens: 0,
+        wall_s: report.metrics.wall_s,
+    };
+    for (outcome, tokens, lat_ms) in results {
+        stats.latencies_ms.push(lat_ms);
+        stats.tokens += tokens;
+        match outcome {
+            SessionOutcome::Completed => stats.completed += 1,
+            _ => stats.failed += 1,
+        }
+    }
+    stats
+}
+
+/// Drain-barrier discipline: the pre-continuous serving shape. Requests
+/// accumulate into groups of `lanes`; a group is served as one offline
+/// batch once its last member has arrived, and the next group waits for
+/// the full drain. Per-request latency is batch-completion − arrival —
+/// the barrier's cost made visible.
+fn run_drain(model: &TinyModel, cfg: &ServeConfig, reqs: &[Request]) -> RunStats {
+    let server = CpuServer::new(model, cfg.clone());
+    let lanes = cfg.lanes;
+    let t0 = Instant::now();
+    let mut stats = RunStats {
+        latencies_ms: Vec::new(),
+        completed: 0,
+        failed: 0,
+        tokens: 0,
+        wall_s: 0.0,
+    };
+    for group in reqs.chunks(lanes) {
+        if let Some(last) = group.last() {
+            sleep_until(t0, last.arrival_ms);
+        }
+        let batch: Vec<Request> = group
+            .iter()
+            .map(|r| Request::new(r.id, r.prompt.clone()).gen_len(r.gen_len))
+            .collect();
+        let report = server.serve(batch);
+        let end_ms = t0.elapsed().as_secs_f64() * 1e3;
+        for r in group {
+            stats.latencies_ms.push(end_ms - r.arrival_ms as f64);
+        }
+        for s in &report.sessions {
+            stats.tokens += s.generated.len() as u64;
+            if s.outcome.is_completed() {
+                stats.completed += 1;
+            } else {
+                stats.failed += 1;
+            }
+        }
+    }
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    stats
+}
+
+fn sweep_in_process(args: &Args) -> Result<(), String> {
+    let rates: Vec<f64> = args
+        .get_or("rates", "100,200,400")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("bad rate '{s}'"))
+        })
+        .collect::<Result<_, _>>()?;
+    if rates.iter().any(|&r| r <= 0.0) {
+        return Err("rates must be positive (requests per second)".into());
+    }
+    let requests = args.get_usize("requests", 24)?;
+    let lanes = args.get_usize("lanes", 4)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let model = TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48);
+    let cfg = ServeConfig::builder()
+        .lanes(lanes)
+        .mode(NumericsMode::DesktopF32)
+        .adaptive_prefill(args.get_bool("adaptive-prefill"))
+        .build()?;
+
+    println!(
+        "loadgen: {} requests, {} lanes, Poisson rates {:?} req/s (seed {seed})",
+        requests, lanes, rates
+    );
+    let mut entries: Vec<Measurement> = Vec::new();
+    for &rate in &rates {
+        let reqs = workload(rate, requests, model.vocab, seed);
+        let cont = run_continuous(&model, &cfg, &reqs);
+        let drain = run_drain(&model, &cfg, &reqs);
+        for (disc, stats) in [("continuous", &cont), ("drain", &drain)] {
+            println!(
+                "rate={rate:>6.0} {disc:<10} p50 {} p99 {} {:>8.1} tok/s ({} ok / {} failed)",
+                fmt_ns(stats.percentile(0.50) * 1e6),
+                fmt_ns(stats.percentile(0.99) * 1e6),
+                stats.tok_per_s(),
+                stats.completed,
+                stats.failed,
+            );
+            entries.push(
+                Measurement::external(
+                    &format!("serve/loadgen {disc} lanes={lanes} rate={rate:.0}"),
+                    stats.percentile(0.99) * 1e6, // p99 latency, in ns
+                    stats.latencies_ms.len() as u64,
+                )
+                .with_extra("p50_ms", stats.percentile(0.50))
+                .with_extra("p99_ms", stats.percentile(0.99))
+                .with_extra("tok_per_s", stats.tok_per_s())
+                .with_extra("completed", stats.completed as f64)
+                .with_extra("failed", stats.failed as f64),
+            );
+        }
+        let speedup = drain.percentile(0.99) / cont.percentile(0.99).max(1e-9);
+        println!(
+            "rate={rate:>6.0} continuous p99 is {speedup:.2}x better than the drain barrier"
+        );
+    }
+    if entries.iter().any(|m| {
+        m.extras.get("failed").copied().unwrap_or(0.0) > 0.0
+            || m.extras.get("completed").copied().unwrap_or(0.0) == 0.0
+    }) {
+        return Err("serving contract violated: a request failed or none completed".into());
+    }
+    if !args.get_bool("no-write") {
+        let out = match args.get("out") {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .ok_or("cannot locate repository root")?
+                .join("BENCH_hotpath.json"),
+        };
+        merge_into_json_file(&out, &entries).map_err(|e| format!("write {out:?}: {e}"))?;
+        println!("merged {} serve entries into {}", entries.len(), out.display());
+    }
+    Ok(())
+}
+
+/// One SSE round trip against a live server. Returns (completed,
+/// tokens) — a transport error or non-completed outcome is a failure.
+fn http_generate(addr: &str, prompt: &[u32], gen_len: usize) -> Result<(bool, u64), String> {
+    let body = format!(
+        "{{\"prompt\": [{}], \"gen_len\": {gen_len}}}",
+        prompt
+            .iter()
+            .map(u32::to_string)
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .map_err(|e| e.to_string())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).map_err(|e| e.to_string())?;
+    if !resp.starts_with("HTTP/1.1 200") {
+        return Err(format!("non-200 response: {}", resp.lines().next().unwrap_or("")));
+    }
+    let tokens = resp.matches("\"token\":").count() as u64;
+    Ok((resp.contains("\"outcome\":\"completed\""), tokens))
+}
+
+fn drive_http(args: &Args, target: &str) -> Result<(), String> {
+    let addr = target
+        .strip_prefix("http://")
+        .unwrap_or(target)
+        .trim_end_matches('/')
+        .to_string();
+    let duration = Duration::from_millis(args.get_usize("duration-ms", 3000)? as u64);
+    let concurrency = args.get_usize("concurrency", 4)?.max(1);
+    let seed = args.get_usize("seed", 0)? as u64;
+    // the CLI's synthetic fallback model has vocab 512; stay inside it
+    const VOCAB: u32 = 512;
+
+    let t0 = Instant::now();
+    let results: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        (0..concurrency)
+            .map(|w| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::seed_from_u64(seed.wrapping_add(w as u64 * 7919));
+                    let (mut completed, mut failed, mut tokens) = (0u64, 0u64, 0u64);
+                    while t0.elapsed() < duration {
+                        let plen = rng.gen_range(3, 10);
+                        let prompt: Vec<u32> =
+                            (0..plen).map(|_| rng.gen_range(1, VOCAB as usize) as u32).collect();
+                        let glen = rng.gen_range(4, 10);
+                        match http_generate(&addr, &prompt, glen) {
+                            Ok((true, t)) => {
+                                completed += 1;
+                                tokens += t;
+                            }
+                            Ok((false, _)) => failed += 1,
+                            Err(e) => {
+                                eprintln!("loadgen: worker {w}: {e}");
+                                failed += 1;
+                            }
+                        }
+                    }
+                    (completed, failed, tokens)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .filter_map(|h| h.join().ok())
+            .collect()
+    });
+    let completed: u64 = results.iter().map(|r| r.0).sum();
+    let failed: u64 = results.iter().map(|r| r.1).sum();
+    let tokens: u64 = results.iter().map(|r| r.2).sum();
+    let wall_s = t0.elapsed().as_secs_f64();
+    println!(
+        "loadgen: target {addr}: {completed} completed, {failed} failed, \
+         {tokens} tokens in {wall_s:.2} s ({:.1} tok/s)",
+        tokens as f64 / wall_s.max(1e-9)
+    );
+    if args.get_bool("smoke") && (completed == 0 || failed > 0) {
+        return Err(format!(
+            "smoke contract violated: completed={completed} failed={failed} \
+             (need completed > 0 and failed == 0)"
+        ));
+    }
+    Ok(())
+}

@@ -137,6 +137,13 @@ impl Batcher {
         n
     }
 
+    /// Requests waiting in the admission queue (submitted, not yet on a
+    /// lane) — sampled per iteration for the queue-depth percentiles on
+    /// [`super::metrics::ServeMetrics`].
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Number of busy lanes.
     pub fn active(&self) -> usize {
         self.lanes.iter().filter(|l| !l.is_idle()).count()
@@ -369,13 +376,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, prompt_len: usize, gen_len: usize) -> Request {
-        Request {
-            id,
-            prompt: (0..prompt_len as u32).collect(),
-            gen_len,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        }
+        Request::new(id, (0..prompt_len as u32).collect()).gen_len(gen_len)
     }
 
     #[test]
@@ -490,6 +491,17 @@ mod tests {
         assert_eq!(t, vec![0, 0, 0]);
         assert_eq!(p, vec![0, 0, 0]);
         assert_eq!(a, vec![false, false, false]);
+    }
+
+    #[test]
+    fn queue_len_tracks_waiting_requests() {
+        let mut b = Batcher::new(1, 64);
+        for i in 0..3 {
+            b.submit(req(i, 2, 1)).unwrap();
+        }
+        assert_eq!(b.queue_len(), 3);
+        b.admit(0);
+        assert_eq!(b.queue_len(), 2, "admission drains the queue into lanes");
     }
 
     #[test]

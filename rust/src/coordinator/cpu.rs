@@ -1,15 +1,29 @@
-//! CPU batch serving over the pure-Rust tiny model — the default-feature
-//! serving path (no PJRT required).
+//! CPU continuous-batching serving over the pure-Rust tiny model — the
+//! default-feature serving path (no PJRT required).
 //!
-//! Same continuous-batching shape as the PJRT [`super::server`]: queue →
-//! [`super::batcher::Batcher`] → one batch step → greedy sample → retire.
+//! The engine is **continuous**: work enters through a live intake
+//! channel (a [`ServeHandle`]), and the iteration loop polls that
+//! channel every step, so a request submitted mid-flight joins the
+//! batch as soon as its arrival time passes and a lane frees — there is
+//! no drain barrier. The offline entry point
+//! ([`CpuServer::serve`]) is a thin wrapper that pre-loads the intake
+//! and closes it, which reproduces the old fixed-list scheduling
+//! exactly; [`CpuServer::serve_continuous`] runs the engine on its own
+//! thread and hands the caller a cloneable [`ServeHandle`] for
+//! mid-flight submission with per-request token streams.
+//!
 //! Prompt tokens are consumed **chunked**: a prefill lane feeds up to
-//! [`CpuServeOptions::prefill_chunk`] prompt tokens per iteration through
+//! [`ServeConfig::prefill_chunk`] prompt tokens per iteration through
 //! the fused causal sweep ([`TinyModel::prefill_into`]) instead of one
 //! decode step per token, computing the logits projection only when the
 //! chunk reaches the last prompt token — the TTFT win of chunked
 //! prefill. The chunk is bounded by default so one long prompt cannot
-//! stall the decode lanes sharing the iteration.
+//! stall the decode lanes sharing the iteration; with
+//! [`ServeConfig::adaptive_prefill`] the bound additionally **shrinks**
+//! when decode lanes are live (`chunk / (1 + n_decode)`, floor 1),
+//! because batch-step wall time is the max over lanes — a full-width
+//! prefill chunk next to decode lanes stretches every decode lane's
+//! inter-token latency by the whole chunk.
 //!
 //! Decoding is weight-bandwidth bound, so the batch step batches at the
 //! **operator** level instead of lane-per-thread: every decode-phase
@@ -19,38 +33,31 @@
 //! pass per step, not B — surfaced as
 //! [`ServeMetrics::weight_passes_per_step`]), while prefill lanes run
 //! their chunks per lane. Parallelism comes from a **persistent**
-//! [`crate::kernels::WorkerPool`] that lives for the whole run — the
-//! batched step splits its GEMMs by output-column range and its
-//! attention phase by lane, prefill chunks run one task per lane, and
-//! nothing spawns per iteration (the old `std::thread::scope` fan-out
-//! paid a spawn/join per step and re-streamed the weights per lane). A
-//! lone decode lane skips the pool and runs the inline solo step, so
+//! [`crate::kernels::WorkerPool`] that lives for the whole run. A lone
+//! decode lane skips the pool and runs the inline solo step, so
 //! single-lane latency does not regress. Each lane owns its
-//! [`DecodeState`] (per-layer block tables +
-//! [`crate::kernels::DecodeScratch`]), so a steady-state lane step
-//! performs zero heap allocation and lanes never contend on memory —
-//! the KV rows live in **one shared [`crate::kernels::BlockPool`]**
-//! that every lane draws fixed-size blocks from, sized by
-//! [`CpuServeOptions::kv_block_len`] /
-//! [`CpuServeOptions::kv_pool_blocks`]; the only contended state is the
-//! pool's free list, touched once per `block_len` tokens per layer.
-//! Grouped-query models serve unchanged: the pool's rows are sized
-//! `n_kv_heads * d_head` by [`TinyModel::new_pool`], so a GQA model cuts
-//! pooled KV memory (and streamed KV bytes per step) by the group
-//! factor. Recycled lanes restart at position 0 via
+//! [`DecodeState`]; the KV rows live in **one shared
+//! [`crate::kernels::BlockPool`]** sized by
+//! [`ServeConfig::kv_block_len`] / [`ServeConfig::kv_pool_blocks`].
+//! Recycled lanes restart at position 0 via
 //! [`DecodeState::reset_for_reuse`], which returns their blocks to the
-//! pool for other lanes — reclamation, not re-allocation.
+//! pool for other lanes — reclamation, not re-allocation. Continuous
+//! admission preserves the per-lane bit-exactness contract: a request's
+//! tokens are identical to its solo `generate()` run no matter when it
+//! joined (tests/prop_continuous.rs asserts this end to end).
 
 use super::batcher::Batcher;
 use super::faults::{FaultKind, FaultPlan};
 use super::metrics::{Percentiles, ServeMetrics};
-use super::session::Session;
+use super::session::{Session, SessionOutcome, SessionPhase};
+use super::submit::{ServeHandle, Submission, TokenEvent};
 use crate::kernels::{BlockPool, SharedMut, WorkerPool};
 use crate::model::tiny::{argmax, panic_message, BatchLane, DecodeState};
 use crate::model::{LlmConfig, NumericsMode, Request, TinyModel, DEFAULT_KV_BLOCK_LEN};
 use crate::sim::{layer_sched, ArchConfig};
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -62,8 +69,15 @@ use std::time::Instant;
 pub const DEFAULT_PREFILL_CHUNK: usize = 8;
 
 /// CPU serving configuration.
+///
+/// Construct through [`ServeConfig::builder`] — the struct is
+/// `#[non_exhaustive]`, so downstream code cannot build it as a literal
+/// (and new knobs can land without breaking call sites). The builder
+/// validates at build time what used to be asserts deep inside the
+/// serve loop.
 #[derive(Debug, Clone)]
-pub struct CpuServeOptions {
+#[non_exhaustive]
+pub struct ServeConfig {
     /// Number of decode lanes (threads at full occupancy).
     pub lanes: usize,
     /// Numerics mode every lane decodes in.
@@ -82,6 +96,14 @@ pub struct CpuServeOptions {
     /// one step. `1` reproduces the old one-decode-step-per-prompt-token
     /// prefill.
     pub prefill_chunk: usize,
+    /// Shrink the prefill chunk when decode lanes are live
+    /// (`prefill_chunk / (1 + n_decode)`, floor 1): batch-step wall time
+    /// is the max over lanes, so a full chunk beside decode lanes
+    /// stretches their inter-token latency. Off by default — the fixed
+    /// chunk keeps iteration schedules reproducible for the pinned
+    /// scheduling tests; the load generator and `--adaptive-prefill`
+    /// turn it on.
+    pub adaptive_prefill: bool,
     /// OS threads stepping the engine (the serving thread plus
     /// `workers - 1` persistent pool workers); `0` = one per available
     /// CPU, `1` = fully inline (no pool).
@@ -96,9 +118,9 @@ pub struct CpuServeOptions {
     pub max_requeues: u32,
 }
 
-impl Default for CpuServeOptions {
+impl Default for ServeConfig {
     fn default() -> Self {
-        CpuServeOptions {
+        ServeConfig {
             lanes: 4,
             mode: NumericsMode::DesktopF32,
             max_iterations: 0,
@@ -106,10 +128,99 @@ impl Default for CpuServeOptions {
             kv_block_len: DEFAULT_KV_BLOCK_LEN,
             kv_pool_blocks: 0,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            adaptive_prefill: false,
             workers: 0,
             faults: None,
             max_requeues: 3,
         }
+    }
+}
+
+impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder {
+            cfg: ServeConfig::default(),
+        }
+    }
+}
+
+/// Validating builder for [`ServeConfig`]. Every setter mirrors a
+/// config field; [`ServeConfigBuilder::build`] rejects inconsistent
+/// shapes (zero lanes, zero-token KV blocks) before a server is ever
+/// constructed.
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn lanes(mut self, n: usize) -> Self {
+        self.cfg.lanes = n;
+        self
+    }
+    pub fn mode(mut self, mode: NumericsMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+    pub fn max_iterations(mut self, n: u64) -> Self {
+        self.cfg.max_iterations = n;
+        self
+    }
+    pub fn sim_model(mut self, m: LlmConfig) -> Self {
+        self.cfg.sim_model = m;
+        self
+    }
+    pub fn kv_block_len(mut self, n: usize) -> Self {
+        self.cfg.kv_block_len = n;
+        self
+    }
+    pub fn kv_pool_blocks(mut self, n: usize) -> Self {
+        self.cfg.kv_pool_blocks = n;
+        self
+    }
+    pub fn prefill_chunk(mut self, n: usize) -> Self {
+        self.cfg.prefill_chunk = n;
+        self
+    }
+    pub fn adaptive_prefill(mut self, on: bool) -> Self {
+        self.cfg.adaptive_prefill = on;
+        self
+    }
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+    pub fn faults(mut self, plan: Option<FaultPlan>) -> Self {
+        self.cfg.faults = plan;
+        self
+    }
+    pub fn max_requeues(mut self, n: u32) -> Self {
+        self.cfg.max_requeues = n;
+        self
+    }
+
+    /// Validate and produce the config. Errors name the offending knob:
+    /// at least one lane, at least one token per KV block, and — when
+    /// the pool is explicitly sized — at least one block to draw from.
+    pub fn build(self) -> Result<ServeConfig, String> {
+        let c = &self.cfg;
+        if c.lanes == 0 {
+            return Err("serve config: lanes must be >= 1".to_string());
+        }
+        if c.kv_block_len == 0 {
+            return Err("serve config: kv_block_len must be >= 1 token per block".to_string());
+        }
+        if c.kv_pool_blocks > 0 && c.kv_pool_blocks < c.lanes.min(2) {
+            // a 1-block pool can still serve (one lane at a time, the
+            // preemption path schedules the rest), but 0 explicit blocks
+            // would deadlock every lane forever — reject the nonsense
+            // shape where an explicit pool cannot hold even one block
+            return Err(format!(
+                "serve config: kv_pool_blocks = {} cannot back even one lane",
+                c.kv_pool_blocks
+            ));
+        }
+        Ok(self.cfg)
     }
 }
 
@@ -135,63 +246,170 @@ pub struct CpuServeReport {
     pub sessions: Vec<Session>,
     pub metrics: ServeMetrics,
     /// The shared KV block pool the lanes served from (all blocks are
-    /// back on its free list by the time `serve` returns).
+    /// back on its free list by the time the engine returns).
     pub kv_pool: Arc<BlockPool>,
+}
+
+/// Per-request event sink: the streaming half of one submission, plus
+/// how many tokens have been streamed (so a preempted request's
+/// bit-identical re-decode never re-sends a position).
+struct EventSink {
+    tx: Sender<TokenEvent>,
+    streamed: usize,
+}
+
+/// The engine's intake state: submissions received but not yet due
+/// (arrival-time gating), per-request event sinks, and submission
+/// timestamps for the time-in-queue percentiles.
+struct Intake {
+    /// Received, arrival time not yet passed (kept in receipt order —
+    /// ties admit in submission order, like the old sorted VecDeque).
+    pending: Vec<Request>,
+    sinks: BTreeMap<u64, EventSink>,
+    /// Wall ms (engine clock) each request id reached the engine.
+    submit_ms: BTreeMap<u64, f64>,
+    /// Whether any `ServeHandle` clone is still alive.
+    open: bool,
+}
+
+impl Intake {
+    fn accept(&mut self, sub: Submission, now_ms: f64) {
+        if let Some(tx) = sub.events {
+            self.sinks.insert(
+                sub.request.id,
+                EventSink { tx, streamed: 0 },
+            );
+        }
+        self.submit_ms.insert(sub.request.id, now_ms);
+        self.pending.push(sub.request);
+    }
+
+    /// Non-blocking drain of the intake channel.
+    fn drain(&mut self, rx: &Receiver<Submission>, now_ms: f64) {
+        while self.open {
+            match rx.try_recv() {
+                Ok(sub) => self.accept(sub, now_ms),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.open = false;
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Send `Done` events for sessions retired since the last scan.
+fn notify_finished(finished: &[Session], seen: &mut usize, sinks: &mut BTreeMap<u64, EventSink>) {
+    for s in &finished[*seen..] {
+        if let Some(sink) = sinks.remove(&s.request.id) {
+            // a gone receiver just means the submitter stopped caring
+            let _ = sink.tx.send(TokenEvent::Done(s.outcome.clone()));
+        }
+    }
+    *seen = finished.len();
 }
 
 /// The CPU decode server.
 pub struct CpuServer<'m> {
     model: &'m TinyModel,
-    opts: CpuServeOptions,
+    cfg: ServeConfig,
 }
 
 impl<'m> CpuServer<'m> {
-    pub fn new(model: &'m TinyModel, opts: CpuServeOptions) -> Self {
-        assert!(opts.lanes >= 1, "need at least one lane");
-        assert!(opts.kv_block_len >= 1, "need at least one token per KV block");
+    pub fn new(model: &'m TinyModel, cfg: ServeConfig) -> Self {
+        assert!(cfg.lanes >= 1, "need at least one lane");
+        assert!(cfg.kv_block_len >= 1, "need at least one token per KV block");
         assert!(
             model.n_kv_heads >= 1 && model.n_heads % model.n_kv_heads == 0,
             "model GQA shape invalid: {} query heads over {} KV heads",
             model.n_heads,
             model.n_kv_heads
         );
-        CpuServer { model, opts }
+        CpuServer { model, cfg }
     }
 
     /// Blocks the shared pool will hold: the configured count, or the
     /// worst case (every lane at full context) when unset.
     fn pool_blocks(&self) -> usize {
-        if self.opts.kv_pool_blocks > 0 {
-            self.opts.kv_pool_blocks
+        if self.cfg.kv_pool_blocks > 0 {
+            self.cfg.kv_pool_blocks
         } else {
-            self.opts.lanes * self.model.blocks_per_seq(self.opts.kv_block_len)
+            self.cfg.lanes * self.model.blocks_per_seq(self.cfg.kv_block_len)
         }
     }
 
-    /// Serve a request stream to completion (arrival times are honoured in
-    /// iteration order, like the PJRT server).
+    /// Serve a fixed request list to completion (the offline path):
+    /// pre-loads the intake with every request and closes it, then runs
+    /// the engine inline. Arrival times are honoured in iteration order,
+    /// and the iteration schedule is identical to pre-continuous
+    /// serving — the engine sees the whole list before its first step.
     pub fn serve(&self, requests: Vec<Request>) -> CpuServeReport {
-        let lanes = self.opts.lanes;
+        let (tx, rx) = std::sync::mpsc::channel();
+        for r in requests {
+            // the receiver is alive in this scope: send cannot fail
+            let _ = tx.send(Submission {
+                request: r,
+                events: None,
+            });
+        }
+        drop(tx);
+        self.run_engine(rx)
+    }
+
+    /// Run the engine continuously on its own (scoped) thread and give
+    /// `f` a [`ServeHandle`] to submit against — requests join
+    /// mid-flight as lanes free. The engine drains and retires once `f`
+    /// returns and every handle clone is dropped; an engine panic is
+    /// re-raised on this thread after `f` completes.
+    pub fn serve_continuous<R>(&self, f: impl FnOnce(&ServeHandle) -> R) -> (CpuServeReport, R) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = ServeHandle::new(tx);
+        std::thread::scope(|s| {
+            let engine = s.spawn(move || self.run_engine(rx));
+            let out = f(&handle);
+            // close the intake: the engine finishes what it holds, then
+            // exits its loop
+            drop(handle);
+            match engine.join() {
+                Ok(report) => (report, out),
+                Err(cause) => std::panic::resume_unwind(cause),
+            }
+        })
+    }
+
+    /// The continuous-batching engine loop: poll the intake, gate
+    /// arrivals, admit into free lanes, take one chunked batch step,
+    /// stream sampled tokens, retire finished sessions — every
+    /// iteration, with no drain barrier anywhere.
+    fn run_engine(&self, rx: Receiver<Submission>) -> CpuServeReport {
+        let lanes = self.cfg.lanes;
         let model = self.model;
-        let mode = self.opts.mode;
+        let mode = self.cfg.mode;
         let vocab = model.vocab;
         let mut batcher = Batcher::new(lanes, model.n_ctx);
         // one block pool for every lane: blocks migrate between lanes as
         // sequences retire (reclamation in reset_for_reuse / Drop)
-        let kv_pool = model.new_pool(self.pool_blocks(), self.opts.kv_block_len);
+        let kv_pool = model.new_pool(self.pool_blocks(), self.cfg.kv_block_len);
         let mut states: Vec<DecodeState> = (0..lanes)
             .map(|_| model.new_state_in(kv_pool.clone()))
             .collect();
         let mut logits = vec![0.0f32; lanes * vocab];
 
-        let mut pending: VecDeque<Request> = requests.into();
+        let mut intake = Intake {
+            pending: Vec::new(),
+            sinks: BTreeMap::new(),
+            submit_ms: BTreeMap::new(),
+            open: true,
+        };
+        let mut finished_seen = 0usize;
 
         // the persistent worker pool for the whole run: the batched
         // decode step splits its GEMMs by output columns and its
         // attention phase by lane, prefill chunks run one task per lane
         // — no per-iteration thread spawns
-        let threads = if self.opts.workers > 0 {
-            self.opts.workers
+        let threads = if self.cfg.workers > 0 {
+            self.cfg.workers
         } else {
             std::thread::available_parallelism().map_or(1, |n| n.get())
         };
@@ -206,31 +424,41 @@ impl<'m> CpuServer<'m> {
         let arch = ArchConfig::default();
         let mut iter_end_ms: Vec<f64> = Vec::new();
         let mut batch_widths: Vec<f64> = Vec::new();
+        let mut queue_depths: Vec<f64> = Vec::new();
         let mut weight_passes: u64 = 0;
+        let mut adaptive_shrinks: u64 = 0;
 
         // 0 = unbounded: a whole remaining prompt in one chunked step
-        let max_prefill = if self.opts.prefill_chunk == 0 {
+        let max_prefill = if self.cfg.prefill_chunk == 0 {
             usize::MAX
         } else {
-            self.opts.prefill_chunk
+            self.cfg.prefill_chunk
         };
 
-        let faults = self.opts.faults.as_ref().filter(|p| !p.is_empty());
+        let faults = self.cfg.faults.as_ref().filter(|p| !p.is_empty());
         loop {
-            // admit every request whose arrival time has passed
             let now_ms = t0.elapsed().as_secs_f64() * 1e3;
-            while pending
-                .front()
-                .is_some_and(|r| r.arrival_ms as f64 <= now_ms)
-            {
-                if let Some(r) = pending.pop_front() {
+            // live intake: pull every submission that has arrived on the
+            // channel since the last step — this is what lets requests
+            // join mid-flight
+            intake.drain(&rx, now_ms);
+            // arrival gating: move every due request (receipt order)
+            // into the admission queue; oversized requests are rejected
+            // here and their streams closed with `Rejected`
+            let mut i = 0;
+            while i < intake.pending.len() {
+                if intake.pending[i].arrival_ms as f64 <= now_ms {
+                    let r = intake.pending.remove(i);
                     if let Err(rejected) = batcher.submit(r) {
-                        // oversized for the context window: dropped by
-                        // design, but never silently — the batcher
-                        // counted it and ServeMetrics::requests_rejected
-                        // surfaces it at the end of the run
-                        drop(rejected);
+                        // dropped by design, but never silently: the
+                        // batcher counted it, and a streaming submitter
+                        // is told directly
+                        if let Some(sink) = intake.sinks.remove(&rejected.id) {
+                            let _ = sink.tx.send(TokenEvent::Done(SessionOutcome::Rejected));
+                        }
                     }
+                } else {
+                    i += 1;
                 }
             }
             // deadline pass before admission: an expired queued request
@@ -243,19 +471,63 @@ impl<'m> CpuServer<'m> {
                 }
             }
             batcher.admit(iteration);
+            notify_finished(&batcher.finished, &mut finished_seen, &mut intake.sinks);
             if batcher.is_drained() {
-                if pending.is_empty() {
+                if intake.pending.is_empty() && !intake.open {
                     break;
                 }
-                // idle until the next arrival
-                std::thread::sleep(std::time::Duration::from_micros(200));
+                // idle: nothing on a lane. Block briefly on the intake
+                // (cheaper than spinning) when it is still open,
+                // otherwise sleep out the gap to the next arrival.
+                if intake.open {
+                    use std::sync::mpsc::RecvTimeoutError;
+                    match rx.recv_timeout(std::time::Duration::from_micros(500)) {
+                        Ok(sub) => intake.accept(sub, t0.elapsed().as_secs_f64() * 1e3),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => intake.open = false,
+                    }
+                } else {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
                 continue;
             }
+            queue_depths.push(batcher.queue_len() as f64);
 
-            let chunks = batcher.gather_chunks(max_prefill);
+            // adaptive prefill co-scheduling: with live decode lanes,
+            // shrink the chunk so a prefill lane cannot stretch the
+            // whole batch step (wall time is the max over lanes)
+            let step_prefill = if self.cfg.adaptive_prefill && self.cfg.prefill_chunk > 0 {
+                let mut n_decode = 0usize;
+                let mut n_prefill = 0usize;
+                for i in 0..lanes {
+                    match batcher.lane_session(i).map(|s| s.phase()) {
+                        Some(SessionPhase::Decode) => n_decode += 1,
+                        Some(SessionPhase::Prefill) => n_prefill += 1,
+                        _ => {}
+                    }
+                }
+                if n_decode > 0 && n_prefill > 0 {
+                    let shrunk = (self.cfg.prefill_chunk / (1 + n_decode)).max(1);
+                    if shrunk < max_prefill {
+                        adaptive_shrinks += 1;
+                    }
+                    shrunk
+                } else {
+                    max_prefill
+                }
+            } else {
+                max_prefill
+            };
+
+            let chunks = batcher.gather_chunks(step_prefill);
             let mut fed: Vec<usize> = chunks.iter().map(|c| c.tokens.len()).collect();
             let was_active: Vec<bool> = chunks.iter().map(|c| c.active).collect();
             let pos_v: Vec<usize> = chunks.iter().map(|c| c.pos).collect();
+            // lane → request id and tokens-generated-so-far, captured
+            // before the chunk borrows end (token streaming needs them
+            // after the step)
+            let req_ids: Vec<u64> = chunks.iter().map(|c| c.request_id).collect();
+            let gen_before: Vec<usize> = chunks.iter().map(|c| c.generated).collect();
             occupancy_acc += batcher.occupancy();
 
             // lanes starting a fresh session restart their decode state
@@ -296,14 +568,15 @@ impl<'m> CpuServer<'m> {
                 if let Some(&victim) = order.last() {
                     drop(chunks);
                     states[victim].reset_for_reuse();
-                    batcher.preempt_lane(victim, iteration, self.opts.max_requeues);
+                    batcher.preempt_lane(victim, iteration, self.cfg.max_requeues);
+                    notify_finished(&batcher.finished, &mut finished_seen, &mut intake.sinks);
                     if oom_armed {
                         if let Some(p) = faults {
                             p.oom_fired(iteration);
                         }
                     }
                     iteration += 1;
-                    if self.opts.max_iterations > 0 && iteration >= self.opts.max_iterations {
+                    if self.cfg.max_iterations > 0 && iteration >= self.cfg.max_iterations {
                         break;
                     }
                     continue;
@@ -473,7 +746,7 @@ impl<'m> CpuServer<'m> {
                 .max()
                 .unwrap_or(0);
             for k in 1..=max_fed {
-                let sim = layer_sched::simulate_token(&arch, &self.opts.sim_model, base_ctx + k);
+                let sim = layer_sched::simulate_token(&arch, &self.cfg.sim_model, base_ctx + k);
                 sim_cycles += sim.total_cycles;
             }
 
@@ -520,6 +793,21 @@ impl<'m> CpuServer<'m> {
                     }
                 })
                 .collect();
+            // token streaming: each freshly sampled position goes out on
+            // its request's event stream. A requeued request re-decodes
+            // already-streamed positions bit-identically — the per-sink
+            // high-water mark keeps them from being re-sent.
+            for i in 0..lanes {
+                if fed[i] == 0 || !sampling[i] {
+                    continue;
+                }
+                if let Some(sink) = intake.sinks.get_mut(&req_ids[i]) {
+                    if gen_before[i] == sink.streamed {
+                        let _ = sink.tx.send(TokenEvent::Token(samples[i]));
+                        sink.streamed += 1;
+                    }
+                }
+            }
             let retired = batcher.scatter_chunk_outputs(&fed, &samples, iteration);
             if !retired.is_empty() {
                 // reclaim at retirement, not at the lane's next admission:
@@ -533,10 +821,11 @@ impl<'m> CpuServer<'m> {
                     }
                 }
             }
+            notify_finished(&batcher.finished, &mut finished_seen, &mut intake.sinks);
             iter_end_ms.push(t0.elapsed().as_secs_f64() * 1e3);
 
             iteration += 1;
-            if self.opts.max_iterations > 0 && iteration >= self.opts.max_iterations {
+            if self.cfg.max_iterations > 0 && iteration >= self.cfg.max_iterations {
                 break;
             }
         }
@@ -546,6 +835,11 @@ impl<'m> CpuServer<'m> {
         // lets callers assert full reclamation on the returned pool)
         drop(states);
         debug_assert_eq!(kv_pool.free_blocks(), kv_pool.total_blocks());
+        // a `max_iterations` exit can leave live sessions behind; their
+        // sinks drop here, which closes the streams — PendingRequest
+        // maps that to a Failed outcome on the caller side
+        notify_finished(&batcher.finished, &mut finished_seen, &mut intake.sinks);
+        drop(intake.sinks);
 
         let wall_s = t0.elapsed().as_secs_f64();
         // admission accounting must reach the metrics: a rejected
@@ -568,6 +862,30 @@ impl<'m> CpuServer<'m> {
             .iter()
             .filter_map(|s| s.first_token_at.map(|f| at_ms(f) - at_ms(s.admitted_at)))
             .collect();
+        // time-per-output-token: steady-state decode cadence, first
+        // token excluded (that is TTFT's job)
+        let tpots: Vec<f64> = sessions
+            .iter()
+            .filter_map(|s| {
+                let (first, last) = (s.first_token_at?, s.finished_at?);
+                (s.generated.len() >= 2)
+                    .then(|| (at_ms(last) - at_ms(first)) / (s.generated.len() - 1) as f64)
+            })
+            .collect();
+        // time each request waited between reaching the engine (or its
+        // nominal arrival, whichever is later) and taking a lane
+        let queue_waits: Vec<f64> = sessions
+            .iter()
+            .map(|s| {
+                let submitted = intake
+                    .submit_ms
+                    .get(&s.request.id)
+                    .copied()
+                    .unwrap_or(0.0)
+                    .max(s.request.arrival_ms as f64);
+                (at_ms(s.admitted_at) - submitted).max(0.0)
+            })
+            .collect();
 
         let zero = Percentiles::ZERO;
         let sim_ms = arch.cycles_to_ms(sim_cycles);
@@ -585,6 +903,10 @@ impl<'m> CpuServer<'m> {
             step_ms: Percentiles::compute(&step_ms).unwrap_or(zero),
             request_latency_ms: Percentiles::compute(&latencies).unwrap_or(zero),
             ttft_ms: Percentiles::compute(&ttfts).unwrap_or(zero),
+            tpot_ms: Percentiles::compute(&tpots).unwrap_or(zero),
+            time_in_queue_ms: Percentiles::compute(&queue_waits).unwrap_or(zero),
+            queue_depth: Percentiles::compute(&queue_depths).unwrap_or(zero),
+            adaptive_prefill_shrinks: adaptive_shrinks,
             mean_occupancy: if iteration > 0 {
                 occupancy_acc / iteration as f64
             } else {
@@ -614,5 +936,33 @@ impl<'m> CpuServer<'m> {
             metrics,
             kv_pool,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_at_build_time() {
+        assert!(ServeConfig::builder().build().is_ok(), "defaults are valid");
+        let err = ServeConfig::builder().lanes(0).build().unwrap_err();
+        assert!(err.contains("lanes"), "{err}");
+        let err = ServeConfig::builder().kv_block_len(0).build().unwrap_err();
+        assert!(err.contains("kv_block_len"), "{err}");
+        let cfg = ServeConfig::builder()
+            .lanes(2)
+            .mode(NumericsMode::Accelerator)
+            .prefill_chunk(0)
+            .adaptive_prefill(true)
+            .workers(1)
+            .max_requeues(7)
+            .build()
+            .expect("valid config");
+        assert_eq!(cfg.lanes, 2);
+        assert_eq!(cfg.mode, NumericsMode::Accelerator);
+        assert_eq!(cfg.prefill_chunk, 0);
+        assert!(cfg.adaptive_prefill);
+        assert_eq!(cfg.max_requeues, 7);
     }
 }

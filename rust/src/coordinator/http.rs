@@ -1,0 +1,393 @@
+//! Minimal HTTP/SSE front door over the continuous engine.
+//!
+//! `swiftkv serve --listen HOST:PORT` boots this: a hand-rolled
+//! thread-per-connection HTTP server over [`std::net`] (no async
+//! runtime, no framework — the only external dependency stays
+//! `anyhow`). Each `POST /v1/generate` submits one request through the
+//! shared [`ServeHandle`] and streams its tokens back as server-sent
+//! events; the engine never learns HTTP exists, so the same engine
+//! binary serves the offline path, this front door, or any runtime a
+//! caller bridges from.
+//!
+//! Protocol:
+//!
+//! - `POST /v1/generate` with body
+//!   `{"prompt": [1, 2, 3], "gen_len": 8, "deadline_ms": 0}` →
+//!   `Content-Type: text/event-stream`, one `data: {"token": N}` event
+//!   per generated token, then a final
+//!   `data: {"done": true, "outcome": "completed"}` event. Failure
+//!   outcomes carry a `"reason"` field.
+//! - `GET /healthz` → `200 ok` (liveness for the smoke job).
+//!
+//! The request joins the engine **mid-flight**: it takes a lane as soon
+//! as one frees, while other connections' requests keep decoding — no
+//! drain barrier between HTTP requests.
+
+use super::cpu::{CpuServeReport, CpuServer, ServeConfig};
+use super::session::SessionOutcome;
+use super::submit::{ServeHandle, TokenEvent};
+use crate::model::{Request, TinyModel};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Front-door configuration (the engine's own knobs live in
+/// [`ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct HttpServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks a free port —
+    /// the bound address reaches the caller through `on_ready`).
+    pub listen: String,
+    /// Shut the server down after this much wall time (ms); `0` = run
+    /// until `max_requests` (or forever). CI's smoke job bounds runs
+    /// with this.
+    pub max_wall_ms: u64,
+    /// Shut the server down after this many `/v1/generate` requests
+    /// have finished streaming; `0` = unbounded. Tests use this for a
+    /// deterministic shutdown.
+    pub max_requests: u64,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> Self {
+        HttpServerConfig {
+            listen: "127.0.0.1:8080".to_string(),
+            max_wall_ms: 0,
+            max_requests: 0,
+        }
+    }
+}
+
+/// What the front door saw over its lifetime, plus the engine's own
+/// report (per-session outcomes, serving metrics, the KV pool for
+/// reclamation asserts).
+pub struct HttpServeReport {
+    pub report: CpuServeReport,
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// `/v1/generate` requests that finished streaming (any outcome).
+    pub requests_served: u64,
+    /// The address actually bound (differs from `listen` for `:0`).
+    pub local_addr: SocketAddr,
+}
+
+/// Run the continuous engine with an HTTP/SSE front door until the
+/// configured bound (wall clock or request count) is reached.
+/// `on_ready` fires once the socket is bound, with the live address —
+/// the CLI prints it, tests connect to it.
+pub fn serve_http(
+    model: &TinyModel,
+    cfg: ServeConfig,
+    http: &HttpServerConfig,
+    on_ready: impl FnOnce(SocketAddr),
+) -> std::io::Result<HttpServeReport> {
+    let listener = TcpListener::bind(&http.listen)?;
+    let local_addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    on_ready(local_addr);
+
+    let server = CpuServer::new(model, cfg);
+    let vocab = model.vocab;
+    let connections = AtomicU64::new(0);
+    let served = AtomicU64::new(0);
+    let next_id = AtomicU64::new(0);
+
+    let (report, accept_result) = server.serve_continuous(|handle| {
+        let t0 = Instant::now();
+        std::thread::scope(|s| -> std::io::Result<()> {
+            loop {
+                if http.max_wall_ms > 0 && t0.elapsed() >= Duration::from_millis(http.max_wall_ms)
+                {
+                    break;
+                }
+                if http.max_requests > 0 && served.load(Ordering::SeqCst) >= http.max_requests {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        connections.fetch_add(1, Ordering::SeqCst);
+                        // Sender is !Sync: each connection thread gets
+                        // its own clone of the handle
+                        let conn_handle = handle.clone();
+                        let served = &served;
+                        let next_id = &next_id;
+                        s.spawn(move || {
+                            // a broken client connection is that
+                            // client's problem, not the server's
+                            let _ =
+                                handle_connection(stream, &conn_handle, vocab, next_id, served);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(())
+            // scope exit joins every in-flight connection thread (each
+            // bounded by its stream's read timeout)
+        })
+    });
+
+    accept_result?;
+    Ok(HttpServeReport {
+        report,
+        connections: connections.load(Ordering::SeqCst),
+        requests_served: served.load(Ordering::SeqCst),
+        local_addr,
+    })
+}
+
+/// Read one HTTP/1.1 request (head capped at 16 KiB, body at 1 MiB).
+fn read_request(stream: &mut TcpStream) -> std::io::Result<(String, String, Vec<u8>)> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        if buf.len() > 16 * 1024 {
+            return Err(bad("request head too large"));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut lines = head.lines();
+    let request_line = lines.next().ok_or_else(|| bad("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| bad("missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| bad("missing path"))?.to_string();
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().map_err(|_| bad("bad content-length"))?;
+            }
+        }
+    }
+    if content_len > 1024 * 1024 {
+        return Err(bad("request body too large"));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_len);
+    Ok((method, path, body))
+}
+
+fn write_simple(stream: &mut TcpStream, status: &str, body: &str) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Parse a `/v1/generate` body into a [`Request`]. Validation happens
+/// here because the engine trusts its inputs: an empty prompt or an
+/// out-of-vocab token must bounce with a 400, not reach a lane.
+fn parse_generate(body: &[u8], vocab: usize, id: u64) -> Result<Request, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt_json = json
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or("missing \"prompt\" array")?;
+    if prompt_json.is_empty() {
+        return Err("\"prompt\" must not be empty".to_string());
+    }
+    let mut prompt = Vec::with_capacity(prompt_json.len());
+    for t in prompt_json {
+        let v = t.as_f64().ok_or("\"prompt\" tokens must be numbers")?;
+        if v < 0.0 || v.fract() != 0.0 || v as usize >= vocab {
+            return Err(format!("token {v} out of vocab (0..{vocab})"));
+        }
+        prompt.push(v as u32);
+    }
+    let gen_len = json.get("gen_len").and_then(Json::as_usize).unwrap_or(1);
+    if gen_len == 0 {
+        return Err("\"gen_len\" must be >= 1".to_string());
+    }
+    let deadline = json
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as u64;
+    Ok(Request::new(id, prompt).gen_len(gen_len).deadline_ms(deadline))
+}
+
+fn sse_event(obj: BTreeMap<String, Json>) -> String {
+    format!("data: {}\n\n", Json::Obj(obj))
+}
+
+fn outcome_event(outcome: &SessionOutcome) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("done".to_string(), Json::Bool(true));
+    let label = match outcome {
+        SessionOutcome::Completed => "completed",
+        SessionOutcome::Failed(reason) => {
+            obj.insert("reason".to_string(), Json::Str(reason.clone()));
+            "failed"
+        }
+        SessionOutcome::DeadlineExpired => "deadline_expired",
+        SessionOutcome::Rejected => "rejected",
+    };
+    obj.insert("outcome".to_string(), Json::Str(label.to_string()));
+    sse_event(obj)
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    handle: &ServeHandle,
+    vocab: usize,
+    next_id: &AtomicU64,
+    served: &AtomicU64,
+) -> std::io::Result<()> {
+    // a stalled or dead client must not pin this thread (scope join at
+    // shutdown waits for it)
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_nonblocking(false)?;
+    let (method, path, body) = read_request(&mut stream)?;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => write_simple(&mut stream, "200 OK", "ok\n"),
+        ("POST", "/v1/generate") => {
+            let id = next_id.fetch_add(1, Ordering::SeqCst);
+            let request = match parse_generate(&body, vocab, id) {
+                Ok(r) => r,
+                Err(msg) => return write_simple(&mut stream, "400 Bad Request", &msg),
+            };
+            let pending = match handle.submit(request) {
+                Ok(p) => p,
+                Err(_) => {
+                    return write_simple(&mut stream, "503 Service Unavailable", "engine closed")
+                }
+            };
+            write!(
+                stream,
+                "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+            )?;
+            stream.flush()?;
+            while let Some(event) = pending.next_event() {
+                match event {
+                    TokenEvent::Token(t) => {
+                        let mut obj = BTreeMap::new();
+                        obj.insert("token".to_string(), Json::Num(t as f64));
+                        stream.write_all(sse_event(obj).as_bytes())?;
+                        stream.flush()?;
+                    }
+                    TokenEvent::Done(outcome) => {
+                        stream.write_all(outcome_event(&outcome).as_bytes())?;
+                        stream.flush()?;
+                        break;
+                    }
+                }
+            }
+            served.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+        _ => write_simple(&mut stream, "404 Not Found", "not found\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NumericsMode;
+
+    fn tiny() -> TinyModel {
+        TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48)
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").expect("write");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read");
+        out
+    }
+
+    fn http_post(addr: SocketAddr, path: &str, body: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(
+            s,
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("write");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read");
+        out
+    }
+
+    #[test]
+    fn sse_stream_matches_solo_decode() {
+        let model = tiny();
+        let cfg = ServeConfig::builder()
+            .lanes(2)
+            .workers(1)
+            .build()
+            .expect("valid config");
+        let prompt = vec![1u32, 2, 3];
+        let gen_len = 4;
+        let expect = model.generate(&prompt, gen_len, NumericsMode::DesktopF32);
+
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        std::thread::scope(|s| {
+            let client = s.spawn(move || {
+                let addr: SocketAddr = addr_rx.recv().expect("server binds");
+                assert!(http_get(addr, "/healthz").contains("200 OK"));
+                assert!(http_post(addr, "/v1/generate", "{not json").contains("400"));
+                assert!(
+                    http_post(addr, "/v1/generate", "{\"prompt\": []}").contains("400"),
+                    "empty prompt must bounce at the front door"
+                );
+                let resp =
+                    http_post(addr, "/v1/generate", "{\"prompt\": [1, 2, 3], \"gen_len\": 4}");
+                assert!(resp.contains("text/event-stream"), "{resp}");
+                assert!(resp.contains("\"done\":true"), "{resp}");
+                assert!(resp.contains("\"outcome\":\"completed\""), "{resp}");
+                resp
+            });
+            let http_cfg = HttpServerConfig {
+                listen: "127.0.0.1:0".to_string(),
+                max_wall_ms: 60_000, // backstop; max_requests ends the run
+                max_requests: 1,
+            };
+            let rep = serve_http(&model, cfg, &http_cfg, |addr| {
+                addr_tx.send(addr).expect("test alive");
+            })
+            .expect("serve");
+            let resp = client.join().expect("client thread");
+            // the streamed tokens are the solo generate() tokens, in order
+            let streamed: Vec<u32> = resp
+                .lines()
+                .filter_map(|l| l.strip_prefix("data: "))
+                .filter_map(|l| Json::parse(l).ok())
+                .filter_map(|j| j.get("token").and_then(Json::as_f64).map(|t| t as u32))
+                .collect();
+            assert_eq!(streamed, expect, "SSE stream must be bit-exact");
+            assert_eq!(rep.requests_served, 1);
+            assert!(rep.connections >= 3, "health + 2 bad + 1 good");
+            assert_eq!(rep.report.metrics.requests, 1);
+            assert!(rep.report.sessions[0].outcome.is_completed());
+            // full KV reclamation after the front door shuts down
+            assert_eq!(
+                rep.report.kv_pool.free_blocks(),
+                rep.report.kv_pool.total_blocks()
+            );
+        });
+    }
+}

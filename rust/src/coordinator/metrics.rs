@@ -61,7 +61,10 @@ impl Percentiles {
 }
 
 /// Aggregated serving metrics for one run.
-#[derive(Debug, Clone)]
+///
+/// `Default` is the all-zero report (useful with `..Default::default()`
+/// when a serving path does not produce every statistic).
+#[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     pub requests: usize,
     /// Requests the batcher accepted into the queue.
@@ -93,6 +96,23 @@ pub struct ServeMetrics {
     pub request_latency_ms: Percentiles,
     /// Time-to-first-token (ms, admission → first sample), wall-clock.
     pub ttft_ms: Percentiles,
+    /// Time-per-output-token (ms): per completed request, the mean
+    /// inter-token gap over its decode phase (first token excluded —
+    /// that is TTFT's job). The steady-state latency a streaming client
+    /// observes between tokens.
+    pub tpot_ms: Percentiles,
+    /// Time each request waited between reaching the engine (or its
+    /// nominal arrival, whichever is later) and taking a lane (ms).
+    /// Grows without bound once the offered load exceeds lane capacity
+    /// — the saturation signal of the continuous engine.
+    pub time_in_queue_ms: Percentiles,
+    /// Admission-queue depth sampled once per productive engine
+    /// iteration (idle-wait iterations are not samples).
+    pub queue_depth: Percentiles,
+    /// Iterations where adaptive prefill co-scheduling shrank the
+    /// prefill chunk below its configured bound because decode lanes
+    /// were live ([`super::ServeConfig::adaptive_prefill`]).
+    pub adaptive_prefill_shrinks: u64,
     /// Mean lane occupancy over the run.
     pub mean_occupancy: f64,
     /// Decode-batch width per iteration that stepped at least one
@@ -163,6 +183,24 @@ impl ServeMetrics {
             self.ttft_ms.p50
         ));
         out.push_str(&format!(
+            "TPOT p50/p99            {:>7.2} / {:.2} ms\n",
+            self.tpot_ms.p50, self.tpot_ms.p99
+        ));
+        out.push_str(&format!(
+            "time in queue p50/p99   {:>7.1} / {:.1} ms\n",
+            self.time_in_queue_ms.p50, self.time_in_queue_ms.p99
+        ));
+        out.push_str(&format!(
+            "queue depth p50         {:>10.1} (max {:.0})\n",
+            self.queue_depth.p50, self.queue_depth.max
+        ));
+        if self.adaptive_prefill_shrinks > 0 {
+            out.push_str(&format!(
+                "adaptive chunk shrinks  {:>10}\n",
+                self.adaptive_prefill_shrinks
+            ));
+        }
+        out.push_str(&format!(
             "mean occupancy          {:>10.2}\n",
             self.mean_occupancy
         ));
@@ -181,6 +219,9 @@ impl ServeMetrics {
         let dropped = self.step_ms.non_finite
             + self.request_latency_ms.non_finite
             + self.ttft_ms.non_finite
+            + self.tpot_ms.non_finite
+            + self.time_in_queue_ms.non_finite
+            + self.queue_depth.non_finite
             + self.batch_width.non_finite;
         if dropped > 0 {
             out.push_str(&format!(
@@ -257,28 +298,39 @@ mod tests {
         let mut m = ServeMetrics {
             requests: 1,
             requests_admitted: 1,
-            requests_rejected: 0,
-            requests_failed: 0,
-            preemptions: 0,
-            requeues: 0,
-            deadline_expired: 0,
             total_tokens_generated: 4,
             iterations: 4,
             wall_s: 0.1,
             step_ms: Percentiles::compute(&[1.0, f64::NAN, 2.0]).unwrap(),
-            request_latency_ms: Percentiles::ZERO,
-            ttft_ms: Percentiles::ZERO,
             mean_occupancy: 1.0,
-            batch_width: Percentiles::ZERO,
             weight_passes: 4,
             weight_passes_per_step: 1.0,
             tokens_per_s: 40.0,
             simulated_accel_ms: 0.5,
             simulated_tokens_per_s: 8000.0,
+            ..Default::default()
         };
         assert!(m.format_table().contains("non-finite samples"));
         assert!(!m.format_table().contains("NaN"), "stats must stay finite");
         m.step_ms = Percentiles::ZERO;
         assert!(!m.format_table().contains("non-finite samples"));
+    }
+
+    #[test]
+    fn format_table_reports_queueing_stats() {
+        let mut m = ServeMetrics {
+            tpot_ms: Percentiles::compute(&[2.0, 3.0]).unwrap(),
+            time_in_queue_ms: Percentiles::compute(&[10.0]).unwrap(),
+            queue_depth: Percentiles::compute(&[0.0, 5.0]).unwrap(),
+            ..Default::default()
+        };
+        let table = m.format_table();
+        assert!(table.contains("TPOT"));
+        assert!(table.contains("time in queue"));
+        assert!(table.contains("queue depth"));
+        // the adaptive line only appears once the policy actually fired
+        assert!(!table.contains("adaptive chunk shrinks"));
+        m.adaptive_prefill_shrinks = 3;
+        assert!(m.format_table().contains("adaptive chunk shrinks"));
     }
 }

@@ -10,32 +10,47 @@
 //! - [`session`] — per-request decode sessions (prompt feed → generation),
 //! - [`batcher`] — continuous batching over a fixed lane count: free
 //!   lanes are re-admitted from the queue every iteration,
-//! - [`cpu`] — the default serving backend: the pure-Rust tiny model on
-//!   the fused decode kernels; decode-phase lanes step through one
-//!   operator-batched `decode_steps_into` call (one shared weight pass
-//!   per batch step) over a persistent [`crate::kernels::WorkerPool`],
+//! - [`submit`] — the submission API: a cloneable [`ServeHandle`]
+//!   (submit → per-request [`TokenEvent`] stream → final
+//!   [`SessionOutcome`]) that both the offline path and the async front
+//!   door share; requests join a running engine mid-flight,
+//! - [`cpu`] — the continuous-batching engine: the pure-Rust tiny model
+//!   on the fused decode kernels; the iteration loop polls the intake
+//!   channel every step (no drain barrier), and decode-phase lanes step
+//!   through one operator-batched `decode_steps_into` call (one shared
+//!   weight pass per batch step) over a persistent
+//!   [`crate::kernels::WorkerPool`],
+//! - [`http`] — the minimal HTTP/SSE front door (`swiftkv serve
+//!   --listen`): hand-rolled thread-per-connection over `std::net`, each
+//!   connection streaming one request's tokens as server-sent events —
+//!   the engine never learns HTTP exists,
 //! - [`server`] — the PJRT serving loop over the AOT engine (behind the
 //!   `pjrt` feature): gather (token, position) per lane, one engine step,
 //!   scatter logits, greedy-sample, retire finished sessions,
-//! - [`metrics`] — per-request latency/throughput accounting plus the
-//!   simulated SwiftKV-MHA timing for the same schedule (via
-//!   [`crate::sim::layer_sched`]), so the E2E example reports both
-//!   wall-clock and modelled-accelerator numbers.
+//! - [`metrics`] — per-request latency/throughput accounting (TTFT,
+//!   TPOT, time-in-queue, queue depth) plus the simulated SwiftKV-MHA
+//!   timing for the same schedule (via [`crate::sim::layer_sched`]), so
+//!   the E2E example reports both wall-clock and modelled-accelerator
+//!   numbers.
 
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod batcher;
 pub mod cpu;
 pub mod faults;
+pub mod http;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod session;
+pub mod submit;
 
 pub use batcher::{Batcher, FaultCounters, LaneChunk, LaneState, PreemptOutcome};
-pub use cpu::{CpuServeOptions, CpuServeReport, CpuServer, DEFAULT_PREFILL_CHUNK};
+pub use cpu::{CpuServeReport, CpuServer, ServeConfig, ServeConfigBuilder, DEFAULT_PREFILL_CHUNK};
 pub use faults::{FaultKind, FaultPlan};
+pub use http::{serve_http, HttpServeReport, HttpServerConfig};
 pub use metrics::{Percentiles, ServeMetrics};
 #[cfg(feature = "pjrt")]
 pub use server::{ServeOptions, ServeReport, Server};
 pub use session::{Session, SessionOutcome, SessionPhase};
+pub use submit::{FinishedRequest, PendingRequest, ServeHandle, SubmitError, TokenEvent};

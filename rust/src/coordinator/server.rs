@@ -180,6 +180,9 @@ impl<'e> Server<'e> {
             } else {
                 0.0
             },
+            // queueing/TPOT stats are a continuous-engine concern; the
+            // PJRT loop drains a fixed list and leaves them zeroed
+            ..Default::default()
         };
         Ok(ServeReport { sessions, metrics })
     }

@@ -28,6 +28,12 @@ pub enum SessionOutcome {
     /// Cancelled at an iteration boundary after its wall-clock deadline
     /// passed.
     DeadlineExpired,
+    /// Refused at submission (oversized for the context window) — the
+    /// request never held a lane or generated a token. Only surfaces
+    /// through the continuous submission API
+    /// ([`super::submit::TokenEvent::Done`]); the offline path records
+    /// rejections in the admission counters alone.
+    Rejected,
 }
 
 impl SessionOutcome {
@@ -177,13 +183,7 @@ mod tests {
     use super::*;
 
     fn req(prompt: &[u32], gen_len: usize) -> Request {
-        Request {
-            id: 0,
-            prompt: prompt.to_vec(),
-            gen_len,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        }
+        Request::new(0, prompt.to_vec()).gen_len(gen_len)
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! The redesigned submission API: submit → per-request token stream →
+//! final [`SessionOutcome`].
+//!
+//! A [`ServeHandle`] is the only way work enters a running continuous
+//! engine ([`super::cpu::CpuServer::serve_continuous`]): callers submit
+//! a [`crate::model::Request`] and get back a [`PendingRequest`] — a
+//! per-request stream of [`TokenEvent`]s that ends with the request's
+//! final outcome. The handle is cheap to clone (one clone per HTTP
+//! connection thread, one per load-generator worker); dropping every
+//! clone closes the engine's intake, which lets it drain and retire.
+//!
+//! The engine stays runtime-agnostic behind this surface: events ride
+//! plain `std::sync::mpsc` channels, so the same handle serves the
+//! blocking offline path, thread-per-connection HTTP/SSE, or any async
+//! runtime a caller wants to bridge from.
+
+use super::session::SessionOutcome;
+use crate::model::Request;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// One event on a request's output stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenEvent {
+    /// One generated token, in generation order. Tokens are emitted as
+    /// they are sampled; a preempted-and-requeued request re-decodes
+    /// bit-identically, so already-streamed positions are never re-sent.
+    Token(u32),
+    /// The request retired with this outcome. Always the stream's last
+    /// event (when the engine survives long enough to send it).
+    Done(SessionOutcome),
+}
+
+/// One unit of work on the engine's intake channel: the request plus
+/// (for streaming submitters) the sender half of its event stream.
+pub(crate) struct Submission {
+    pub(crate) request: Request,
+    pub(crate) events: Option<Sender<TokenEvent>>,
+}
+
+/// Why a submission failed to enter the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The engine's intake is gone — the serving loop has exited (hit
+    /// `max_iterations`, or the scope is shutting down).
+    EngineClosed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::EngineClosed => write!(f, "engine closed: serving loop has exited"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Submission handle onto a running continuous engine. Clone freely —
+/// every clone feeds the same lane array; the engine's intake closes
+/// when the last clone drops.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: Sender<Submission>,
+}
+
+impl ServeHandle {
+    pub(crate) fn new(tx: Sender<Submission>) -> ServeHandle {
+        ServeHandle { tx }
+    }
+
+    /// Submit a request and stream its output. The request joins the
+    /// admission queue mid-flight — it takes a lane as soon as its
+    /// `arrival_ms` has passed and a lane is free, with no drain
+    /// barrier. Oversized requests are not an error here: their stream
+    /// reports [`SessionOutcome::Rejected`] as its only event.
+    pub fn submit(&self, request: Request) -> Result<PendingRequest, SubmitError> {
+        let id = request.id;
+        let (etx, erx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Submission {
+                request,
+                events: Some(etx),
+            })
+            .map_err(|_| SubmitError::EngineClosed)?;
+        Ok(PendingRequest { id, rx: erx })
+    }
+
+    /// Submit without an event stream: the request's tokens and outcome
+    /// are only observable through the engine's final
+    /// [`super::cpu::CpuServeReport`] (the offline path).
+    pub fn submit_nowait(&self, request: Request) -> Result<(), SubmitError> {
+        self.tx
+            .send(Submission {
+                request,
+                events: None,
+            })
+            .map_err(|_| SubmitError::EngineClosed)
+    }
+}
+
+/// The receiving half of one submitted request: a blocking stream of
+/// [`TokenEvent`]s ending in [`TokenEvent::Done`].
+pub struct PendingRequest {
+    id: u64,
+    rx: Receiver<TokenEvent>,
+}
+
+impl PendingRequest {
+    /// The submitted request's id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the stream is over (after
+    /// `Done`, or if the engine died without retiring the request).
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Block until the request retires, collecting its tokens. An
+    /// engine that exits without retiring the request (e.g. a
+    /// `max_iterations` cap) yields a `Failed` outcome rather than a
+    /// hang or a panic.
+    pub fn wait(self) -> FinishedRequest {
+        let mut tokens = Vec::new();
+        loop {
+            match self.rx.recv() {
+                Ok(TokenEvent::Token(t)) => tokens.push(t),
+                Ok(TokenEvent::Done(outcome)) => {
+                    return FinishedRequest {
+                        id: self.id,
+                        tokens,
+                        outcome,
+                    }
+                }
+                Err(_) => {
+                    return FinishedRequest {
+                        id: self.id,
+                        tokens,
+                        outcome: SessionOutcome::Failed(
+                            "engine terminated before the request finished".to_string(),
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A retired request as seen through the submission API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FinishedRequest {
+    pub id: u64,
+    /// Every token streamed before retirement (the full generation for
+    /// `Completed`, a prefix for failures).
+    pub tokens: Vec<u32>,
+    pub outcome: SessionOutcome,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_collects_tokens_then_outcome() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = ServeHandle::new(tx);
+        let pending = handle
+            .submit(Request::new(7, vec![1, 2]).gen_len(3))
+            .expect("intake open");
+        assert_eq!(pending.id(), 7);
+        // play the engine side
+        let sub = rx.recv().expect("submission arrives");
+        assert_eq!(sub.request.id, 7);
+        let events = sub.events.expect("streaming submission carries a sink");
+        for t in [10u32, 11, 12] {
+            events.send(TokenEvent::Token(t)).expect("receiver alive");
+        }
+        events
+            .send(TokenEvent::Done(SessionOutcome::Completed))
+            .expect("receiver alive");
+        let fin = pending.wait();
+        assert_eq!(fin.tokens, vec![10, 11, 12]);
+        assert!(fin.outcome.is_completed());
+    }
+
+    #[test]
+    fn engine_death_maps_to_failed_outcome() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = ServeHandle::new(tx);
+        let pending = handle.submit(Request::new(0, vec![1])).expect("intake open");
+        let sub = rx.recv().expect("submission arrives");
+        let events = sub.events.expect("sink");
+        events.send(TokenEvent::Token(5)).expect("receiver alive");
+        drop(events); // engine dies without sending Done
+        let fin = pending.wait();
+        assert_eq!(fin.tokens, vec![5]);
+        assert!(
+            matches!(&fin.outcome, SessionOutcome::Failed(m) if m.contains("engine terminated")),
+            "got {:?}",
+            fin.outcome
+        );
+    }
+
+    #[test]
+    fn submit_after_engine_exit_errors() {
+        let (tx, rx) = std::sync::mpsc::channel::<Submission>();
+        let handle = ServeHandle::new(tx);
+        drop(rx);
+        assert_eq!(
+            handle.submit(Request::new(0, vec![1])).err(),
+            Some(SubmitError::EngineClosed)
+        );
+        assert_eq!(
+            handle.submit_nowait(Request::new(1, vec![1])),
+            Err(SubmitError::EngineClosed)
+        );
+    }
+}

@@ -6,14 +6,22 @@
 //! swiftkv simulate --model llama2-7b|chatglm-6b|llama3-8b|qwen3-8b --ctx 512
 //! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
 //!                  [--kv-block-len 16] [--kv-pool-blocks 0] [--prefill-chunk 8]
-//!                  [--prompt-len 0] [--workers 0] [--deadline-ms 0]
+//!                  [--adaptive-prefill] [--prompt-len 0] [--workers 0] [--deadline-ms 0]
 //!                  [--faults panic@r0:s1,oom@i4] [--max-requeues 3]
+//!                  [--listen 127.0.0.1:8080] [--serve-wall-ms 0]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
+//!
+//! With `--listen`, `serve` boots the continuous engine behind the
+//! HTTP/SSE front door instead of draining a synthetic workload:
+//! `POST /v1/generate` streams tokens as server-sent events, and
+//! requests join the running batch mid-flight.
 
 #[cfg(feature = "pjrt")]
 use swiftkv::coordinator::{ServeOptions, Server};
-use swiftkv::coordinator::{CpuServeOptions, CpuServer, FaultPlan, DEFAULT_PREFILL_CHUNK};
+use swiftkv::coordinator::{
+    serve_http, CpuServer, FaultPlan, HttpServerConfig, ServeConfig, DEFAULT_PREFILL_CHUNK,
+};
 use swiftkv::model::{
     LlmConfig, NumericsMode, TinyModel, WeightStore, WorkloadGen, WorkloadSpec,
     DEFAULT_KV_BLOCK_LEN,
@@ -113,7 +121,6 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
         );
         TinyModel::synthetic(0, 512, 256, SYNTH_HEADS, kv_heads, 4, 1024, 512)
     };
-    let reqs = WorkloadGen::new(workload_spec(args, tm.vocab)?).generate();
     let lanes = args.get_usize("batch", 8)?;
     // paged-KV pool shape: tokens per block, and total blocks shared by
     // every lane (0 = worst case, all lanes at full context)
@@ -138,22 +145,41 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
         println!("(fault injection armed: {plan:?})");
     }
     let max_requeues = args.get_usize("max-requeues", 3)? as u32;
-    let report = CpuServer::new(
-        &tm,
-        CpuServeOptions {
-            lanes,
-            mode: NumericsMode::DesktopF32,
-            max_iterations: 0,
-            sim_model: LlmConfig::llama2_7b(),
-            kv_block_len,
-            kv_pool_blocks,
-            prefill_chunk,
-            workers,
-            faults,
-            max_requeues,
-        },
-    )
-    .serve(reqs);
+    let cfg = ServeConfig::builder()
+        .lanes(lanes)
+        .mode(NumericsMode::DesktopF32)
+        .sim_model(LlmConfig::llama2_7b())
+        .kv_block_len(kv_block_len)
+        .kv_pool_blocks(kv_pool_blocks)
+        .prefill_chunk(prefill_chunk)
+        .adaptive_prefill(args.get_bool("adaptive-prefill"))
+        .workers(workers)
+        .faults(faults)
+        .max_requeues(max_requeues)
+        .build()?;
+
+    let report = if let Some(listen) = args.get("listen") {
+        // continuous serving behind the HTTP/SSE front door: requests
+        // arrive over the wire and join the running batch mid-flight
+        let http_cfg = HttpServerConfig {
+            listen: listen.to_string(),
+            max_wall_ms: args.get_usize("serve-wall-ms", 0)? as u64,
+            max_requests: 0,
+        };
+        let rep = serve_http(&tm, cfg, &http_cfg, |addr| {
+            println!("listening on http://{addr} (POST /v1/generate, GET /healthz)");
+        })
+        .map_err(|e| e.to_string())?;
+        println!(
+            "front door: {} connections, {} requests served",
+            rep.connections, rep.requests_served
+        );
+        rep.report
+    } else {
+        // offline: drain a synthetic workload through the same engine
+        let reqs = WorkloadGen::new(workload_spec(args, tm.vocab)?).generate();
+        CpuServer::new(&tm, cfg).serve(reqs)
+    };
     println!("{}", report.metrics.format_table());
     let pool = &report.kv_pool;
     println!(
@@ -163,6 +189,13 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
         (pool.total_blocks() * pool.bytes_per_block()) as f64 / (1024.0 * 1024.0),
         pool.row_width(),
     );
+    if pool.free_blocks() != pool.total_blocks() {
+        return Err(format!(
+            "kv pool leak: {} of {} blocks still held at shutdown",
+            pool.total_blocks() - pool.free_blocks(),
+            pool.total_blocks()
+        ));
+    }
     Ok(())
 }
 
@@ -171,9 +204,9 @@ fn run() -> Result<(), String> {
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
             "kv-heads", "kv-block-len", "kv-pool-blocks", "prefill-chunk", "prompt-len", "workers",
-            "deadline-ms", "faults", "max-requeues",
+            "deadline-ms", "faults", "max-requeues", "listen", "serve-wall-ms",
         ],
-        &["help"],
+        &["help", "adaptive-prefill"],
     )?;
     let cmd = args
         .positional()

@@ -4,7 +4,16 @@
 use crate::util::Rng;
 
 /// A decode request: prompt tokens + number of tokens to generate.
+///
+/// Construct through the builder —
+/// `Request::new(id, prompt).gen_len(8).arrival_ms(40).deadline_ms(500)`
+/// — not a struct literal. The struct is `#[non_exhaustive]`, so
+/// downstream code (tests, benches, other crates) cannot construct it
+/// field-by-field: new scheduling fields can land without touching
+/// every call site, and the five-field literal stops spreading through
+/// the test suite. Fields stay `pub` for reading.
 #[derive(Debug, Clone, PartialEq, Eq)]
+#[non_exhaustive]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
@@ -16,6 +25,39 @@ pub struct Request {
     /// cleanly by the server (KV blocks reclaimed, lane recycled) and
     /// surfaces as [`crate::coordinator::ServeMetrics::deadline_expired`].
     pub deadline_ms: u64,
+}
+
+impl Request {
+    /// A request with the given prompt, generating one token, arriving
+    /// at stream start with no deadline. Chain the builder setters to
+    /// override.
+    pub fn new(id: u64, prompt: Vec<u32>) -> Request {
+        Request {
+            id,
+            prompt,
+            gen_len: 1,
+            arrival_ms: 0,
+            deadline_ms: 0,
+        }
+    }
+
+    /// Number of tokens to generate (default 1).
+    pub fn gen_len(mut self, n: usize) -> Request {
+        self.gen_len = n;
+        self
+    }
+
+    /// Arrival time in ms from stream start (default 0).
+    pub fn arrival_ms(mut self, t: u64) -> Request {
+        self.arrival_ms = t;
+        self
+    }
+
+    /// Wall-clock deadline in ms after arrival (default 0 = none).
+    pub fn deadline_ms(mut self, d: u64) -> Request {
+        self.deadline_ms = d;
+        self
+    }
 }
 
 /// Workload shape parameters.
@@ -73,13 +115,10 @@ impl WorkloadGen {
                 if self.spec.mean_gap_ms > 0.0 {
                     t_ms += rng.gen_exp(self.spec.mean_gap_ms);
                 }
-                Request {
-                    id: i as u64,
-                    prompt,
-                    gen_len: glen,
-                    arrival_ms: t_ms as u64,
-                    deadline_ms: self.spec.deadline_ms,
-                }
+                Request::new(i as u64, prompt)
+                    .gen_len(glen)
+                    .arrival_ms(t_ms as u64)
+                    .deadline_ms(self.spec.deadline_ms)
             })
             .collect()
     }
@@ -94,6 +133,15 @@ impl WorkloadGen {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn request_builder_defaults_and_setters() {
+        let r = Request::new(3, vec![1, 2]);
+        assert_eq!((r.id, r.gen_len, r.arrival_ms, r.deadline_ms), (3, 1, 0, 0));
+        assert_eq!(r.prompt, vec![1, 2]);
+        let r = Request::new(0, vec![5]).gen_len(7).arrival_ms(40).deadline_ms(500);
+        assert_eq!((r.gen_len, r.arrival_ms, r.deadline_ms), (7, 40, 500));
+    }
 
     #[test]
     fn deterministic_stream() {

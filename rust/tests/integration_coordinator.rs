@@ -70,13 +70,7 @@ fn batched_serving_matches_solo_generation() {
     let reqs: Vec<Request> = prompts
         .iter()
         .enumerate()
-        .map(|(i, p)| Request {
-            id: i as u64,
-            prompt: p.clone(),
-            gen_len,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|(i, p)| Request::new(i as u64, p.clone()).gen_len(gen_len))
         .collect();
     let report = Server::new(&eng, opts(4)).serve(reqs).unwrap();
 
@@ -103,13 +97,7 @@ fn lane_recycling_more_requests_than_lanes() {
     };
     // 5 requests through a 2-lane batch → at least one lane is recycled
     let reqs: Vec<Request> = (0..5)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![(i as u32 * 31 + 5) % 512],
-            gen_len: 3,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![(i as u32 * 31 + 5) % 512]).gen_len(3))
         .collect();
     let report = Server::new(&eng, opts(2)).serve(reqs).unwrap();
     assert_eq!(report.sessions.len(), 5);
@@ -119,13 +107,7 @@ fn lane_recycling_more_requests_than_lanes() {
     // recycled-lane results must equal fresh-lane results for identical
     // requests: run request 0 again alone and compare
     let solo = Server::new(&eng, opts(2))
-        .serve(vec![Request {
-            id: 99,
-            prompt: vec![5],
-            gen_len: 3,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        }])
+        .serve(vec![Request::new(99, vec![5]).gen_len(3)])
         .unwrap();
     let first = report
         .sessions
@@ -141,13 +123,8 @@ fn staggered_arrivals_all_served() {
         return;
     };
     let reqs: Vec<Request> = (0..4)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![10 + i as u32],
-            gen_len: 2,
-            arrival_ms: i * 30, // spread over ~100ms
-            deadline_ms: 0,
-        })
+        // arrivals spread over ~100ms
+        .map(|i| Request::new(i, vec![10 + i as u32]).gen_len(2).arrival_ms(i * 30))
         .collect();
     let report = Server::new(&eng, opts(2)).serve(reqs).unwrap();
     assert_eq!(report.sessions.len(), 4);

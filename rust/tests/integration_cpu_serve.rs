@@ -5,7 +5,7 @@
 //! solo generation. Runs on the default feature set (no PJRT, no
 //! artifacts).
 
-use swiftkv::coordinator::{CpuServeOptions, CpuServer};
+use swiftkv::coordinator::{CpuServer, ServeConfig};
 use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
 
 fn model() -> TinyModel {
@@ -17,14 +17,14 @@ fn gqa_model() -> TinyModel {
     TinyModel::synthetic(7, 64, 32, 4, 2, 2, 64, 48)
 }
 
-fn opts(lanes: usize, mode: NumericsMode) -> CpuServeOptions {
-    CpuServeOptions {
-        lanes,
-        mode,
-        max_iterations: 10_000,
-        sim_model: LlmConfig::llama2_7b(),
-        ..CpuServeOptions::default()
-    }
+fn opts(lanes: usize, mode: NumericsMode) -> ServeConfig {
+    ServeConfig::builder()
+        .lanes(lanes)
+        .mode(mode)
+        .max_iterations(10_000)
+        .sim_model(LlmConfig::llama2_7b())
+        .build()
+        .expect("test serve config is valid")
 }
 
 #[test]
@@ -69,13 +69,7 @@ fn batched_serving_matches_solo_generation_both_modes() {
         let reqs: Vec<Request> = prompts
             .iter()
             .enumerate()
-            .map(|(i, p)| Request {
-                id: i as u64,
-                prompt: p.clone(),
-                gen_len,
-                arrival_ms: 0,
-                deadline_ms: 0,
-            })
+            .map(|(i, p)| Request::new(i as u64, p.clone()).gen_len(gen_len))
             .collect();
         let report = CpuServer::new(&tm, opts(4, mode)).serve(reqs);
 
@@ -110,22 +104,17 @@ fn gqa_batched_serving_matches_solo_generation_both_modes() {
         let reqs: Vec<Request> = prompts
             .iter()
             .enumerate()
-            .map(|(i, p)| Request {
-                id: i as u64,
-                prompt: p.clone(),
-                gen_len,
-                arrival_ms: 0,
-                deadline_ms: 0,
-            })
+            .map(|(i, p)| Request::new(i as u64, p.clone()).gen_len(gen_len))
             .collect();
-        // llama3-8b sim config: the GQA shape the sim layer prices
-        let opts = CpuServeOptions {
-            lanes: 2, // fewer lanes than requests → recycling under GQA
-            mode,
-            max_iterations: 10_000,
-            sim_model: LlmConfig::llama3_8b(),
-            ..CpuServeOptions::default()
-        };
+        // llama3-8b sim config: the GQA shape the sim layer prices;
+        // fewer lanes than requests → recycling under GQA
+        let opts = ServeConfig::builder()
+            .lanes(2)
+            .mode(mode)
+            .max_iterations(10_000)
+            .sim_model(LlmConfig::llama3_8b())
+            .build()
+            .expect("test serve config is valid");
         let report = CpuServer::new(&tm, opts).serve(reqs);
         assert_eq!(report.sessions.len(), prompts.len());
 
@@ -151,13 +140,7 @@ fn lane_recycling_more_requests_than_lanes() {
     let tm = model();
     // 5 requests through 2 lanes → at least one lane is recycled
     let reqs: Vec<Request> = (0..5)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![(i as u32 * 31 + 5) % tm.vocab as u32],
-            gen_len: 3,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![(i as u32 * 31 + 5) % tm.vocab as u32]).gen_len(3))
         .collect();
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
     assert_eq!(report.sessions.len(), 5);
@@ -165,13 +148,8 @@ fn lane_recycling_more_requests_than_lanes() {
         assert_eq!(s.generated.len(), 3);
     }
     // recycled-lane results must equal fresh-lane results
-    let solo = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(vec![Request {
-        id: 99,
-        prompt: vec![5],
-        gen_len: 3,
-        arrival_ms: 0,
-        deadline_ms: 0,
-    }]);
+    let solo = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32))
+        .serve(vec![Request::new(99, vec![5]).gen_len(3)]);
     let first = report.sessions.iter().find(|s| s.request.id == 0).unwrap();
     assert_eq!(first.generated, solo.sessions[0].generated);
 }
@@ -188,23 +166,17 @@ fn lanes_share_one_pool_with_reclamation() {
     let kv_block_len = 4;
     let lanes = 2;
     let kv_pool_blocks = 10;
-    let opts = CpuServeOptions {
-        lanes,
-        mode: NumericsMode::DesktopF32,
-        max_iterations: 10_000,
-        sim_model: LlmConfig::llama2_7b(),
-        kv_block_len,
-        kv_pool_blocks,
-        ..CpuServeOptions::default()
-    };
+    let opts = ServeConfig::builder()
+        .lanes(lanes)
+        .mode(NumericsMode::DesktopF32)
+        .max_iterations(10_000)
+        .sim_model(LlmConfig::llama2_7b())
+        .kv_block_len(kv_block_len)
+        .kv_pool_blocks(kv_pool_blocks)
+        .build()
+        .expect("test serve config is valid");
     let reqs: Vec<Request> = (0..7)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![(i as u32 * 17 + 3) % tm.vocab as u32],
-            gen_len: 5,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![(i as u32 * 17 + 3) % tm.vocab as u32]).gen_len(5))
         .collect();
     let report = CpuServer::new(&tm, opts).serve(reqs);
     assert_eq!(report.sessions.len(), 7);
@@ -240,31 +212,21 @@ fn idle_lanes_release_blocks_at_retirement() {
     // for the idle lanes) would pin 4 dead blocks and panic the long
     // lane with pool exhaustion at ~14 blocks.
     let tm = model();
-    let opts = CpuServeOptions {
-        lanes: 3,
-        mode: NumericsMode::DesktopF32,
-        max_iterations: 10_000,
-        sim_model: LlmConfig::llama2_7b(),
-        kv_block_len: 4,
-        kv_pool_blocks: 17,
-        ..CpuServeOptions::default()
-    };
+    let opts = ServeConfig::builder()
+        .lanes(3)
+        .mode(NumericsMode::DesktopF32)
+        .max_iterations(10_000)
+        .sim_model(LlmConfig::llama2_7b())
+        .kv_block_len(4)
+        .kv_pool_blocks(17)
+        .build()
+        .expect("test serve config is valid");
     let mut reqs: Vec<Request> = (0..3)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![1 + i as u32],
-            gen_len: 3, // 3 cache rows → 1 block per layer
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        // 3 cache rows → 1 block per layer
+        .map(|i| Request::new(i, vec![1 + i as u32]).gen_len(3))
         .collect();
-    reqs.push(Request {
-        id: 3,
-        prompt: vec![9],
-        gen_len: 30, // 30 cache rows → 8 blocks per layer = 16 blocks
-        arrival_ms: 0,
-        deadline_ms: 0,
-    });
+    // 30 cache rows → 8 blocks per layer = 16 blocks
+    reqs.push(Request::new(3, vec![9]).gen_len(30));
     let report = CpuServer::new(&tm, opts).serve(reqs);
     assert_eq!(report.sessions.len(), 4);
     let long = report.sessions.iter().find(|s| s.request.id == 3).unwrap();
@@ -279,23 +241,17 @@ fn undersized_pool_is_enough_for_short_sequences() {
     // tokens = 2 blocks of 4 per layer, so 8 blocks cover both lanes —
     // versus 24 for the worst-case sizing (n_ctx 48, 12 blocks/lane).
     let tm = model();
-    let opts = CpuServeOptions {
-        lanes: 2,
-        mode: NumericsMode::DesktopF32,
-        max_iterations: 10_000,
-        sim_model: LlmConfig::llama2_7b(),
-        kv_block_len: 4,
-        kv_pool_blocks: 8,
-        ..CpuServeOptions::default()
-    };
+    let opts = ServeConfig::builder()
+        .lanes(2)
+        .mode(NumericsMode::DesktopF32)
+        .max_iterations(10_000)
+        .sim_model(LlmConfig::llama2_7b())
+        .kv_block_len(4)
+        .kv_pool_blocks(8)
+        .build()
+        .expect("test serve config is valid");
     let reqs: Vec<Request> = (0..5)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![1 + i as u32, 2],
-            gen_len: 4,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![1 + i as u32, 2]).gen_len(4))
         .collect();
     let report = CpuServer::new(&tm, opts).serve(reqs);
     assert_eq!(report.sessions.len(), 5);
@@ -313,21 +269,11 @@ fn rejected_requests_surface_in_metrics() {
     // and the metrics must surface both counters.
     let tm = model();
     let mut reqs: Vec<Request> = (0..3)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![1 + i as u32, 2],
-            gen_len: 3,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![1 + i as u32, 2]).gen_len(3))
         .collect();
-    reqs.push(Request {
-        id: 99,
-        prompt: (0..40).map(|t| t % tm.vocab as u32).collect(),
-        gen_len: 20, // 40 + 20 > 48 → rejected
-        arrival_ms: 0,
-        deadline_ms: 0,
-    });
+    let long_prompt: Vec<u32> = (0..40).map(|t| t % tm.vocab as u32).collect();
+    // 40 + 20 > 48 → rejected
+    reqs.push(Request::new(99, long_prompt).gen_len(20));
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
     assert_eq!(report.metrics.requests_admitted, 3);
     assert_eq!(
@@ -344,13 +290,7 @@ fn rejected_requests_surface_in_metrics() {
 #[test]
 fn nothing_rejected_reports_zero() {
     let tm = model();
-    let reqs = vec![Request {
-        id: 0,
-        prompt: vec![3, 4],
-        gen_len: 2,
-        arrival_ms: 0,
-        deadline_ms: 0,
-    }];
+    let reqs = vec![Request::new(0, vec![3, 4]).gen_len(2)];
     let report = CpuServer::new(&tm, opts(1, NumericsMode::DesktopF32)).serve(reqs);
     assert_eq!(report.metrics.requests_admitted, 1);
     assert_eq!(report.metrics.requests_rejected, 0);
@@ -375,22 +315,17 @@ fn prefill_chunk_lengths_do_not_change_outputs() {
             let reqs: Vec<Request> = prompts
                 .iter()
                 .enumerate()
-                .map(|(i, p)| Request {
-                    id: i as u64,
-                    prompt: p.clone(),
-                    gen_len,
-                    arrival_ms: 0,
-                    deadline_ms: 0,
-                })
+                .map(|(i, p)| Request::new(i as u64, p.clone()).gen_len(gen_len))
                 .collect();
-            let opts = CpuServeOptions {
-                lanes: 2, // fewer lanes than requests → recycling mid-stream
-                mode,
-                max_iterations: 10_000,
-                sim_model: LlmConfig::llama2_7b(),
-                prefill_chunk,
-                ..CpuServeOptions::default()
-            };
+            // fewer lanes than requests → recycling mid-stream
+            let opts = ServeConfig::builder()
+                .lanes(2)
+                .mode(mode)
+                .max_iterations(10_000)
+                .sim_model(LlmConfig::llama2_7b())
+                .prefill_chunk(prefill_chunk)
+                .build()
+                .expect("test serve config is valid");
             let report = CpuServer::new(&tm, opts).serve(reqs);
             assert_eq!(report.sessions.len(), prompts.len());
             for (i, p) in prompts.iter().enumerate() {
@@ -418,22 +353,19 @@ fn chunked_prefill_takes_fewer_iterations() {
     // iterations before the first sample; chunk 8 needs 2. Iteration
     // counts are deterministic (all requests arrive at t=0).
     let tm = model();
-    let req = |id: u64| Request {
-        id,
-        prompt: (0..16).map(|t| (t * 3 + 1) % tm.vocab as u32).collect(),
-        gen_len: 2,
-        arrival_ms: 0,
-        deadline_ms: 0,
+    let req = |id: u64| {
+        let prompt: Vec<u32> = (0..16).map(|t| (t * 3 + 1) % tm.vocab as u32).collect();
+        Request::new(id, prompt).gen_len(2)
     };
     let run = |prefill_chunk: usize| {
-        let opts = CpuServeOptions {
-            lanes: 1,
-            mode: NumericsMode::DesktopF32,
-            max_iterations: 10_000,
-            sim_model: LlmConfig::llama2_7b(),
-            prefill_chunk,
-            ..CpuServeOptions::default()
-        };
+        let opts = ServeConfig::builder()
+            .lanes(1)
+            .mode(NumericsMode::DesktopF32)
+            .max_iterations(10_000)
+            .sim_model(LlmConfig::llama2_7b())
+            .prefill_chunk(prefill_chunk)
+            .build()
+            .expect("test serve config is valid");
         CpuServer::new(&tm, opts).serve(vec![req(0)])
     };
     let per_token = run(1);
@@ -463,13 +395,7 @@ fn decode_heavy_run_pays_one_weight_pass_per_step() {
     // report 1 weight pass, not B)
     let tm = model();
     let reqs: Vec<Request> = (0..4)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![(i as u32 * 9 + 1) % tm.vocab as u32],
-            gen_len: 6,
-            arrival_ms: 0,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![(i as u32 * 9 + 1) % tm.vocab as u32]).gen_len(6))
         .collect();
     let report = CpuServer::new(&tm, opts(4, NumericsMode::DesktopF32)).serve(reqs);
     let m = &report.metrics;
@@ -499,12 +425,10 @@ fn prefill_lanes_pay_their_own_weight_passes() {
     // one shared pass each
     let tm = model();
     let reqs: Vec<Request> = (0..2)
-        .map(|i| Request {
-            id: i,
-            prompt: (0..16).map(|t| (t * 3 + i as u32) % tm.vocab as u32).collect(),
-            gen_len: 4,
-            arrival_ms: 0,
-            deadline_ms: 0,
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..16).map(|t| (t * 3 + i as u32) % tm.vocab as u32).collect();
+            Request::new(i, prompt).gen_len(4)
         })
         .collect();
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
@@ -533,22 +457,16 @@ fn explicit_worker_counts_do_not_change_outputs() {
             let reqs: Vec<Request> = prompts
                 .iter()
                 .enumerate()
-                .map(|(i, p)| Request {
-                    id: i as u64,
-                    prompt: p.clone(),
-                    gen_len,
-                    arrival_ms: 0,
-                    deadline_ms: 0,
-                })
+                .map(|(i, p)| Request::new(i as u64, p.clone()).gen_len(gen_len))
                 .collect();
-            let opts = CpuServeOptions {
-                lanes: 3,
-                mode,
-                max_iterations: 10_000,
-                sim_model: LlmConfig::llama2_7b(),
-                workers,
-                ..CpuServeOptions::default()
-            };
+            let opts = ServeConfig::builder()
+                .lanes(3)
+                .mode(mode)
+                .max_iterations(10_000)
+                .sim_model(LlmConfig::llama2_7b())
+                .workers(workers)
+                .build()
+                .expect("test serve config is valid");
             let report = CpuServer::new(&tm, opts).serve(reqs);
             for (i, p) in prompts.iter().enumerate() {
                 let want = tm.generate(p, gen_len, mode);
@@ -572,13 +490,7 @@ fn explicit_worker_counts_do_not_change_outputs() {
 fn staggered_arrivals_all_served() {
     let tm = model();
     let reqs: Vec<Request> = (0..4)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![10 + i as u32],
-            gen_len: 2,
-            arrival_ms: i * 20,
-            deadline_ms: 0,
-        })
+        .map(|i| Request::new(i, vec![10 + i as u32]).gen_len(2).arrival_ms(i * 20))
         .collect();
     let report = CpuServer::new(&tm, opts(2, NumericsMode::DesktopF32)).serve(reqs);
     assert_eq!(report.sessions.len(), 4);
@@ -589,13 +501,7 @@ fn staggered_arrivals_all_served() {
 fn single_lane_runs_inline() {
     // exercises the no-spawn fast path (n_active <= 1)
     let tm = model();
-    let reqs = vec![Request {
-        id: 0,
-        prompt: vec![3, 4],
-        gen_len: 4,
-        arrival_ms: 0,
-        deadline_ms: 0,
-    }];
+    let reqs = vec![Request::new(0, vec![3, 4]).gen_len(4)];
     let report = CpuServer::new(&tm, opts(1, NumericsMode::Accelerator)).serve(reqs);
     assert_eq!(report.sessions.len(), 1);
     assert_eq!(

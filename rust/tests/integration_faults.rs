@@ -6,7 +6,7 @@
 //! bit-exact against a fault-free run), the shared block pool is fully
 //! reclaimed, and the server always runs to completion.
 
-use swiftkv::coordinator::{CpuServeOptions, CpuServer, FaultPlan, SessionOutcome};
+use swiftkv::coordinator::{CpuServer, FaultPlan, ServeConfig, SessionOutcome};
 use swiftkv::model::{LlmConfig, NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
 
 fn model() -> TinyModel {
@@ -14,23 +14,17 @@ fn model() -> TinyModel {
 }
 
 fn req(id: u64, prompt: Vec<u32>, gen_len: usize) -> Request {
-    Request {
-        id,
-        prompt,
-        gen_len,
-        arrival_ms: 0,
-        deadline_ms: 0,
-    }
+    Request::new(id, prompt).gen_len(gen_len)
 }
 
-fn opts(lanes: usize) -> CpuServeOptions {
-    CpuServeOptions {
-        lanes,
-        mode: NumericsMode::DesktopF32,
-        max_iterations: 10_000,
-        sim_model: LlmConfig::llama2_7b(),
-        ..CpuServeOptions::default()
-    }
+fn opts(lanes: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .lanes(lanes)
+        .mode(NumericsMode::DesktopF32)
+        .max_iterations(10_000)
+        .sim_model(LlmConfig::llama2_7b())
+        .build()
+        .expect("test serve config is valid")
 }
 
 /// Pool fully reclaimed — the block-leak audit every fault run must pass.
@@ -290,6 +284,53 @@ fn deadlines_cancel_running_and_queued_requests() {
     assert_pool_reclaimed(&report);
     // the counter also lands in the human-readable table
     assert!(report.metrics.format_table().contains("expired"), "metrics table");
+}
+
+#[test]
+fn panicked_lane_slot_is_readmitted_to_a_queued_continuous_request() {
+    // continuous submission path: 3 requests through 2 lanes, with the
+    // lane serving request 1 panicking on its 3rd sample. Request 2 is
+    // queued behind the full batch — the panic must free its lane slot
+    // back to admission, the queued request must ride the recycled slot
+    // to completion (bit-identical to solo decode), and only the faulted
+    // request may fail.
+    let tm = model();
+    let mut o = opts(2);
+    o.faults = Some(FaultPlan::parse("panic@r1:s2").expect("spec parses"));
+    let server = CpuServer::new(&tm, o);
+    let (report, finished) = server.serve_continuous(|handle| {
+        let pending: Vec<_> = (0..3u64)
+            .map(|i| {
+                handle
+                    .submit(req(i, vec![1 + i as u32], 8))
+                    .expect("engine accepts while the handle is live")
+            })
+            .collect();
+        pending.into_iter().map(|p| p.wait()).collect::<Vec<_>>()
+    });
+
+    assert_eq!(finished.len(), 3);
+    assert_eq!(report.metrics.requests_failed, 1);
+    for fin in &finished {
+        if fin.id == 1 {
+            assert!(
+                matches!(fin.outcome, SessionOutcome::Failed(_)),
+                "the faulted request must fail, got {:?}",
+                fin.outcome
+            );
+            // the fault fired on the step sampling token 3
+            assert_eq!(fin.tokens.len(), 2, "samples before the panic stand");
+        } else {
+            assert!(fin.outcome.is_completed(), "request {} must complete", fin.id);
+            let want = tm.generate(&[1 + fin.id as u32], 8, NumericsMode::DesktopF32);
+            assert_eq!(
+                fin.tokens, want,
+                "request {}: the contained panic perturbed its stream",
+                fin.id
+            );
+        }
+    }
+    assert_pool_reclaimed(&report);
 }
 
 #[test]

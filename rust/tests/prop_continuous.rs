@@ -1,0 +1,168 @@
+//! Property tests: the continuous-batching submission path. Requests
+//! submitted live through a [`ServeHandle`] — joining the engine
+//! mid-flight, across paged-KV block boundaries, behind staggered
+//! wall-clock arrivals — must produce exactly the token stream solo
+//! decode produces, in both numerics modes. Admission order, lane
+//! recycling, and arrival timing are scheduling choices; the numbers
+//! they feed each lane are not allowed to notice.
+
+use swiftkv::coordinator::{CpuServer, ServeConfig, SessionOutcome};
+use swiftkv::model::{NumericsMode, Request, TinyModel};
+use swiftkv::util::{prop, Rng};
+
+/// (n_heads, n_kv_heads) over d_model 32: MHA, GQA group 2, MQA.
+const SHAPES: [(usize, usize); 3] = [(4, 4), (4, 2), (4, 1)];
+/// KV block lengths: degenerate, odd (mid-flight joins land inside
+/// ragged blocks), default.
+const BLOCK_LENS: [usize; 3] = [1, 3, 16];
+const N_CTX: usize = 24;
+const VOCAB: usize = 48;
+
+struct ContinuousCase {
+    model: TinyModel,
+    block_len: usize,
+    lanes: usize,
+    requests: Vec<Request>,
+}
+
+impl ContinuousCase {
+    fn random(rng: &mut Rng) -> ContinuousCase {
+        let (h, hkv) = SHAPES[rng.gen_range(0, SHAPES.len())];
+        let block_len = BLOCK_LENS[rng.gen_range(0, BLOCK_LENS.len())];
+        let model = TinyModel::synthetic(
+            rng.gen_range(0, 1 << 20) as u64,
+            VOCAB,
+            32,
+            h,
+            hkv,
+            2,
+            48,
+            N_CTX,
+        );
+        let lanes = rng.gen_range(1, 4);
+        let n_requests = rng.gen_range(2, 7);
+        let requests = (0..n_requests as u64)
+            .map(|id| {
+                let plen = rng.gen_range(1, 10);
+                let glen = rng.gen_range(1, 1 + (N_CTX - plen).min(8));
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.gen_range(0, VOCAB) as u32).collect();
+                Request::new(id, prompt).gen_len(glen)
+            })
+            .collect();
+        ContinuousCase {
+            model,
+            block_len,
+            lanes,
+            requests,
+        }
+    }
+}
+
+#[test]
+fn prop_continuous_stream_is_bit_identical_to_solo_decode() {
+    prop::check("continuous submission == solo decode", 10, |rng, _| {
+        let case = ContinuousCase::random(rng);
+        for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+            let cfg = ServeConfig::builder()
+                .lanes(case.lanes)
+                .mode(mode)
+                .max_iterations(10_000)
+                .kv_block_len(case.block_len)
+                .build()
+                .expect("case config is valid");
+            let server = CpuServer::new(&case.model, cfg);
+            let (report, finished) = server.serve_continuous(|handle| {
+                let mut pending = Vec::with_capacity(case.requests.len());
+                for (i, req) in case.requests.iter().enumerate() {
+                    // the first `lanes` requests fill the batch; every
+                    // later submission lands while those lanes are
+                    // decoding, so it joins the engine mid-flight
+                    if i >= case.lanes {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    pending.push(
+                        handle
+                            .submit(req.clone())
+                            .expect("engine accepts while the handle is live"),
+                    );
+                }
+                pending.into_iter().map(|p| p.wait()).collect::<Vec<_>>()
+            });
+
+            assert_eq!(finished.len(), case.requests.len());
+            for fin in &finished {
+                assert_eq!(
+                    fin.outcome,
+                    SessionOutcome::Completed,
+                    "{mode:?} bl={} lanes={}: request {} did not complete",
+                    case.block_len,
+                    case.lanes,
+                    fin.id
+                );
+                let req = &case.requests[fin.id as usize];
+                let want = case.model.generate(&req.prompt, req.gen_len, mode);
+                assert_eq!(
+                    fin.tokens, want,
+                    "{mode:?} bl={} lanes={}: request {} diverged from solo decode \
+                     after a mid-flight join",
+                    case.block_len, case.lanes, fin.id
+                );
+            }
+            assert_eq!(
+                report.kv_pool.free_blocks(),
+                report.kv_pool.total_blocks(),
+                "continuous run leaked KV blocks"
+            );
+        }
+    });
+}
+
+#[test]
+fn staggered_arrival_gates_do_not_change_the_stream() {
+    // arrival_ms gating composes with live submission: requests carry
+    // wall-clock arrival gates AND are submitted with real delays, so
+    // admission interleaves decode iterations arbitrarily — outputs
+    // still match solo decode exactly
+    prop::check("arrival gates under continuous submission", 6, |rng, _| {
+        let case = ContinuousCase::random(rng);
+        let gated: Vec<Request> = case
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                Request::new(r.id, r.prompt.clone())
+                    .gen_len(r.gen_len)
+                    .arrival_ms(i as u64 * rng.gen_range(0, 4) as u64)
+            })
+            .collect();
+        let cfg = ServeConfig::builder()
+            .lanes(case.lanes)
+            .mode(NumericsMode::DesktopF32)
+            .max_iterations(10_000)
+            .kv_block_len(case.block_len)
+            .build()
+            .expect("case config is valid");
+        let server = CpuServer::new(&case.model, cfg);
+        let (report, finished) = server.serve_continuous(|handle| {
+            let pending: Vec<_> = gated
+                .iter()
+                .map(|r| handle.submit(r.clone()).expect("submit"))
+                .collect();
+            pending.into_iter().map(|p| p.wait()).collect::<Vec<_>>()
+        });
+        for fin in &finished {
+            assert_eq!(fin.outcome, SessionOutcome::Completed);
+            let req = &case.requests[fin.id as usize];
+            let want = case
+                .model
+                .generate(&req.prompt, req.gen_len, NumericsMode::DesktopF32);
+            assert_eq!(
+                fin.tokens, want,
+                "request {}: arrival gating changed the generated tokens",
+                fin.id
+            );
+        }
+        assert_eq!(report.kv_pool.free_blocks(), report.kv_pool.total_blocks());
+    });
+}

@@ -88,13 +88,8 @@ fn prop_batcher_conservation() {
         for i in 0..n_req {
             let plen = rng.gen_range(1, 20);
             let glen = rng.gen_range(1, 20);
-            let r = Request {
-                id: case * 1000 + i as u64,
-                prompt: (0..plen as u32).collect(),
-                gen_len: glen,
-                arrival_ms: 0,
-                deadline_ms: 0,
-            };
+            let prompt: Vec<u32> = (0..plen as u32).collect();
+            let r = Request::new(case * 1000 + i as u64, prompt).gen_len(glen);
             match b.submit(r) {
                 Ok(()) => submitted += 1,
                 Err(_) => rejected += 1,
