@@ -1,0 +1,32 @@
+//! Repo-invariant lint runner — `cargo run --bin lint`.
+//!
+//! Runs the [`swiftkv::util::lint`] pass over the crate (`src/`,
+//! `tests/`, `benches/`) and exits non-zero on any violation, printing
+//! each as `file:line: [rule] message`. The same pass also runs as a
+//! plain test via `tests/lint_repo.rs`, so CI catches violations even
+//! where running extra binaries is awkward.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use swiftkv::util::lint;
+
+fn main() -> ExitCode {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = match lint::lint_crate(root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("lint: failed to scan crate: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if violations.is_empty() {
+        println!("lint: clean — {} rules over {}", lint::RULES.len(), root.display());
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    eprintln!("lint: {} violation(s)", violations.len());
+    ExitCode::FAILURE
+}

@@ -651,11 +651,11 @@ impl<'m> CpuServer<'m> {
                 };
                 match &worker_pool {
                     Some(p) if tasks.len() > 1 => {
-                        let ptr = SharedMut(tasks.as_mut_ptr());
+                        let ptr = SharedMut::new(tasks.as_mut_ptr());
                         p.run(tasks.len(), |i| {
-                            // Safety: task indices are distinct, so each
+                            // SAFETY: task indices are distinct, so each
                             // task is this index's only reference
-                            run_one(unsafe { &mut *ptr.0.add(i) });
+                            run_one(unsafe { &mut *ptr.get().add(i) });
                         });
                     }
                     _ => {

@@ -1,8 +1,10 @@
 //! L3 coordinator — the decode serving layer.
 //!
-//! The whole module tree is compiled with `clippy::unwrap_used` denied
-//! (outside tests): serving-loop code must contain faults per-request,
-//! never convert one into a process-wide panic via a stray `.unwrap()`.
+//! `clippy::unwrap_used` is denied crate-wide outside tests (see
+//! `lib.rs`); it originated here — serving-loop code must contain faults
+//! per-request, never convert one into a process-wide panic via a stray
+//! `.unwrap()` — and the redundant module-level deny stays as the local
+//! statement of that intent.
 //!
 //! Shaped like a serving-system router (the SwiftKV-MHA accelerator is a
 //! decode engine; this is the host side that keeps it fed):

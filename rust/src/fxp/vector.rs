@@ -5,6 +5,8 @@
 //! accumulating the 64-bit products and converting a single time. The
 //! update part performs the `Y ← αY + v` / `Y ← Y + βv` AXPY steps of
 //! Eqs. (6)–(7).
+//!
+//! lint: hotpath
 
 use super::q1517::{Fxp32, FRAC_BITS};
 
@@ -114,12 +116,15 @@ pub fn scale_inplace(a: Fxp32, y: &mut [Fxp32]) {
 /// Eq. (8). Hardware computes `1/Z` once on the divide unit and multiplies.
 #[inline]
 pub fn div_scalar(y: &[Fxp32], z: Fxp32) -> Vec<Fxp32> {
+    // lint: allow(hotpath) — allocating convenience form; the decode
+    // loop's finalize_into writes through caller-owned buffers.
     // reciprocal once, then multiply (matches the pipelined divider usage)
     y.iter().map(|yi| yi.sat_div(z)).collect()
 }
 
 /// Quantize an `f32` slice to Q15.17.
 pub fn quantize(xs: &[f32]) -> Vec<Fxp32> {
+    // lint: allow(hotpath) — allocating convenience form of quantize_into.
     xs.iter().map(|&x| Fxp32::from_f32(x)).collect()
 }
 
@@ -134,6 +139,7 @@ pub fn quantize_into(xs: &[f32], out: &mut [Fxp32]) {
 
 /// Dequantize a Q15.17 slice to `f32`.
 pub fn dequantize(xs: &[Fxp32]) -> Vec<f32> {
+    // lint: allow(hotpath) — allocating convenience form of dequantize_into.
     xs.iter().map(|x| x.to_f32()).collect()
 }
 

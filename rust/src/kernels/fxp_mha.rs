@@ -16,6 +16,8 @@
 //! inner loops dispatch through [`super::isa`]; every table implements
 //! them bit-exactly (`tests/prop_simd_dispatch.rs`), so the raw-bits
 //! property holds under any `SWIFTKV_ISA` setting.
+//!
+//! lint: hotpath
 
 use crate::fxp::{vector, Exp2Lut, Fxp32};
 
@@ -51,6 +53,8 @@ impl FxpMhaSwiftKv {
             n_heads,
             n_kv_heads,
             d,
+            // lint: allow(hotpath) — one-time constructor allocation; the
+            // decode loop reuses the state via reset().
             mu: vec![Fxp32::MIN; n_heads],
             z: vec![Fxp32::ZERO; n_heads],
             y: vec![Fxp32::ZERO; n_heads * d],

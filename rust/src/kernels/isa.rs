@@ -31,6 +31,8 @@
 //! message when the requested ISA is not available on this machine);
 //! empty or `native` keeps autodetection. CI runs the tier-1 suite under
 //! both `scalar` and `native`.
+//!
+//! lint: hotpath
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -140,7 +142,9 @@ pub fn table_for(isa: Isa) -> Option<&'static KernelTable> {
     match isa {
         Isa::Scalar => Some(&SCALAR),
         Isa::Avx2 => {
-            #[cfg(target_arch = "x86_64")]
+            // `not(miri)` mirrors the `simd_avx2` module gate: under Miri
+            // the intrinsic tables do not exist and only scalar runs.
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
             let t = if std::arch::is_x86_feature_detected!("avx2")
                 && std::arch::is_x86_feature_detected!("fma")
             {
@@ -148,15 +152,15 @@ pub fn table_for(isa: Isa) -> Option<&'static KernelTable> {
             } else {
                 None
             };
-            #[cfg(not(target_arch = "x86_64"))]
+            #[cfg(not(all(target_arch = "x86_64", not(miri))))]
             let t = None;
             t
         }
         Isa::Neon => {
             // NEON is baseline on aarch64 — no runtime probe needed.
-            #[cfg(target_arch = "aarch64")]
+            #[cfg(all(target_arch = "aarch64", not(miri)))]
             let t = Some(&super::simd_neon::TABLE);
-            #[cfg(not(target_arch = "aarch64"))]
+            #[cfg(not(all(target_arch = "aarch64", not(miri))))]
             let t = None;
             t
         }

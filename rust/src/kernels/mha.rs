@@ -29,6 +29,8 @@
 //! agree with the per-head path to within f32 re-association noise
 //! (≪ 1e-5 relative). The AXPY-shaped row updates dispatch too, but
 //! those are bit-identical across ISAs by contract.
+//!
+//! lint: hotpath
 
 use super::simd;
 
@@ -66,6 +68,8 @@ impl MhaSwiftKv {
             n_heads,
             n_kv_heads,
             d,
+            // lint: allow(hotpath) — one-time constructor allocation; the
+            // decode loop reuses the state via reset().
             mu: vec![f32::NEG_INFINITY; n_heads],
             z: vec![0.0; n_heads],
             y: vec![0.0; n_heads * d],

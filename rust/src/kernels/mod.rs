@@ -57,10 +57,15 @@ pub mod paged;
 pub mod pool;
 pub mod scratch;
 pub mod simd;
-#[cfg(target_arch = "x86_64")]
+// `not(miri)`: the intrinsic kernels are opaque to Miri (vendor
+// intrinsics are unsupported), and the scalar table is the semantic
+// ground truth anyway — the Miri tier pins `SWIFTKV_ISA=scalar` and
+// never reaches these modules.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 pub(crate) mod simd_avx2;
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 pub(crate) mod simd_neon;
+pub mod sync;
 
 pub use crate::quant::{gemv_w4a8_into, quantize_int8_into};
 pub use fxp_mha::FxpMhaSwiftKv;

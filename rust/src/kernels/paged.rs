@@ -37,8 +37,8 @@
 //! bit-exact versus the contiguous cache (asserted across block lengths,
 //! ragged last blocks, and recycled pools by `tests/prop_paged.rs`).
 
+use super::sync::{Mutex, MutexGuard};
 use crate::fxp::{vector, Fxp32};
-use std::sync::Mutex;
 
 /// One fixed-size cache block: `block_len` interleaved token-major rows
 /// of f32 K/V plus their Q15.17 mirrors.
@@ -158,11 +158,28 @@ impl BlockPool {
         free.push(block);
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<KvBlock>> {
+    fn lock(&self) -> MutexGuard<'_, Vec<KvBlock>> {
         // a lane that panicked mid-step poisons the lock; the free list
         // itself is always in a consistent state (push/pop are atomic
         // under the guard), so recover rather than cascade the panic
         self.free.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Test hook for the poisoned-lock recovery path: panic a throwaway
+    /// thread while it holds the free-list mutex, leaving the lock
+    /// poisoned the same way a lane panicking mid-`alloc`/`release`
+    /// would. `tests/poisoned_locks.rs` uses this to assert the
+    /// `into_inner` recovery keeps serving.
+    #[doc(hidden)]
+    #[cfg(not(loom))]
+    pub fn poison_free_list_for_tests(&self) {
+        std::thread::scope(|s| {
+            let handle = s.spawn(|| {
+                let _guard = self.free.lock().unwrap_or_else(|e| e.into_inner());
+                panic!("deliberately poisoning the BlockPool free-list mutex");
+            });
+            assert!(handle.join().is_err(), "the poisoning thread must panic");
+        });
     }
 }
 
@@ -286,9 +303,21 @@ impl BlockTable {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
+
+    #[test]
+    fn poisoned_free_list_recovers() {
+        let pool = BlockPool::new(2, 2, 4);
+        pool.poison_free_list_for_tests();
+        // every path through the recovered lock must still work
+        assert_eq!(pool.free_blocks(), 2);
+        let blk = pool.alloc();
+        assert_eq!(pool.free_blocks(), 1);
+        pool.release(blk);
+        assert_eq!(pool.free_blocks(), 2);
+    }
 
     #[test]
     fn pool_allocates_eagerly_and_recycles() {

@@ -17,28 +17,87 @@
 //! results never depend on which worker ran what —
 //! `tests/prop_batched_decode.rs` asserts pooled and serial batched
 //! decode steps are bit-identical.
+//!
+//! All synchronization goes through the [`super::sync`] alias layer, so
+//! a `--cfg loom` build swaps in the [`crate::util::mc`] model checker
+//! and `tests/loom_pool.rs` explores the epoch publication / park /
+//! wake / panic protocol across thread interleavings.
 
+use super::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use super::sync::{hint, thread, Arc, Condvar, Mutex};
 use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread;
 
 /// Spins a waiting worker performs before parking on the condvar. Sized
 /// to cover the few-microsecond gaps between the pooled operators of one
 /// decode step, so a step's jobs rarely pay a futex round trip.
+#[cfg(not(loom))]
 const SPIN_LIMIT: u32 = 8_192;
+/// Under the model checker every spin iteration is a scheduling point;
+/// park almost immediately so the DFS explores the condvar protocol
+/// instead of enumerating pointless spin interleavings.
+#[cfg(loom)]
+const SPIN_LIMIT: u32 = 1;
 
-/// A raw mutable pointer that may cross worker threads. The *caller* is
-/// responsible for ensuring concurrent tasks touch disjoint data behind
-/// it — this wrapper only carries the pointer through the `Send + Sync`
-/// bounds of [`WorkerPool::run`] closures.
-#[derive(Debug, Clone, Copy)]
-pub struct SharedMut<T>(pub *mut T);
+/// A raw mutable pointer that may cross worker threads.
+///
+/// This wrapper only exists to carry a `*mut T` through the
+/// `Send + Sync` bounds of [`WorkerPool::run`] closures; it never
+/// dereferences the pointer itself. The aliasing contract is the
+/// caller's: concurrent tasks must touch **disjoint** data behind the
+/// pointer (e.g. task `i` writes only element `i`), and the pointee
+/// must outlive the `run` call. Every dereference of [`SharedMut::get`]
+/// therefore sits in caller `unsafe` with its own `// SAFETY:`
+/// justification.
+///
+/// `T: Send` is required for the `Send`/`Sync` impls, so values whose
+/// ownership must stay on one thread cannot be smuggled across workers:
+///
+/// ```compile_fail,E0277
+/// use swiftkv::kernels::SharedMut;
+/// fn cross_thread(p: SharedMut<std::rc::Rc<u32>>) {
+///     // Rc is !Send, so SharedMut<Rc<_>> must not cross threads
+///     std::thread::spawn(move || {
+///         let _ = p;
+///     });
+/// }
+/// ```
+#[derive(Debug)]
+pub struct SharedMut<T> {
+    ptr: *mut T,
+}
 
-// Safety: see the type docs — disjointness is the caller's contract.
-unsafe impl<T> Send for SharedMut<T> {}
-unsafe impl<T> Sync for SharedMut<T> {}
+impl<T> Clone for SharedMut<T> {
+    fn clone(&self) -> SharedMut<T> {
+        *self
+    }
+}
+
+impl<T> Copy for SharedMut<T> {}
+
+impl<T> SharedMut<T> {
+    /// Wrap a raw pointer for cross-worker task dispatch. Creating the
+    /// wrapper is safe — the obligations (disjoint concurrent access,
+    /// pointee outlives the job) bind at each `unsafe` dereference of
+    /// [`SharedMut::get`].
+    pub fn new(ptr: *mut T) -> SharedMut<T> {
+        SharedMut { ptr }
+    }
+
+    /// The wrapped pointer. Dereferencing it is `unsafe`; see the type
+    /// docs for the contract the caller must uphold.
+    pub fn get(&self) -> *mut T {
+        self.ptr
+    }
+}
+
+// SAFETY: the wrapper carries the pointer only; all access happens in
+// caller `unsafe` under the disjointness contract in the type docs.
+// `T: Send` ensures access to the pointee may move to another thread.
+unsafe impl<T: Send> Send for SharedMut<T> {}
+// SAFETY: as above — `&SharedMut<T>` exposes nothing beyond the raw
+// pointer value, and dereferences are the caller's obligation.
+unsafe impl<T: Send> Sync for SharedMut<T> {}
 
 /// Type-erased job: a caller-stack closure plus its task count. Valid
 /// only while the submitting [`WorkerPool::run`] call is on the stack —
@@ -50,10 +109,20 @@ struct RawJob {
     tasks: usize,
 }
 
+/// # Safety
+/// `data` must point to a live `F` (the closure submitted by the
+/// current [`WorkerPool::run`] call) for the whole duration of the
+/// call; `run` guarantees this by not returning until every worker has
+/// checked out of the job's epoch.
 unsafe fn invoke<F: Fn(usize) + Sync>(data: *const (), idx: usize) {
-    (*(data as *const F))(idx)
+    // SAFETY: per the function contract, `data` is the submitter's `F`,
+    // alive and shared (`&F`) for the duration of the job.
+    unsafe { (*(data as *const F))(idx) }
 }
 
+/// # Safety
+/// Trivially safe (touches nothing); `unsafe fn` only to match the
+/// [`RawJob::call`] signature for the idle placeholder job.
 unsafe fn invoke_nothing(_data: *const (), _idx: usize) {}
 
 struct Shared {
@@ -78,10 +147,11 @@ struct Shared {
     start: Condvar,
 }
 
-// Safety: `job` is only written while every worker is quiescent (the
+// SAFETY: `job` is only written while every worker is quiescent (the
 // previous `run` waited for all of them) and read after an Acquire load
 // of `epoch` that the publishing Release bump synchronizes with.
 unsafe impl Send for Shared {}
+// SAFETY: as above — the epoch protocol serializes all `job` access.
 unsafe impl Sync for Shared {}
 
 /// A fixed set of persistent worker threads executing index-addressed
@@ -159,9 +229,10 @@ impl WorkerPool {
             !self.shared.in_run.swap(true, Ordering::Acquire),
             "WorkerPool::run called from inside one of its own tasks"
         );
-        // publish the job: slot + counters first, then the epoch bump
-        // (Release) under the sleep mutex so a parking worker cannot
-        // miss it
+        // SAFETY: every worker is quiescent (the previous `run` waited
+        // for all of them to check out and bumped `done`; workers only
+        // read `job` after observing a new epoch), so this write cannot
+        // race; the Release epoch bump below publishes it.
         unsafe {
             *self.shared.job.get() = RawJob {
                 call: invoke::<F>,
@@ -200,7 +271,7 @@ impl WorkerPool {
         while self.shared.done.load(Ordering::Acquire) < workers {
             spins = spins.saturating_add(1);
             if spins < SPIN_LIMIT {
-                std::hint::spin_loop();
+                hint::spin_loop();
             } else {
                 thread::yield_now();
             }
@@ -212,6 +283,24 @@ impl WorkerPool {
         if self.shared.panicked.load(Ordering::Relaxed) {
             panic!("a WorkerPool task panicked on a worker thread");
         }
+    }
+
+    /// Test hook for the poisoned-lock recovery paths: panic a throwaway
+    /// thread while it holds the `sleep` mutex, leaving the lock
+    /// poisoned. Production code never panics inside these critical
+    /// sections; `tests/poisoned_locks.rs` uses this to assert the
+    /// `into_inner` recovery keeps the pool serving.
+    #[doc(hidden)]
+    #[cfg(not(loom))]
+    pub fn poison_sleep_mutex_for_tests(&self) {
+        let shared = &self.shared;
+        std::thread::scope(|s| {
+            let handle = s.spawn(|| {
+                let _guard = shared.sleep.lock().unwrap_or_else(|e| e.into_inner());
+                panic!("deliberately poisoning the WorkerPool sleep mutex");
+            });
+            assert!(handle.join().is_err(), "the poisoning thread must panic");
+        });
     }
 }
 
@@ -248,7 +337,7 @@ fn worker_loop(shared: &Shared) {
             }
             spins = spins.saturating_add(1);
             if spins < SPIN_LIMIT {
-                std::hint::spin_loop();
+                hint::spin_loop();
             } else {
                 let mut sleepers = shared.sleep.lock().unwrap_or_else(|e| e.into_inner());
                 // re-check under the mutex: the publisher bumps the
@@ -267,7 +356,7 @@ fn worker_loop(shared: &Shared) {
         if shared.shutdown.load(Ordering::Relaxed) {
             return;
         }
-        // Safety: the epoch Acquire load above synchronizes with the
+        // SAFETY: the epoch Acquire load above synchronizes with the
         // publishing Release bump, making the job slot write visible;
         // the submitter keeps the closure alive until `done` says every
         // worker finished.
@@ -277,6 +366,8 @@ fn worker_loop(shared: &Shared) {
             if i >= job.tasks {
                 break;
             }
+            // SAFETY: `job.data` is the submitter's closure, alive until
+            // every worker checks out (see the job-slot SAFETY above).
             unsafe { (job.call)(job.data, i) };
         }));
         if result.is_err() {
@@ -286,7 +377,7 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU32;
@@ -310,10 +401,11 @@ mod tests {
     fn tasks_write_disjoint_slices_through_shared_mut() {
         let pool = WorkerPool::new(2);
         let mut out = vec![0u64; 257];
-        let ptr = SharedMut(out.as_mut_ptr());
+        let ptr = SharedMut::new(out.as_mut_ptr());
         pool.run(out.len(), |i| {
-            // Safety: one task per index
-            unsafe { ptr.0.add(i).write(i as u64 * 3 + 1) };
+            // SAFETY: one task per index — each write lands in its own
+            // element, and `out` outlives the `run` call
+            unsafe { ptr.get().add(i).write(i as u64 * 3 + 1) };
         });
         for (i, &v) in out.iter().enumerate() {
             assert_eq!(v, i as u64 * 3 + 1);
@@ -382,5 +474,16 @@ mod tests {
         });
         let total: u64 = partials.iter().map(|p| p.load(Ordering::Relaxed)).sum();
         assert_eq!(total, xs.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn poisoned_sleep_mutex_does_not_wedge_the_pool() {
+        let pool = WorkerPool::new(2);
+        pool.poison_sleep_mutex_for_tests();
+        let counter = AtomicU32::new(0);
+        pool.run(16, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
     }
 }

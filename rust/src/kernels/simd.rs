@@ -17,6 +17,8 @@
 //! - [`axpy`], [`scale_axpy`], [`scale`]: element-wise with one IEEE
 //!   multiply and one add per element in scalar program order on every
 //!   ISA — **bit-identical** across dispatch targets.
+//!
+//! lint: hotpath
 
 /// Unroll width of the scalar fallback's inner loops (f32 lanes per
 /// step). Vector ISAs use wider hardware lanes (8 on AVX2, 4 on NEON);

@@ -20,8 +20,15 @@
 //!   (exact: |pair sum| ≤ 2·127² ≪ 2¹⁵·2¹⁶) with i32 accumulators —
 //!   bit-exact while callers keep `len·|a|·|b| ≪ 2³¹`, which the W4A8
 //!   nibble weights (|w| ≤ 8) and `GEMM_KC`-bounded panels guarantee.
+//!
+//! lint: hotpath
 
 #![allow(unsafe_code)]
+// The pure-lane helpers wrap their bodies in `unsafe {}` so they build
+// under `deny(unsafe_op_in_unsafe_fn)` on toolchains where intrinsic
+// calls are unsafe ops; newer toolchains (safe target-feature
+// intrinsics) would flag those blocks as unused.
+#![allow(unused_unsafe)]
 
 use std::arch::x86_64::*;
 
@@ -53,30 +60,40 @@ fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     unsafe { dot_f32_avx2(a, b) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 and FMA. `a` and `b` must
+/// have equal lengths (the dispatch wrapper debug-asserts this; the
+/// loops below index only through `min(a.len(), b.len())` regardless).
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
-        let (xa, xb) = (_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
-        acc1 = _mm256_fmadd_ps(xa, xb, acc1);
-        i += 16;
+    // SAFETY: every pointer offset is bounds-guarded — the vector loops
+    // require `i + 16 <= n` / `i + 8 <= n` and the scalar tail `i < n`,
+    // with `n = a.len() = b.len()`.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            let (xa, xb) = (_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+            acc1 = _mm256_fmadd_ps(xa, xb, acc1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum256_ps(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
     }
-    while i + 8 <= n {
-        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
-        i += 8;
-    }
-    let mut s = hsum256_ps(_mm256_add_ps(acc0, acc1));
-    while i < n {
-        s += *pa.add(i) * *pb.add(i);
-        i += 1;
-    }
-    s
 }
 
 fn axpy_f32(beta: f32, y: &mut [f32], x: &[f32]) {
@@ -85,24 +102,32 @@ fn axpy_f32(beta: f32, y: &mut [f32], x: &[f32]) {
     unsafe { axpy_f32_avx2(beta, y, x) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2. `y` and `x` must have
+/// equal lengths (loops index only through `min(y.len(), x.len())`).
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_f32_avx2(beta: f32, y: &mut [f32], x: &[f32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr();
-    let px = x.as_ptr();
-    let vb = _mm256_set1_ps(beta);
-    let mut i = 0usize;
-    while i + 8 <= n {
-        // mul then add — NOT fmadd — so each lane is bit-identical to
-        // the scalar `y[i] += beta * x[i]`
-        let yv = _mm256_loadu_ps(py.add(i));
-        let xv = _mm256_loadu_ps(px.add(i));
-        _mm256_storeu_ps(py.add(i), _mm256_add_ps(yv, _mm256_mul_ps(vb, xv)));
-        i += 8;
-    }
-    while i < n {
-        *py.add(i) += beta * *px.add(i);
-        i += 1;
+    // SAFETY: all loads/stores stay inside `y`/`x` — the vector loop
+    // requires `i + 8 <= n` and the tail `i < n`, with `n = y.len()`.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr();
+        let px = x.as_ptr();
+        let vb = _mm256_set1_ps(beta);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // mul then add — NOT fmadd — so each lane is bit-identical to
+            // the scalar `y[i] += beta * x[i]`
+            let yv = _mm256_loadu_ps(py.add(i));
+            let xv = _mm256_loadu_ps(px.add(i));
+            _mm256_storeu_ps(py.add(i), _mm256_add_ps(yv, _mm256_mul_ps(vb, xv)));
+            i += 8;
+        }
+        while i < n {
+            *py.add(i) += beta * *px.add(i);
+            i += 1;
+        }
     }
 }
 
@@ -112,23 +137,31 @@ fn scale_axpy_f32(alpha: f32, y: &mut [f32], x: &[f32]) {
     unsafe { scale_axpy_f32_avx2(alpha, y, x) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2. `y` and `x` must have
+/// equal lengths (loops index only through `min(y.len(), x.len())`).
 #[target_feature(enable = "avx2")]
 unsafe fn scale_axpy_f32_avx2(alpha: f32, y: &mut [f32], x: &[f32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr();
-    let px = x.as_ptr();
-    let va = _mm256_set1_ps(alpha);
-    let mut i = 0usize;
-    while i + 8 <= n {
-        // mul then add (no FMA): bit-identical to `y[i] = alpha*y[i] + x[i]`
-        let yv = _mm256_loadu_ps(py.add(i));
-        let xv = _mm256_loadu_ps(px.add(i));
-        _mm256_storeu_ps(py.add(i), _mm256_add_ps(_mm256_mul_ps(va, yv), xv));
-        i += 8;
-    }
-    while i < n {
-        *py.add(i) = alpha * *py.add(i) + *px.add(i);
-        i += 1;
+    // SAFETY: all loads/stores stay inside `y`/`x` — the vector loop
+    // requires `i + 8 <= n` and the tail `i < n`, with `n = y.len()`.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr();
+        let px = x.as_ptr();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // mul then add (no FMA): bit-identical to `y[i] = alpha*y[i] + x[i]`
+            let yv = _mm256_loadu_ps(py.add(i));
+            let xv = _mm256_loadu_ps(px.add(i));
+            _mm256_storeu_ps(py.add(i), _mm256_add_ps(_mm256_mul_ps(va, yv), xv));
+            i += 8;
+        }
+        while i < n {
+            *py.add(i) = alpha * *py.add(i) + *px.add(i);
+            i += 1;
+        }
     }
 }
 
@@ -137,28 +170,42 @@ fn scale_f32(alpha: f32, y: &mut [f32]) {
     unsafe { scale_f32_avx2(alpha, y) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2.
 #[target_feature(enable = "avx2")]
 unsafe fn scale_f32_avx2(alpha: f32, y: &mut [f32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr();
-    let va = _mm256_set1_ps(alpha);
-    let mut i = 0usize;
-    while i + 8 <= n {
-        _mm256_storeu_ps(py.add(i), _mm256_mul_ps(va, _mm256_loadu_ps(py.add(i))));
-        i += 8;
-    }
-    while i < n {
-        *py.add(i) *= alpha;
-        i += 1;
+    // SAFETY: all loads/stores stay inside `y` — the vector loop
+    // requires `i + 8 <= n` and the tail `i < n`, with `n = y.len()`.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(py.add(i), _mm256_mul_ps(va, _mm256_loadu_ps(py.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *py.add(i) *= alpha;
+            i += 1;
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (pure lane arithmetic — no
+/// memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn hsum256_ps(v: __m256) -> f32 {
-    let mut s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
-    s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-    s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
-    _mm_cvtss_f32(s)
+    // SAFETY: register-only intrinsics; no memory is touched.
+    unsafe {
+        let mut s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
 }
 
 // ------------------------------------------------------------- Q15.17 --
@@ -170,32 +217,41 @@ fn dot_fxp_wide(a: &[Fxp32], b: &[Fxp32]) -> i64 {
     unsafe { dot_fxp_wide_avx2(a, b) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2. `a` and `b` must have
+/// equal lengths (loops index only through `min(a.len(), b.len())`).
 #[target_feature(enable = "avx2")]
 unsafe fn dot_fxp_wide_avx2(a: &[Fxp32], b: &[Fxp32]) -> i64 {
-    let n = a.len();
-    let pa = a.as_ptr() as *const i32;
-    let pb = b.as_ptr() as *const i32;
-    let mut acc0 = _mm256_setzero_si256();
-    let mut acc1 = _mm256_setzero_si256();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
-        // exact 32×32→64 products: even lanes directly, odd lanes after
-        // a logical >>32 (mul_epi32 sign-extends the low 32 bits, so the
-        // zero-filled high halves are ignored)
-        let even = _mm256_mul_epi32(va, vb);
-        let odd = _mm256_mul_epi32(_mm256_srli_epi64::<32>(va), _mm256_srli_epi64::<32>(vb));
-        acc0 = _mm256_add_epi64(acc0, even);
-        acc1 = _mm256_add_epi64(acc1, odd);
-        i += 8;
+    // SAFETY: `Fxp32` is repr(transparent) over i32 so the element
+    // pointers reinterpret soundly, and every offset is bounds-guarded
+    // by `i + 8 <= n` / `i < n` with `n = a.len()`.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr() as *const i32;
+        let pb = b.as_ptr() as *const i32;
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+            // exact 32×32→64 products: even lanes directly, odd lanes after
+            // a logical >>32 (mul_epi32 sign-extends the low 32 bits, so the
+            // zero-filled high halves are ignored)
+            let even = _mm256_mul_epi32(va, vb);
+            let odd = _mm256_mul_epi32(_mm256_srli_epi64::<32>(va), _mm256_srli_epi64::<32>(vb));
+            acc0 = _mm256_add_epi64(acc0, even);
+            acc1 = _mm256_add_epi64(acc1, odd);
+            i += 8;
+        }
+        let mut acc = hsum256_epi64(_mm256_add_epi64(acc0, acc1));
+        while i < n {
+            acc += *pa.add(i) as i64 * *pb.add(i) as i64;
+            i += 1;
+        }
+        acc
     }
-    let mut acc = hsum256_epi64(_mm256_add_epi64(acc0, acc1));
-    while i < n {
-        acc += *pa.add(i) as i64 * *pb.add(i) as i64;
-        i += 1;
-    }
-    acc
 }
 
 fn axpy_fxp(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
@@ -205,32 +261,42 @@ fn axpy_fxp(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
     unsafe { axpy_fxp_avx2(b, y, x) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2. `y` and `x` must have
+/// equal lengths (loops index only through `min(y.len(), x.len())`).
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_fxp_avx2(b: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr() as *mut i32;
-    let px = x.as_ptr() as *const i32;
-    let vb = _mm256_set1_epi64x(b.raw() as i64);
-    // rounding bias 1 << (FRAC_BITS - 1) with FRAC_BITS = 17
-    let half = _mm256_set1_epi64x(1i64 << 16);
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let xv = _mm256_cvtepi32_epi64(_mm_loadu_si128(px.add(i) as *const __m128i));
-        // prod = (b.raw * x.raw + half) >> 17, clamped to i32 — exactly
-        // the scalar axpy_scalar computation, 4 lanes at a time
-        let mut prod = _mm256_mul_epi32(vb, xv);
-        prod = _mm256_add_epi64(prod, half);
-        prod = sra17_epi64(prod);
-        prod = clamp_i32_epi64(prod);
-        // y.sat_add(prod): both operands are in i32 range, so the i64
-        // sum is exact and one more clamp realizes the saturation
-        let yv = _mm256_cvtepi32_epi64(_mm_loadu_si128(py.add(i) as *const __m128i));
-        let sum = clamp_i32_epi64(_mm256_add_epi64(yv, prod));
-        _mm_storeu_si128(py.add(i) as *mut __m128i, pack_low32_epi64(sum));
-        i += 4;
-    }
-    if i < n {
-        crate::fxp::vector::axpy_scalar(b, &mut y[i..], &x[i..]);
+    // SAFETY: `Fxp32` is repr(transparent) over i32 so the element
+    // pointers reinterpret soundly; the vector loop requires
+    // `i + 4 <= n` with `n = y.len()` and the scalar tail uses safe
+    // slicing.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr() as *mut i32;
+        let px = x.as_ptr() as *const i32;
+        let vb = _mm256_set1_epi64x(b.raw() as i64);
+        // rounding bias 1 << (FRAC_BITS - 1) with FRAC_BITS = 17
+        let half = _mm256_set1_epi64x(1i64 << 16);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let xv = _mm256_cvtepi32_epi64(_mm_loadu_si128(px.add(i) as *const __m128i));
+            // prod = (b.raw * x.raw + half) >> 17, clamped to i32 — exactly
+            // the scalar axpy_scalar computation, 4 lanes at a time
+            let mut prod = _mm256_mul_epi32(vb, xv);
+            prod = _mm256_add_epi64(prod, half);
+            prod = sra17_epi64(prod);
+            prod = clamp_i32_epi64(prod);
+            // y.sat_add(prod): both operands are in i32 range, so the i64
+            // sum is exact and one more clamp realizes the saturation
+            let yv = _mm256_cvtepi32_epi64(_mm_loadu_si128(py.add(i) as *const __m128i));
+            let sum = clamp_i32_epi64(_mm256_add_epi64(yv, prod));
+            _mm_storeu_si128(py.add(i) as *mut __m128i, pack_low32_epi64(sum));
+            i += 4;
+        }
+        if i < n {
+            crate::fxp::vector::axpy_scalar(b, &mut y[i..], &x[i..]);
+        }
     }
 }
 
@@ -241,63 +307,104 @@ fn scale_axpy_fxp(a: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
     unsafe { scale_axpy_fxp_avx2(a, y, x) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2. `y` and `x` must have
+/// equal lengths (loops index only through `min(y.len(), x.len())`).
 #[target_feature(enable = "avx2")]
 unsafe fn scale_axpy_fxp_avx2(a: Fxp32, y: &mut [Fxp32], x: &[Fxp32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr() as *mut i32;
-    let px = x.as_ptr() as *const i32;
-    let va = _mm256_set1_epi64x(a.raw() as i64);
-    let half = _mm256_set1_epi64x(1i64 << 16);
-    let mut i = 0usize;
-    while i + 4 <= n {
-        // prod = round(a·y) clamped, then sat_add(x) — the exact scalar
-        // scale_axpy_scalar order with the roles of y and x swapped
-        // relative to axpy
-        let yv = _mm256_cvtepi32_epi64(_mm_loadu_si128(py.add(i) as *const __m128i));
-        let mut prod = _mm256_mul_epi32(va, yv);
-        prod = _mm256_add_epi64(prod, half);
-        prod = sra17_epi64(prod);
-        prod = clamp_i32_epi64(prod);
-        let xv = _mm256_cvtepi32_epi64(_mm_loadu_si128(px.add(i) as *const __m128i));
-        let sum = clamp_i32_epi64(_mm256_add_epi64(prod, xv));
-        _mm_storeu_si128(py.add(i) as *mut __m128i, pack_low32_epi64(sum));
-        i += 4;
-    }
-    if i < n {
-        crate::fxp::vector::scale_axpy_scalar(a, &mut y[i..], &x[i..]);
+    // SAFETY: `Fxp32` is repr(transparent) over i32 so the element
+    // pointers reinterpret soundly; the vector loop requires
+    // `i + 4 <= n` with `n = y.len()` and the scalar tail uses safe
+    // slicing.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr() as *mut i32;
+        let px = x.as_ptr() as *const i32;
+        let va = _mm256_set1_epi64x(a.raw() as i64);
+        let half = _mm256_set1_epi64x(1i64 << 16);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // prod = round(a·y) clamped, then sat_add(x) — the exact scalar
+            // scale_axpy_scalar order with the roles of y and x swapped
+            // relative to axpy
+            let yv = _mm256_cvtepi32_epi64(_mm_loadu_si128(py.add(i) as *const __m128i));
+            let mut prod = _mm256_mul_epi32(va, yv);
+            prod = _mm256_add_epi64(prod, half);
+            prod = sra17_epi64(prod);
+            prod = clamp_i32_epi64(prod);
+            let xv = _mm256_cvtepi32_epi64(_mm_loadu_si128(px.add(i) as *const __m128i));
+            let sum = clamp_i32_epi64(_mm256_add_epi64(prod, xv));
+            _mm_storeu_si128(py.add(i) as *mut __m128i, pack_low32_epi64(sum));
+            i += 4;
+        }
+        if i < n {
+            crate::fxp::vector::scale_axpy_scalar(a, &mut y[i..], &x[i..]);
+        }
     }
 }
 
 /// Arithmetic `>> 17` on four i64 lanes (AVX2 has no `sra` for epi64):
 /// logical shift, then OR the sign bits back into the top 17 positions.
+///
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (pure lane arithmetic — no
+/// memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn sra17_epi64(v: __m256i) -> __m256i {
-    let logical = _mm256_srli_epi64::<17>(v);
-    let sign = _mm256_cmpgt_epi64(_mm256_setzero_si256(), v);
-    _mm256_or_si256(logical, _mm256_slli_epi64::<47>(sign))
+    // SAFETY: register-only intrinsics; no memory is touched.
+    unsafe {
+        let logical = _mm256_srli_epi64::<17>(v);
+        let sign = _mm256_cmpgt_epi64(_mm256_setzero_si256(), v);
+        _mm256_or_si256(logical, _mm256_slli_epi64::<47>(sign))
+    }
 }
 
 /// Clamp four i64 lanes into `[i32::MIN, i32::MAX]`.
+///
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (pure lane arithmetic — no
+/// memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn clamp_i32_epi64(v: __m256i) -> __m256i {
-    let maxv = _mm256_set1_epi64x(i32::MAX as i64);
-    let minv = _mm256_set1_epi64x(i32::MIN as i64);
-    let v = _mm256_blendv_epi8(v, maxv, _mm256_cmpgt_epi64(v, maxv));
-    _mm256_blendv_epi8(minv, v, _mm256_cmpgt_epi64(v, minv))
+    // SAFETY: register-only intrinsics; no memory is touched.
+    unsafe {
+        let maxv = _mm256_set1_epi64x(i32::MAX as i64);
+        let minv = _mm256_set1_epi64x(i32::MIN as i64);
+        let v = _mm256_blendv_epi8(v, maxv, _mm256_cmpgt_epi64(v, maxv));
+        _mm256_blendv_epi8(minv, v, _mm256_cmpgt_epi64(v, minv))
+    }
 }
 
 /// Low 32 bits of each of the four i64 lanes, packed into a __m128i.
+///
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (pure lane arithmetic — no
+/// memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn pack_low32_epi64(v: __m256i) -> __m128i {
-    let idx = _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0);
-    _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(v, idx))
+    // SAFETY: register-only intrinsics; no memory is touched.
+    unsafe {
+        let idx = _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0);
+        _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(v, idx))
+    }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2.
 #[target_feature(enable = "avx2")]
 unsafe fn hsum256_epi64(v: __m256i) -> i64 {
-    let mut buf = [0i64; 4];
-    _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v);
-    buf[0] + buf[1] + buf[2] + buf[3]
+    // SAFETY: the store targets a stack buffer of exactly 4 i64 lanes
+    // (32 bytes, the width of one __m256i).
+    unsafe {
+        let mut buf = [0i64; 4];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v);
+        buf[0] + buf[1] + buf[2] + buf[3]
+    }
 }
 
 // ------------------------------------------------------- INT8 / W4A8 --
@@ -308,92 +415,120 @@ fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     unsafe { dot_i8_avx2(a, b) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2. `a` and `b` must have
+/// equal lengths (loops index only through `min(a.len(), b.len())`).
 #[target_feature(enable = "avx2")]
 unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc = _mm256_setzero_si256();
-    let mut i = 0usize;
-    while i + 32 <= n {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
-        // widen i8→i16 and madd: each i32 lane gets an exact pair sum
-        let lo = _mm256_madd_epi16(
-            _mm256_cvtepi8_epi16(_mm256_castsi256_si128(va)),
-            _mm256_cvtepi8_epi16(_mm256_castsi256_si128(vb)),
-        );
-        let hi = _mm256_madd_epi16(
-            _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(va)),
-            _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(vb)),
-        );
-        acc = _mm256_add_epi32(acc, _mm256_add_epi32(lo, hi));
-        i += 32;
+    // SAFETY: every pointer offset is bounds-guarded by `i + 32 <= n`
+    // in the vector loop and `i < n` in the tail, with `n = a.len()`.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+            // widen i8→i16 and madd: each i32 lane gets an exact pair sum
+            let lo = _mm256_madd_epi16(
+                _mm256_cvtepi8_epi16(_mm256_castsi256_si128(va)),
+                _mm256_cvtepi8_epi16(_mm256_castsi256_si128(vb)),
+            );
+            let hi = _mm256_madd_epi16(
+                _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(va)),
+                _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(vb)),
+            );
+            acc = _mm256_add_epi32(acc, _mm256_add_epi32(lo, hi));
+            i += 32;
+        }
+        let mut s = hsum256_epi32(acc);
+        while i < n {
+            s += *pa.add(i) as i32 * *pb.add(i) as i32;
+            i += 1;
+        }
+        s
     }
-    let mut s = hsum256_epi32(acc);
-    while i < n {
-        s += *pa.add(i) as i32 * *pb.add(i) as i32;
-        i += 1;
-    }
-    s
 }
 
 fn w4a8_col(col: &[u8], din: usize, xs: &[i8]) -> i32 {
     debug_assert_eq!(xs.len(), din);
     debug_assert!(col.len() >= din.div_ceil(2));
-    // SAFETY: registration is gated on runtime avx2+fma detection.
+    // SAFETY: registration is gated on runtime avx2+fma detection; the
+    // asserts above pin the packed-column and activation lengths the
+    // inner kernel indexes through.
     unsafe { w4a8_col_avx2(col, din, xs) }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2, that `xs.len() == din`,
+/// and that `col` holds at least `din.div_ceil(2)` packed bytes (the
+/// dispatch wrapper debug-asserts both).
 #[target_feature(enable = "avx2")]
 unsafe fn w4a8_col_avx2(col: &[u8], din: usize, xs: &[i8]) -> i32 {
-    let pairs = din / 2;
-    let pc = col.as_ptr();
-    let px = xs.as_ptr();
-    let nib_mask = _mm_set1_epi8(0x0F);
-    let sign_bit = _mm_set1_epi8(8);
-    let mut acc = _mm256_setzero_si256();
-    let mut byte = 0usize;
-    while byte + 16 <= pairs {
-        let packed = _mm_loadu_si128(pc.add(byte) as *const __m128i);
-        // split nibbles and sign-extend 4→8 bits via (v ^ 8) - 8
-        let lo = _mm_and_si128(packed, nib_mask);
-        let hi = _mm_and_si128(_mm_srli_epi16::<4>(packed), nib_mask);
-        let lo = _mm_sub_epi8(_mm_xor_si128(lo, sign_bit), sign_bit);
-        let hi = _mm_sub_epi8(_mm_xor_si128(hi, sign_bit), sign_bit);
-        // interleave back to natural weight order (low nibble first):
-        // w[2k] = lo nibble of byte k, w[2k+1] = hi nibble of byte k
-        let w0 = _mm_unpacklo_epi8(lo, hi);
-        let w1 = _mm_unpackhi_epi8(lo, hi);
-        let x0 = _mm_loadu_si128(px.add(2 * byte) as *const __m128i);
-        let x1 = _mm_loadu_si128(px.add(2 * byte + 16) as *const __m128i);
-        let p0 = _mm256_madd_epi16(_mm256_cvtepi8_epi16(w0), _mm256_cvtepi8_epi16(x0));
-        let p1 = _mm256_madd_epi16(_mm256_cvtepi8_epi16(w1), _mm256_cvtepi8_epi16(x1));
-        acc = _mm256_add_epi32(acc, _mm256_add_epi32(p0, p1));
-        byte += 16;
+    // SAFETY: the vector loop reads 16 packed bytes (32 activations) at
+    // `byte + 16 <= pairs`; the byte tail stops at `pairs = din/2` and
+    // the odd-nibble epilogue reads exactly `col[pairs]` / `xs[din-1]`
+    // — all within the lengths the caller guarantees.
+    unsafe {
+        let pairs = din / 2;
+        let pc = col.as_ptr();
+        let px = xs.as_ptr();
+        let nib_mask = _mm_set1_epi8(0x0F);
+        let sign_bit = _mm_set1_epi8(8);
+        let mut acc = _mm256_setzero_si256();
+        let mut byte = 0usize;
+        while byte + 16 <= pairs {
+            let packed = _mm_loadu_si128(pc.add(byte) as *const __m128i);
+            // split nibbles and sign-extend 4→8 bits via (v ^ 8) - 8
+            let lo = _mm_and_si128(packed, nib_mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(packed), nib_mask);
+            let lo = _mm_sub_epi8(_mm_xor_si128(lo, sign_bit), sign_bit);
+            let hi = _mm_sub_epi8(_mm_xor_si128(hi, sign_bit), sign_bit);
+            // interleave back to natural weight order (low nibble first):
+            // w[2k] = lo nibble of byte k, w[2k+1] = hi nibble of byte k
+            let w0 = _mm_unpacklo_epi8(lo, hi);
+            let w1 = _mm_unpackhi_epi8(lo, hi);
+            let x0 = _mm_loadu_si128(px.add(2 * byte) as *const __m128i);
+            let x1 = _mm_loadu_si128(px.add(2 * byte + 16) as *const __m128i);
+            let p0 = _mm256_madd_epi16(_mm256_cvtepi8_epi16(w0), _mm256_cvtepi8_epi16(x0));
+            let p1 = _mm256_madd_epi16(_mm256_cvtepi8_epi16(w1), _mm256_cvtepi8_epi16(x1));
+            acc = _mm256_add_epi32(acc, _mm256_add_epi32(p0, p1));
+            byte += 16;
+        }
+        let mut s = hsum256_epi32(acc);
+        // remaining complete bytes, then the odd trailing low nibble
+        while byte < pairs {
+            let b = *pc.add(byte);
+            let w_lo = (((b & 0x0F) ^ 8) as i8 - 8) as i32;
+            let w_hi = (((b >> 4) ^ 8) as i8 - 8) as i32;
+            s += w_lo * *px.add(2 * byte) as i32;
+            s += w_hi * *px.add(2 * byte + 1) as i32;
+            byte += 1;
+        }
+        if din % 2 == 1 {
+            let b = *pc.add(pairs);
+            let w_lo = (((b & 0x0F) ^ 8) as i8 - 8) as i32;
+            s += w_lo * *px.add(din - 1) as i32;
+        }
+        s
     }
-    let mut s = hsum256_epi32(acc);
-    // remaining complete bytes, then the odd trailing low nibble
-    while byte < pairs {
-        let b = *pc.add(byte);
-        let w_lo = (((b & 0x0F) ^ 8) as i8 - 8) as i32;
-        let w_hi = (((b >> 4) ^ 8) as i8 - 8) as i32;
-        s += w_lo * *px.add(2 * byte) as i32;
-        s += w_hi * *px.add(2 * byte + 1) as i32;
-        byte += 1;
-    }
-    if din % 2 == 1 {
-        let b = *pc.add(pairs);
-        let w_lo = (((b & 0x0F) ^ 8) as i8 - 8) as i32;
-        s += w_lo * *px.add(din - 1) as i32;
-    }
-    s
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (pure lane arithmetic — no
+/// memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn hsum256_epi32(v: __m256i) -> i32 {
-    let mut s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
-    s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
-    s = _mm_add_epi32(s, _mm_srli_si128::<4>(s));
-    _mm_cvtsi128_si32(s)
+    // SAFETY: register-only intrinsics; no memory is touched.
+    unsafe {
+        let mut s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
+        s = _mm_add_epi32(s, _mm_srli_si128::<4>(s));
+        _mm_cvtsi128_si32(s)
+    }
 }

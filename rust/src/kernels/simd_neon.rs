@@ -12,6 +12,8 @@
 //! Numerics: [`dot_f32`] uses `vfmaq_f32` (FMA) — re-association
 //! tolerance like the AVX2 kernel; `axpy`/`scale_axpy`/`scale` use
 //! mul-then-add and are bit-identical to scalar.
+//!
+//! lint: hotpath
 
 use std::arch::aarch64::*;
 
@@ -39,29 +41,38 @@ fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     unsafe { dot_f32_neon(a, b) }
 }
 
+/// # Safety
+///
+/// NEON must be available (baseline on aarch64). `a` and `b` must have
+/// equal lengths (loops index only through `min(a.len(), b.len())`).
 #[target_feature(enable = "neon")]
 unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = vdupq_n_f32(0.0);
-    let mut acc1 = vdupq_n_f32(0.0);
-    let mut i = 0usize;
-    while i + 8 <= n {
-        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
-        i += 8;
+    // SAFETY: every pointer offset is bounds-guarded — the vector loops
+    // require `i + 8 <= n` / `i + 4 <= n` and the scalar tail `i < n`,
+    // with `n = a.len()`.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
     }
-    while i + 4 <= n {
-        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        i += 4;
-    }
-    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
-    while i < n {
-        s += *pa.add(i) * *pb.add(i);
-        i += 1;
-    }
-    s
 }
 
 fn axpy_f32(beta: f32, y: &mut [f32], x: &[f32]) {
@@ -70,23 +81,31 @@ fn axpy_f32(beta: f32, y: &mut [f32], x: &[f32]) {
     unsafe { axpy_f32_neon(beta, y, x) }
 }
 
+/// # Safety
+///
+/// NEON must be available (baseline on aarch64). `y` and `x` must have
+/// equal lengths (loops index only through `min(y.len(), x.len())`).
 #[target_feature(enable = "neon")]
 unsafe fn axpy_f32_neon(beta: f32, y: &mut [f32], x: &[f32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr();
-    let px = x.as_ptr();
-    let vb = vdupq_n_f32(beta);
-    let mut i = 0usize;
-    while i + 4 <= n {
-        // mul then add — NOT vfmaq — bit-identical to the scalar kernel
-        let yv = vld1q_f32(py.add(i));
-        let xv = vld1q_f32(px.add(i));
-        vst1q_f32(py.add(i), vaddq_f32(yv, vmulq_f32(vb, xv)));
-        i += 4;
-    }
-    while i < n {
-        *py.add(i) += beta * *px.add(i);
-        i += 1;
+    // SAFETY: all loads/stores stay inside `y`/`x` — the vector loop
+    // requires `i + 4 <= n` and the tail `i < n`, with `n = y.len()`.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr();
+        let px = x.as_ptr();
+        let vb = vdupq_n_f32(beta);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // mul then add — NOT vfmaq — bit-identical to the scalar kernel
+            let yv = vld1q_f32(py.add(i));
+            let xv = vld1q_f32(px.add(i));
+            vst1q_f32(py.add(i), vaddq_f32(yv, vmulq_f32(vb, xv)));
+            i += 4;
+        }
+        while i < n {
+            *py.add(i) += beta * *px.add(i);
+            i += 1;
+        }
     }
 }
 
@@ -96,23 +115,31 @@ fn scale_axpy_f32(alpha: f32, y: &mut [f32], x: &[f32]) {
     unsafe { scale_axpy_f32_neon(alpha, y, x) }
 }
 
+/// # Safety
+///
+/// NEON must be available (baseline on aarch64). `y` and `x` must have
+/// equal lengths (loops index only through `min(y.len(), x.len())`).
 #[target_feature(enable = "neon")]
 unsafe fn scale_axpy_f32_neon(alpha: f32, y: &mut [f32], x: &[f32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr();
-    let px = x.as_ptr();
-    let va = vdupq_n_f32(alpha);
-    let mut i = 0usize;
-    while i + 4 <= n {
-        // mul then add (no FMA): bit-identical to `y[i] = alpha*y[i] + x[i]`
-        let yv = vld1q_f32(py.add(i));
-        let xv = vld1q_f32(px.add(i));
-        vst1q_f32(py.add(i), vaddq_f32(vmulq_f32(va, yv), xv));
-        i += 4;
-    }
-    while i < n {
-        *py.add(i) = alpha * *py.add(i) + *px.add(i);
-        i += 1;
+    // SAFETY: all loads/stores stay inside `y`/`x` — the vector loop
+    // requires `i + 4 <= n` and the tail `i < n`, with `n = y.len()`.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr();
+        let px = x.as_ptr();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // mul then add (no FMA): bit-identical to `y[i] = alpha*y[i] + x[i]`
+            let yv = vld1q_f32(py.add(i));
+            let xv = vld1q_f32(px.add(i));
+            vst1q_f32(py.add(i), vaddq_f32(vmulq_f32(va, yv), xv));
+            i += 4;
+        }
+        while i < n {
+            *py.add(i) = alpha * *py.add(i) + *px.add(i);
+            i += 1;
+        }
     }
 }
 
@@ -121,18 +148,25 @@ fn scale_f32(alpha: f32, y: &mut [f32]) {
     unsafe { scale_f32_neon(alpha, y) }
 }
 
+/// # Safety
+///
+/// NEON must be available (baseline on aarch64).
 #[target_feature(enable = "neon")]
 unsafe fn scale_f32_neon(alpha: f32, y: &mut [f32]) {
-    let n = y.len();
-    let py = y.as_mut_ptr();
-    let va = vdupq_n_f32(alpha);
-    let mut i = 0usize;
-    while i + 4 <= n {
-        vst1q_f32(py.add(i), vmulq_f32(va, vld1q_f32(py.add(i))));
-        i += 4;
-    }
-    while i < n {
-        *py.add(i) *= alpha;
-        i += 1;
+    // SAFETY: all loads/stores stay inside `y` — the vector loop
+    // requires `i + 4 <= n` and the tail `i < n`, with `n = y.len()`.
+    unsafe {
+        let n = y.len();
+        let py = y.as_mut_ptr();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(py.add(i), vmulq_f32(va, vld1q_f32(py.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *py.add(i) *= alpha;
+            i += 1;
+        }
     }
 }

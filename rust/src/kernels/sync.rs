@@ -1,0 +1,48 @@
+//! Sync-primitive alias layer for model checking.
+//!
+//! The pool ([`super::pool`]) and the paged-KV free list
+//! ([`super::paged`]) import every synchronization primitive from this
+//! module instead of `std`. A normal build re-exports `std` types
+//! one-for-one (zero cost — they are the same items). A `--cfg loom`
+//! build swaps in the instrumented twins from [`crate::util::mc`], so
+//! `rust/tests/loom_pool.rs` can exhaustively model-check the epoch
+//! publication / park / wake / panic choreography and the free-list
+//! grant/release protocol without touching the production source.
+//!
+//! Under `--cfg loom`, code using these primitives must run inside a
+//! [`crate::util::mc::model`] closure (the CI loom job builds only the
+//! `loom_pool` test target, so the rest of the test suite never meets
+//! the instrumented types).
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use crate::util::mc::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// `std::sync::atomic` (or the instrumented subset under `--cfg loom`).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use crate::util::mc::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// The `std::thread` surface the pool uses (spawn / yield / join).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    #[cfg(loom)]
+    pub use crate::util::mc::thread::{spawn, yield_now, JoinHandle};
+}
+
+/// Busy-wait hint; a no-op under the model checker.
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(loom)]
+    pub use crate::util::mc::thread::spin_loop;
+}

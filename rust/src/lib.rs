@@ -19,6 +19,26 @@
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! mapping every paper table/figure to a module and bench target.
+//!
+//! ## Unsafe-code policy
+//!
+//! `unsafe` is confined to the SIMD microkernels (`kernels::simd_avx2` /
+//! `kernels::simd_neon`), the raw-pointer GEMM panels in [`quant`], and
+//! the worker-pool job-publication protocol in [`kernels::pool`]. Three
+//! crate-wide guards keep it honest (see `EXPERIMENTS.md`
+//! §Static-analysis for the full catalog):
+//!
+//! - `deny(unsafe_op_in_unsafe_fn)` — every unsafe operation needs its
+//!   own `unsafe {}` block, even inside an `unsafe fn`;
+//! - `warn(clippy::undocumented_unsafe_blocks)` + the in-tree lint
+//!   binary (`cargo run --bin lint`) — every `unsafe` block and `unsafe
+//!   fn` carries a `// SAFETY:` / `/// # Safety` justification;
+//! - `deny(clippy::unwrap_used)` outside tests — fallible paths return
+//!   errors or use `expect` with an invariant message.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod attention;
 pub mod baselines;

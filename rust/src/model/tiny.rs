@@ -809,7 +809,7 @@ impl TinyModel {
             // scatter: RoPE, cache-row append, and the fused per-lane
             // attention sweep — one task per lane
             {
-                let lanes_ptr = SharedMut(lanes.as_mut_ptr());
+                let lanes_ptr = SharedMut::new(lanes.as_mut_ptr());
                 let (bq, bk, bv) = (&batch.q, &batch.k, &batch.v);
                 let flags = &batch.faulted;
                 let attend_lane = |i: usize| {
@@ -821,9 +821,9 @@ impl TinyModel {
                     // only — worker-pool tasks for other lanes are
                     // untouched.
                     let r = catch_unwind(AssertUnwindSafe(|| {
-                        // Safety: task indices are distinct, so each task
+                        // SAFETY: task indices are distinct, so each task
                         // holds the only reference to its lane
-                        let lane = unsafe { &mut *lanes_ptr.0.add(i) };
+                        let lane = unsafe { &mut *lanes_ptr.get().add(i) };
                         let pos = lane.state.pos;
                         let len = pos + 1;
                         let fxp_from = lane.state.fxp_rows.min(pos);
@@ -1257,15 +1257,15 @@ fn batched_gemm(
         Some(p) => {
             let dout = w.dout;
             let parts = p.parallelism().min(dout);
-            let out_ptr = SharedMut(out.as_mut_ptr());
+            let out_ptr = SharedMut::new(out.as_mut_ptr());
             let out_len = out.len();
             p.run(parts, |t| {
                 let j0 = dout * t / parts;
                 let j1 = dout * (t + 1) / parts;
-                // Safety: tasks cover disjoint column ranges of `out`,
+                // SAFETY: tasks cover disjoint column ranges of `out`,
                 // whose exclusive borrow the caller holds across the run
                 unsafe {
-                    gemm_w4a8_raw_cols_ptr(qs, xscales, w, j0, j1, out_ptr.0, out_len);
+                    gemm_w4a8_raw_cols_ptr(qs, xscales, w, j0, j1, out_ptr.get(), out_len);
                 }
             });
         }

@@ -12,6 +12,8 @@
 //! reduction dimension into [`GEMM_KC`]-lane panels, unpacking each
 //! packed-nibble panel once and reusing it across every lane
 //! (GotoBLAS-style cache blocking — see EXPERIMENTS.md §SIMD-dispatch).
+//!
+//! lint: hotpath
 
 use super::int4::{unpack_int4, Int4Matrix};
 use super::int8::QuantizedVec;
@@ -24,6 +26,8 @@ pub const GEMM_KC: usize = 1024;
 
 /// `y = dequant(Wᵀ x)` for a packed INT4 matrix and an INT8 vector.
 pub fn gemv_w4a8(x: &QuantizedVec, w: &Int4Matrix) -> Vec<f32> {
+    // lint: allow(hotpath) — allocating convenience wrapper; the serving
+    // path uses gemv_w4a8_into with caller-owned buffers.
     let mut out = vec![0.0f32; w.dout];
     gemv_w4a8_into(x, w, &mut out);
     out
@@ -154,7 +158,7 @@ pub fn gemm_w4a8_raw_cols_into(
     j1: usize,
     out: &mut [f32],
 ) {
-    // Safety: `out` is a valid exclusive borrow of the whole buffer.
+    // SAFETY: `out` is a valid exclusive borrow of the whole buffer.
     unsafe { gemm_w4a8_raw_cols_ptr(xs, xscales, w, j0, j1, out.as_mut_ptr(), out.len()) }
 }
 
@@ -197,7 +201,9 @@ pub unsafe fn gemm_w4a8_raw_cols_ptr(
         let wscale = w.scales[j];
         if w.din == 0 {
             for i in 0..b {
-                out.add(i * w.dout + j).write(0.0);
+                // SAFETY: i*w.dout + j < b*w.dout = out_len (asserted
+                // above), and j is inside this call's exclusive j0..j1.
+                unsafe { out.add(i * w.dout + j).write(0.0) };
             }
             continue;
         }
@@ -218,12 +224,19 @@ pub unsafe fn gemm_w4a8_raw_cols_ptr(
                 let acc = if first {
                     part
                 } else {
-                    (out.add(idx) as *mut u32).read() as i32 + part
+                    // SAFETY: idx < out_len (asserted above) and j is in
+                    // our exclusive j0..j1 range; a previous panel of
+                    // this same call stored the i32 partial there.
+                    unsafe { (out.add(idx) as *mut u32).read() as i32 + part }
                 };
                 if last {
-                    out.add(idx).write(acc as f32 * xscales[i] * wscale);
+                    // SAFETY: idx < out_len, j within our exclusive
+                    // column range — nobody else writes this slot.
+                    unsafe { out.add(idx).write(acc as f32 * xscales[i] * wscale) };
                 } else {
-                    (out.add(idx) as *mut u32).write(acc as u32);
+                    // SAFETY: as above; parks the i32 partial in the f32
+                    // slot's bits until the final panel dequantizes it.
+                    unsafe { (out.add(idx) as *mut u32).write(acc as u32) };
                 }
             }
             k0 = k1;
@@ -245,6 +258,8 @@ impl QuantLinear {
 
     /// Quantize `x` to INT8 and run the W4A8 GEMV.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        // lint: allow(hotpath) — allocating convenience wrapper; the
+        // serving path uses forward_into with caller-owned scratch.
         let mut out = vec![0.0f32; self.weight.dout];
         let mut qbuf = vec![0i8; self.weight.din];
         self.forward_into(x, &mut qbuf, &mut out);

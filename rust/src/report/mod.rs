@@ -297,7 +297,11 @@ pub struct Headlines {
 pub fn headlines(arch: &ArchConfig) -> Headlines {
     let cfg = LlmConfig::llama2_7b();
     let sp = edge_hw::fig7b_speedups(arch, 512, 128);
-    let swiftkv_speedup = sp.iter().find(|(l, _)| l == "SwiftKV").unwrap().1;
+    let swiftkv_row = sp
+        .iter()
+        .find(|(l, _)| l == "SwiftKV")
+        .expect("fig7b_speedups always includes the SwiftKV row");
+    let swiftkv_speedup = swiftkv_row.1;
     let sim = layer_sched::simulate_token(arch, &cfg, 512);
     let share = sim.module_share("Attention (SKV)");
     let p = power::power(arch, 1.0);

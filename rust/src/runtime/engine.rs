@@ -1,6 +1,11 @@
 //! The decode engine: compiled executables + resident weights + per-batch
 //! state.
 
+// Lock/slot unwraps here predate the crate-wide `unwrap_used` deny; the
+// module is `pjrt`-feature-gated (off by default, never in the serving
+// path), so it keeps a local exemption instead of forcing the audit.
+#![allow(clippy::unwrap_used)]
+
 use crate::model::weights::{TinyManifest, WeightStore};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -247,6 +252,9 @@ impl Engine {
 /// untyped-data path (avoids `vec1().reshape()`, whose result the 0.5.1
 /// runtime transfers incorrectly for some shapes).
 fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: reinterpreting a live &[f32] as its raw bytes — same
+    // allocation, same lifetime, u8 has no alignment or validity
+    // requirements, and the length covers exactly the f32 payload.
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
@@ -269,6 +277,8 @@ impl CloneLiteral for Literal {
             xla::ElementType::F32 => {
                 let mut host = vec![0f32; self.element_count()];
                 self.copy_raw_to(&mut host).map_err(|e| anyhow!("{e}"))?;
+                // SAFETY: byte view of the live `host` Vec<f32> — same
+                // allocation and lifetime, exact f32 payload length.
                 bytes.copy_from_slice(unsafe {
                     std::slice::from_raw_parts(host.as_ptr() as *const u8, host.len() * 4)
                 });

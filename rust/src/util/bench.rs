@@ -129,12 +129,12 @@ impl Bencher {
             samples.push(dt);
             iters += batch;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let min = samples[0];
         let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         let mad = devs[devs.len() / 2];
 
         let m = Measurement {
@@ -155,7 +155,7 @@ impl Bencher {
             m.iters
         );
         self.results.push(m);
-        self.results.last().unwrap()
+        self.results.last().expect("pushed one line above")
     }
 
     pub fn results(&self) -> &[Measurement] {

@@ -253,7 +253,8 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("number scanner only consumes ASCII bytes");
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

@@ -1,0 +1,1103 @@
+//! Repo-invariant lint pass — the static-analysis gate behind
+//! `cargo run --bin lint` and `tests/lint_repo.rs`.
+//!
+//! Four rules, each encoding an invariant the compiler cannot check:
+//!
+//! 1. **unsafe-safety** — every `unsafe` keyword (block, fn, impl) must
+//!    carry a `// SAFETY:` comment on the same or an immediately
+//!    preceding comment/attribute line, or a `# Safety` doc section.
+//!    Function-pointer *types* (`unsafe fn(..)`) are exempt.
+//! 2. **hotpath** — files whose module docs carry the `lint: hotpath`
+//!    marker as a standalone `//!` line must not allocate or read
+//!    clocks on the decode path: `.unwrap()` / `.expect(` /
+//!    `Instant::now` / `vec![` / `.collect()` / `format!(` / … are
+//!    denied outside `#[cfg(test)]` regions unless a
+//!    `lint: allow(hotpath)` waiver covers the lines.
+//! 3. **kernel-parity** — every `KernelTable` initializer (scalar,
+//!    AVX2, NEON) must spell out exactly the fields of the struct
+//!    definition; `..` defaulting is rejected so a new kernel entry
+//!    cannot silently fall back to scalar on one ISA.
+//! 4. **bench-gate** — every substring in `bench_gate`'s default gate
+//!    list must match at least one benchmark name in
+//!    `BENCH_baseline.json` (or, while the baseline is a placeholder,
+//!    one string literal in `benches/`), so the perf gate cannot rot
+//!    into matching nothing.
+//!
+//! The scanner is deliberately lexical: [`mask`] blanks comments,
+//! strings, and char literals while preserving line structure, and the
+//! rules run over the masked text (except where the *content* of a
+//! comment or literal is the subject). No rustc internals, no proc
+//! macros — the pass must run on stable with zero dependencies.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a specific source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the crate root (forward slashes).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule slug from [`RULES`].
+    pub rule: &'static str,
+    /// Human-readable description of what to fix.
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Rule catalog: `(slug, one-line description)`. `lint-infra` covers
+/// failures of the lint pass itself (missing inputs it must scan).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "unsafe-safety",
+        "every `unsafe` block, fn, or impl carries a `// SAFETY:` comment or `# Safety` doc",
+    ),
+    (
+        "hotpath",
+        "marker-annotated hot-path files never allocate, format, or read clocks outside tests",
+    ),
+    (
+        "kernel-parity",
+        "every KernelTable initializer spells out the exact field set of the struct (no `..`)",
+    ),
+    (
+        "bench-gate",
+        "each bench_gate default substring matches a baseline benchmark name (or benches literal)",
+    ),
+    (
+        "lint-infra",
+        "inputs the lint pass must scan (isa tables, gate default, baseline) exist and parse",
+    ),
+];
+
+/// Marker text that, written as a whole `//! <marker>` line, opts a
+/// file into the hot-path rule. Matched with exact `trim()` equality,
+/// so prose *mentioning* the marker never opts a file in.
+const HOTPATH_MARK: &str = "lint: hotpath";
+
+/// Waiver needle: any line containing it exempts itself and the
+/// following contiguous run of non-blank lines from the hot-path rule.
+const HOTPATH_WAIVER: &str = "lint: allow(hotpath)";
+
+/// Tokens denied in hot-path files — heap allocation, lazy formatting,
+/// panicking extractors, and wall-clock reads.
+const HOTPATH_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "Instant::now",
+    "SystemTime::now",
+    "vec![",
+    ".collect()",
+    "format!(",
+    ".to_string()",
+    ".to_vec()",
+    "Box::new(",
+    "String::from(",
+    "Vec::with_capacity(",
+];
+
+// ---------------------------------------------------------------------------
+// Lexical helpers
+// ---------------------------------------------------------------------------
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank out comments, string literals, and char literals while
+/// preserving the line structure (every newline survives; everything
+/// blanked becomes spaces). Rules that care about *code* tokens scan
+/// the masked text so commented-out or quoted code never matches;
+/// rules that care about comment *content* read the raw lines.
+pub fn mask(source: &str) -> String {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        // Line comment (covers `//`, `///`, `//!`).
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if chars[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw-byte) string: r"..", r#".."#, br".." — only when
+        // the `r`/`b` is not the tail of an identifier.
+        let raw_prefix = if c == 'b' && chars.get(i + 1) == Some(&'r') {
+            2
+        } else if c == 'r' {
+            1
+        } else {
+            0
+        };
+        if raw_prefix > 0 && (i == 0 || !is_word_char(chars[i - 1])) {
+            let mut j = i + raw_prefix;
+            let mut hashes = 0usize;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if chars.get(j) == Some(&'"') {
+                // Blank prefix, hashes, and opening quote.
+                while i <= j {
+                    out.push(' ');
+                    i += 1;
+                }
+                // Blank content until `"` followed by `hashes` hashes.
+                'content: while i < chars.len() {
+                    if chars[i] == '"' {
+                        let mut k = 1usize;
+                        while k <= hashes && chars.get(i + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes + 1 {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                                i += 1;
+                            }
+                            break 'content;
+                        }
+                    }
+                    out.push(if chars[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Normal (and byte) string literal with escapes. An escaped
+        // newline (the `\` line-continuation) must keep its newline, or
+        // every later line number would shift.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < chars.len() && chars[i] != '"' {
+                if chars[i] == '\\' && i + 1 < chars.len() {
+                    out.push(' ');
+                    out.push(if chars[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else {
+                    out.push(if chars[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            if i < chars.len() {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime: 'x' or '\n' is a literal; 'a (no
+        // closing quote two chars on) is a lifetime and passes through.
+        if c == '\'' {
+            let is_char = chars.get(i + 1) == Some(&'\\') || chars.get(i + 2) == Some(&'\'');
+            if is_char {
+                out.push(' ');
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    if chars[i] == '\\' && i + 1 < chars.len() {
+                        out.push_str("  ");
+                        i += 2;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+                if i < chars.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Byte offsets of every whole-word occurrence of `word` in `code`.
+/// Word boundaries are `[A-Za-z0-9_]`; offsets index the masked text,
+/// never the raw source.
+pub fn word_occurrences(code: &str, word: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let w = word.as_bytes();
+    let mut out = Vec::new();
+    if w.is_empty() {
+        return out;
+    }
+    let mut i = 0usize;
+    while i + w.len() <= b.len() {
+        if &b[i..i + w.len()] == w {
+            let before_ok = i == 0 || !is_word_byte(b[i - 1]);
+            let after_ok = i + w.len() == b.len() || !is_word_byte(b[i + w.len()]);
+            if before_ok && after_ok {
+                out.push(i);
+                i += w.len();
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// 1-based line number of byte offset `at` (mask preserves newlines,
+/// so masked offsets map to the same line as the raw source).
+pub fn line_of(code: &str, at: usize) -> usize {
+    code.as_bytes()[..at].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Body between the brace at `open` and its matching close (exclusive).
+fn brace_body(code: &str, open: usize) -> Option<&str> {
+    let bytes = code.as_bytes();
+    if bytes.get(open) != Some(&b'{') {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&code[open + 1..i]);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Split on commas at bracket depth 0 (tracking `()[]{}`).
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, &b) in body.as_bytes().iter().enumerate() {
+        match b {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b',' if depth == 0 => {
+                out.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&body[start..]);
+    out
+}
+
+/// Contents of every normal and raw string literal in `source`,
+/// skipping comments and char literals.
+pub fn string_literals(source: &str) -> Vec<String> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        let raw_prefix = if c == 'b' && chars.get(i + 1) == Some(&'r') {
+            2
+        } else if c == 'r' {
+            1
+        } else {
+            0
+        };
+        if raw_prefix > 0 && (i == 0 || !is_word_char(chars[i - 1])) {
+            let mut j = i + raw_prefix;
+            let mut hashes = 0usize;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if chars.get(j) == Some(&'"') {
+                i = j + 1;
+                let mut s = String::new();
+                while i < chars.len() {
+                    if chars[i] == '"' {
+                        let mut k = 1usize;
+                        while k <= hashes && chars.get(i + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes + 1 {
+                            i += hashes + 1;
+                            break;
+                        }
+                    }
+                    s.push(chars[i]);
+                    i += 1;
+                }
+                out.push(s);
+                continue;
+            }
+        }
+        if c == '"' {
+            i += 1;
+            let mut s = String::new();
+            while i < chars.len() && chars[i] != '"' {
+                if chars[i] == '\\' && i + 1 < chars.len() {
+                    s.push(chars[i]);
+                    s.push(chars[i + 1]);
+                    i += 2;
+                } else {
+                    s.push(chars[i]);
+                    i += 1;
+                }
+            }
+            i += 1;
+            out.push(s);
+            continue;
+        }
+        if c == '\'' {
+            let is_char = chars.get(i + 1) == Some(&'\\') || chars.get(i + 2) == Some(&'\'');
+            if is_char {
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    if chars[i] == '\\' && i + 1 < chars.len() {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                i += 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: unsafe-safety
+// ---------------------------------------------------------------------------
+
+/// True when the `unsafe` on 1-based `line` is justified: the raw line
+/// itself mentions `SAFETY:`, or the contiguous run of comment /
+/// attribute lines immediately above contains `SAFETY:` or `# Safety`.
+fn has_safety_justification(raw_lines: &[&str], line: usize) -> bool {
+    let Some(idx) = line.checked_sub(1) else {
+        return false;
+    };
+    if idx >= raw_lines.len() {
+        return false;
+    }
+    if raw_lines[idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = raw_lines[i].trim_start();
+        if !(t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!")) {
+            return false;
+        }
+        if t.contains("SAFETY:") || t.contains("# Safety") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Rule 1: every `unsafe` keyword needs a safety justification.
+pub fn check_unsafe_safety(file: &str, source: &str) -> Vec<Violation> {
+    let code = mask(source);
+    let raw_lines: Vec<&str> = source.lines().collect();
+    let mut out = Vec::new();
+    for at in word_occurrences(&code, "unsafe") {
+        let rest = code[at + "unsafe".len()..].trim_start();
+        if let Some(after_fn) = rest.strip_prefix("fn") {
+            // `unsafe fn(` with no name is a function-pointer *type*
+            // (e.g. a vtable field), not a declaration — nothing to doc.
+            if after_fn.trim_start().starts_with('(') {
+                continue;
+            }
+        }
+        let line = line_of(&code, at);
+        if !has_safety_justification(&raw_lines, line) {
+            out.push(Violation {
+                file: file.to_string(),
+                line,
+                rule: "unsafe-safety",
+                message: "`unsafe` without a `// SAFETY:` comment (same line or immediately \
+                          above) or `# Safety` doc section"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: hotpath
+// ---------------------------------------------------------------------------
+
+fn is_hotpath_annotated(source: &str) -> bool {
+    // Built by formatting rather than spelled inline so no line of
+    // *this* file ever trims to the exact marker.
+    let marker = format!("//! {HOTPATH_MARK}");
+    source.lines().any(|l| l.trim() == marker)
+}
+
+/// Rule 2: marker-annotated files must keep the decode path free of
+/// allocation, formatting, panicking extractors, and clock reads.
+pub fn check_hotpath(file: &str, source: &str) -> Vec<Violation> {
+    if !is_hotpath_annotated(source) {
+        return Vec::new();
+    }
+    let code = mask(source);
+    let raw_lines: Vec<&str> = source.lines().collect();
+    let masked_lines: Vec<&str> = code.lines().collect();
+    let n = raw_lines.len();
+
+    // Waivers: the needle line plus the following contiguous run of
+    // non-blank lines (covers a struct-init or call it annotates).
+    let mut waived = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if raw_lines[i].contains(HOTPATH_WAIVER) {
+            let mut j = i;
+            while j < n && !raw_lines[j].trim().is_empty() {
+                waived[j] = true;
+                j += 1;
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+
+    // `#[cfg(test)]`-style attribute followed (within 3 lines) by a
+    // `mod` line marks the start of the test region; everything from
+    // there to EOF is exempt.
+    let mut test_start = n;
+    for (i, l) in masked_lines.iter().enumerate() {
+        if l.contains("#[cfg(") && l.contains("test") && !l.contains("not(test)") {
+            let end = (i + 4).min(masked_lines.len());
+            if masked_lines[i + 1..end].iter().any(|m| m.trim_start().starts_with("mod ")) {
+                test_start = test_start.min(i);
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for (i, l) in masked_lines.iter().enumerate() {
+        if i >= test_start || waived.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        for tok in HOTPATH_TOKENS {
+            if l.contains(tok) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: i + 1,
+                    rule: "hotpath",
+                    message: format!(
+                        "hot-path file uses `{tok}` outside a test region; move it off the \
+                         decode path or add a `{HOTPATH_WAIVER}` waiver"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: kernel-parity
+// ---------------------------------------------------------------------------
+
+/// One `KernelTable { .. }` struct-literal found in a source file.
+#[derive(Debug)]
+pub struct KernelInit {
+    /// 1-based line of the `KernelTable` token.
+    pub line: usize,
+    /// Whether the literal used `..` base-struct defaulting.
+    pub has_rest: bool,
+    /// Field names spelled out in the literal.
+    pub fields: BTreeSet<String>,
+}
+
+/// Field names of the `struct KernelTable { .. }` definition.
+pub fn kernel_struct_fields(source: &str) -> Option<BTreeSet<String>> {
+    let code = mask(source);
+    for at in word_occurrences(&code, "struct") {
+        let rest = code[at + "struct".len()..].trim_start();
+        let Some(after_name) = rest.strip_prefix("KernelTable") else {
+            continue;
+        };
+        if !after_name.trim_start().starts_with('{') {
+            continue;
+        }
+        let open = at + code[at..].find('{')?;
+        let body = brace_body(&code, open)?;
+        let mut fields = BTreeSet::new();
+        for entry in split_top_level(body) {
+            let e = entry.trim().trim_start_matches("pub ").trim_start();
+            let name: String = e.chars().take_while(|&c| is_word_char(c)).collect();
+            if !name.is_empty() {
+                fields.insert(name);
+            }
+        }
+        return Some(fields);
+    }
+    None
+}
+
+/// Every `KernelTable` struct-literal initializer in `source`: the
+/// token must be preceded (ignoring whitespace) by `=` and followed by
+/// `{`, which excludes type ascriptions, `use` paths, references, and
+/// return types.
+pub fn kernel_init_fields(source: &str) -> Vec<KernelInit> {
+    let code = mask(source);
+    let mut out = Vec::new();
+    for at in word_occurrences(&code, "KernelTable") {
+        if !code[..at].trim_end().ends_with('=') {
+            continue;
+        }
+        let after = &code[at + "KernelTable".len()..];
+        if !after.trim_start().starts_with('{') {
+            continue;
+        }
+        let Some(rel) = after.find('{') else {
+            continue;
+        };
+        let open = at + "KernelTable".len() + rel;
+        let Some(body) = brace_body(&code, open) else {
+            continue;
+        };
+        let mut fields = BTreeSet::new();
+        let mut has_rest = false;
+        for entry in split_top_level(body) {
+            let e = entry.trim();
+            if e.is_empty() {
+                continue;
+            }
+            if e.starts_with("..") {
+                has_rest = true;
+                continue;
+            }
+            let name: String = e.chars().take_while(|&c| is_word_char(c)).collect();
+            if !name.is_empty() {
+                fields.insert(name);
+            }
+        }
+        out.push(KernelInit { line: line_of(&code, at), has_rest, fields });
+    }
+    out
+}
+
+/// Rule 3: each ISA file's `KernelTable` initializer must spell out
+/// exactly the struct's fields. `struct_file` holds the definition;
+/// every entry of `table_files` must contain at least one initializer.
+pub fn check_kernel_parity(
+    struct_file: (&str, &str),
+    table_files: &[(&str, &str)],
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some(want) = kernel_struct_fields(struct_file.1) else {
+        out.push(Violation {
+            file: struct_file.0.to_string(),
+            line: 1,
+            rule: "kernel-parity",
+            message: "no `struct KernelTable` definition found".to_string(),
+        });
+        return out;
+    };
+    for (file, src) in table_files {
+        let inits = kernel_init_fields(src);
+        if inits.is_empty() {
+            out.push(Violation {
+                file: (*file).to_string(),
+                line: 1,
+                rule: "kernel-parity",
+                message: "no `KernelTable` initializer found; every ISA file must build a \
+                          full dispatch table"
+                    .to_string(),
+            });
+            continue;
+        }
+        for init in inits {
+            if init.has_rest {
+                out.push(Violation {
+                    file: (*file).to_string(),
+                    line: init.line,
+                    rule: "kernel-parity",
+                    message: "initializer uses `..` defaulting; spell out every entry so a \
+                              new kernel cannot silently fall back on one ISA"
+                        .to_string(),
+                });
+            } else {
+                let missing: Vec<&str> =
+                    want.difference(&init.fields).map(String::as_str).collect();
+                if !missing.is_empty() {
+                    out.push(Violation {
+                        file: (*file).to_string(),
+                        line: init.line,
+                        rule: "kernel-parity",
+                        message: format!("initializer missing entries: {}", missing.join(", ")),
+                    });
+                }
+            }
+            let extra: Vec<&str> = init.fields.difference(&want).map(String::as_str).collect();
+            if !extra.is_empty() {
+                out.push(Violation {
+                    file: (*file).to_string(),
+                    line: init.line,
+                    rule: "kernel-parity",
+                    message: format!(
+                        "initializer has entries not in the struct: {}",
+                        extra.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: bench-gate
+// ---------------------------------------------------------------------------
+
+/// Extract the default gate list from `bench_gate.rs`: the second
+/// (string) argument of the `get_or("gate", "...")` call.
+pub fn parse_gate_default(source: &str) -> Option<String> {
+    let at = source.find("get_or(\"gate\"")?;
+    let rest = &source[at..];
+    let comma = rest.find(',')?;
+    let rest = &rest[comma + 1..];
+    let q1 = rest.find('"')?;
+    let rest = &rest[q1 + 1..];
+    let q2 = rest.find('"')?;
+    Some(rest[..q2].to_string())
+}
+
+/// Benchmark names in a `BENCH_baseline.json` document: the value of
+/// every `"name"` key. A placeholder baseline (no benchmarks) yields
+/// an empty vec, which switches [`check_bench_gate`] to its fallback.
+pub fn json_bench_names(doc: &str) -> Vec<String> {
+    let b = doc.as_bytes();
+    let key = b"\"name\"";
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + key.len() <= b.len() {
+        if &b[i..i + key.len()] != key {
+            i += 1;
+            continue;
+        }
+        let mut j = i + key.len();
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if b.get(j) != Some(&b':') {
+            i += 1;
+            continue;
+        }
+        j += 1;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if b.get(j) != Some(&b'"') {
+            i += 1;
+            continue;
+        }
+        j += 1;
+        let start = j;
+        while j < b.len() && b[j] != b'"' {
+            if b[j] == b'\\' {
+                j += 1;
+            }
+            j += 1;
+        }
+        out.push(String::from_utf8_lossy(&b[start..j.min(b.len())]).into_owned());
+        i = j + 1;
+    }
+    out
+}
+
+/// Rule 4: every comma-separated substring of the gate default must
+/// match at least one baseline benchmark name — or, when the baseline
+/// is still a placeholder with no names, one string literal from the
+/// `benches/` sources (where the runtime names are assembled).
+pub fn check_bench_gate(
+    file: &str,
+    gate: &str,
+    names: &[String],
+    fallback: &[String],
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for part in gate.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        let covered = if names.is_empty() {
+            fallback.iter().any(|l| l.contains(p))
+        } else {
+            names.iter().any(|n| n.contains(p))
+        };
+        if !covered {
+            let scope = if names.is_empty() {
+                "no benches/ string literal (placeholder baseline)"
+            } else {
+                "no baseline benchmark name"
+            };
+            out.push(Violation {
+                file: file.to_string(),
+                line: 1,
+                rule: "bench-gate",
+                message: format!("gate substring `{p}` matches {scope} — the perf gate \
+                                  would silently cover nothing"),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Crate driver
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return Ok(()); // missing dir (e.g. no benches/) is not an error
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn infra(file: &str, message: String) -> Violation {
+    Violation { file: file.to_string(), line: 1, rule: "lint-infra", message }
+}
+
+/// Run every rule over the crate rooted at `rust_root` (the directory
+/// holding `Cargo.toml`; `BENCH_baseline.json` is expected one level
+/// up, at the repo root). Returns all violations, sorted by file/line.
+pub fn lint_crate(rust_root: &Path) -> Result<Vec<Violation>, String> {
+    let mut files = Vec::new();
+    for dir in ["src", "tests", "benches"] {
+        collect_rs(&rust_root.join(dir), &mut files)?;
+    }
+    files.sort();
+
+    let mut sources: BTreeMap<String, String> = BTreeMap::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(rust_root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        sources.insert(rel, src);
+    }
+
+    let mut out = Vec::new();
+    for (rel, src) in &sources {
+        out.extend(check_unsafe_safety(rel, src));
+        out.extend(check_hotpath(rel, src));
+    }
+
+    // Rule 3 inputs: the dispatch-table struct and the three ISA files
+    // that must each build a complete table.
+    const STRUCT_FILE: &str = "src/kernels/isa.rs";
+    const TABLE_FILES: &[&str] =
+        &["src/kernels/isa.rs", "src/kernels/simd_avx2.rs", "src/kernels/simd_neon.rs"];
+    match sources.get(STRUCT_FILE) {
+        None => out.push(infra(STRUCT_FILE, "kernel dispatch file is missing".to_string())),
+        Some(struct_src) => {
+            let mut tables: Vec<(&str, &str)> = Vec::new();
+            for &f in TABLE_FILES {
+                match sources.get(f) {
+                    Some(s) => tables.push((f, s.as_str())),
+                    None => out.push(infra(f, "ISA kernel file is missing".to_string())),
+                }
+            }
+            out.extend(check_kernel_parity((STRUCT_FILE, struct_src), &tables));
+        }
+    }
+
+    // Rule 4 inputs: the gate binary's default list and the baseline.
+    const GATE_FILE: &str = "src/bin/bench_gate.rs";
+    match sources.get(GATE_FILE) {
+        None => out.push(infra(GATE_FILE, "bench gate binary is missing".to_string())),
+        Some(gate_src) => match parse_gate_default(gate_src) {
+            None => out.push(infra(
+                GATE_FILE,
+                "could not locate the `get_or(\"gate\", ..)` default".to_string(),
+            )),
+            Some(gate) => {
+                let baseline_path = rust_root
+                    .parent()
+                    .map(|p| p.join("BENCH_baseline.json"))
+                    .unwrap_or_else(|| PathBuf::from("BENCH_baseline.json"));
+                match fs::read_to_string(&baseline_path) {
+                    Err(e) => out.push(infra(
+                        "BENCH_baseline.json",
+                        format!("baseline unreadable at {}: {e}", baseline_path.display()),
+                    )),
+                    Ok(doc) => {
+                        let names = json_bench_names(&doc);
+                        let fallback: Vec<String> = sources
+                            .iter()
+                            .filter(|(rel, _)| rel.starts_with("benches/"))
+                            .flat_map(|(_, s)| string_literals(s))
+                            .collect();
+                        out.extend(check_bench_gate(GATE_FILE, &gate, &names, &fallback));
+                    }
+                }
+            }
+        },
+    }
+
+    out.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a hot-path-annotated source. Assembled from pieces so no
+    /// line of this test file is itself the exact annotation line.
+    fn hotpath_src(body: &str) -> String {
+        let mut s = String::from("//! demo module\n//! lint: ");
+        s.push_str("hotpath\n\n");
+        s.push_str(body);
+        s
+    }
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // -- mask ---------------------------------------------------------------
+
+    #[test]
+    fn mask_blanks_comments_strings_and_chars() {
+        let src = "let a = \"unsafe\"; // unsafe here\nlet b = 'x';\nlet c = unsafe_name;\n";
+        let m = mask(src);
+        assert_eq!(m.lines().count(), src.lines().count());
+        assert!(!m.contains("unsafe here"));
+        assert!(!m.contains("\"unsafe\""));
+        assert!(!m.contains('x'), "char literal content must be blanked: {m}");
+        assert!(m.contains("unsafe_name"), "code identifiers survive: {m}");
+        assert!(word_occurrences(&m, "unsafe").is_empty());
+    }
+
+    #[test]
+    fn mask_handles_raw_strings_nested_comments_lifetimes() {
+        let src = "let r = r#\"quoted \"unsafe\" text\"#;\n/* outer /* unsafe */ still */\nfn f<'a>(x: &'a u32) -> &'a u32 { x }\n";
+        let m = mask(src);
+        assert_eq!(m.lines().count(), src.lines().count());
+        assert!(word_occurrences(&m, "unsafe").is_empty(), "{m}");
+        assert!(m.contains("&'a u32"), "lifetimes pass through: {m}");
+    }
+
+    #[test]
+    fn mask_keeps_newlines_in_string_continuations() {
+        // A `\` line-continuation inside a string escapes the newline;
+        // blanking it away would shift every later line number.
+        let src = "let m = \"line one \\\n   continued\";\nlet after = token;\n";
+        let m = mask(src);
+        assert_eq!(m.lines().count(), src.lines().count());
+        let at = m.find("after").expect("code after the string survives");
+        assert_eq!(line_of(&m, at), 3);
+    }
+
+    // -- unsafe-safety ------------------------------------------------------
+
+    #[test]
+    fn undocumented_unsafe_block_is_flagged() {
+        let src = "fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+        let vs = check_unsafe_safety("x.rs", src);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].line, 2);
+        assert_eq!(vs[0].rule, "unsafe-safety");
+    }
+
+    #[test]
+    fn safety_comment_same_line_or_above_passes() {
+        let same = "fn f(p: *const u32) -> u32 {\n    unsafe { *p } // SAFETY: caller checked\n}\n";
+        assert!(check_unsafe_safety("x.rs", same).is_empty());
+        let above = "fn f(p: *const u32) -> u32 {\n    // SAFETY: caller checked\n    unsafe { *p }\n}\n";
+        assert!(check_unsafe_safety("x.rs", above).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_needs_safety_doc_section() {
+        let bad = "unsafe fn f(p: *const u32) -> u32 {\n    *p\n}\n";
+        assert_eq!(check_unsafe_safety("x.rs", bad).len(), 1);
+        let good = "/// # Safety\n///\n/// `p` must be valid.\n#[inline]\nunsafe fn f(p: *const u32) -> u32 {\n    *p\n}\n";
+        assert!(check_unsafe_safety("x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_pointer_type_is_exempt() {
+        let src = "struct V {\n    call: unsafe fn(*const (), usize),\n}\n";
+        assert!(check_unsafe_safety("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_comments_and_strings_is_ignored() {
+        let src = "// unsafe is discussed here\nlet s = \"unsafe { }\";\n";
+        assert!(check_unsafe_safety("x.rs", src).is_empty());
+    }
+
+    // -- hotpath ------------------------------------------------------------
+
+    #[test]
+    fn hotpath_fires_only_in_annotated_files() {
+        let body = "pub fn f() -> Vec<u32> {\n    let v = vec![1, 2, 3];\n    v\n}\n";
+        assert!(check_hotpath("x.rs", body).is_empty(), "unannotated file is exempt");
+        let vs = check_hotpath("x.rs", &hotpath_src(body));
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "hotpath");
+    }
+
+    #[test]
+    fn hotpath_waiver_and_test_region_are_exempt() {
+        let body = "pub fn f() -> Vec<u32> {\n    // lint: allow(hotpath) — constructor only\n    let v = vec![1];\n    v\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = vec![0].to_vec();\n    }\n}\n";
+        let vs = check_hotpath("x.rs", &hotpath_src(body));
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn hotpath_catches_clock_and_alloc_tokens() {
+        let body = "pub fn f(x: Option<u32>) -> String {\n    let t = Instant::now();\n    let v = x.unwrap();\n    format!(\"{v} {t:?}\")\n}\n";
+        let vs = check_hotpath("x.rs", &hotpath_src(body));
+        assert_eq!(vs.len(), 3, "{vs:?}");
+    }
+
+    // -- kernel-parity ------------------------------------------------------
+
+    const STRUCT_SRC: &str = "pub struct KernelTable {\n    pub name: &'static str,\n    pub dot_f32: fn(&[f32], &[f32]) -> f32,\n}\n";
+
+    #[test]
+    fn parity_passes_on_exact_field_match() {
+        let table = "pub static T: KernelTable = KernelTable {\n    name: \"t\",\n    dot_f32: d,\n};\n";
+        let vs = check_kernel_parity(("s.rs", STRUCT_SRC), &[("t.rs", table)]);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn parity_flags_missing_field_and_rest_defaulting() {
+        let missing = "pub static T: KernelTable = KernelTable { name: \"t\" };\n";
+        let vs = check_kernel_parity(("s.rs", STRUCT_SRC), &[("t.rs", missing)]);
+        assert_eq!(rules_of(&vs), vec!["kernel-parity"], "{vs:?}");
+        assert!(vs[0].message.contains("dot_f32"), "{vs:?}");
+
+        let rest = "pub static T: KernelTable = KernelTable { name: \"t\", ..SCALAR };\n";
+        let vs = check_kernel_parity(("s.rs", STRUCT_SRC), &[("t.rs", rest)]);
+        assert_eq!(rules_of(&vs), vec!["kernel-parity"], "{vs:?}");
+        assert!(vs[0].message.contains(".."), "{vs:?}");
+    }
+
+    #[test]
+    fn parity_requires_an_initializer_and_skips_non_initializers() {
+        // Return types, references, and ascriptions are not literals.
+        let none = "fn best() -> &'static KernelTable {\n    todo!()\n}\nfn take(t: &KernelTable) {}\n";
+        let vs = check_kernel_parity(("s.rs", STRUCT_SRC), &[("t.rs", none)]);
+        assert_eq!(rules_of(&vs), vec!["kernel-parity"], "{vs:?}");
+        assert!(vs[0].message.contains("no `KernelTable` initializer"), "{vs:?}");
+    }
+
+    // -- bench-gate ---------------------------------------------------------
+
+    #[test]
+    fn gate_default_is_extracted() {
+        let src = "let gate = args.get_or(\"gate\", \"fused,gemm_w4a8,simd/\");\n";
+        assert_eq!(parse_gate_default(src).as_deref(), Some("fused,gemm_w4a8,simd/"));
+    }
+
+    #[test]
+    fn gate_substrings_checked_against_names_then_fallback() {
+        let names = vec!["simd/dot/64".to_string(), "fused_decode".to_string()];
+        assert!(check_bench_gate("g.rs", "fused,simd/", &names, &[]).is_empty());
+        let vs = check_bench_gate("g.rs", "fused,nope", &names, &[]);
+        assert_eq!(rules_of(&vs), vec!["bench-gate"], "{vs:?}");
+
+        // Placeholder baseline (no names) → benches literals cover.
+        let lits = vec!["simd/dot/{n}".to_string()];
+        assert!(check_bench_gate("g.rs", "simd/", &[], &lits).is_empty());
+        assert_eq!(check_bench_gate("g.rs", "gemm", &[], &lits).len(), 1);
+    }
+
+    #[test]
+    fn json_names_and_string_literals_are_extracted() {
+        let doc = "{\"benchmarks\":[{\"name\": \"simd/dot/64\"},{\"name\":\"fused\"}]}";
+        assert_eq!(json_bench_names(doc), vec!["simd/dot/64", "fused"]);
+        assert!(json_bench_names("{\"benchmarks\":[]}").is_empty());
+
+        let src = "// \"not this\"\nlet a = \"fused_{n}\";\nlet b = r#\"raw/name\"#;\nlet c = 'q';\n";
+        let lits = string_literals(src);
+        assert_eq!(lits, vec!["fused_{n}", "raw/name"]);
+    }
+}

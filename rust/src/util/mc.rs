@@ -1,0 +1,1103 @@
+//! Minimal loom-style model checker for the crate's hand-rolled
+//! concurrency (the [`crate::kernels::pool::WorkerPool`] epoch/condvar
+//! protocol and the [`crate::kernels::paged::BlockPool`] free list).
+//!
+//! The real `loom` crate cannot be vendored here (no registry access),
+//! so this module implements the same *shape* of tool in-tree:
+//!
+//! - Instrumented sync primitives ([`sync::Mutex`], [`sync::Condvar`],
+//!   [`sync::atomic`]) and threads ([`thread::spawn`]) that route every
+//!   shared-memory operation through a cooperative scheduler.
+//! - One runnable thread at a time (real OS threads serialized by a
+//!   token-passing mutex/condvar pair), with a *scheduling point* before
+//!   every instrumented operation.
+//! - Exhaustive DFS over scheduling decisions with a bounded number of
+//!   preemptions per execution (the `LOOM_MAX_PREEMPTIONS` knob), plus a
+//!   randomized fallback sweep when the DFS is truncated by the
+//!   execution budget.
+//! - Deadlock detection (no runnable thread while some are blocked —
+//!   this is also how lost condvar wakeups surface), livelock detection
+//!   (per-execution step budget), and panic propagation (an unhandled
+//!   panic on any model thread fails the whole exploration).
+//!
+//! **Scope and exclusions** (documented honestly — see EXPERIMENTS.md
+//! §Static-analysis): the checker explores interleavings under
+//! *sequential consistency*. It does not model weak-memory reorderings,
+//! so `Acquire`/`Release` annotation bugs that only manifest as
+//! hardware-level reordering are out of scope; Miri/TSan cover part of
+//! that gap. Condvars never wake spuriously in the model (the code under
+//! test must not *require* spurious wakeups — ours does not).
+//!
+//! Checked code opts in through the [`crate::kernels::sync`] alias
+//! layer: a `--cfg loom` build resolves `Mutex`/`Condvar`/`Atomic*` to
+//! the types here, and `rust/tests/loom_pool.rs` runs the pool protocols
+//! under [`model`]. The checker itself is plain std Rust and is
+//! unit-tested in every tier-1 run (it finds a seeded lost update, an
+//! AB-BA deadlock, and a lost wakeup below).
+
+use std::cell::{Cell, RefCell};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, OnceLock, PoisonError};
+
+/// Default cap on explored executions before the DFS is declared
+/// truncated (overridable via `LOOM_MAX_EXECUTIONS`).
+const DEFAULT_MAX_EXECUTIONS: usize = 10_000;
+/// Default cap on context-switch preemptions per execution
+/// (overridable via `LOOM_MAX_PREEMPTIONS`).
+const DEFAULT_MAX_PREEMPTIONS: usize = 2;
+/// Per-execution scheduling-point budget; exceeding it is reported as a
+/// livelock (e.g. a spin loop whose exit condition can never be met).
+const DEFAULT_MAX_STEPS: usize = 50_000;
+/// Randomized executions appended when the DFS truncates.
+const DEFAULT_RANDOM_ITERS: usize = 500;
+
+/// Panic payload used internally to unwind model threads when an
+/// execution is aborted (deadlock, failure elsewhere). Never observable
+/// by user code: the thread wrappers catch it.
+struct Abort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    /// Waiting to acquire mutex `id`.
+    BlockedMutex(usize),
+    /// Waiting on condvar `id` (the mutex is released while blocked).
+    BlockedCondvar(usize),
+    /// Waiting for thread `tid` to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// What kind of scheduling point the current thread reached.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Point {
+    /// About to perform a shared-memory op; staying on the current
+    /// thread is the default, switching costs a preemption.
+    Progress,
+    /// Voluntary yield: prefer switching (a forced switch keeps spin
+    /// loops from being explored as livelocks); not a preemption.
+    Yielded,
+    /// The current thread just blocked; someone else must run.
+    Blocked,
+}
+
+#[derive(Clone, Copy)]
+enum StrategyKind {
+    /// Beyond the replay script, always take option 0 (DFS order).
+    Dfs,
+    /// Beyond the replay script, pick pseudo-randomly.
+    Random,
+}
+
+struct SchedState {
+    status: Vec<Status>,
+    /// The thread currently holding the execution token.
+    current: usize,
+    /// `mutexes[id]` is the holder, if any.
+    mutexes: Vec<Option<usize>>,
+    n_condvars: usize,
+    /// Option count of every multi-option decision, in order (the DFS
+    /// explorer turns this into its backtracking stack).
+    trace: Vec<usize>,
+    decisions: usize,
+    preemptions: usize,
+    steps: usize,
+    live: usize,
+    abort: bool,
+    failure: Option<String>,
+    rng: u64,
+}
+
+impl SchedState {
+    fn next_choice(&mut self, script: &[usize], strategy: StrategyKind, n: usize) -> usize {
+        let k = self.decisions;
+        self.decisions += 1;
+        let idx = if k < script.len() {
+            let idx = script[k];
+            assert!(
+                idx < n,
+                "mc internal error: nondeterministic model (replay decision \
+                 {k} has {n} options, script wants {idx})"
+            );
+            idx
+        } else {
+            match strategy {
+                StrategyKind::Dfs => 0,
+                StrategyKind::Random => {
+                    // xorshift64
+                    let mut x = self.rng;
+                    x ^= x << 13;
+                    x ^= x >> 7;
+                    x ^= x << 17;
+                    self.rng = x;
+                    (x % n as u64) as usize
+                }
+            }
+        };
+        self.trace.push(n);
+        idx
+    }
+}
+
+struct Runtime {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    /// Replay prefix: option index per multi-option decision.
+    script: Vec<usize>,
+    strategy: StrategyKind,
+    max_steps: usize,
+    max_preemptions: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Runtime>, usize)>> = const { RefCell::new(None) };
+    static IN_MODEL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn ctx_opt() -> Option<(Arc<Runtime>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn ctx() -> (Arc<Runtime>, usize) {
+    ctx_opt().expect("mc primitive used outside mc::model — run the code under util::mc::model")
+}
+
+/// Install (once, process-wide) a panic hook that suppresses output from
+/// model threads: every explored failing interleaving would otherwise
+/// print a full panic report, and panic-propagation tests intentionally
+/// panic thousands of times.
+fn install_quiet_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let quiet = IN_MODEL.with(Cell::get);
+            if !quiet {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+type StateGuard<'a> = std::sync::MutexGuard<'a, SchedState>;
+
+impl Runtime {
+    fn new(script: Vec<usize>, strategy: StrategyKind, seed: u64, b: &Builder) -> Runtime {
+        Runtime {
+            state: StdMutex::new(SchedState {
+                status: vec![Status::Runnable],
+                current: 0,
+                mutexes: Vec::new(),
+                n_condvars: 0,
+                trace: Vec::new(),
+                decisions: 0,
+                preemptions: 0,
+                steps: 0,
+                live: 1,
+                abort: false,
+                failure: None,
+                rng: seed | 1,
+            }),
+            cv: StdCondvar::new(),
+            script,
+            strategy,
+            max_steps: b.max_steps,
+            max_preemptions: b.max_preemptions,
+        }
+    }
+
+    fn lock_state(&self) -> StateGuard<'_> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record a failure, abort the execution, and wake every thread so
+    /// the exploration can drain. Does not panic itself.
+    fn fail_locked(&self, st: &mut SchedState, msg: String) {
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Abort the calling model thread if the execution failed elsewhere.
+    fn check_abort(&self, st: StateGuard<'_>) -> StateGuard<'_> {
+        if st.abort {
+            drop(st);
+            std::panic::panic_any(Abort);
+        }
+        st
+    }
+
+    fn describe(st: &SchedState) -> String {
+        let mut parts = Vec::new();
+        for (tid, s) in st.status.iter().enumerate() {
+            parts.push(format!("t{tid}:{s:?}"));
+        }
+        parts.join(" ")
+    }
+
+    /// Pick the next thread to run at a scheduling point reached by
+    /// `me`, record the decision, and hand over the token. Returns once
+    /// `me` is runnable and scheduled again (immediately, when it keeps
+    /// the token).
+    fn reschedule(&self, me: usize, kind: Point) {
+        let mut st = self.check_abort(self.lock_state());
+        st.steps += 1;
+        if st.steps > self.max_steps {
+            let msg = format!(
+                "livelock: {} scheduling points without completion (possible \
+                 spin loop whose exit condition never becomes true) [{}]",
+                self.max_steps,
+                Self::describe(&st)
+            );
+            self.fail_locked(&mut st, msg);
+            drop(st);
+            std::panic::panic_any(Abort);
+        }
+        let others: Vec<usize> = (0..st.status.len())
+            .filter(|&t| t != me && st.status[t] == Status::Runnable)
+            .collect();
+        let mut options = Vec::new();
+        match kind {
+            Point::Progress => {
+                options.push(me);
+                if st.preemptions < self.max_preemptions {
+                    options.extend_from_slice(&others);
+                }
+            }
+            Point::Yielded => {
+                if others.is_empty() {
+                    options.push(me);
+                } else {
+                    options.extend_from_slice(&others);
+                }
+            }
+            Point::Blocked => {
+                options.extend_from_slice(&others);
+            }
+        }
+        if options.is_empty() {
+            let msg = format!(
+                "deadlock: no runnable thread (blocked threads can never be \
+                 woken — a lost wakeup or lock cycle) [{}]",
+                Self::describe(&st)
+            );
+            self.fail_locked(&mut st, msg);
+            drop(st);
+            std::panic::panic_any(Abort);
+        }
+        let chosen = if options.len() == 1 {
+            options[0]
+        } else {
+            let idx = st.next_choice(&self.script, self.strategy, options.len());
+            options[idx]
+        };
+        if kind == Point::Progress && chosen != me {
+            st.preemptions += 1;
+        }
+        st.current = chosen;
+        if chosen == me {
+            return;
+        }
+        self.cv.notify_all();
+        self.wait_for_token(st, me);
+    }
+
+    /// Park until `me` is runnable and holds the token.
+    fn wait_for_token(&self, mut st: StateGuard<'_>, me: usize) {
+        loop {
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(Abort);
+            }
+            if st.current == me && st.status[me] == Status::Runnable {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Scheduling point before a shared-memory operation.
+    fn progress_point(&self, me: usize) {
+        self.reschedule(me, Point::Progress);
+    }
+
+    fn alloc_mutex(&self) -> usize {
+        let mut st = self.lock_state();
+        st.mutexes.push(None);
+        st.mutexes.len() - 1
+    }
+
+    fn alloc_condvar(&self) -> usize {
+        let mut st = self.lock_state();
+        st.n_condvars += 1;
+        st.n_condvars - 1
+    }
+
+    fn lock_mutex(&self, me: usize, mid: usize) {
+        self.progress_point(me);
+        loop {
+            let mut st = self.check_abort(self.lock_state());
+            if st.mutexes[mid].is_none() {
+                st.mutexes[mid] = Some(me);
+                return;
+            }
+            // hand the token to someone who can make progress; we come
+            // back runnable once the holder unlocks
+            st.status[me] = Status::BlockedMutex(mid);
+            drop(st);
+            self.reschedule(me, Point::Blocked);
+        }
+    }
+
+    fn unlock_mutex(&self, me: usize, mid: usize, during_unwind: bool) {
+        let mut st = self.lock_state();
+        debug_assert_eq!(st.mutexes[mid], Some(me), "unlock by non-holder");
+        st.mutexes[mid] = None;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedMutex(mid) {
+                *s = Status::Runnable;
+            }
+        }
+        if during_unwind || st.abort {
+            // never raise a second panic out of a guard drop
+            self.cv.notify_all();
+            return;
+        }
+        drop(st);
+        self.progress_point(me);
+    }
+
+    fn condvar_wait(&self, me: usize, cvid: usize, mid: usize) {
+        let mut st = self.check_abort(self.lock_state());
+        debug_assert_eq!(st.mutexes[mid], Some(me), "wait without the lock");
+        st.mutexes[mid] = None;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedMutex(mid) {
+                *s = Status::Runnable;
+            }
+        }
+        st.status[me] = Status::BlockedCondvar(cvid);
+        drop(st);
+        self.reschedule(me, Point::Blocked);
+        // woken by a notify; reacquire the mutex like everyone else
+        self.lock_mutex(me, mid);
+    }
+
+    fn notify(&self, me: usize, cvid: usize, all: bool) {
+        let mut st = self.check_abort(self.lock_state());
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedCondvar(cvid) {
+                *s = Status::Runnable;
+                if !all {
+                    break;
+                }
+            }
+        }
+        drop(st);
+        self.progress_point(me);
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.lock_state();
+        st.status.push(Status::Runnable);
+        st.live += 1;
+        st.status.len() - 1
+    }
+
+    fn join_thread(&self, me: usize, tid: usize) {
+        self.progress_point(me);
+        loop {
+            let mut st = self.check_abort(self.lock_state());
+            if st.status[tid] == Status::Finished {
+                return;
+            }
+            st.status[me] = Status::BlockedJoin(tid);
+            drop(st);
+            self.reschedule(me, Point::Blocked);
+        }
+    }
+
+    /// Called by every model thread's wrapper as its very last runtime
+    /// interaction. `panic_msg` is `Some` when user code panicked out of
+    /// the thread (an unjoined, model-level failure).
+    fn finish_thread(&self, me: usize, panic_msg: Option<String>) {
+        let mut st = self.lock_state();
+        st.status[me] = Status::Finished;
+        st.live -= 1;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedJoin(me) {
+                *s = Status::Runnable;
+            }
+        }
+        if let Some(msg) = panic_msg {
+            self.fail_locked(&mut st, format!("thread t{me} panicked: {msg}"));
+            return;
+        }
+        if st.abort || st.live == 0 {
+            self.cv.notify_all();
+            return;
+        }
+        // hand the token on without waiting (we are gone)
+        let options: Vec<usize> = (0..st.status.len())
+            .filter(|&t| st.status[t] == Status::Runnable)
+            .collect();
+        if options.is_empty() {
+            let msg = format!(
+                "deadlock: thread t{me} finished but the remaining threads \
+                 are all blocked [{}]",
+                Self::describe(&st)
+            );
+            self.fail_locked(&mut st, msg);
+            return;
+        }
+        let chosen = if options.len() == 1 {
+            options[0]
+        } else {
+            let idx = st.next_choice(&self.script, self.strategy, options.len());
+            options[idx]
+        };
+        st.current = chosen;
+        self.cv.notify_all();
+    }
+
+    /// Block until a freshly spawned thread is first scheduled.
+    fn wait_first_schedule(&self, me: usize) {
+        let st = self.lock_state();
+        self.wait_for_token(st, me);
+    }
+
+    /// Explorer side: wait for every model thread to finish.
+    fn wait_done(&self) -> (Option<String>, Vec<usize>) {
+        let mut st = self.lock_state();
+        while st.live > 0 {
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        (st.failure.clone(), st.trace.clone())
+    }
+}
+
+/// Instrumented replacements for `std::sync` used by checked code via
+/// the [`crate::kernels::sync`] alias layer. **Only usable on threads
+/// inside a [`model`] closure** (the atomics degrade gracefully to
+/// their std behavior outside one; `Mutex`/`Condvar`/`thread::spawn`
+/// panic).
+pub mod sync {
+    use super::{ctx, OnceLock, Runtime};
+    use std::cell::UnsafeCell;
+    use std::marker::PhantomData;
+    pub use std::sync::Arc;
+    use std::sync::LockResult;
+
+    /// Model-checked mutex. Lock acquisition order is a scheduler
+    /// decision; contended acquires block the model thread.
+    pub struct Mutex<T> {
+        data: UnsafeCell<T>,
+        id: OnceLock<usize>,
+    }
+
+    // SAFETY: the scheduler serializes model threads and the guard
+    // grants access only to the single holder, exactly like std's
+    // Mutex; `T: Send` is required because the protected value is
+    // accessed from whichever thread holds the lock.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    // SAFETY: as above — `&Mutex<T>` only yields `&T`/`&mut T` through
+    // the holder-exclusive guard.
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    impl<T> std::fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("mc::Mutex { .. }")
+        }
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(value: T) -> Mutex<T> {
+            Mutex {
+                data: UnsafeCell::new(value),
+                id: OnceLock::new(),
+            }
+        }
+
+        fn id(&self, rt: &Runtime) -> usize {
+            *self.id.get_or_init(|| rt.alloc_mutex())
+        }
+
+        /// Acquire the lock. Never poisoned in the model (a panicking
+        /// execution aborts as a whole before poisoning matters), so
+        /// this always returns `Ok` — the `unwrap_or_else` recovery
+        /// idiom at the call sites compiles unchanged.
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let (rt, me) = ctx();
+            let mid = self.id(&rt);
+            rt.lock_mutex(me, mid);
+            Ok(MutexGuard {
+                lock: self,
+                _not_send: PhantomData,
+            })
+        }
+    }
+
+    /// Guard for [`Mutex`]; releases (and passes a scheduling point) on
+    /// drop.
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        /// Guards must stay on the locking thread (like std's).
+        _not_send: PhantomData<*mut ()>,
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            // SAFETY: the scheduler granted this thread exclusive hold
+            // of the mutex until the guard drops.
+            unsafe { &*self.lock.data.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: as in `deref` — exclusive hold until drop.
+            unsafe { &mut *self.lock.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            let (rt, me) = ctx();
+            let mid = self.lock.id(&rt);
+            rt.unlock_mutex(me, mid, std::thread::panicking());
+        }
+    }
+
+    /// Model-checked condvar: wakeups are never spurious, and a waiter
+    /// that can never be notified is reported as a deadlock.
+    #[derive(Debug, Default)]
+    pub struct Condvar {
+        id: OnceLock<usize>,
+    }
+
+    impl Condvar {
+        pub fn new() -> Condvar {
+            Condvar { id: OnceLock::new() }
+        }
+
+        fn id(&self, rt: &Runtime) -> usize {
+            *self.id.get_or_init(|| rt.alloc_condvar())
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let (rt, me) = ctx();
+            let cvid = self.id(&rt);
+            let lock = guard.lock;
+            let mid = lock.id(&rt);
+            // the runtime releases and reacquires the mutex itself; the
+            // guard's drop must not run in between
+            std::mem::forget(guard);
+            rt.condvar_wait(me, cvid, mid);
+            Ok(MutexGuard {
+                lock,
+                _not_send: PhantomData,
+            })
+        }
+
+        pub fn notify_all(&self) {
+            let (rt, me) = ctx();
+            let cvid = self.id(&rt);
+            rt.notify(me, cvid, true);
+        }
+
+        pub fn notify_one(&self) {
+            let (rt, me) = ctx();
+            let cvid = self.id(&rt);
+            rt.notify(me, cvid, false);
+        }
+    }
+
+    /// Instrumented atomics: every access is a scheduling point. The
+    /// `Ordering` argument is accepted for source compatibility; the
+    /// model explores interleavings under sequential consistency only.
+    pub mod atomic {
+        use super::super::ctx_opt;
+        pub use std::sync::atomic::Ordering;
+
+        fn point() {
+            if let Some((rt, me)) = ctx_opt() {
+                rt.progress_point(me);
+            }
+        }
+
+        macro_rules! mc_atomic {
+            ($name:ident, $std:ty, $val:ty) => {
+                #[derive(Debug, Default)]
+                pub struct $name {
+                    inner: $std,
+                }
+
+                impl $name {
+                    pub const fn new(v: $val) -> $name {
+                        $name { inner: <$std>::new(v) }
+                    }
+
+                    pub fn load(&self, o: Ordering) -> $val {
+                        point();
+                        self.inner.load(o)
+                    }
+
+                    pub fn store(&self, v: $val, o: Ordering) {
+                        point();
+                        self.inner.store(v, o)
+                    }
+
+                    pub fn swap(&self, v: $val, o: Ordering) -> $val {
+                        point();
+                        self.inner.swap(v, o)
+                    }
+                }
+            };
+        }
+
+        mc_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+        mc_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        mc_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+        impl AtomicU64 {
+            pub fn fetch_add(&self, v: u64, o: Ordering) -> u64 {
+                point();
+                self.inner.fetch_add(v, o)
+            }
+        }
+
+        impl AtomicUsize {
+            pub fn fetch_add(&self, v: usize, o: Ordering) -> usize {
+                point();
+                self.inner.fetch_add(v, o)
+            }
+
+            pub fn fetch_sub(&self, v: usize, o: Ordering) -> usize {
+                point();
+                self.inner.fetch_sub(v, o)
+            }
+        }
+    }
+}
+
+/// Instrumented replacement for the `std::thread` surface the pool
+/// uses, plus a no-op [`thread::spin_loop`] (busy spins are pointless
+/// under a serializing scheduler).
+pub mod thread {
+    use super::{
+        catch_unwind, ctx, ctx_opt, panic_message, Abort, Arc, AssertUnwindSafe, PoisonError,
+        StdMutex, CTX, IN_MODEL,
+    };
+
+    type Slot<T> = Arc<StdMutex<Option<std::thread::Result<T>>>>;
+
+    /// Spawn a model thread. Must be called from inside a
+    /// [`super::model`] closure; the new thread participates in the
+    /// scheduler and must finish before the model closure returns.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (rt, me) = ctx();
+        let tid = rt.register_thread();
+        let slot: Slot<T> = Arc::new(StdMutex::new(None));
+        let slot2 = slot.clone();
+        let rt2 = rt.clone();
+        std::thread::spawn(move || {
+            CTX.with(|c| *c.borrow_mut() = Some((rt2.clone(), tid)));
+            IN_MODEL.with(|m| m.set(true));
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                rt2.wait_first_schedule(tid);
+                f()
+            }));
+            let panic_msg = match &result {
+                Err(payload) if !payload.is::<Abort>() => Some(panic_message(payload.as_ref())),
+                _ => None,
+            };
+            *slot2.lock().unwrap_or_else(PoisonError::into_inner) = Some(result);
+            rt2.finish_thread(tid, panic_msg);
+        });
+        // give the scheduler the chance to run the child right away
+        rt.progress_point(me);
+        JoinHandle { tid, slot }
+    }
+
+    /// Handle to a model thread. Unlike std, dropping it without
+    /// joining is allowed (the model still requires the thread to
+    /// finish before the closure returns).
+    pub struct JoinHandle<T> {
+        tid: usize,
+        slot: Slot<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            let (rt, me) = ctx();
+            rt.join_thread(me, self.tid);
+            self.slot
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .take()
+                .expect("mc: joined thread left no result")
+        }
+    }
+
+    /// Voluntary yield: the scheduler prefers switching to another
+    /// runnable thread (outside a model this is std's yield).
+    pub fn yield_now() {
+        if let Some((rt, me)) = ctx_opt() {
+            rt.reschedule(me, super::Point::Yielded);
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Busy-wait hint: a no-op under the model (spinning cannot make
+    /// another serialized thread progress).
+    pub fn spin_loop() {}
+}
+
+/// Exploration knobs. [`Builder::new`] reads `LOOM_MAX_PREEMPTIONS` and
+/// `LOOM_MAX_EXECUTIONS` from the environment so CI can tune depth
+/// without code changes.
+#[derive(Clone, Copy)]
+pub struct Builder {
+    /// Preemptive context switches allowed per execution (voluntary
+    /// yields and blocking are free). Bounds the DFS like loom's
+    /// `LOOM_MAX_PREEMPTIONS`.
+    pub max_preemptions: usize,
+    /// Executions explored before the DFS is declared truncated.
+    pub max_executions: usize,
+    /// Scheduling points per execution before a livelock is reported.
+    pub max_steps: usize,
+    /// Randomized executions appended when the DFS truncates.
+    pub random_iters: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Builder {
+        Builder::new()
+    }
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        let env_usize = |key: &str, default: usize| {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(default)
+        };
+        Builder {
+            max_preemptions: env_usize("LOOM_MAX_PREEMPTIONS", DEFAULT_MAX_PREEMPTIONS),
+            max_executions: env_usize("LOOM_MAX_EXECUTIONS", DEFAULT_MAX_EXECUTIONS),
+            max_steps: DEFAULT_MAX_STEPS,
+            random_iters: DEFAULT_RANDOM_ITERS,
+        }
+    }
+
+    /// Explore `f` across interleavings. Panics (on the calling thread,
+    /// with the scheduler's diagnosis) if any interleaving deadlocks,
+    /// livelocks, or lets a panic escape a model thread.
+    pub fn check<F>(&self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        install_quiet_hook();
+        let f = Arc::new(f);
+        // DFS stack: (n_options, chosen) per multi-option decision
+        let mut stack: Vec<(usize, usize)> = Vec::new();
+        let mut executions = 0usize;
+        let mut max_depth = 0usize;
+        let mut truncated = false;
+        loop {
+            if executions >= self.max_executions {
+                truncated = true;
+                break;
+            }
+            let script: Vec<usize> = stack.iter().map(|&(_, chosen)| chosen).collect();
+            let (failure, trace) = self.run_one(&f, script, StrategyKind::Dfs, 1);
+            executions += 1;
+            max_depth = max_depth.max(trace.len());
+            if let Some(msg) = failure {
+                panic!(
+                    "mc: execution {executions} failed: {msg} (decision trace \
+                     depth {})",
+                    trace.len()
+                );
+            }
+            // fold newly discovered decision points into the DFS stack,
+            // then advance to the next unexplored branch
+            for &n in trace.iter().skip(stack.len()) {
+                stack.push((n, 0));
+            }
+            while let Some(top) = stack.last_mut() {
+                if top.1 + 1 < top.0 {
+                    top.1 += 1;
+                    break;
+                }
+                stack.pop();
+            }
+            if stack.is_empty() {
+                break;
+            }
+        }
+        if truncated {
+            // randomized sweep over schedules the bounded DFS missed
+            for i in 0..self.random_iters {
+                let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1);
+                let (failure, trace) = self.run_one(&f, Vec::new(), StrategyKind::Random, seed);
+                executions += 1;
+                max_depth = max_depth.max(trace.len());
+                if let Some(msg) = failure {
+                    panic!("mc: randomized execution failed: {msg}");
+                }
+            }
+        }
+        Report {
+            executions,
+            truncated,
+            max_depth,
+        }
+    }
+
+    fn run_one<F>(
+        &self,
+        f: &Arc<F>,
+        script: Vec<usize>,
+        strategy: StrategyKind,
+        seed: u64,
+    ) -> (Option<String>, Vec<usize>)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let rt = Arc::new(Runtime::new(script, strategy, seed, self));
+        let rt2 = rt.clone();
+        let f2 = f.clone();
+        let root = std::thread::spawn(move || {
+            CTX.with(|c| *c.borrow_mut() = Some((rt2.clone(), 0)));
+            IN_MODEL.with(|m| m.set(true));
+            let result = catch_unwind(AssertUnwindSafe(&*f2));
+            let panic_msg = match &result {
+                Err(payload) if !payload.is::<Abort>() => Some(panic_message(payload.as_ref())),
+                _ => None,
+            };
+            rt2.finish_thread(0, panic_msg);
+        });
+        let out = rt.wait_done();
+        let _ = root.join();
+        out
+    }
+}
+
+/// What an exploration covered. `truncated` means the DFS hit
+/// `max_executions` before exhausting the schedule space (the
+/// randomized sweep then ran on top); the loom test tier logs these so
+/// EXPERIMENTS.md can report real interleaving counts.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    pub executions: usize,
+    pub truncated: bool,
+    /// Deepest decision trace seen (multi-option scheduling points in
+    /// one execution).
+    pub max_depth: usize,
+}
+
+/// Exhaustively (within bounds) model-check `f`. Panics when any
+/// explored interleaving fails — see [`Builder::check`].
+pub fn model<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use super::{thread, Builder};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::PoisonError;
+
+    fn quick() -> Builder {
+        let mut b = Builder::new();
+        b.max_preemptions = b.max_preemptions.max(2);
+        b.max_executions = 5_000;
+        b.random_iters = 50;
+        b
+    }
+
+    #[test]
+    fn mutex_counter_is_race_free() {
+        let report = quick().check(|| {
+            let counter = Arc::new(Mutex::new(0u32));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let counter = counter.clone();
+                handles.push(thread::spawn(move || {
+                    for _ in 0..2 {
+                        let mut guard = counter.lock().unwrap_or_else(PoisonError::into_inner);
+                        *guard += 1;
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("no panics in this model");
+            }
+            let total = *counter.lock().unwrap_or_else(PoisonError::into_inner);
+            assert_eq!(total, 4);
+        });
+        assert!(
+            report.executions > 1,
+            "two contending threads must produce multiple interleavings"
+        );
+    }
+
+    #[test]
+    fn finds_the_lost_update_in_a_racy_increment() {
+        // load; store(load+1) on two threads without a lock: the model
+        // must find the interleaving where one increment is lost
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            quick().check(|| {
+                let v = Arc::new(AtomicUsize::new(0));
+                let mut handles = Vec::new();
+                for _ in 0..2 {
+                    let v = v.clone();
+                    handles.push(thread::spawn(move || {
+                        let seen = v.load(Ordering::SeqCst);
+                        v.store(seen + 1, Ordering::SeqCst);
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("no panics in this model");
+                }
+                assert_eq!(v.load(Ordering::SeqCst), 2, "an increment was lost");
+            });
+        }));
+        let msg = match result {
+            Ok(_) => panic!("the checker missed the seeded lost update"),
+            Err(payload) => super::panic_message(payload.as_ref()),
+        };
+        assert!(msg.contains("an increment was lost"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn detects_ab_ba_deadlock() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            quick().check(|| {
+                let a = Arc::new(Mutex::new(0u32));
+                let b = Arc::new(Mutex::new(0u32));
+                let (a2, b2) = (a.clone(), b.clone());
+                let t1 = thread::spawn(move || {
+                    let _ga = a2.lock().unwrap_or_else(PoisonError::into_inner);
+                    let _gb = b2.lock().unwrap_or_else(PoisonError::into_inner);
+                });
+                let (a3, b3) = (a.clone(), b.clone());
+                let t2 = thread::spawn(move || {
+                    let _gb = b3.lock().unwrap_or_else(PoisonError::into_inner);
+                    let _ga = a3.lock().unwrap_or_else(PoisonError::into_inner);
+                });
+                let _ = t1.join();
+                let _ = t2.join();
+            });
+        }));
+        let msg = match result {
+            Ok(_) => panic!("the checker missed the AB-BA deadlock"),
+            Err(payload) => super::panic_message(payload.as_ref()),
+        };
+        assert!(msg.contains("deadlock"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn detects_a_lost_wakeup() {
+        // the notifier sets the flag but never notifies: the waiter can
+        // park forever — exactly the bug class the pool's
+        // publish-under-mutex discipline exists to prevent
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            quick().check(|| {
+                let state = Arc::new((Mutex::new(false), Condvar::new()));
+                let s2 = state.clone();
+                let waiter = thread::spawn(move || {
+                    let (flag, cv) = &*s2;
+                    let mut guard = flag.lock().unwrap_or_else(PoisonError::into_inner);
+                    while !*guard {
+                        guard = cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
+                    }
+                });
+                let (flag, _cv) = &*state;
+                let mut guard = flag.lock().unwrap_or_else(PoisonError::into_inner);
+                *guard = true;
+                drop(guard); // bug: no notify
+                let _ = waiter.join();
+            });
+        }));
+        let msg = match result {
+            Ok(_) => panic!("the checker missed the lost wakeup"),
+            Err(payload) => super::panic_message(payload.as_ref()),
+        };
+        assert!(msg.contains("deadlock"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn notify_under_the_mutex_passes() {
+        // the corrected version of the test above
+        let report = quick().check(|| {
+            let state = Arc::new((Mutex::new(false), Condvar::new()));
+            let s2 = state.clone();
+            let waiter = thread::spawn(move || {
+                let (flag, cv) = &*s2;
+                let mut guard = flag.lock().unwrap_or_else(PoisonError::into_inner);
+                while !*guard {
+                    guard = cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
+                }
+            });
+            let (flag, cv) = &*state;
+            let mut guard = flag.lock().unwrap_or_else(PoisonError::into_inner);
+            *guard = true;
+            cv.notify_all();
+            drop(guard);
+            waiter.join().expect("waiter must not panic");
+        });
+        assert!(!report.truncated, "tiny model must be fully explored");
+    }
+
+    #[test]
+    fn join_returns_the_thread_value() {
+        quick().check(|| {
+            let h = thread::spawn(|| 7u32);
+            let v = h.join().expect("no panic");
+            assert_eq!(v, 7);
+        });
+    }
+
+    #[test]
+    fn zero_preemptions_still_runs_to_completion() {
+        let mut b = quick();
+        b.max_preemptions = 0;
+        let report = b.check(|| {
+            let v = Arc::new(AtomicUsize::new(0));
+            let v2 = v.clone();
+            let h = thread::spawn(move || {
+                v2.fetch_add(1, Ordering::SeqCst);
+            });
+            h.join().expect("no panic");
+            assert_eq!(v.load(Ordering::SeqCst), 1);
+        });
+        assert!(report.executions >= 1);
+    }
+}

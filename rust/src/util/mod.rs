@@ -18,11 +18,19 @@
 //!   seed is pinned via the `SWIFTKV_PROP_SEED` env var in CI),
 //! - [`oracle`] — a deliberately naive scalar GQA/MQA/MHA attention
 //!   oracle (materialized scores, two-pass softmax) used as ground truth
-//!   by the fused-kernel property tests.
+//!   by the fused-kernel property tests,
+//! - [`mc`] — a miniature loom-style model checker (token-passing
+//!   scheduler over real threads, DFS over preemption points) backing
+//!   the `--cfg loom` builds of `rust/tests/loom_pool.rs`,
+//! - [`lint`] — the repo-invariant lint engine behind `src/bin/lint.rs`
+//!   (SAFETY-comment coverage, kernel-table parity, hotpath discipline,
+//!   bench-gate coverage), run as a tier-1 CI job.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod lint;
+pub mod mc;
 pub mod oracle;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,19 @@
+//! The repo-invariant lint pass, run as a plain test so the tier-1
+//! suite enforces it without invoking the `lint` binary. Rules and
+//! scanner live in `src/util/lint.rs` (unit-tested there against
+//! seeded violations); this test asserts the tree itself is clean.
+
+use std::path::Path;
+
+use swiftkv::util::lint;
+
+#[test]
+fn repo_has_no_lint_violations() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = lint::lint_crate(root).expect("lint pass must be able to scan the crate");
+    assert!(
+        violations.is_empty(),
+        "repo violates its own invariants:\n{}",
+        violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+    );
+}
