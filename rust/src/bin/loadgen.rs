@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! loadgen [--rates 100,200,400] [--requests 24] [--lanes 4] [--seed 0]
-//!         [--adaptive-prefill] [--out ../BENCH_hotpath.json] [--no-write]
+//!         [--adaptive-prefill] [--cancel-frac 0.0]
+//!         [--out ../BENCH_hotpath.json] [--no-write]
 //! loadgen --target http://127.0.0.1:8080 [--duration-ms 3000]
-//!         [--concurrency 4] [--smoke]
+//!         [--concurrency 4] [--cancel-frac 0.0] [--smoke] [--require-shed]
 //! ```
 //!
 //! **In-process mode** (default): replays the same Poisson arrival
@@ -31,9 +32,22 @@
 //! **HTTP mode** (`--target`): drives a live `swiftkv serve --listen`
 //! over the wire with a hand-rolled HTTP/SSE client for a bounded wall
 //! clock. With `--smoke` the exit code asserts the serving contract
-//! (every request completed, none failed) — CI's `serve-smoke` job.
+//! (every request completed or was deliberately cancelled/shed, none
+//! failed) — CI's `serve-smoke` and `overload-smoke` jobs.
+//!
+//! **Client cancellation** (`--cancel-frac F`, both modes): a seeded
+//! per-request draw aborts that fraction of requests mid-stream — the
+//! in-process waiter drops its `PendingRequest` after 1–3 tokens, the
+//! HTTP client closes its socket mid-SSE. Cancelled requests are
+//! reported separately (never as failures, never in the latency
+//! percentiles) and land in `BENCH_hotpath.json` extras alongside the
+//! shed count. A `503 + Retry-After` from an overloaded server counts
+//! as `shed` and the worker honors the backoff (capped at 2 s);
+//! `--require-shed` makes the smoke contract additionally demand at
+//! least one shed response (the overload-smoke job's proof that
+//! admission control actually engaged).
 
-use swiftkv::coordinator::{CpuServer, ServeConfig, ServeHandle, SessionOutcome};
+use swiftkv::coordinator::{CpuServer, ServeConfig, ServeHandle, SessionOutcome, TokenEvent};
 use swiftkv::model::{NumericsMode, Request, TinyModel, WorkloadGen, WorkloadSpec};
 use swiftkv::util::bench::{fmt_ns, merge_into_json_file, Measurement};
 use swiftkv::util::cli::Args;
@@ -54,15 +68,16 @@ fn run() -> Result<(), String> {
     let args = Args::parse(
         &[
             "rates", "requests", "lanes", "seed", "out", "target", "duration-ms", "concurrency",
+            "cancel-frac",
         ],
-        &["help", "smoke", "no-write", "adaptive-prefill"],
+        &["help", "smoke", "no-write", "adaptive-prefill", "require-shed"],
     )?;
     if args.get_bool("help") {
         println!(
             "usage: loadgen [--rates 100,200,400] [--requests 24] [--lanes 4] [--seed 0]\n\
-             \x20              [--adaptive-prefill] [--out PATH] [--no-write]\n\
+             \x20              [--adaptive-prefill] [--cancel-frac 0.0] [--out PATH] [--no-write]\n\
              \x20      loadgen --target http://HOST:PORT [--duration-ms 3000] \
-             [--concurrency 4] [--smoke]"
+             [--concurrency 4] [--cancel-frac 0.0] [--smoke] [--require-shed]"
         );
         return Ok(());
     }
@@ -72,11 +87,28 @@ fn run() -> Result<(), String> {
     }
 }
 
-/// Latency/outcome summary of one (rate, discipline) run.
+/// Parse `--cancel-frac` into a fraction in `[0, 1]`.
+fn cancel_frac(args: &Args) -> Result<f64, String> {
+    let f = args
+        .get_or("cancel-frac", "0")
+        .parse::<f64>()
+        .map_err(|_| "bad --cancel-frac (expected a number in [0, 1])".to_string())?;
+    if !(0.0..=1.0).contains(&f) {
+        return Err(format!("--cancel-frac {f} out of range [0, 1]"));
+    }
+    Ok(f)
+}
+
+/// Latency/outcome summary of one (rate, discipline) run. Cancelled and
+/// shed requests are tracked apart from failures: they are deliberate
+/// (client aborts, admission control) and excluded from the latency
+/// percentiles so the p99 keeps measuring served requests.
 struct RunStats {
     latencies_ms: Vec<f64>,
     completed: u64,
     failed: u64,
+    cancelled: u64,
+    shed: u64,
     tokens: u64,
     wall_s: f64,
 }
@@ -123,14 +155,31 @@ fn sleep_until(t0: Instant, target_ms: u64) {
 
 /// Continuous discipline: open-loop submission through the ServeHandle
 /// at each request's arrival instant; one waiter thread per request
-/// records submission → final-event latency.
-fn run_continuous(model: &TinyModel, cfg: &ServeConfig, reqs: &[Request]) -> RunStats {
+/// records submission → final-event latency. With `cancel_frac > 0` a
+/// seeded draw marks that fraction of requests for mid-stream abort:
+/// their waiters consume 1–3 tokens and drop the `PendingRequest` — the
+/// engine must cancel the lane and reclaim its blocks while co-batched
+/// survivors decode on untouched.
+fn run_continuous(
+    model: &TinyModel,
+    cfg: &ServeConfig,
+    reqs: &[Request],
+    cancel_frac: f64,
+    seed: u64,
+) -> RunStats {
     let server = CpuServer::new(model, cfg.clone());
+    // one draw per request, fixed before submission so the abort set is
+    // reproducible from the seed alone
+    let mut rng = Rng::seed_from_u64(seed ^ 0xCA9CE1);
+    let cancel_after: Vec<Option<usize>> = reqs
+        .iter()
+        .map(|_| (rng.gen_f64() < cancel_frac).then(|| rng.gen_range(1, 4)))
+        .collect();
     let t0 = Instant::now();
     let (report, results) = server.serve_continuous(|handle: &ServeHandle| {
         std::thread::scope(|s| {
             let mut waiters = Vec::with_capacity(reqs.len());
-            for req in reqs {
+            for (req, &abort_at) in reqs.iter().zip(&cancel_after) {
                 sleep_until(t0, req.arrival_ms);
                 let submitted = t0.elapsed();
                 // strip the arrival gate: the generator already paced
@@ -138,9 +187,45 @@ fn run_continuous(model: &TinyModel, cfg: &ServeConfig, reqs: &[Request]) -> Run
                 let wire = Request::new(req.id, req.prompt.clone()).gen_len(req.gen_len);
                 match handle.submit(wire) {
                     Ok(pending) => waiters.push(s.spawn(move || {
-                        let fin = pending.wait();
-                        let lat_ms = (t0.elapsed() - submitted).as_secs_f64() * 1e3;
-                        (fin.outcome, fin.tokens.len() as u64, lat_ms)
+                        if let Some(k) = abort_at {
+                            // consume k tokens, then vanish mid-stream
+                            let mut got = 0u64;
+                            loop {
+                                match pending.next_event() {
+                                    Some(TokenEvent::Token(_)) => {
+                                        got += 1;
+                                        if got >= k as u64 {
+                                            break;
+                                        }
+                                    }
+                                    // retired before the abort point —
+                                    // report the engine's outcome
+                                    Some(TokenEvent::Done(outcome)) => {
+                                        let lat_ms =
+                                            (t0.elapsed() - submitted).as_secs_f64() * 1e3;
+                                        return (outcome, got, lat_ms);
+                                    }
+                                    None => {
+                                        let lat_ms =
+                                            (t0.elapsed() - submitted).as_secs_f64() * 1e3;
+                                        return (
+                                            SessionOutcome::Failed(
+                                                "stream closed without Done".to_string(),
+                                            ),
+                                            got,
+                                            lat_ms,
+                                        );
+                                    }
+                                }
+                            }
+                            let lat_ms = (t0.elapsed() - submitted).as_secs_f64() * 1e3;
+                            drop(pending);
+                            (SessionOutcome::Cancelled, got, lat_ms)
+                        } else {
+                            let fin = pending.wait();
+                            let lat_ms = (t0.elapsed() - submitted).as_secs_f64() * 1e3;
+                            (fin.outcome, fin.tokens.len() as u64, lat_ms)
+                        }
                     })),
                     Err(e) => eprintln!("loadgen: submit failed: {e}"),
                 }
@@ -155,15 +240,24 @@ fn run_continuous(model: &TinyModel, cfg: &ServeConfig, reqs: &[Request]) -> Run
         latencies_ms: Vec::new(),
         completed: 0,
         failed: 0,
+        cancelled: 0,
+        shed: 0,
         tokens: 0,
         wall_s: report.metrics.wall_s,
     };
     for (outcome, tokens, lat_ms) in results {
-        stats.latencies_ms.push(lat_ms);
         stats.tokens += tokens;
         match outcome {
-            SessionOutcome::Completed => stats.completed += 1,
-            _ => stats.failed += 1,
+            SessionOutcome::Completed => {
+                stats.completed += 1;
+                stats.latencies_ms.push(lat_ms);
+            }
+            SessionOutcome::Cancelled => stats.cancelled += 1,
+            SessionOutcome::Shed => stats.shed += 1,
+            _ => {
+                stats.failed += 1;
+                stats.latencies_ms.push(lat_ms);
+            }
         }
     }
     stats
@@ -182,6 +276,8 @@ fn run_drain(model: &TinyModel, cfg: &ServeConfig, reqs: &[Request]) -> RunStats
         latencies_ms: Vec::new(),
         completed: 0,
         failed: 0,
+        cancelled: 0,
+        shed: 0,
         tokens: 0,
         wall_s: 0.0,
     };
@@ -228,6 +324,7 @@ fn sweep_in_process(args: &Args) -> Result<(), String> {
     let requests = args.get_usize("requests", 24)?;
     let lanes = args.get_usize("lanes", 4)?;
     let seed = args.get_usize("seed", 0)? as u64;
+    let cancel = cancel_frac(args)?;
     let model = TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48);
     let cfg = ServeConfig::builder()
         .lanes(lanes)
@@ -242,16 +339,19 @@ fn sweep_in_process(args: &Args) -> Result<(), String> {
     let mut entries: Vec<Measurement> = Vec::new();
     for &rate in &rates {
         let reqs = workload(rate, requests, model.vocab, seed);
-        let cont = run_continuous(&model, &cfg, &reqs);
+        let cont = run_continuous(&model, &cfg, &reqs, cancel, seed);
         let drain = run_drain(&model, &cfg, &reqs);
         for (disc, stats) in [("continuous", &cont), ("drain", &drain)] {
             println!(
-                "rate={rate:>6.0} {disc:<10} p50 {} p99 {} {:>8.1} tok/s ({} ok / {} failed)",
+                "rate={rate:>6.0} {disc:<10} p50 {} p99 {} {:>8.1} tok/s \
+                 ({} ok / {} failed / {} cancelled / {} shed)",
                 fmt_ns(stats.percentile(0.50) * 1e6),
                 fmt_ns(stats.percentile(0.99) * 1e6),
                 stats.tok_per_s(),
                 stats.completed,
                 stats.failed,
+                stats.cancelled,
+                stats.shed,
             );
             entries.push(
                 Measurement::external(
@@ -263,7 +363,9 @@ fn sweep_in_process(args: &Args) -> Result<(), String> {
                 .with_extra("p99_ms", stats.percentile(0.99))
                 .with_extra("tok_per_s", stats.tok_per_s())
                 .with_extra("completed", stats.completed as f64)
-                .with_extra("failed", stats.failed as f64),
+                .with_extra("failed", stats.failed as f64)
+                .with_extra("cancelled", stats.cancelled as f64)
+                .with_extra("shed", stats.shed as f64),
             );
         }
         let speedup = drain.percentile(0.99) / cont.percentile(0.99).max(1e-9);
@@ -291,9 +393,31 @@ fn sweep_in_process(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// One SSE round trip against a live server. Returns (completed,
-/// tokens) — a transport error or non-completed outcome is a failure.
-fn http_generate(addr: &str, prompt: &[u32], gen_len: usize) -> Result<(bool, u64), String> {
+/// What one HTTP round trip against a live server came back as.
+enum HttpOutcome {
+    /// 200 SSE stream ending in `"outcome":"completed"`, with this many
+    /// streamed tokens.
+    Completed(u64),
+    /// Deliberate mid-stream abort after this many tokens (the client
+    /// closed its socket — the server must cancel the lane).
+    Cancelled(u64),
+    /// `503` from admission control, with the server's `Retry-After`
+    /// backoff in seconds.
+    Shed(u64),
+    /// Anything else: transport error, non-completed outcome, bad
+    /// status.
+    Failed(String),
+}
+
+/// One SSE round trip against a live server, reading incrementally so a
+/// `cancel_after` abort can close the socket mid-stream (the server's
+/// next `try_send` sees the dead receiver and cancels the lane).
+fn http_generate(
+    addr: &str,
+    prompt: &[u32],
+    gen_len: usize,
+    cancel_after: Option<usize>,
+) -> Result<HttpOutcome, String> {
     let body = format!(
         "{{\"prompt\": [{}], \"gen_len\": {gen_len}}}",
         prompt
@@ -313,12 +437,49 @@ fn http_generate(addr: &str, prompt: &[u32], gen_len: usize) -> Result<(bool, u6
     )
     .map_err(|e| e.to_string())?;
     let mut resp = String::new();
-    stream.read_to_string(&mut resp).map_err(|e| e.to_string())?;
-    if !resp.starts_with("HTTP/1.1 200") {
-        return Err(format!("non-200 response: {}", resp.lines().next().unwrap_or("")));
+    let mut chunk = [0u8; 1024];
+    // headers first: the status line decides which shape this is
+    while !resp.contains("\r\n\r\n") {
+        let n = stream.read(&mut chunk).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Ok(HttpOutcome::Failed("connection closed before headers".to_string()));
+        }
+        resp.push_str(&String::from_utf8_lossy(&chunk[..n]));
     }
-    let tokens = resp.matches("\"token\":").count() as u64;
-    Ok((resp.contains("\"outcome\":\"completed\""), tokens))
+    let status_line = resp.lines().next().unwrap_or("").to_string();
+    if status_line.contains("503") {
+        let retry = resp
+            .lines()
+            .find_map(|l| l.strip_prefix("Retry-After:"))
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(1);
+        return Ok(HttpOutcome::Shed(retry));
+    }
+    if !status_line.starts_with("HTTP/1.1 200") {
+        return Ok(HttpOutcome::Failed(format!("non-200 response: {status_line}")));
+    }
+    // 200 SSE: stream events until done (or the deliberate abort point)
+    loop {
+        let tokens = resp.matches("\"token\":").count() as u64;
+        if let Some(k) = cancel_after {
+            if tokens >= k as u64 {
+                // dropping the stream closes the socket mid-SSE
+                return Ok(HttpOutcome::Cancelled(tokens));
+            }
+        }
+        if resp.contains("\"done\":true") {
+            return Ok(if resp.contains("\"outcome\":\"completed\"") {
+                HttpOutcome::Completed(tokens)
+            } else {
+                HttpOutcome::Failed("stream ended with a non-completed outcome".to_string())
+            });
+        }
+        let n = stream.read(&mut chunk).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Ok(HttpOutcome::Failed("connection closed mid-stream".to_string()));
+        }
+        resp.push_str(&String::from_utf8_lossy(&chunk[..n]));
+    }
 }
 
 fn drive_http(args: &Args, target: &str) -> Result<(), String> {
@@ -330,35 +491,54 @@ fn drive_http(args: &Args, target: &str) -> Result<(), String> {
     let duration = Duration::from_millis(args.get_usize("duration-ms", 3000)? as u64);
     let concurrency = args.get_usize("concurrency", 4)?.max(1);
     let seed = args.get_usize("seed", 0)? as u64;
+    let cancel = cancel_frac(args)?;
     // the CLI's synthetic fallback model has vocab 512; stay inside it
     const VOCAB: u32 = 512;
 
     let t0 = Instant::now();
-    let results: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+    let results: Vec<(u64, u64, u64, u64, u64)> = std::thread::scope(|s| {
         (0..concurrency)
             .map(|w| {
                 let addr = addr.clone();
                 s.spawn(move || {
                     let mut rng = Rng::seed_from_u64(seed.wrapping_add(w as u64 * 7919));
-                    let (mut completed, mut failed, mut tokens) = (0u64, 0u64, 0u64);
+                    let (mut completed, mut failed, mut cancelled, mut shed, mut tokens) =
+                        (0u64, 0u64, 0u64, 0u64, 0u64);
                     while t0.elapsed() < duration {
                         let plen = rng.gen_range(3, 10);
                         let prompt: Vec<u32> =
                             (0..plen).map(|_| rng.gen_range(1, VOCAB as usize) as u32).collect();
                         let glen = rng.gen_range(4, 10);
-                        match http_generate(&addr, &prompt, glen) {
-                            Ok((true, t)) => {
+                        let abort_at =
+                            (rng.gen_f64() < cancel).then(|| rng.gen_range(1, 4));
+                        match http_generate(&addr, &prompt, glen, abort_at) {
+                            Ok(HttpOutcome::Completed(t)) => {
                                 completed += 1;
                                 tokens += t;
                             }
-                            Ok((false, _)) => failed += 1,
+                            Ok(HttpOutcome::Cancelled(t)) => {
+                                cancelled += 1;
+                                tokens += t;
+                            }
+                            Ok(HttpOutcome::Shed(retry_s)) => {
+                                // honor the server's backoff, capped so a
+                                // bounded smoke run still makes progress
+                                shed += 1;
+                                std::thread::sleep(
+                                    Duration::from_secs(retry_s).min(Duration::from_secs(2)),
+                                );
+                            }
+                            Ok(HttpOutcome::Failed(reason)) => {
+                                eprintln!("loadgen: worker {w}: {reason}");
+                                failed += 1;
+                            }
                             Err(e) => {
                                 eprintln!("loadgen: worker {w}: {e}");
                                 failed += 1;
                             }
                         }
                     }
-                    (completed, failed, tokens)
+                    (completed, failed, cancelled, shed, tokens)
                 })
             })
             .collect::<Vec<_>>()
@@ -368,11 +548,13 @@ fn drive_http(args: &Args, target: &str) -> Result<(), String> {
     });
     let completed: u64 = results.iter().map(|r| r.0).sum();
     let failed: u64 = results.iter().map(|r| r.1).sum();
-    let tokens: u64 = results.iter().map(|r| r.2).sum();
+    let cancelled: u64 = results.iter().map(|r| r.2).sum();
+    let shed: u64 = results.iter().map(|r| r.3).sum();
+    let tokens: u64 = results.iter().map(|r| r.4).sum();
     let wall_s = t0.elapsed().as_secs_f64();
     println!(
         "loadgen: target {addr}: {completed} completed, {failed} failed, \
-         {tokens} tokens in {wall_s:.2} s ({:.1} tok/s)",
+         {cancelled} cancelled, {shed} shed, {tokens} tokens in {wall_s:.2} s ({:.1} tok/s)",
         tokens as f64 / wall_s.max(1e-9)
     );
     if args.get_bool("smoke") && (completed == 0 || failed > 0) {
@@ -380,6 +562,13 @@ fn drive_http(args: &Args, target: &str) -> Result<(), String> {
             "smoke contract violated: completed={completed} failed={failed} \
              (need completed > 0 and failed == 0)"
         ));
+    }
+    if args.get_bool("require-shed") && shed == 0 {
+        return Err(
+            "overload contract violated: --require-shed was set but the server never \
+             shed a request (admission control did not engage)"
+                .to_string(),
+        );
     }
     Ok(())
 }

@@ -1,0 +1,233 @@
+//! Admission control: bounded intake with an explicit shedding policy.
+//!
+//! Under sustained overload the engine must refuse work it cannot serve
+//! instead of queuing unboundedly — VEDA's eviction-under-pressure
+//! framing (PAPERS.md), applied one stage earlier: shed before a
+//! request ever holds KV blocks, and tell the client when to come back.
+//!
+//! The policy is deliberately simple and fully deterministic:
+//!
+//! - **Queue-depth cap.** When the admission queue holds
+//!   `max_queue_depth` requests, new arrivals are shed with a
+//!   `Retry-After` hint derived from the engine's observed step time.
+//!   Fairness is *oldest-first*: queued requests keep their FIFO
+//!   positions and new arrivals are tail-dropped, so under sustained
+//!   pressure the oldest waiting request is always the next served and
+//!   no request can be starved by later arrivals.
+//! - **Deadline-aware early rejection.** A request whose wall-clock
+//!   deadline has already passed — or provably cannot be met even if it
+//!   started decoding *now* at the fastest step time the engine has
+//!   ever observed — is rejected at the door rather than occupying
+//!   queue and KV capacity it is guaranteed to waste. Only a
+//!   lower-bound proof rejects; an optimistic request that *might* make
+//!   it is admitted and left to the runtime deadline checker.
+
+use crate::model::Request;
+
+/// Online estimate of engine step latency, fed from the serve loop's
+/// per-iteration timings. `min_ms` is the fastest step ever observed —
+/// the lower bound the deadline proof uses; `mean_ms` sizes the
+/// `Retry-After` hint.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepEstimate {
+    /// Fastest observed step, milliseconds (0 until the first sample).
+    pub min_ms: f64,
+    /// Running mean step time, milliseconds.
+    pub mean_ms: f64,
+    /// Samples folded in so far.
+    pub n: u64,
+}
+
+impl StepEstimate {
+    /// Fold in one measured engine-step duration.
+    pub fn record(&mut self, step_ms: f64) {
+        if !step_ms.is_finite() || step_ms < 0.0 {
+            return;
+        }
+        if self.n == 0 || step_ms < self.min_ms {
+            self.min_ms = step_ms;
+        }
+        self.n += 1;
+        self.mean_ms += (step_ms - self.mean_ms) / self.n as f64;
+    }
+}
+
+/// What admission control decided for one arriving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Join the queue.
+    Admit,
+    /// Queue at cap (or engine draining): shed now, retry after the
+    /// hinted backoff.
+    Shed {
+        /// Suggested client backoff, milliseconds (the front door
+        /// rounds this up to whole seconds for `Retry-After`).
+        retry_after_ms: u64,
+    },
+    /// The request provably cannot meet its `deadline_ms` even if it
+    /// started immediately — reject without queuing.
+    DeadlineUnmeetable,
+}
+
+/// The shedding policy: a queue-depth cap plus the deadline lower-bound
+/// proof. `max_queue_depth == 0` disables the cap (unbounded intake,
+/// the pre-overload-layer behavior).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    pub max_queue_depth: usize,
+}
+
+/// Fallback `Retry-After` before the engine has timed a single step.
+const RETRY_COLD_MS: u64 = 50;
+/// Clamp for the retry hint: at least 10ms (a meaningful backoff), at
+/// most 10s (never tell a client to go away for longer than a human
+/// would wait).
+const RETRY_MIN_MS: u64 = 10;
+const RETRY_MAX_MS: u64 = 10_000;
+
+impl AdmissionPolicy {
+    pub fn new(max_queue_depth: usize) -> AdmissionPolicy {
+        AdmissionPolicy { max_queue_depth }
+    }
+
+    /// Decide one arriving request against the current queue depth and
+    /// step-time estimate. `now_ms` is stream-relative wall clock (the
+    /// same clock `arrival_ms`/`deadline_ms` are measured on).
+    pub fn decide(
+        &self,
+        req: &Request,
+        queue_depth: usize,
+        now_ms: f64,
+        est: &StepEstimate,
+    ) -> AdmissionDecision {
+        if req.deadline_ms > 0 {
+            let deadline = (req.arrival_ms + req.deadline_ms) as f64;
+            if deadline <= now_ms {
+                return AdmissionDecision::DeadlineUnmeetable;
+            }
+            // Lower-bound proof: even starting now, on a free lane, at
+            // the fastest step the engine has ever run, the request
+            // needs ≥ gen_len steps to finish (prefill chunks add more;
+            // ignoring them keeps this a true lower bound).
+            if est.n > 0 && now_ms + req.gen_len as f64 * est.min_ms > deadline {
+                return AdmissionDecision::DeadlineUnmeetable;
+            }
+        }
+        if self.max_queue_depth > 0 && queue_depth >= self.max_queue_depth {
+            return AdmissionDecision::Shed {
+                retry_after_ms: self.retry_after_ms(queue_depth, est),
+            };
+        }
+        AdmissionDecision::Admit
+    }
+
+    /// Size the backoff to the backlog: roughly the time the engine
+    /// needs to work off the current queue (depth × mean step × a small
+    /// multiplier for prefill and co-batching slack), clamped.
+    pub fn retry_after_ms(&self, queue_depth: usize, est: &StepEstimate) -> u64 {
+        if est.n == 0 {
+            return RETRY_COLD_MS;
+        }
+        let hint = queue_depth as f64 * est.mean_ms * 8.0;
+        (hint as u64).clamp(RETRY_MIN_MS, RETRY_MAX_MS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3]).gen_len(4)
+    }
+
+    fn warm() -> StepEstimate {
+        let mut e = StepEstimate::default();
+        e.record(2.0);
+        e.record(4.0);
+        e
+    }
+
+    #[test]
+    fn step_estimate_tracks_min_and_mean() {
+        let e = warm();
+        assert_eq!(e.n, 2);
+        assert!((e.min_ms - 2.0).abs() < 1e-9);
+        assert!((e.mean_ms - 3.0).abs() < 1e-9);
+        let mut p = warm();
+        p.record(f64::NAN);
+        p.record(-1.0);
+        assert_eq!(p.n, 2, "non-finite and negative samples are ignored");
+    }
+
+    #[test]
+    fn uncapped_policy_admits_under_any_depth() {
+        let p = AdmissionPolicy::new(0);
+        assert_eq!(
+            p.decide(&req(0), 10_000, 0.0, &StepEstimate::default()),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn queue_cap_sheds_at_depth() {
+        let p = AdmissionPolicy::new(2);
+        let e = warm();
+        assert_eq!(p.decide(&req(0), 1, 0.0, &e), AdmissionDecision::Admit);
+        match p.decide(&req(1), 2, 0.0, &e) {
+            AdmissionDecision::Shed { retry_after_ms } => {
+                // 2 deep × 3ms mean × 8 = 48ms
+                assert_eq!(retry_after_ms, 48);
+            }
+            other => panic!("expected shed at cap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cold_engine_uses_fallback_retry_hint() {
+        let p = AdmissionPolicy::new(1);
+        match p.decide(&req(0), 5, 0.0, &StepEstimate::default()) {
+            AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 50),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn retry_hint_clamped_to_bounds() {
+        let p = AdmissionPolicy::new(1);
+        let mut slow = StepEstimate::default();
+        slow.record(10_000.0);
+        assert_eq!(p.retry_after_ms(100, &slow), 10_000, "upper clamp");
+        let mut fast = StepEstimate::default();
+        fast.record(0.001);
+        assert_eq!(p.retry_after_ms(1, &fast), 10, "lower clamp");
+    }
+
+    #[test]
+    fn passed_deadline_rejected_even_uncapped() {
+        let p = AdmissionPolicy::new(0);
+        let r = Request::new(0, vec![1]).gen_len(1).deadline_ms(10);
+        // arrival 0 + deadline 10 ≤ now 10 → already dead
+        assert_eq!(
+            p.decide(&r, 0, 10.0, &StepEstimate::default()),
+            AdmissionDecision::DeadlineUnmeetable
+        );
+    }
+
+    #[test]
+    fn provably_unmeetable_deadline_rejected() {
+        let p = AdmissionPolicy::new(0);
+        let e = warm(); // min step 2ms
+        // 4 tokens × 2ms = 8ms lower bound, but only 5ms of budget left
+        let r = Request::new(0, vec![1]).gen_len(4).deadline_ms(5);
+        assert_eq!(p.decide(&r, 0, 0.0, &e), AdmissionDecision::DeadlineUnmeetable);
+        // a cold engine has no proof — optimistically admit
+        assert_eq!(
+            p.decide(&r, 0, 0.0, &StepEstimate::default()),
+            AdmissionDecision::Admit
+        );
+        // plenty of budget → admit
+        let r2 = Request::new(1, vec![1]).gen_len(4).deadline_ms(1_000);
+        assert_eq!(p.decide(&r2, 0, 0.0, &e), AdmissionDecision::Admit);
+    }
+}

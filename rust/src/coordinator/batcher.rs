@@ -59,6 +59,20 @@ pub enum PreemptOutcome {
     FailedRetryBudget,
 }
 
+/// Why a running lane is being cancelled ([`Batcher::cancel_lane`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelKind {
+    /// The client went away: its [`super::submit::PendingRequest`] was
+    /// dropped or its SSE socket closed.
+    Disconnect,
+    /// The client's bounded event stream filled up — it is consuming
+    /// tokens slower than the engine produces them.
+    SlowClient,
+    /// Graceful shutdown hit its drain bound with the lane still
+    /// running.
+    Drain,
+}
+
 /// Fault-tolerance counters the batcher accumulates over a run
 /// (surfaced through [`super::metrics::ServeMetrics`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -71,6 +85,14 @@ pub struct FaultCounters {
     pub requeues: u64,
     /// Requests cancelled past their wall-clock deadline.
     pub deadline_expired: u64,
+    /// Lanes cancelled mid-flight for any [`CancelKind`].
+    pub cancelled: u64,
+    /// Subset of `cancelled`: slow-client back-pressure cancellations.
+    pub slow_client: u64,
+    /// Subset of `cancelled`: lanes cancelled at the drain bound.
+    pub drain_cancelled: u64,
+    /// Requests shed by admission control (never took a lane).
+    pub shed: u64,
 }
 
 /// The dynamic batcher.
@@ -277,6 +299,62 @@ impl Batcher {
                 Some(id)
             }
         }
+    }
+
+    /// Cancel lane `i`'s session mid-decode: the lane is freed, the
+    /// session retires as [`SessionOutcome::Cancelled`] with whatever it
+    /// generated so far, and the caller reclaims its KV blocks. Returns
+    /// the cancelled request's id (or `None` if the lane was idle).
+    pub fn cancel_lane(&mut self, lane: usize, iteration: u64, kind: CancelKind) -> Option<u64> {
+        match std::mem::replace(&mut self.lanes[lane], LaneState::Idle) {
+            LaneState::Idle => None,
+            LaneState::Busy(mut s) => {
+                let id = s.request.id;
+                s.finished_at = Some(iteration);
+                s.outcome = SessionOutcome::Cancelled;
+                self.faults.cancelled += 1;
+                match kind {
+                    CancelKind::Disconnect => {}
+                    CancelKind::SlowClient => self.faults.slow_client += 1,
+                    CancelKind::Drain => self.faults.drain_cancelled += 1,
+                }
+                self.finished.push(s);
+                Some(id)
+            }
+        }
+    }
+
+    /// Shed a request at admission time (queue-depth cap, or draining):
+    /// it retires immediately as [`SessionOutcome::Shed`] without ever
+    /// holding a lane.
+    pub fn shed(&mut self, req: Request, iteration: u64) {
+        let mut s = Session::new(req, iteration);
+        s.finished_at = Some(iteration);
+        s.outcome = SessionOutcome::Shed;
+        self.faults.shed += 1;
+        self.finished.push(s);
+    }
+
+    /// Shed everything still waiting in the admission queue (graceful
+    /// shutdown stops admission). Returns the shed request ids.
+    pub fn shed_queue(&mut self, iteration: u64) -> Vec<u64> {
+        let drained: Vec<Request> = self.queue.drain(..).collect();
+        let ids = drained.iter().map(|r| r.id).collect();
+        for req in drained {
+            self.shed(req, iteration);
+        }
+        ids
+    }
+
+    /// Reject a request at admission because it provably cannot meet its
+    /// wall-clock deadline: retires as [`SessionOutcome::DeadlineExpired`]
+    /// without holding a lane (counted with the other deadline expiries).
+    pub fn reject_deadline(&mut self, req: Request, iteration: u64) {
+        let mut s = Session::new(req, iteration);
+        s.finished_at = Some(iteration);
+        s.outcome = SessionOutcome::DeadlineExpired;
+        self.faults.deadline_expired += 1;
+        self.finished.push(s);
     }
 
     /// Preempt lane `i` to free its KV blocks: the session's progress is
@@ -512,5 +590,64 @@ mod tests {
         }
         b.admit(0);
         assert!((b.occupancy() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancel_lane_retires_session_with_partial_tokens() {
+        let mut b = Batcher::new(2, 64);
+        b.submit(req(9, 1, 4)).unwrap();
+        b.admit(0);
+        b.scatter_outputs(&[11, 0], 0); // first token
+        b.scatter_outputs(&[12, 0], 1); // second token
+        assert_eq!(b.cancel_lane(0, 2, CancelKind::Disconnect), Some(9));
+        assert_eq!(b.cancel_lane(1, 2, CancelKind::Disconnect), None, "idle lane");
+        assert_eq!(b.active(), 0, "cancelled lane is freed");
+        let s = &b.finished[0];
+        assert_eq!(s.outcome, SessionOutcome::Cancelled);
+        assert_eq!(s.generated, vec![11, 12], "streamed prefix stands");
+        assert_eq!(s.finished_at, Some(2));
+        let fc = b.fault_counters();
+        assert_eq!((fc.cancelled, fc.slow_client, fc.drain_cancelled), (1, 0, 0));
+    }
+
+    #[test]
+    fn cancel_kinds_split_counters() {
+        let mut b = Batcher::new(3, 64);
+        for i in 0..3 {
+            b.submit(req(i, 1, 4)).unwrap();
+        }
+        b.admit(0);
+        b.cancel_lane(0, 0, CancelKind::Disconnect);
+        b.cancel_lane(1, 0, CancelKind::SlowClient);
+        b.cancel_lane(2, 0, CancelKind::Drain);
+        let fc = b.fault_counters();
+        assert_eq!(fc.cancelled, 3);
+        assert_eq!(fc.slow_client, 1);
+        assert_eq!(fc.drain_cancelled, 1);
+    }
+
+    #[test]
+    fn shed_and_shed_queue_retire_without_lanes() {
+        let mut b = Batcher::new(1, 64);
+        b.shed(req(5, 2, 3), 7);
+        assert_eq!(b.finished[0].outcome, SessionOutcome::Shed);
+        assert_eq!(b.finished[0].generated.len(), 0, "shed requests never decode");
+        for i in 10..13 {
+            b.submit(req(i, 2, 1)).unwrap();
+        }
+        let ids = b.shed_queue(8);
+        assert_eq!(ids, vec![10, 11, 12]);
+        assert_eq!(b.queue_len(), 0);
+        assert_eq!(b.fault_counters().shed, 4);
+        assert!(b.finished.iter().all(|s| s.outcome == SessionOutcome::Shed));
+    }
+
+    #[test]
+    fn reject_deadline_counts_as_deadline_expired() {
+        let mut b = Batcher::new(1, 64);
+        b.reject_deadline(req(3, 2, 2), 4);
+        assert_eq!(b.finished[0].outcome, SessionOutcome::DeadlineExpired);
+        assert_eq!(b.fault_counters().deadline_expired, 1);
+        assert_eq!(b.fault_counters().shed, 0);
     }
 }

@@ -46,18 +46,19 @@
 //! tokens are identical to its solo `generate()` run no matter when it
 //! joined (tests/prop_continuous.rs asserts this end to end).
 
-use super::batcher::Batcher;
+use super::admission::{AdmissionDecision, AdmissionPolicy, StepEstimate};
+use super::batcher::{Batcher, CancelKind};
 use super::faults::{FaultKind, FaultPlan};
 use super::metrics::{Percentiles, ServeMetrics};
 use super::session::{Session, SessionOutcome, SessionPhase};
-use super::submit::{ServeHandle, Submission, TokenEvent};
+use super::submit::{EngineCtl, ServeHandle, Submission, TokenEvent};
 use crate::kernels::{BlockPool, SharedMut, WorkerPool};
 use crate::model::tiny::{argmax, panic_message, BatchLane, DecodeState};
 use crate::model::{LlmConfig, NumericsMode, Request, TinyModel, DEFAULT_KV_BLOCK_LEN};
 use crate::sim::{layer_sched, ArchConfig};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -116,6 +117,20 @@ pub struct ServeConfig {
     /// retired as failed (bounded retry — no preemption livelock when
     /// the pool cannot ever fit the request).
     pub max_requeues: u32,
+    /// Admission-queue depth cap: arrivals past this many waiting
+    /// requests are shed with [`SessionOutcome::Shed`] (`503 +
+    /// Retry-After` at the front door). `0` = unbounded (the
+    /// pre-overload-layer behavior).
+    pub max_queue_depth: usize,
+    /// Graceful-shutdown drain bound, milliseconds: after a shutdown
+    /// request, running lanes get this long to finish before they are
+    /// cancelled ([`CancelKind::Drain`]). `0` cancels immediately.
+    pub drain_ms: u64,
+    /// Capacity of each request's bounded event stream (tokens a client
+    /// may fall behind before it is cancelled as a slow client). Must be
+    /// ≥ 1; sized well above any sane `gen_len` by default so only a
+    /// genuinely stalled client ever hits it.
+    pub event_buffer: usize,
 }
 
 impl Default for ServeConfig {
@@ -132,6 +147,9 @@ impl Default for ServeConfig {
             workers: 0,
             faults: None,
             max_requeues: 3,
+            max_queue_depth: 0,
+            drain_ms: 5_000,
+            event_buffer: 256,
         }
     }
 }
@@ -198,6 +216,18 @@ impl ServeConfigBuilder {
         self.cfg.max_requeues = n;
         self
     }
+    pub fn max_queue_depth(mut self, n: usize) -> Self {
+        self.cfg.max_queue_depth = n;
+        self
+    }
+    pub fn drain_ms(mut self, ms: u64) -> Self {
+        self.cfg.drain_ms = ms;
+        self
+    }
+    pub fn event_buffer(mut self, n: usize) -> Self {
+        self.cfg.event_buffer = n;
+        self
+    }
 
     /// Validate and produce the config. Errors name the offending knob:
     /// at least one lane, at least one token per KV block, and — when
@@ -209,6 +239,9 @@ impl ServeConfigBuilder {
         }
         if c.kv_block_len == 0 {
             return Err("serve config: kv_block_len must be >= 1 token per block".to_string());
+        }
+        if c.event_buffer == 0 {
+            return Err("serve config: event_buffer must be >= 1 event".to_string());
         }
         if c.kv_pool_blocks > 0 && c.kv_pool_blocks < c.lanes.min(2) {
             // a 1-block pool can still serve (one lane at a time, the
@@ -252,10 +285,18 @@ pub struct CpuServeReport {
 
 /// Per-request event sink: the streaming half of one submission, plus
 /// how many tokens have been streamed (so a preempted request's
-/// bit-identical re-decode never re-sends a position).
+/// bit-identical re-decode never re-sends a position) and the client
+/// health the engine has observed through `try_send`.
 struct EventSink {
-    tx: Sender<TokenEvent>,
+    tx: SyncSender<TokenEvent>,
     streamed: usize,
+    /// The receiver is gone (dropped `PendingRequest` / dead SSE
+    /// socket, or an injected `disconnect@` fault): cancel the lane at
+    /// the next iteration boundary.
+    client_gone: bool,
+    /// The bounded stream filled (or a `slowclient@` fault fired): the
+    /// client cannot keep up; cancel rather than buffer unboundedly.
+    slow: bool,
 }
 
 /// The engine's intake state: submissions received but not yet due
@@ -277,7 +318,12 @@ impl Intake {
         if let Some(tx) = sub.events {
             self.sinks.insert(
                 sub.request.id,
-                EventSink { tx, streamed: 0 },
+                EventSink {
+                    tx,
+                    streamed: 0,
+                    client_gone: false,
+                    slow: false,
+                },
             );
         }
         self.submit_ms.insert(sub.request.id, now_ms);
@@ -300,11 +346,15 @@ impl Intake {
 }
 
 /// Send `Done` events for sessions retired since the last scan.
+/// `try_send`, never `send`: a full buffer means the client is being
+/// cancelled for slowness anyway, and a blocking send here would let
+/// one dead-slow client stall every lane in the engine.
 fn notify_finished(finished: &[Session], seen: &mut usize, sinks: &mut BTreeMap<u64, EventSink>) {
     for s in &finished[*seen..] {
         if let Some(sink) = sinks.remove(&s.request.id) {
-            // a gone receiver just means the submitter stopped caring
-            let _ = sink.tx.send(TokenEvent::Done(s.outcome.clone()));
+            // a gone or stalled receiver just means the submitter
+            // stopped caring
+            let _ = sink.tx.try_send(TokenEvent::Done(s.outcome.clone()));
         }
     }
     *seen = finished.len();
@@ -354,7 +404,7 @@ impl<'m> CpuServer<'m> {
             });
         }
         drop(tx);
-        self.run_engine(rx)
+        self.run_engine(rx, EngineCtl::new(self.cfg.event_buffer))
     }
 
     /// Run the engine continuously on its own (scoped) thread and give
@@ -364,12 +414,13 @@ impl<'m> CpuServer<'m> {
     /// re-raised on this thread after `f` completes.
     pub fn serve_continuous<R>(&self, f: impl FnOnce(&ServeHandle) -> R) -> (CpuServeReport, R) {
         let (tx, rx) = std::sync::mpsc::channel();
-        let handle = ServeHandle::new(tx);
+        let ctl = EngineCtl::new(self.cfg.event_buffer);
+        let handle = ServeHandle::new(tx, ctl.clone());
         std::thread::scope(|s| {
-            let engine = s.spawn(move || self.run_engine(rx));
+            let engine = s.spawn(move || self.run_engine(rx, ctl));
             let out = f(&handle);
-            // close the intake: the engine finishes what it holds, then
-            // exits its loop
+            // close the intake (gate latch + channel disconnect): the
+            // engine finishes what it holds, then exits its loop
             drop(handle);
             match engine.join() {
                 Ok(report) => (report, out),
@@ -379,10 +430,12 @@ impl<'m> CpuServer<'m> {
     }
 
     /// The continuous-batching engine loop: poll the intake, gate
-    /// arrivals, admit into free lanes, take one chunked batch step,
-    /// stream sampled tokens, retire finished sessions — every
-    /// iteration, with no drain barrier anywhere.
-    fn run_engine(&self, rx: Receiver<Submission>) -> CpuServeReport {
+    /// arrivals, run admission control, admit into free lanes, take one
+    /// chunked batch step, stream sampled tokens, retire finished
+    /// sessions — every iteration, with no drain barrier anywhere. When
+    /// every lane is idle the engine parks on `ctl`'s gate (woken by
+    /// submission, intake close, or shutdown) instead of polling.
+    fn run_engine(&self, rx: Receiver<Submission>, ctl: Arc<EngineCtl>) -> CpuServeReport {
         let lanes = self.cfg.lanes;
         let model = self.model;
         let mode = self.cfg.mode;
@@ -428,6 +481,17 @@ impl<'m> CpuServer<'m> {
         let mut weight_passes: u64 = 0;
         let mut adaptive_shrinks: u64 = 0;
 
+        // overload layer: admission policy + the step-time estimate its
+        // deadline proof and Retry-After hints draw from
+        let policy = AdmissionPolicy::new(self.cfg.max_queue_depth);
+        let mut est = StepEstimate::default();
+        ctl.status.set_queue_cap(self.cfg.max_queue_depth);
+        let mut draining = false;
+        let mut drain_deadline_ms = f64::INFINITY;
+        let mut deadline_rejected: u64 = 0;
+        let mut idle_parks: u64 = 0;
+        let mut burst_seq = 0u64;
+
         // 0 = unbounded: a whole remaining prompt in one chunked step
         let max_prefill = if self.cfg.prefill_chunk == 0 {
             usize::MAX
@@ -438,27 +502,91 @@ impl<'m> CpuServer<'m> {
         let faults = self.cfg.faults.as_ref().filter(|p| !p.is_empty());
         loop {
             let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+            // shutdown latch: admission closes now — everything already
+            // queued is shed, running lanes get `drain_ms` to finish
+            if !draining && ctl.gate.shutdown_requested() {
+                draining = true;
+                ctl.status.set_draining();
+                drain_deadline_ms = now_ms + self.cfg.drain_ms as f64;
+                batcher.shed_queue(iteration);
+            }
+            // eventcount snapshot BEFORE the intake drain: a submission
+            // that lands after the drain bumps the gate past this value,
+            // so the park below returns immediately instead of sleeping
+            // through it (no lost wakeups — loom_engine.rs checks the
+            // protocol)
+            let gate_seq = ctl.gate.seq();
+            // the gate's intake-closed latch is set by the last
+            // ServeHandle drop *before* its channel sender disconnects:
+            // observing it before the drain means the drain sees every
+            // submission that will ever arrive
+            let closed_before_drain = ctl.gate.intake_closed();
             // live intake: pull every submission that has arrived on the
             // channel since the last step — this is what lets requests
             // join mid-flight
             intake.drain(&rx, now_ms);
-            // arrival gating: move every due request (receipt order)
-            // into the admission queue; oversized requests are rejected
-            // here and their streams closed with `Rejected`
+            if closed_before_drain {
+                intake.open = false;
+            }
+            // burst fault: slam the admission path with synthetic
+            // requests this iteration (they flow through the same
+            // arrival gating and shedding as real traffic; ids live in a
+            // reserved high range so they never collide with real ones)
+            if let Some(plan) = faults {
+                if let Some(n) = plan.fire_burst(iteration) {
+                    let count = if n == 0 { 4 * lanes } else { n };
+                    for _ in 0..count {
+                        let id = (1u64 << 40) | burst_seq;
+                        burst_seq += 1;
+                        let prompt: Vec<u32> =
+                            (0..4).map(|j| ((burst_seq as usize + j) % vocab) as u32).collect();
+                        intake.pending.push(
+                            Request::new(id, prompt).gen_len(3).arrival_ms(now_ms as u64),
+                        );
+                    }
+                }
+            }
+            // arrival gating + admission control: move every due request
+            // (receipt order) through the shedding policy into the
+            // admission queue. Oversized requests are rejected and their
+            // streams closed with `Rejected`; a draining engine sheds
+            // everything, due or not — no new work after shutdown.
             let mut i = 0;
             while i < intake.pending.len() {
-                if intake.pending[i].arrival_ms as f64 <= now_ms {
-                    let r = intake.pending.remove(i);
-                    if let Err(rejected) = batcher.submit(r) {
-                        // dropped by design, but never silently: the
-                        // batcher counted it, and a streaming submitter
-                        // is told directly
-                        if let Some(sink) = intake.sinks.remove(&rejected.id) {
-                            let _ = sink.tx.send(TokenEvent::Done(SessionOutcome::Rejected));
+                let due = intake.pending[i].arrival_ms as f64 <= now_ms;
+                if !due && !draining {
+                    i += 1;
+                    continue;
+                }
+                let r = intake.pending.remove(i);
+                if draining {
+                    batcher.shed(r, iteration);
+                    continue;
+                }
+                match policy.decide(&r, batcher.queue_len(), now_ms, &est) {
+                    AdmissionDecision::Admit => {
+                        if let Err(rejected) = batcher.submit(r) {
+                            // dropped by design, but never silently: the
+                            // batcher counted it, and a streaming
+                            // submitter is told directly
+                            if let Some(sink) = intake.sinks.remove(&rejected.id) {
+                                let _ =
+                                    sink.tx.try_send(TokenEvent::Done(SessionOutcome::Rejected));
+                            }
                         }
                     }
-                } else {
-                    i += 1;
+                    AdmissionDecision::Shed { retry_after_ms } => {
+                        // tail-drop keeps oldest-first fairness: queued
+                        // requests hold their FIFO slots, the newcomer
+                        // backs off (`Retry-After` rides the status
+                        // block to the front door)
+                        ctl.status.record_shed(retry_after_ms);
+                        batcher.shed(r, iteration);
+                    }
+                    AdmissionDecision::DeadlineUnmeetable => {
+                        deadline_rejected += 1;
+                        batcher.reject_deadline(r, iteration);
+                    }
                 }
             }
             // deadline pass before admission: an expired queued request
@@ -470,25 +598,66 @@ impl<'m> CpuServer<'m> {
                     states[i].reset_for_reuse();
                 }
             }
+            // client-cancellation pass: lanes whose client vanished or
+            // stalled (observed through `try_send`, or injected by
+            // `disconnect@`/`slowclient@` faults) retire as `Cancelled`
+            // at this iteration boundary — KV blocks reclaimed before
+            // this iteration's admissions, co-batched survivors
+            // untouched (prop_cancel.rs asserts bit-exactness)
+            for i in 0..lanes {
+                let Some(kind) = batcher.lane_session(i).and_then(|s| {
+                    let sink = intake.sinks.get(&s.request.id)?;
+                    if sink.client_gone {
+                        Some(CancelKind::Disconnect)
+                    } else if sink.slow {
+                        Some(CancelKind::SlowClient)
+                    } else {
+                        None
+                    }
+                }) else {
+                    continue;
+                };
+                batcher.cancel_lane(i, iteration, kind);
+                if states[i].pos != 0 || states[i].kv_blocks_in_use() > 0 {
+                    states[i].reset_for_reuse();
+                }
+            }
+            // drain bound: shutdown may not wait forever — lanes still
+            // running past the bound are cancelled, blocks reclaimed,
+            // and the engine exits through the normal audit path
+            if draining && now_ms >= drain_deadline_ms && !batcher.is_drained() {
+                for i in 0..lanes {
+                    if batcher.cancel_lane(i, iteration, CancelKind::Drain).is_some()
+                        && (states[i].pos != 0 || states[i].kv_blocks_in_use() > 0)
+                    {
+                        states[i].reset_for_reuse();
+                    }
+                }
+                batcher.shed_queue(iteration);
+            }
             batcher.admit(iteration);
             notify_finished(&batcher.finished, &mut finished_seen, &mut intake.sinks);
+            ctl.status.set_depths(batcher.queue_len(), batcher.active());
             if batcher.is_drained() {
+                if draining {
+                    break;
+                }
                 if intake.pending.is_empty() && !intake.open {
                     break;
                 }
-                // idle: nothing on a lane. Block briefly on the intake
-                // (cheaper than spinning) when it is still open,
-                // otherwise sleep out the gap to the next arrival.
-                if intake.open {
-                    use std::sync::mpsc::RecvTimeoutError;
-                    match rx.recv_timeout(std::time::Duration::from_micros(500)) {
-                        Ok(sub) => intake.accept(sub, t0.elapsed().as_secs_f64() * 1e3),
-                        Err(RecvTimeoutError::Timeout) => {}
-                        Err(RecvTimeoutError::Disconnected) => intake.open = false,
-                    }
-                } else {
-                    std::thread::sleep(std::time::Duration::from_micros(200));
-                }
+                // idle: nothing on a lane. Park on the gate — a
+                // submission, intake close, or shutdown notifies it —
+                // bounded by the gap to the earliest scheduled arrival
+                // when one is pending (correctness never depends on the
+                // timeout; it only honors `arrival_ms` schedules).
+                let timeout = intake
+                    .pending
+                    .iter()
+                    .map(|r| r.arrival_ms)
+                    .min()
+                    .map(|t| ((t as f64 - now_ms).max(0.0) as u64).saturating_add(1));
+                idle_parks += 1;
+                ctl.gate.park(gate_seq, timeout);
                 continue;
             }
             queue_depths.push(batcher.queue_len() as f64);
@@ -714,7 +883,11 @@ impl<'m> CpuServer<'m> {
                     }
                 }
             }
-            step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+            let this_step_ms = ts.elapsed().as_secs_f64() * 1e3;
+            step_ms.push(this_step_ms);
+            // feed the admission policy's step-time estimate (deadline
+            // lower bound + Retry-After sizing)
+            est.record(this_step_ms);
 
             // weight-streaming accounting: the batched decode group pays
             // one layer-stack weight pass regardless of its width; a
@@ -796,15 +969,44 @@ impl<'m> CpuServer<'m> {
             // token streaming: each freshly sampled position goes out on
             // its request's event stream. A requeued request re-decodes
             // already-streamed positions bit-identically — the per-sink
-            // high-water mark keeps them from being re-sent.
+            // high-water mark keeps them from being re-sent. Sends are
+            // `try_send` on a bounded channel: `Full` marks the client
+            // slow, `Disconnected` marks it gone, and either cancels the
+            // lane at the next iteration boundary instead of blocking
+            // the whole batch behind one client.
             for i in 0..lanes {
                 if fed[i] == 0 || !sampling[i] {
                     continue;
                 }
                 if let Some(sink) = intake.sinks.get_mut(&req_ids[i]) {
+                    if let Some(plan) = faults {
+                        // injected client behavior, checked at the same
+                        // boundary the organic signals surface on:
+                        // disconnect after `streamed` tokens, or a stall
+                        // from the first token
+                        if plan.fire_disconnect(req_ids[i], sink.streamed) {
+                            sink.client_gone = true;
+                        }
+                        if plan.fire_slowclient(req_ids[i]) {
+                            sink.slow = true;
+                        }
+                    }
+                    if sink.client_gone || sink.slow {
+                        continue;
+                    }
                     if gen_before[i] == sink.streamed {
-                        let _ = sink.tx.send(TokenEvent::Token(samples[i]));
-                        sink.streamed += 1;
+                        match sink.tx.try_send(TokenEvent::Token(samples[i])) {
+                            Ok(()) => {
+                                sink.streamed += 1;
+                                if let Some(plan) = faults {
+                                    if plan.fire_disconnect(req_ids[i], sink.streamed) {
+                                        sink.client_gone = true;
+                                    }
+                                }
+                            }
+                            Err(TrySendError::Full(_)) => sink.slow = true,
+                            Err(TrySendError::Disconnected(_)) => sink.client_gone = true,
+                        }
                     }
                 }
             }
@@ -897,6 +1099,12 @@ impl<'m> CpuServer<'m> {
             preemptions: fc.preemptions,
             requeues: fc.requeues,
             deadline_expired: fc.deadline_expired,
+            requests_cancelled: fc.cancelled,
+            requests_shed: fc.shed,
+            slow_client_cancels: fc.slow_client,
+            drain_cancels: fc.drain_cancelled,
+            deadline_rejected,
+            idle_parks,
             total_tokens_generated: total_tokens,
             iterations: iteration,
             wall_s,

@@ -21,6 +21,19 @@
 //!   fault stays armed until it actually causes a preemption (an
 //!   iteration where no lane asks for a new block is a no-op), then
 //!   disarms.
+//! - `disconnect@r<ID>:s<STEP>` — after request `ID` streams its
+//!   `STEP`-th generated token, its client vanishes (the engine marks
+//!   the event sink dead, exactly as if the `PendingRequest` or SSE
+//!   socket dropped). The lane must be cancelled at the next iteration
+//!   boundary with its KV blocks reclaimed and co-batched survivors
+//!   bit-exact.
+//! - `slowclient@r<ID>` — request `ID`'s client stops consuming events:
+//!   the engine treats its bounded stream as full from the first token
+//!   on, driving the slow-client back-pressure cancellation path.
+//! - `burst@i<ITER>[:n<COUNT>]` — at iteration `ITER`, `COUNT` synthetic
+//!   requests (default 4× the lane count) slam the admission queue in
+//!   one iteration, driving the queue-depth shedding path without an
+//!   external load generator.
 //!
 //! Every fault fires **at most once** (atomic fired flags), so a plan is
 //! a finite perturbation: the run must converge back to normal service.
@@ -39,6 +52,11 @@ pub enum FaultKind {
     LanePanic,
     /// Poison the lane's newest KV rows with NaN before the step.
     NanActivations,
+    /// The request's client vanishes mid-stream (cancellation path).
+    ClientDisconnect,
+    /// The request's client stops consuming its event stream
+    /// (slow-client back-pressure path). Step-agnostic.
+    SlowClient,
 }
 
 /// One per-lane fault: fires when request `request_id` reaches the step
@@ -59,6 +77,15 @@ struct OomFault {
     fired: AtomicBool,
 }
 
+/// One synthetic admission burst: `n` requests injected at `iteration`
+/// (`n == 0` → the engine substitutes 4× its lane count).
+#[derive(Debug)]
+struct BurstFault {
+    iteration: u64,
+    n: usize,
+    fired: AtomicBool,
+}
+
 /// A deterministic set of faults to inject into one serve run.
 ///
 /// Interior mutability (atomic fired flags) lets the server consult the
@@ -67,6 +94,7 @@ struct OomFault {
 pub struct FaultPlan {
     lane_faults: Vec<LaneFault>,
     oom_faults: Vec<OomFault>,
+    burst_faults: Vec<BurstFault>,
 }
 
 impl Clone for FaultPlan {
@@ -90,13 +118,23 @@ impl Clone for FaultPlan {
                     fired: AtomicBool::new(f.fired.load(Ordering::Relaxed)),
                 })
                 .collect(),
+            burst_faults: self
+                .burst_faults
+                .iter()
+                .map(|f| BurstFault {
+                    iteration: f.iteration,
+                    n: f.n,
+                    fired: AtomicBool::new(f.fired.load(Ordering::Relaxed)),
+                })
+                .collect(),
         }
     }
 }
 
 impl FaultPlan {
     /// Parse a comma-separated spec: `panic@r<ID>:s<STEP>`,
-    /// `nan@r<ID>:s<STEP>`, `oom@i<ITER>`.
+    /// `nan@r<ID>:s<STEP>`, `disconnect@r<ID>:s<STEP>`,
+    /// `slowclient@r<ID>`, `oom@i<ITER>`, `burst@i<ITER>[:n<COUNT>]`.
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
@@ -104,7 +142,7 @@ impl FaultPlan {
                 .split_once('@')
                 .ok_or_else(|| format!("fault '{entry}': expected '<kind>@<where>'"))?;
             match kind {
-                "panic" | "nan" => {
+                "panic" | "nan" | "disconnect" => {
                     let (r, s) = at.split_once(':').ok_or_else(|| {
                         format!("fault '{entry}': expected '{kind}@r<ID>:s<STEP>'")
                     })?;
@@ -117,13 +155,25 @@ impl FaultPlan {
                         .and_then(|n| n.parse::<usize>().ok())
                         .ok_or_else(|| format!("fault '{entry}': bad step '{s}'"))?;
                     plan.lane_faults.push(LaneFault {
-                        kind: if kind == "panic" {
-                            FaultKind::LanePanic
-                        } else {
-                            FaultKind::NanActivations
+                        kind: match kind {
+                            "panic" => FaultKind::LanePanic,
+                            "nan" => FaultKind::NanActivations,
+                            _ => FaultKind::ClientDisconnect,
                         },
                         request_id,
                         step,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "slowclient" => {
+                    let request_id = at
+                        .strip_prefix('r')
+                        .and_then(|n| n.parse::<u64>().ok())
+                        .ok_or_else(|| format!("fault '{entry}': expected 'slowclient@r<ID>'"))?;
+                    plan.lane_faults.push(LaneFault {
+                        kind: FaultKind::SlowClient,
+                        request_id,
+                        step: 0,
                         fired: AtomicBool::new(false),
                     });
                 }
@@ -134,6 +184,31 @@ impl FaultPlan {
                         .ok_or_else(|| format!("fault '{entry}': expected 'oom@i<ITER>'"))?;
                     plan.oom_faults.push(OomFault {
                         iteration,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "burst" => {
+                    let (i, n) = match at.split_once(':') {
+                        Some((i, n)) => {
+                            let count = n
+                                .strip_prefix('n')
+                                .and_then(|c| c.parse::<usize>().ok())
+                                .ok_or_else(|| {
+                                    format!("fault '{entry}': bad burst count '{n}'")
+                                })?;
+                            (i, count)
+                        }
+                        None => (at, 0),
+                    };
+                    let iteration = i
+                        .strip_prefix('i')
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .ok_or_else(|| {
+                            format!("fault '{entry}': expected 'burst@i<ITER>[:n<COUNT>]'")
+                        })?;
+                    plan.burst_faults.push(BurstFault {
+                        iteration,
+                        n,
                         fired: AtomicBool::new(false),
                     });
                 }
@@ -171,6 +246,18 @@ impl FaultPlan {
                 fired: AtomicBool::new(false),
             });
         }
+        // A third of seeds also drop a client mid-stream (drawn after
+        // the existing faults so earlier seeds keep their exact plans).
+        // Never a burst: seeded plans run under workloads that assert on
+        // the session count, and bursts inject extra sessions.
+        if seed % 3 == 2 {
+            plan.lane_faults.push(LaneFault {
+                kind: FaultKind::ClientDisconnect,
+                request_id: rng.gen_range(0, 8) as u64,
+                step: rng.gen_range(0, 4),
+                fired: AtomicBool::new(false),
+            });
+        }
         plan
     }
 
@@ -194,21 +281,68 @@ impl FaultPlan {
 
     /// No faults at all?
     pub fn is_empty(&self) -> bool {
-        self.lane_faults.is_empty() && self.oom_faults.is_empty()
+        self.lane_faults.is_empty() && self.oom_faults.is_empty() && self.burst_faults.is_empty()
     }
 
-    /// Check-and-fire a per-lane fault: the unfired fault (if any) aimed
-    /// at `request_id`'s `step`-th sample. Marks it fired, so each fault
-    /// perturbs exactly one step.
+    /// Check-and-fire a per-lane *step* fault (panic / NaN): the unfired
+    /// fault (if any) aimed at `request_id`'s `step`-th sample. Marks it
+    /// fired, so each fault perturbs exactly one step. Client-behavior
+    /// faults (disconnect / slow client) have their own fire methods —
+    /// they perturb the sink, not the step.
     pub fn fire_lane_fault(&self, request_id: u64, step: usize) -> Option<FaultKind> {
         for f in &self.lane_faults {
-            if f.request_id == request_id
+            if matches!(f.kind, FaultKind::LanePanic | FaultKind::NanActivations)
+                && f.request_id == request_id
                 && f.step == step
                 && f.fired
                     .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
                     .is_ok()
             {
                 return Some(f.kind);
+            }
+        }
+        None
+    }
+
+    /// Check-and-fire a client disconnect: true when request
+    /// `request_id` has streamed `step` tokens and its plan says the
+    /// client now vanishes. Fires at most once.
+    pub fn fire_disconnect(&self, request_id: u64, step: usize) -> bool {
+        self.lane_faults.iter().any(|f| {
+            f.kind == FaultKind::ClientDisconnect
+                && f.request_id == request_id
+                && f.step == step
+                && f.fired
+                    .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+        })
+    }
+
+    /// Check-and-fire a slow-client stall for `request_id` (step
+    /// agnostic: the client is slow from its first token). Fires at most
+    /// once.
+    pub fn fire_slowclient(&self, request_id: u64) -> bool {
+        self.lane_faults.iter().any(|f| {
+            f.kind == FaultKind::SlowClient
+                && f.request_id == request_id
+                && f.fired
+                    .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+        })
+    }
+
+    /// Check-and-fire an admission burst armed at `iteration`: the
+    /// number of synthetic requests to inject this iteration (`0` means
+    /// "engine picks", conventionally 4× its lane count). Fires at most
+    /// once per burst fault.
+    pub fn fire_burst(&self, iteration: u64) -> Option<usize> {
+        for f in &self.burst_faults {
+            if iteration >= f.iteration
+                && f.fired
+                    .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return Some(f.n);
             }
         }
         None
@@ -297,5 +431,71 @@ mod tests {
         assert!(p.fire_lane_fault(0, 0).is_some());
         let q = p.clone();
         assert_eq!(q.fire_lane_fault(0, 0), None, "clone keeps the fired flag");
+    }
+
+    #[test]
+    fn parses_overload_kinds() {
+        let p = FaultPlan::parse("disconnect@r3:s2,slowclient@r5,burst@i4:n12,burst@i9").unwrap();
+        assert!(!p.is_empty());
+        assert!(p.fire_disconnect(3, 2));
+        assert!(!p.fire_disconnect(3, 2), "disconnect fires once");
+        assert!(p.fire_slowclient(5));
+        assert!(!p.fire_slowclient(5), "slowclient fires once");
+        assert_eq!(p.fire_burst(4), Some(12));
+        assert_eq!(p.fire_burst(9), Some(0), "bare burst defers count to the engine");
+        assert_eq!(p.fire_burst(10), None, "both bursts spent");
+    }
+
+    #[test]
+    fn overload_kind_misses_are_no_ops() {
+        let p = FaultPlan::parse("disconnect@r3:s2,slowclient@r5,burst@i4").unwrap();
+        assert!(!p.fire_disconnect(3, 1), "wrong step");
+        assert!(!p.fire_disconnect(4, 2), "wrong request");
+        assert!(!p.fire_slowclient(6), "wrong request");
+        assert_eq!(p.fire_burst(3), None, "burst not yet armed");
+        // a disconnect never leaks through the panic/nan fire path
+        assert_eq!(p.fire_lane_fault(3, 2), None);
+        assert!(p.fire_disconnect(3, 2), "still armed after the step-fault miss");
+    }
+
+    #[test]
+    fn rejects_malformed_overload_specs() {
+        for bad in [
+            "disconnect@r1",
+            "disconnect@i1:s2",
+            "slowclient@s1",
+            "slowclient@r1:s2",
+            "burst@r1",
+            "burst@i1:x4",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn seeded_disconnect_draw_is_deterministic_and_appended() {
+        for seed in [2u64, 5, 8, 11] {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            assert_eq!(a.lane_faults.len(), b.lane_faults.len());
+            assert_eq!(
+                a.lane_faults.last().map(|f| f.kind),
+                Some(FaultKind::ClientDisconnect),
+                "seed {seed} (≡2 mod 3) appends a disconnect"
+            );
+            assert!(
+                a.burst_faults.is_empty(),
+                "seeded plans never draw bursts (session-count contract)"
+            );
+        }
+        for seed in [0u64, 1, 3, 13, 21, 34] {
+            assert!(
+                FaultPlan::seeded(seed)
+                    .lane_faults
+                    .iter()
+                    .all(|f| f.kind != FaultKind::ClientDisconnect),
+                "seed {seed} (≢2 mod 3) keeps its pre-overload plan"
+            );
+        }
     }
 }

@@ -16,12 +16,27 @@
 //!   `Content-Type: text/event-stream`, one `data: {"token": N}` event
 //!   per generated token, then a final
 //!   `data: {"done": true, "outcome": "completed"}` event. Failure
-//!   outcomes carry a `"reason"` field.
-//! - `GET /healthz` → `200 ok` (liveness for the smoke job).
+//!   outcomes carry a `"reason"` field. The status line is deferred
+//!   until the engine's *first* event, so admission-control outcomes
+//!   map to real HTTP statuses instead of a 200 that immediately
+//!   fails: shed → `503` with a `Retry-After` header, oversized →
+//!   `400`, provably-unmeetable deadline → `504`.
+//! - `GET /healthz` → `200` with a queue-depth snapshot while serving,
+//!   `503 {"state":"draining"}` once shutdown begins, and
+//!   `503 {"state":"overloaded"}` while the admission queue sits at its
+//!   cap — load balancers can stop routing before requests are shed.
 //!
 //! The request joins the engine **mid-flight**: it takes a lane as soon
 //! as one frees, while other connections' requests keep decoding — no
 //! drain barrier between HTTP requests.
+//!
+//! Overload hardening: every connection runs under read *and* write
+//! timeouts (a stalled client cannot pin a connection thread past
+//! them), and `Ctrl-C` (when [`HttpServerConfig::install_sigint`] is
+//! set) turns into a graceful shutdown — the accept loop stops taking
+//! connections, the engine sheds its queue and drains running lanes
+//! under its `drain_ms` bound, and the process exits through the normal
+//! pool-leak audit.
 
 use super::cpu::{CpuServeReport, CpuServer, ServeConfig};
 use super::session::SessionOutcome;
@@ -49,6 +64,20 @@ pub struct HttpServerConfig {
     /// have finished streaming; `0` = unbounded. Tests use this for a
     /// deterministic shutdown.
     pub max_requests: u64,
+    /// Per-connection socket read timeout, milliseconds (`0` = none).
+    /// Bounds how long a connection thread can sit in a blocking read
+    /// against a stalled client.
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout, milliseconds (`0` = none).
+    /// A client that stops draining its SSE stream fails the write and
+    /// the engine cancels its lane, instead of the connection thread
+    /// blocking forever.
+    pub write_timeout_ms: u64,
+    /// Install a `SIGINT` handler that converts `Ctrl-C` into a
+    /// graceful shutdown (stop admission, drain lanes, exit through the
+    /// pool audit). The CLI turns this on; tests leave it off — a
+    /// process-global signal handler does not belong in a test harness.
+    pub install_sigint: bool,
 }
 
 impl Default for HttpServerConfig {
@@ -57,7 +86,61 @@ impl Default for HttpServerConfig {
             listen: "127.0.0.1:8080".to_string(),
             max_wall_ms: 0,
             max_requests: 0,
+            read_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
+            install_sigint: false,
         }
+    }
+}
+
+/// `SIGINT` → graceful shutdown, with no signal-handling dependency:
+/// the handler only sets a flag (the one thing that is async-signal
+/// safe), and the accept loop polls it between accepts.
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static FIRED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        // only an atomic store: allocation, locking, or I/O here would
+        // be undefined behavior in a signal handler
+        FIRED.store(true, Ordering::SeqCst);
+    }
+
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        /// POSIX `signal(2)` from the platform libc (already linked by
+        /// `std`); the return value is the previous handler, which we
+        /// never need to restore.
+        fn signal(signum: i32, handler: SigHandler) -> usize;
+    }
+
+    /// `SIGINT` on every POSIX platform this crate targets.
+    const SIGINT: i32 = 2;
+
+    pub fn install() {
+        // SAFETY: `signal` is the POSIX libc entry point; SIGINT is a
+        // valid signal number and `on_sigint` is an `extern "C"`
+        // function that only performs an atomic store, which is
+        // async-signal-safe. Replacing the default handler for the
+        // whole process is exactly the intent (opt-in via
+        // `install_sigint`).
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+
+    pub fn fired() -> bool {
+        FIRED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() {}
+    pub fn fired() -> bool {
+        false
     }
 }
 
@@ -95,6 +178,9 @@ pub fn serve_http(
     let served = AtomicU64::new(0);
     let next_id = AtomicU64::new(0);
 
+    if http.install_sigint {
+        sigint::install();
+    }
     let (report, accept_result) = server.serve_continuous(|handle| {
         let t0 = Instant::now();
         std::thread::scope(|s| -> std::io::Result<()> {
@@ -104,6 +190,15 @@ pub fn serve_http(
                     break;
                 }
                 if http.max_requests > 0 && served.load(Ordering::SeqCst) >= http.max_requests {
+                    break;
+                }
+                // Ctrl-C (or any caller's request_shutdown): stop
+                // accepting, ask the engine to drain, and fall out to
+                // the scope join — in-flight connections finish their
+                // streams (each bounded by the engine's drain bound
+                // plus its socket timeouts)
+                if sigint::fired() || handle.status().is_draining() {
+                    handle.request_shutdown();
                     break;
                 }
                 match listener.accept() {
@@ -117,8 +212,14 @@ pub fn serve_http(
                         s.spawn(move || {
                             // a broken client connection is that
                             // client's problem, not the server's
-                            let _ =
-                                handle_connection(stream, &conn_handle, vocab, next_id, served);
+                            let _ = handle_connection(
+                                stream,
+                                &conn_handle,
+                                vocab,
+                                next_id,
+                                served,
+                                http,
+                            );
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -129,7 +230,7 @@ pub fn serve_http(
             }
             Ok(())
             // scope exit joins every in-flight connection thread (each
-            // bounded by its stream's read timeout)
+            // bounded by its stream's read/write timeouts)
         })
     });
 
@@ -197,6 +298,26 @@ fn write_simple(stream: &mut TcpStream, status: &str, body: &str) -> std::io::Re
     )
 }
 
+/// A JSON response with optional extra headers (each pre-formatted as
+/// `Name: value`) — the shape `/healthz` and the shed 503 use.
+fn write_json(
+    stream: &mut TcpStream,
+    status: &str,
+    extra_headers: &[String],
+    body: &str,
+) -> std::io::Result<()> {
+    let mut head = format!("HTTP/1.1 {status}\r\n");
+    for h in extra_headers {
+        head.push_str(h);
+        head.push_str("\r\n");
+    }
+    write!(
+        stream,
+        "{head}Content-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
 /// Parse a `/v1/generate` body into a [`Request`]. Validation happens
 /// here because the engine trusts its inputs: an empty prompt or an
 /// out-of-vocab token must bounce with a 400, not reach a lane.
@@ -244,9 +365,44 @@ fn outcome_event(outcome: &SessionOutcome) -> String {
         }
         SessionOutcome::DeadlineExpired => "deadline_expired",
         SessionOutcome::Rejected => "rejected",
+        SessionOutcome::Cancelled => "cancelled",
+        SessionOutcome::Shed => "shed",
     };
     obj.insert("outcome".to_string(), Json::Str(label.to_string()));
     sse_event(obj)
+}
+
+/// Serve `/healthz` from the engine's live status block: `503` while
+/// draining or at the admission cap (load balancers stop routing before
+/// requests are shed), `200` with a queue-depth snapshot otherwise.
+fn write_healthz(stream: &mut TcpStream, handle: &ServeHandle) -> std::io::Result<()> {
+    let status = handle.status();
+    if status.is_draining() {
+        return write_json(stream, "503 Service Unavailable", &[], "{\"state\":\"draining\"}");
+    }
+    if status.is_overloaded() {
+        let retry = retry_after_secs(status.retry_after_ms());
+        return write_json(
+            stream,
+            "503 Service Unavailable",
+            &[format!("Retry-After: {retry}")],
+            "{\"state\":\"overloaded\"}",
+        );
+    }
+    let body = format!(
+        "{{\"state\":\"ok\",\"queue_depth\":{},\"active_lanes\":{},\"shed_total\":{}}}",
+        status.queue_depth(),
+        status.active_lanes(),
+        status.shed_total()
+    );
+    write_json(stream, "200 OK", &[], &body)
+}
+
+/// `Retry-After` is whole seconds; round the engine's ms hint up and
+/// never tell a client "0" (which reads as "immediately retry, as hard
+/// as you can").
+fn retry_after_secs(ms: u64) -> u64 {
+    ms.div_ceil(1000).max(1)
 }
 
 fn handle_connection(
@@ -255,14 +411,21 @@ fn handle_connection(
     vocab: usize,
     next_id: &AtomicU64,
     served: &AtomicU64,
+    http: &HttpServerConfig,
 ) -> std::io::Result<()> {
     // a stalled or dead client must not pin this thread (scope join at
-    // shutdown waits for it)
-    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    // shutdown waits for it): reads bound how long we wait for the
+    // request, writes bound how long a full SSE send may stall
+    if http.read_timeout_ms > 0 {
+        stream.set_read_timeout(Some(Duration::from_millis(http.read_timeout_ms)))?;
+    }
+    if http.write_timeout_ms > 0 {
+        stream.set_write_timeout(Some(Duration::from_millis(http.write_timeout_ms)))?;
+    }
     stream.set_nonblocking(false)?;
     let (method, path, body) = read_request(&mut stream)?;
     match (method.as_str(), path.as_str()) {
-        ("GET", "/healthz") => write_simple(&mut stream, "200 OK", "ok\n"),
+        ("GET", "/healthz") => write_healthz(&mut stream, handle),
         ("POST", "/v1/generate") => {
             let id = next_id.fetch_add(1, Ordering::SeqCst);
             let request = match parse_generate(&body, vocab, id) {
@@ -275,13 +438,63 @@ fn handle_connection(
                     return write_simple(&mut stream, "503 Service Unavailable", "engine closed")
                 }
             };
+            // defer the status line until the engine's first event, so
+            // admission outcomes become real HTTP statuses: a shed
+            // request gets `503 + Retry-After`, not a 200 SSE stream
+            // whose only event is a failure
+            let first = match pending.next_event() {
+                Some(ev) => ev,
+                // engine died before retiring the request
+                None => return write_simple(&mut stream, "500 Internal Server Error", "engine terminated"),
+            };
+            match &first {
+                TokenEvent::Done(SessionOutcome::Shed) => {
+                    let retry = retry_after_secs(handle.status().retry_after_ms());
+                    let r = write_json(
+                        &mut stream,
+                        "503 Service Unavailable",
+                        &[format!("Retry-After: {retry}")],
+                        "{\"state\":\"shed\",\"retry\":true}",
+                    );
+                    served.fetch_add(1, Ordering::SeqCst);
+                    return r;
+                }
+                TokenEvent::Done(SessionOutcome::Rejected) => {
+                    let r = write_simple(
+                        &mut stream,
+                        "400 Bad Request",
+                        "request rejected: prompt + gen_len exceed engine capacity",
+                    );
+                    served.fetch_add(1, Ordering::SeqCst);
+                    return r;
+                }
+                TokenEvent::Done(SessionOutcome::DeadlineExpired) => {
+                    let r = write_simple(
+                        &mut stream,
+                        "504 Gateway Timeout",
+                        "deadline unmeetable or expired before decoding began",
+                    );
+                    served.fetch_add(1, Ordering::SeqCst);
+                    return r;
+                }
+                TokenEvent::Done(SessionOutcome::Failed(reason)) => {
+                    let r = write_simple(&mut stream, "500 Internal Server Error", reason);
+                    served.fetch_add(1, Ordering::SeqCst);
+                    return r;
+                }
+                // a token (the normal case), or a zero-token terminal
+                // outcome that still reads as a stream — fall through to
+                // SSE
+                TokenEvent::Token(_) | TokenEvent::Done(_) => {}
+            }
             write!(
                 stream,
                 "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
             )?;
             stream.flush()?;
-            while let Some(event) = pending.next_event() {
-                match event {
+            let mut event = Some(first);
+            while let Some(ev) = event {
+                match ev {
                     TokenEvent::Token(t) => {
                         let mut obj = BTreeMap::new();
                         obj.insert("token".to_string(), Json::Num(t as f64));
@@ -294,6 +507,7 @@ fn handle_connection(
                         break;
                     }
                 }
+                event = pending.next_event();
             }
             served.fetch_add(1, Ordering::SeqCst);
             Ok(())
@@ -348,7 +562,12 @@ mod tests {
         std::thread::scope(|s| {
             let client = s.spawn(move || {
                 let addr: SocketAddr = addr_rx.recv().expect("server binds");
-                assert!(http_get(addr, "/healthz").contains("200 OK"));
+                let health = http_get(addr, "/healthz");
+                assert!(health.contains("200 OK"), "{health}");
+                assert!(
+                    health.contains("\"state\":\"ok\"") && health.contains("\"queue_depth\""),
+                    "healthz serves the live status snapshot: {health}"
+                );
                 assert!(http_post(addr, "/v1/generate", "{not json").contains("400"));
                 assert!(
                     http_post(addr, "/v1/generate", "{\"prompt\": []}").contains("400"),
@@ -365,6 +584,7 @@ mod tests {
                 listen: "127.0.0.1:0".to_string(),
                 max_wall_ms: 60_000, // backstop; max_requests ends the run
                 max_requests: 1,
+                ..HttpServerConfig::default()
             };
             let rep = serve_http(&model, cfg, &http_cfg, |addr| {
                 addr_tx.send(addr).expect("test alive");
@@ -384,6 +604,53 @@ mod tests {
             assert_eq!(rep.report.metrics.requests, 1);
             assert!(rep.report.sessions[0].outcome.is_completed());
             // full KV reclamation after the front door shuts down
+            assert_eq!(
+                rep.report.kv_pool.free_blocks(),
+                rep.report.kv_pool.total_blocks()
+            );
+        });
+    }
+
+    #[test]
+    fn unmeetable_deadline_maps_to_504_not_sse() {
+        let model = tiny();
+        let cfg = ServeConfig::builder()
+            .lanes(1)
+            .workers(1)
+            .build()
+            .expect("valid config");
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let addr: SocketAddr = addr_rx.recv().expect("server binds");
+                // let the engine clock advance well past the 1ms
+                // deadline below: admission's "already dead" check is
+                // then unambiguous
+                std::thread::sleep(Duration::from_millis(30));
+                let resp = http_post(
+                    addr,
+                    "/v1/generate",
+                    "{\"prompt\": [1, 2], \"gen_len\": 2, \"deadline_ms\": 1}",
+                );
+                assert!(resp.contains("504"), "expected 504, got: {resp}");
+                assert!(!resp.contains("text/event-stream"), "{resp}");
+            });
+            let http_cfg = HttpServerConfig {
+                listen: "127.0.0.1:0".to_string(),
+                max_wall_ms: 60_000,
+                max_requests: 1,
+                ..HttpServerConfig::default()
+            };
+            let rep = serve_http(&model, cfg, &http_cfg, |addr| {
+                addr_tx.send(addr).expect("test alive");
+            })
+            .expect("serve");
+            assert_eq!(rep.requests_served, 1);
+            assert_eq!(rep.report.metrics.deadline_rejected, 1);
+            assert_eq!(
+                rep.report.sessions[0].outcome,
+                SessionOutcome::DeadlineExpired
+            );
             assert_eq!(
                 rep.report.kv_pool.free_blocks(),
                 rep.report.kv_pool.total_blocks()

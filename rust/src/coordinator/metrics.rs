@@ -86,6 +86,26 @@ pub struct ServeMetrics {
     /// Requests cancelled at an iteration boundary after their
     /// wall-clock deadline passed (running or still queued).
     pub deadline_expired: u64,
+    /// Lanes cancelled mid-flight because their client vanished,
+    /// stalled, or the shutdown drain bound hit — KV blocks reclaimed,
+    /// co-batched survivors bit-exact.
+    pub requests_cancelled: u64,
+    /// Requests shed by admission control (queue-depth cap or draining
+    /// engine) — `503 + Retry-After` at the front door, never a lane.
+    pub requests_shed: u64,
+    /// Subset of `requests_cancelled`: clients that fell behind their
+    /// bounded event stream.
+    pub slow_client_cancels: u64,
+    /// Subset of `requests_cancelled`: lanes still running when the
+    /// graceful-shutdown drain bound expired.
+    pub drain_cancels: u64,
+    /// Subset of `deadline_expired`: requests rejected at admission
+    /// because they provably could not meet their deadline (never
+    /// queued, never held KV).
+    pub deadline_rejected: u64,
+    /// Times the engine parked on its intake gate with every lane idle
+    /// (woken by submission, intake close, or shutdown — not a poll).
+    pub idle_parks: u64,
     pub total_tokens_generated: usize,
     pub iterations: u64,
     /// Wall-clock duration of the serving loop (seconds).
@@ -159,6 +179,25 @@ impl ServeMetrics {
                 "preempted / requeued    {:>7} / {}\n",
                 self.preemptions, self.requeues
             ));
+        }
+        if self.requests_cancelled + self.requests_shed > 0 {
+            out.push_str(&format!(
+                "cancelled / shed        {:>7} / {}\n",
+                self.requests_cancelled, self.requests_shed
+            ));
+            out.push_str(&format!(
+                "slow-client / drain     {:>7} / {}\n",
+                self.slow_client_cancels, self.drain_cancels
+            ));
+        }
+        if self.deadline_rejected > 0 {
+            out.push_str(&format!(
+                "deadline-rejected       {:>10}\n",
+                self.deadline_rejected
+            ));
+        }
+        if self.idle_parks > 0 {
+            out.push_str(&format!("idle parks              {:>10}\n", self.idle_parks));
         }
         out.push_str(&format!(
             "tokens generated        {:>10}\n",
@@ -332,5 +371,25 @@ mod tests {
         assert!(!table.contains("adaptive chunk shrinks"));
         m.adaptive_prefill_shrinks = 3;
         assert!(m.format_table().contains("adaptive chunk shrinks"));
+    }
+
+    #[test]
+    fn format_table_overload_rows_are_conditional() {
+        let mut m = ServeMetrics::default();
+        let table = m.format_table();
+        assert!(!table.contains("cancelled / shed"));
+        assert!(!table.contains("deadline-rejected"));
+        assert!(!table.contains("idle parks"));
+        m.requests_cancelled = 2;
+        m.requests_shed = 5;
+        m.slow_client_cancels = 1;
+        m.drain_cancels = 1;
+        m.deadline_rejected = 3;
+        m.idle_parks = 7;
+        let table = m.format_table();
+        assert!(table.contains("cancelled / shed"));
+        assert!(table.contains("slow-client / drain"));
+        assert!(table.contains("deadline-rejected"));
+        assert!(table.contains("idle parks"));
     }
 }

@@ -37,6 +37,7 @@
 
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
+pub mod admission;
 pub mod batcher;
 pub mod cpu;
 pub mod faults;
@@ -47,7 +48,8 @@ pub mod server;
 pub mod session;
 pub mod submit;
 
-pub use batcher::{Batcher, FaultCounters, LaneChunk, LaneState, PreemptOutcome};
+pub use admission::{AdmissionDecision, AdmissionPolicy, StepEstimate};
+pub use batcher::{Batcher, CancelKind, FaultCounters, LaneChunk, LaneState, PreemptOutcome};
 pub use cpu::{CpuServeReport, CpuServer, ServeConfig, ServeConfigBuilder, DEFAULT_PREFILL_CHUNK};
 pub use faults::{FaultKind, FaultPlan};
 pub use http::{serve_http, HttpServeReport, HttpServerConfig};
@@ -55,4 +57,6 @@ pub use metrics::{Percentiles, ServeMetrics};
 #[cfg(feature = "pjrt")]
 pub use server::{ServeOptions, ServeReport, Server};
 pub use session::{Session, SessionOutcome, SessionPhase};
-pub use submit::{FinishedRequest, PendingRequest, ServeHandle, SubmitError, TokenEvent};
+pub use submit::{
+    EngineGate, EngineStatus, FinishedRequest, PendingRequest, ServeHandle, SubmitError, TokenEvent,
+};

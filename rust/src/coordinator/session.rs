@@ -34,6 +34,17 @@ pub enum SessionOutcome {
     /// ([`super::submit::TokenEvent::Done`]); the offline path records
     /// rejections in the admission counters alone.
     Rejected,
+    /// Cancelled at an iteration boundary because the client went away
+    /// (dropped [`super::submit::PendingRequest`], dead SSE socket) or
+    /// fell too far behind its bounded event stream, or because a
+    /// graceful shutdown hit its drain bound with the lane still
+    /// running. Already-streamed tokens stand; KV blocks are reclaimed.
+    Cancelled,
+    /// Shed by admission control before taking a lane: the queue was at
+    /// its depth cap, the engine was draining, or the request provably
+    /// could not meet its deadline. The front door maps this to
+    /// `503 + Retry-After`.
+    Shed,
 }
 
 impl SessionOutcome {

@@ -1,5 +1,5 @@
 //! The redesigned submission API: submit → per-request token stream →
-//! final [`SessionOutcome`].
+//! final [`SessionOutcome`] — plus the engine-side wake/shutdown gate.
 //!
 //! A [`ServeHandle`] is the only way work enters a running continuous
 //! engine ([`super::cpu::CpuServer::serve_continuous`]): callers submit
@@ -8,15 +8,25 @@
 //! final outcome. The handle is cheap to clone (one clone per HTTP
 //! connection thread, one per load-generator worker); dropping every
 //! clone closes the engine's intake, which lets it drain and retire.
+//! [`ServeHandle::request_shutdown`] asks the engine to stop admitting
+//! and drain under its wall-clock bound, and
+//! [`ServeHandle::status`] exposes the live queue-depth / draining
+//! snapshot the HTTP front door serves from `/healthz`.
 //!
 //! The engine stays runtime-agnostic behind this surface: events ride
-//! plain `std::sync::mpsc` channels, so the same handle serves the
-//! blocking offline path, thread-per-connection HTTP/SSE, or any async
-//! runtime a caller wants to bridge from.
+//! bounded `std::sync::mpsc::sync_channel`s (so a stalled consumer
+//! back-pressures into slow-client cancellation instead of unbounded
+//! buffering), and wakeups ride [`EngineGate`] — an eventcount built on
+//! [`crate::kernels::sync`] so the loom tier can model-check the
+//! park/wake/shutdown protocol.
 
 use super::session::SessionOutcome;
+use crate::kernels::sync::{self, Condvar, Mutex};
 use crate::model::Request;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::sync::PoisonError;
 
 /// One event on a request's output stream.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -34,7 +44,7 @@ pub enum TokenEvent {
 /// (for streaming submitters) the sender half of its event stream.
 pub(crate) struct Submission {
     pub(crate) request: Request,
-    pub(crate) events: Option<Sender<TokenEvent>>,
+    pub(crate) events: Option<SyncSender<TokenEvent>>,
 }
 
 /// Why a submission failed to enter the engine.
@@ -55,33 +65,251 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// State guarded by the gate's mutex. `seq` is an eventcount: it
+/// advances on every wake-worthy event (submission, intake close,
+/// shutdown), and a parker only sleeps while the sequence it snapshot
+/// before its last intake drain is still current.
+struct GateState {
+    seq: u64,
+    shutdown: bool,
+    intake_closed: bool,
+}
+
+/// Eventcount-style park/wake gate between submitters and the engine.
+///
+/// Protocol (model-checked by `rust/tests/loom_engine.rs`):
+/// 1. submitter: enqueue work (mpsc send / flag store), then
+///    [`EngineGate::notify`] — bump `seq` *under the lock*, notify_all.
+/// 2. engine: `seen = gate.seq()`, then drain the intake, then
+///    `gate.park(seen, ..)` — the park re-checks `seq` under the same
+///    lock, so a notify between the snapshot and the park is never
+///    lost (the wait never starts).
+///
+/// `intake_closed` / `shutdown` are latched under the lock before the
+/// notify so a parked engine observes them on wake without racing the
+/// mpsc disconnect.
+pub struct EngineGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl Default for EngineGate {
+    fn default() -> Self {
+        EngineGate::new()
+    }
+}
+
+impl EngineGate {
+    pub fn new() -> EngineGate {
+        EngineGate {
+            state: Mutex::new(GateState {
+                seq: 0,
+                shutdown: false,
+                intake_closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> sync::MutexGuard<'_, GateState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Current eventcount. Snapshot this *before* draining the intake.
+    pub fn seq(&self) -> u64 {
+        self.lock().seq
+    }
+
+    /// Something arrived: advance the eventcount and wake the engine.
+    pub fn notify(&self) {
+        let mut g = self.lock();
+        g.seq = g.seq.wrapping_add(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Latch "no more submissions will ever arrive" and wake the engine.
+    pub fn close_intake(&self) {
+        let mut g = self.lock();
+        g.intake_closed = true;
+        g.seq = g.seq.wrapping_add(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Latch a shutdown request and wake the engine.
+    pub fn request_shutdown(&self) {
+        let mut g = self.lock();
+        g.shutdown = true;
+        g.seq = g.seq.wrapping_add(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.lock().shutdown
+    }
+
+    pub fn intake_closed(&self) -> bool {
+        self.lock().intake_closed
+    }
+
+    /// Park until the eventcount moves past `seen`, shutdown or
+    /// intake-close latches, or (std builds only) `timeout_ms` elapses.
+    /// Returns immediately if any of those already hold.
+    pub fn park(&self, seen: u64, timeout_ms: Option<u64>) {
+        let mut g = self.lock();
+        while g.seq == seen && !g.shutdown && !g.intake_closed {
+            g = sync::wait_ms(&self.cv, g, timeout_ms);
+            if timeout_ms.is_some() {
+                // Timed park: one wait is the bound; the engine re-runs
+                // its arrival-gating pass on wake regardless of cause.
+                break;
+            }
+        }
+    }
+}
+
+/// Live engine state the front door reads without touching the engine
+/// thread: plain `std` atomics (never under loom — `/healthz` is not
+/// part of the model-checked protocol; the gate is).
+#[derive(Debug, Default)]
+pub struct EngineStatus {
+    draining: AtomicBool,
+    queue_depth: AtomicUsize,
+    active_lanes: AtomicUsize,
+    queue_cap: AtomicUsize,
+    shed_total: AtomicU64,
+    retry_after_ms: AtomicU64,
+}
+
+impl EngineStatus {
+    pub(crate) fn set_draining(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub(crate) fn set_depths(&self, queue_depth: usize, active_lanes: usize) {
+        self.queue_depth.store(queue_depth, Ordering::Release);
+        self.active_lanes.store(active_lanes, Ordering::Release);
+    }
+
+    pub(crate) fn set_queue_cap(&self, cap: usize) {
+        self.queue_cap.store(cap, Ordering::Release);
+    }
+
+    pub(crate) fn record_shed(&self, retry_after_ms: u64) {
+        self.shed_total.fetch_add(1, Ordering::AcqRel);
+        self.retry_after_ms.store(retry_after_ms, Ordering::Release);
+    }
+
+    /// True once shutdown was requested: admission is closed and the
+    /// engine is draining (or cancelling) its remaining lanes.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// True while the admission queue sits at its configured cap — new
+    /// submissions are being shed.
+    pub fn is_overloaded(&self) -> bool {
+        let cap = self.queue_cap.load(Ordering::Acquire);
+        cap > 0 && self.queue_depth.load(Ordering::Acquire) >= cap
+    }
+
+    /// Admission-queue depth as of the engine's last iteration.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Acquire)
+    }
+
+    /// Lanes actively decoding as of the engine's last iteration.
+    pub fn active_lanes(&self) -> usize {
+        self.active_lanes.load(Ordering::Acquire)
+    }
+
+    /// Total requests shed by admission control so far.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_total.load(Ordering::Acquire)
+    }
+
+    /// The engine's most recent `Retry-After` hint, in milliseconds.
+    pub fn retry_after_ms(&self) -> u64 {
+        self.retry_after_ms.load(Ordering::Acquire)
+    }
+}
+
+/// Engine-side control block shared between every [`ServeHandle`]
+/// clone and the engine loop.
+pub(crate) struct EngineCtl {
+    pub(crate) gate: EngineGate,
+    pub(crate) status: EngineStatus,
+    /// Capacity of each request's bounded event stream. A full buffer
+    /// marks the client slow; the engine cancels the lane rather than
+    /// block or buffer unboundedly.
+    pub(crate) event_buffer: usize,
+}
+
+impl EngineCtl {
+    pub(crate) fn new(event_buffer: usize) -> Arc<EngineCtl> {
+        Arc::new(EngineCtl {
+            gate: EngineGate::new(),
+            status: EngineStatus::default(),
+            event_buffer: event_buffer.max(1),
+        })
+    }
+}
+
+/// Shared core behind every [`ServeHandle`] clone. Dropping the last
+/// clone latches intake-close on the gate *before* the mpsc sender
+/// disconnects (field order: `tx` drops first, but the gate latch in
+/// `Drop::drop` runs before either field drops), so a parked engine
+/// always wakes and always sees every buffered submission.
+struct HandleShared {
+    tx: Sender<Submission>,
+    ctl: Arc<EngineCtl>,
+}
+
+impl Drop for HandleShared {
+    fn drop(&mut self) {
+        self.ctl.gate.close_intake();
+    }
+}
+
 /// Submission handle onto a running continuous engine. Clone freely —
 /// every clone feeds the same lane array; the engine's intake closes
 /// when the last clone drops.
 #[derive(Clone)]
 pub struct ServeHandle {
-    tx: Sender<Submission>,
+    shared: Arc<HandleShared>,
 }
 
 impl ServeHandle {
-    pub(crate) fn new(tx: Sender<Submission>) -> ServeHandle {
-        ServeHandle { tx }
+    pub(crate) fn new(tx: Sender<Submission>, ctl: Arc<EngineCtl>) -> ServeHandle {
+        ServeHandle {
+            shared: Arc::new(HandleShared { tx, ctl }),
+        }
     }
 
     /// Submit a request and stream its output. The request joins the
     /// admission queue mid-flight — it takes a lane as soon as its
     /// `arrival_ms` has passed and a lane is free, with no drain
     /// barrier. Oversized requests are not an error here: their stream
-    /// reports [`SessionOutcome::Rejected`] as its only event.
+    /// reports [`SessionOutcome::Rejected`] as its only event; shed
+    /// requests report [`SessionOutcome::Shed`].
+    ///
+    /// Dropping the returned [`PendingRequest`] is cancellation: the
+    /// engine notices the dead stream at its next iteration boundary,
+    /// retires the lane as [`SessionOutcome::Cancelled`], and reclaims
+    /// its KV blocks.
     pub fn submit(&self, request: Request) -> Result<PendingRequest, SubmitError> {
         let id = request.id;
-        let (etx, erx) = std::sync::mpsc::channel();
-        self.tx
+        let (etx, erx) = std::sync::mpsc::sync_channel(self.shared.ctl.event_buffer);
+        self.shared
+            .tx
             .send(Submission {
                 request,
                 events: Some(etx),
             })
             .map_err(|_| SubmitError::EngineClosed)?;
+        self.shared.ctl.gate.notify();
         Ok(PendingRequest { id, rx: erx })
     }
 
@@ -89,17 +317,37 @@ impl ServeHandle {
     /// are only observable through the engine's final
     /// [`super::cpu::CpuServeReport`] (the offline path).
     pub fn submit_nowait(&self, request: Request) -> Result<(), SubmitError> {
-        self.tx
+        self.shared
+            .tx
             .send(Submission {
                 request,
                 events: None,
             })
-            .map_err(|_| SubmitError::EngineClosed)
+            .map_err(|_| SubmitError::EngineClosed)?;
+        self.shared.ctl.gate.notify();
+        Ok(())
+    }
+
+    /// Ask the engine to shut down gracefully: admission closes
+    /// immediately (queued requests are shed), running lanes drain
+    /// within the engine's `drain_ms` bound, then the engine retires
+    /// with its pool-leak audit. Idempotent; returns immediately —
+    /// observe completion through the engine's report or join.
+    pub fn request_shutdown(&self) {
+        self.shared.ctl.status.set_draining();
+        self.shared.ctl.gate.request_shutdown();
+    }
+
+    /// Live engine status: queue depth, active lanes, draining /
+    /// overloaded flags. This is what `/healthz` serves.
+    pub fn status(&self) -> &EngineStatus {
+        &self.shared.ctl.status
     }
 }
 
 /// The receiving half of one submitted request: a blocking stream of
-/// [`TokenEvent`]s ending in [`TokenEvent::Done`].
+/// [`TokenEvent`]s ending in [`TokenEvent::Done`]. Dropping it cancels
+/// the request at the engine's next iteration boundary.
 pub struct PendingRequest {
     id: u64,
     rx: Receiver<TokenEvent>,
@@ -161,10 +409,15 @@ pub struct FinishedRequest {
 mod tests {
     use super::*;
 
+    fn test_handle() -> (ServeHandle, Receiver<Submission>, Arc<EngineCtl>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let ctl = EngineCtl::new(256);
+        (ServeHandle::new(tx, ctl.clone()), rx, ctl)
+    }
+
     #[test]
     fn wait_collects_tokens_then_outcome() {
-        let (tx, rx) = std::sync::mpsc::channel();
-        let handle = ServeHandle::new(tx);
+        let (handle, rx, _ctl) = test_handle();
         let pending = handle
             .submit(Request::new(7, vec![1, 2]).gen_len(3))
             .expect("intake open");
@@ -186,8 +439,7 @@ mod tests {
 
     #[test]
     fn engine_death_maps_to_failed_outcome() {
-        let (tx, rx) = std::sync::mpsc::channel();
-        let handle = ServeHandle::new(tx);
+        let (handle, rx, _ctl) = test_handle();
         let pending = handle.submit(Request::new(0, vec![1])).expect("intake open");
         let sub = rx.recv().expect("submission arrives");
         let events = sub.events.expect("sink");
@@ -204,8 +456,7 @@ mod tests {
 
     #[test]
     fn submit_after_engine_exit_errors() {
-        let (tx, rx) = std::sync::mpsc::channel::<Submission>();
-        let handle = ServeHandle::new(tx);
+        let (handle, rx, _ctl) = test_handle();
         drop(rx);
         assert_eq!(
             handle.submit(Request::new(0, vec![1])).err(),
@@ -215,5 +466,47 @@ mod tests {
             handle.submit_nowait(Request::new(1, vec![1])),
             Err(SubmitError::EngineClosed)
         );
+    }
+
+    #[test]
+    fn submit_notifies_gate_and_drop_closes_intake() {
+        let (handle, _rx, ctl) = test_handle();
+        let seq0 = ctl.gate.seq();
+        handle.submit_nowait(Request::new(0, vec![1])).expect("open");
+        assert!(ctl.gate.seq() != seq0, "submit must bump the eventcount");
+        assert!(!ctl.gate.intake_closed());
+        let clone = handle.clone();
+        drop(handle);
+        assert!(
+            !ctl.gate.intake_closed(),
+            "intake stays open while a clone lives"
+        );
+        drop(clone);
+        assert!(ctl.gate.intake_closed(), "last drop latches intake-close");
+    }
+
+    #[test]
+    fn shutdown_latches_and_park_returns_immediately() {
+        let (handle, _rx, ctl) = test_handle();
+        assert!(!handle.status().is_draining());
+        handle.request_shutdown();
+        assert!(handle.status().is_draining());
+        assert!(ctl.gate.shutdown_requested());
+        // park with a stale seq must not block once shutdown latched
+        ctl.gate.park(ctl.gate.seq(), None);
+    }
+
+    #[test]
+    fn status_overload_flag_tracks_cap_and_depth() {
+        let status = EngineStatus::default();
+        assert!(!status.is_overloaded(), "uncapped queue never overloads");
+        status.set_queue_cap(2);
+        status.set_depths(1, 0);
+        assert!(!status.is_overloaded());
+        status.set_depths(2, 0);
+        assert!(status.is_overloaded());
+        status.record_shed(120);
+        assert_eq!(status.shed_total(), 1);
+        assert_eq!(status.retry_after_ms(), 120);
     }
 }

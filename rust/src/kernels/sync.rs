@@ -7,12 +7,14 @@
 //! build swaps in the instrumented twins from [`crate::util::mc`], so
 //! `rust/tests/loom_pool.rs` can exhaustively model-check the epoch
 //! publication / park / wake / panic choreography and the free-list
-//! grant/release protocol without touching the production source.
+//! grant/release protocol without touching the production source. The
+//! engine's idle-park gate (`coordinator::submit::EngineGate`) rides the
+//! same layer and is checked by `rust/tests/loom_engine.rs`.
 //!
 //! Under `--cfg loom`, code using these primitives must run inside a
 //! [`crate::util::mc::model`] closure (the CI loom job builds only the
-//! `loom_pool` test target, so the rest of the test suite never meets
-//! the instrumented types).
+//! `loom_pool` / `loom_engine` test targets, so the rest of the test
+//! suite never meets the instrumented types).
 
 #[cfg(not(loom))]
 pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -45,4 +47,41 @@ pub mod hint {
 
     #[cfg(loom)]
     pub use crate::util::mc::thread::spin_loop;
+}
+
+/// Condvar wait with an optional wall-clock bound, recovering from
+/// poisoned locks (a panicking peer must not wedge the waiter).
+///
+/// The model checker has no clock, so under `--cfg loom` the timeout is
+/// ignored and this is a plain `wait` — which is exactly the discipline
+/// the parking protocol needs anyway: *correctness* (no lost wakeups,
+/// shutdown always terminates) must never depend on a timeout firing.
+/// Timeouts exist only so the `std` build can honor scheduled arrival
+/// times (`gap_ms`) while parked.
+#[cfg(not(loom))]
+pub fn wait_ms<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout_ms: Option<u64>,
+) -> MutexGuard<'a, T> {
+    use std::sync::PoisonError;
+    match timeout_ms {
+        Some(ms) => {
+            cv.wait_timeout(guard, std::time::Duration::from_millis(ms))
+                .unwrap_or_else(PoisonError::into_inner)
+                .0
+        }
+        None => cv.wait(guard).unwrap_or_else(PoisonError::into_inner),
+    }
+}
+
+/// Loom twin of [`wait_ms`]: always an untimed wait (see above).
+#[cfg(loom)]
+pub fn wait_ms<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _timeout_ms: Option<u64>,
+) -> MutexGuard<'a, T> {
+    use std::sync::PoisonError;
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
 }

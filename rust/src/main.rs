@@ -7,15 +7,20 @@
 //! swiftkv serve    [--requests 16] [--batch 8] [--gap-ms 0] [--seed 0] [--kv-heads 8]
 //!                  [--kv-block-len 16] [--kv-pool-blocks 0] [--prefill-chunk 8]
 //!                  [--adaptive-prefill] [--prompt-len 0] [--workers 0] [--deadline-ms 0]
-//!                  [--faults panic@r0:s1,oom@i4] [--max-requeues 3]
-//!                  [--listen 127.0.0.1:8080] [--serve-wall-ms 0]
+//!                  [--faults panic@r0:s1,oom@i4,disconnect@r2:s1,burst@i3:n16]
+//!                  [--max-requeues 3] [--max-queue 0] [--drain-ms 5000]
+//!                  [--listen 127.0.0.1:8080] [--serve-wall-ms 0] [--http-timeout-ms 5000]
 //! swiftkv accuracy [--sequences 20] [--len 48]
 //! ```
 //!
 //! With `--listen`, `serve` boots the continuous engine behind the
 //! HTTP/SSE front door instead of draining a synthetic workload:
 //! `POST /v1/generate` streams tokens as server-sent events, and
-//! requests join the running batch mid-flight.
+//! requests join the running batch mid-flight. `--max-queue` bounds the
+//! admission queue (overflow is shed with `503 + Retry-After`),
+//! `--drain-ms` bounds the graceful drain `Ctrl-C` triggers, and
+//! `--http-timeout-ms` sets each connection's socket read/write
+//! timeouts.
 
 #[cfg(feature = "pjrt")]
 use swiftkv::coordinator::{ServeOptions, Server};
@@ -145,6 +150,9 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
         println!("(fault injection armed: {plan:?})");
     }
     let max_requeues = args.get_usize("max-requeues", 3)? as u32;
+    // overload hardening: bounded intake + graceful-shutdown drain bound
+    let max_queue_depth = args.get_usize("max-queue", 0)?;
+    let drain_ms = args.get_usize("drain-ms", 5_000)? as u64;
     let cfg = ServeConfig::builder()
         .lanes(lanes)
         .mode(NumericsMode::DesktopF32)
@@ -156,15 +164,22 @@ fn serve_cpu(args: &Args) -> Result<(), String> {
         .workers(workers)
         .faults(faults)
         .max_requeues(max_requeues)
+        .max_queue_depth(max_queue_depth)
+        .drain_ms(drain_ms)
         .build()?;
 
     let report = if let Some(listen) = args.get("listen") {
         // continuous serving behind the HTTP/SSE front door: requests
-        // arrive over the wire and join the running batch mid-flight
+        // arrive over the wire and join the running batch mid-flight;
+        // Ctrl-C drains gracefully through the engine's drain bound
+        let http_timeout_ms = args.get_usize("http-timeout-ms", 5_000)? as u64;
         let http_cfg = HttpServerConfig {
             listen: listen.to_string(),
             max_wall_ms: args.get_usize("serve-wall-ms", 0)? as u64,
             max_requests: 0,
+            read_timeout_ms: http_timeout_ms,
+            write_timeout_ms: http_timeout_ms,
+            install_sigint: true,
         };
         let rep = serve_http(&tm, cfg, &http_cfg, |addr| {
             println!("listening on http://{addr} (POST /v1/generate, GET /healthz)");
@@ -204,7 +219,8 @@ fn run() -> Result<(), String> {
         &[
             "only", "model", "ctx", "requests", "batch", "gap-ms", "seed", "sequences", "len",
             "kv-heads", "kv-block-len", "kv-pool-blocks", "prefill-chunk", "prompt-len", "workers",
-            "deadline-ms", "faults", "max-requeues", "listen", "serve-wall-ms",
+            "deadline-ms", "faults", "max-requeues", "listen", "serve-wall-ms", "max-queue",
+            "drain-ms", "http-timeout-ms",
         ],
         &["help", "adaptive-prefill"],
     )?;

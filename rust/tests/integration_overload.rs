@@ -1,0 +1,292 @@
+//! Integration: the overload-hardening layer of the serving loop —
+//! bounded admission with explicit shedding (`503 + Retry-After` at the
+//! front door), deadline-aware early rejection, graceful shutdown with
+//! a drain bound, burst faults, slow-client cancellation, and idle
+//! parking. The bar everywhere: every request is accounted for with an
+//! explicit outcome, admitted requests stay bit-exact against solo
+//! decode, and the KV pool drains to empty.
+
+use std::time::Duration;
+
+use swiftkv::coordinator::{CpuServer, FaultPlan, ServeConfig, SessionOutcome};
+use swiftkv::model::{NumericsMode, Request, TinyModel};
+
+fn model() -> TinyModel {
+    TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48)
+}
+
+fn req(id: u64, prompt: Vec<u32>, gen_len: usize) -> Request {
+    Request::new(id, prompt).gen_len(gen_len)
+}
+
+fn opts(lanes: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .lanes(lanes)
+        .mode(NumericsMode::DesktopF32)
+        .max_iterations(100_000)
+        .build()
+        .expect("test serve config is valid")
+}
+
+fn assert_pool_reclaimed(report: &swiftkv::coordinator::CpuServeReport) {
+    assert_eq!(
+        report.kv_pool.free_blocks(),
+        report.kv_pool.total_blocks(),
+        "overload handling leaked KV blocks"
+    );
+}
+
+#[test]
+fn queue_cap_sheds_tail_keeps_oldest() {
+    // 8 simultaneous arrivals, 1 lane, queue capped at 2: the two
+    // oldest requests are served (bit-exact), the six newest are shed
+    // with an explicit outcome — tail-drop, never starvation of a
+    // queued request by a later arrival.
+    let tm = model();
+    let mut o = opts(1);
+    o.max_queue_depth = 2;
+    let reqs: Vec<Request> = (0..8u64).map(|i| req(i, vec![1 + i as u32], 6)).collect();
+    let report = CpuServer::new(&tm, o).serve(reqs);
+
+    assert_eq!(report.sessions.len(), 8, "every request must be accounted for");
+    assert_eq!(report.metrics.requests_shed, 6);
+    assert_eq!(report.metrics.requests_failed, 0);
+    for s in &report.sessions {
+        if s.request.id < 2 {
+            assert!(s.outcome.is_completed(), "oldest request {} must be served", s.request.id);
+            let want = tm.generate(&s.request.prompt, 6, NumericsMode::DesktopF32);
+            assert_eq!(s.generated, want, "request {} perturbed by shedding", s.request.id);
+        } else {
+            assert_eq!(
+                s.outcome,
+                SessionOutcome::Shed,
+                "request {} past the cap must be shed",
+                s.request.id
+            );
+            assert!(s.generated.is_empty(), "shed requests never decode");
+        }
+    }
+    assert_pool_reclaimed(&report);
+    // shedding surfaces in the human-readable table
+    assert!(report.metrics.format_table().contains("shed"), "metrics table");
+}
+
+#[test]
+fn uncapped_queue_preserves_pre_overload_behavior() {
+    // max_queue_depth = 0 (the default): same 8-request pileup, nothing
+    // shed, everything completes bit-exact.
+    let tm = model();
+    let reqs: Vec<Request> = (0..8u64).map(|i| req(i, vec![1 + i as u32], 6)).collect();
+    let report = CpuServer::new(&tm, opts(1)).serve(reqs);
+    assert_eq!(report.sessions.len(), 8);
+    assert_eq!(report.metrics.requests_shed, 0);
+    for s in &report.sessions {
+        assert!(s.outcome.is_completed());
+        let want = tm.generate(&s.request.prompt, 6, NumericsMode::DesktopF32);
+        assert_eq!(s.generated, want);
+    }
+    assert_pool_reclaimed(&report);
+}
+
+#[test]
+fn dead_on_arrival_deadline_is_rejected_at_the_door() {
+    // A request submitted after its own deadline has already passed
+    // (arrival 0 + deadline 1ms, submitted ≥20ms into the run) must be
+    // rejected by admission — it never queues, never takes a lane.
+    let tm = model();
+    let server = CpuServer::new(&tm, opts(1));
+    let (report, (warm, dead)) = server.serve_continuous(|handle| {
+        let warm = handle
+            .submit(req(0, vec![3], 6))
+            .expect("engine accepts while the handle is live")
+            .wait();
+        std::thread::sleep(Duration::from_millis(20));
+        let dead = handle
+            .submit(req(1, vec![5], 6).deadline_ms(1))
+            .expect("engine accepts while the handle is live")
+            .wait();
+        (warm, dead)
+    });
+
+    assert!(warm.outcome.is_completed());
+    assert_eq!(warm.tokens, tm.generate(&[3], 6, NumericsMode::DesktopF32));
+    assert_eq!(
+        dead.outcome,
+        SessionOutcome::DeadlineExpired,
+        "a dead-on-arrival request must be rejected at admission"
+    );
+    assert!(dead.tokens.is_empty(), "rejected requests never decode");
+    assert_eq!(report.metrics.deadline_rejected, 1);
+    assert_pool_reclaimed(&report);
+}
+
+#[test]
+fn graceful_shutdown_drains_running_and_sheds_queued() {
+    // One running request, one scheduled far in the future (so the
+    // engine is parked on it when shutdown lands). Shutdown must: stop
+    // admission (the scheduled request is shed, not served), let the
+    // running request finish bit-exact within the drain bound, wake the
+    // parked engine, and return.
+    let tm = model();
+    let server = CpuServer::new(&tm, opts(1));
+    let (report, (running, queued)) = server.serve_continuous(|handle| {
+        let running = handle
+            .submit(req(0, vec![3], 8))
+            .expect("engine accepts while the handle is live");
+        let queued = handle
+            .submit(req(1, vec![5], 8).arrival_ms(60_000))
+            .expect("engine accepts while the handle is live");
+        let running = running.wait();
+        handle.request_shutdown();
+        assert!(handle.status().is_draining(), "shutdown must latch draining");
+        (running, queued.wait())
+    });
+
+    assert!(running.outcome.is_completed(), "in-flight work survives a graceful drain");
+    assert_eq!(running.tokens, tm.generate(&[3], 8, NumericsMode::DesktopF32));
+    assert_eq!(
+        queued.outcome,
+        SessionOutcome::Shed,
+        "admission is closed the moment shutdown is requested"
+    );
+    assert_eq!(report.metrics.requests_shed, 1);
+    assert_pool_reclaimed(&report);
+}
+
+#[test]
+fn zero_drain_budget_cancels_running_lanes() {
+    // drain_ms = 0: shutdown cancels the running lane at the next
+    // iteration boundary instead of waiting for it. Long generation so
+    // the shutdown provably lands mid-decode.
+    let tm = TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 256);
+    let mut o = opts(1);
+    o.drain_ms = 0;
+    let server = CpuServer::new(&tm, o);
+    let (report, fin) = server.serve_continuous(|handle| {
+        let pending = handle
+            .submit(req(0, vec![3, 4], 250))
+            .expect("engine accepts while the handle is live");
+        // wait for decode to be provably underway, then pull the plug
+        let first = match pending.next_event() {
+            Some(swiftkv::coordinator::TokenEvent::Token(t)) => t,
+            other => panic!("engine must stream before shutdown, got {other:?}"),
+        };
+        handle.request_shutdown();
+        let fin = pending.wait();
+        (first, fin)
+    });
+    let (first, fin) = fin;
+
+    assert_eq!(
+        fin.outcome,
+        SessionOutcome::Cancelled,
+        "a zero drain budget must cancel the running lane"
+    );
+    // `wait` collects only post-`next_event` tokens; stitch the stream
+    // back together and it must be a bit-exact solo prefix, cut short
+    let streamed = 1 + fin.tokens.len();
+    assert!(streamed < 250, "the lane ran to completion past shutdown");
+    let solo = tm.generate(&[3, 4], 250, NumericsMode::DesktopF32);
+    assert_eq!(first, solo[0], "first streamed token diverged");
+    assert_eq!(fin.tokens, solo[1..streamed], "pre-cancel tokens diverged");
+    assert_eq!(report.metrics.drain_cancels, 1);
+    assert_pool_reclaimed(&report);
+}
+
+#[test]
+fn burst_fault_floods_admission_and_is_shed_at_the_cap() {
+    // burst@i3:n10 with both lanes busy and a 2-deep queue: 2 of the 10
+    // synthetic requests queue, 8 are shed, and the real co-batched
+    // requests never notice.
+    let tm = model();
+    let mut o = opts(2);
+    o.max_queue_depth = 2;
+    o.faults = Some(FaultPlan::parse("burst@i3:n10").expect("spec parses"));
+    let reqs: Vec<Request> = (0..2u64).map(|i| req(i, vec![1 + i as u32], 8)).collect();
+    let report = CpuServer::new(&tm, o).serve(reqs);
+
+    assert_eq!(report.sessions.len(), 12, "2 real + 10 burst, all accounted for");
+    assert_eq!(report.metrics.requests_shed, 8);
+    assert_eq!(report.metrics.requests_failed, 0);
+    for id in [0u64, 1] {
+        let s = report.sessions.iter().find(|s| s.request.id == id).expect("real session");
+        assert!(s.outcome.is_completed(), "real request {id} must complete");
+        let want = tm.generate(&s.request.prompt, 8, NumericsMode::DesktopF32);
+        assert_eq!(s.generated, want, "request {id}: burst traffic perturbed its output");
+    }
+    // burst ids live in the reserved high range — they never collide
+    for s in report.sessions.iter().filter(|s| s.request.id >= 1 << 40) {
+        assert!(
+            matches!(s.outcome, SessionOutcome::Completed | SessionOutcome::Shed),
+            "burst request {} ended {:?}",
+            s.request.id,
+            s.outcome
+        );
+    }
+    assert_pool_reclaimed(&report);
+}
+
+#[test]
+fn slow_client_fault_cancels_instead_of_buffering_unboundedly() {
+    // slowclient@r0: the client stalls from its first token; the lane
+    // is cancelled as a slow client, a co-batched request is untouched.
+    let tm = model();
+    let mut o = opts(2);
+    o.faults = Some(FaultPlan::parse("slowclient@r0").expect("spec parses"));
+    let server = CpuServer::new(&tm, o);
+    let (report, finished) = server.serve_continuous(|handle| {
+        let pending: Vec<_> = (0..2u64)
+            .map(|i| {
+                handle
+                    .submit(req(i, vec![1 + i as u32], 8))
+                    .expect("engine accepts while the handle is live")
+            })
+            .collect();
+        pending.into_iter().map(|p| p.wait()).collect::<Vec<_>>()
+    });
+
+    assert_eq!(finished.len(), 2);
+    assert_eq!(report.metrics.slow_client_cancels, 1);
+    for fin in &finished {
+        let solo = tm.generate(&[1 + fin.id as u32], 8, NumericsMode::DesktopF32);
+        if fin.id == 0 {
+            assert_eq!(fin.outcome, SessionOutcome::Cancelled, "the stalled client's lane");
+        } else {
+            assert!(fin.outcome.is_completed());
+            assert_eq!(fin.tokens, solo, "survivor perturbed by a slow-client cancel");
+        }
+    }
+    assert_pool_reclaimed(&report);
+}
+
+#[test]
+fn idle_engine_parks_and_wakes_for_late_submissions() {
+    // Submit, drain, go idle, submit again: the engine must park (not
+    // spin) through the idle window and wake for the second request,
+    // which completes bit-exact.
+    let tm = model();
+    let server = CpuServer::new(&tm, opts(2));
+    let (report, (a, b)) = server.serve_continuous(|handle| {
+        let a = handle
+            .submit(req(0, vec![3], 6))
+            .expect("engine accepts while the handle is live")
+            .wait();
+        std::thread::sleep(Duration::from_millis(10));
+        let b = handle
+            .submit(req(1, vec![5], 6))
+            .expect("engine accepts while the handle is live")
+            .wait();
+        (a, b)
+    });
+
+    for (fin, prompt) in [(&a, 3u32), (&b, 5u32)] {
+        assert!(fin.outcome.is_completed());
+        assert_eq!(fin.tokens, tm.generate(&[prompt], 6, NumericsMode::DesktopF32));
+    }
+    assert!(
+        report.metrics.idle_parks >= 1,
+        "a 10ms idle window must park the engine at least once, got {}",
+        report.metrics.idle_parks
+    );
+    assert_pool_reclaimed(&report);
+}

@@ -1,0 +1,186 @@
+//! Property: client cancellation is surgical. A cancelled lane stops at
+//! the next iteration boundary with [`SessionOutcome::Cancelled`], its
+//! KV blocks return to the pool, and co-batched survivors finish
+//! bit-identical to their solo `generate()` runs — across both numerics
+//! modes and paged-KV block lengths {1, 3, 16}.
+//!
+//! Two cancellation triggers are exercised: the injected
+//! `disconnect@r:s` fault (deterministic: the client "vanishes" after
+//! exactly `s` streamed tokens) and the organic path (the test drops
+//! its [`PendingRequest`] so the engine's `try_send` sees a
+//! disconnected stream).
+
+use swiftkv::coordinator::{CpuServer, FaultPlan, ServeConfig, SessionOutcome};
+use swiftkv::model::{NumericsMode, Request, TinyModel};
+
+fn model() -> TinyModel {
+    TinyModel::synthetic(7, 64, 32, 4, 4, 2, 64, 48)
+}
+
+fn req(id: u64, prompt: Vec<u32>, gen_len: usize) -> Request {
+    Request::new(id, prompt).gen_len(gen_len)
+}
+
+fn opts(lanes: usize, mode: NumericsMode, block_len: usize) -> ServeConfig {
+    let mut o = ServeConfig::builder()
+        .lanes(lanes)
+        .mode(mode)
+        .max_iterations(10_000)
+        .build()
+        .expect("test serve config is valid");
+    o.kv_block_len = block_len;
+    o
+}
+
+fn assert_pool_reclaimed(report: &swiftkv::coordinator::CpuServeReport) {
+    assert_eq!(
+        report.kv_pool.free_blocks(),
+        report.kv_pool.total_blocks(),
+        "cancellation leaked KV blocks"
+    );
+}
+
+#[test]
+fn injected_disconnect_cancels_victim_survivors_bit_exact() {
+    // 3 co-batched lanes, the client for request 1 disconnects after 2
+    // streamed tokens. Sweep both numerics modes and block lengths so
+    // the reclaim path is exercised at 1-token granularity, mid-block,
+    // and whole-block.
+    let tm = model();
+    for mode in [NumericsMode::DesktopF32, NumericsMode::Accelerator] {
+        for block_len in [1usize, 3, 16] {
+            let mut o = opts(3, mode, block_len);
+            o.faults = Some(FaultPlan::parse("disconnect@r1:s2").expect("spec parses"));
+            let server = CpuServer::new(&tm, o);
+            let (report, finished) = server.serve_continuous(|handle| {
+                let pending: Vec<_> = (0..3u64)
+                    .map(|i| {
+                        handle
+                            .submit(req(i, vec![1 + i as u32], 8))
+                            .expect("engine accepts while the handle is live")
+                    })
+                    .collect();
+                pending.into_iter().map(|p| p.wait()).collect::<Vec<_>>()
+            });
+
+            let ctx = format!("mode {mode:?} block_len {block_len}");
+            assert_eq!(finished.len(), 3, "{ctx}: a request vanished");
+            assert_eq!(report.metrics.requests_cancelled, 1, "{ctx}");
+            assert_eq!(report.metrics.requests_failed, 0, "{ctx}");
+            for fin in &finished {
+                let solo = tm.generate(&[1 + fin.id as u32], 8, mode);
+                if fin.id == 1 {
+                    assert_eq!(
+                        fin.outcome,
+                        SessionOutcome::Cancelled,
+                        "{ctx}: the disconnected request must be cancelled"
+                    );
+                    // the client saw exactly the 2 pre-disconnect tokens,
+                    // and they are the solo prefix
+                    assert_eq!(fin.tokens.len(), 2, "{ctx}: streamed past the disconnect");
+                    assert_eq!(fin.tokens, solo[..2], "{ctx}: pre-cancel tokens diverged");
+                } else {
+                    assert!(
+                        fin.outcome.is_completed(),
+                        "{ctx}: request {} must complete, got {:?}",
+                        fin.id,
+                        fin.outcome
+                    );
+                    assert_eq!(
+                        fin.tokens, solo,
+                        "{ctx}: request {}: a co-batched cancel perturbed its stream",
+                        fin.id
+                    );
+                }
+            }
+            assert_pool_reclaimed(&report);
+        }
+    }
+}
+
+#[test]
+fn dropped_pending_request_cancels_organically() {
+    // No fault plan: the test simply drops the victim's PendingRequest.
+    // The engine's next `try_send` observes the disconnected stream and
+    // cancels the lane at the following iteration boundary; the
+    // surviving lane must stay bit-exact and the pool must drain.
+    let tm = model();
+    for block_len in [1usize, 3, 16] {
+        let o = opts(2, NumericsMode::DesktopF32, block_len);
+        let server = CpuServer::new(&tm, o);
+        let (report, survivor) = server.serve_continuous(|handle| {
+            let victim = handle
+                .submit(req(0, vec![3], 40))
+                .expect("engine accepts while the handle is live");
+            let keeper = handle
+                .submit(req(1, vec![5], 8))
+                .expect("engine accepts while the handle is live");
+            drop(victim);
+            keeper.wait()
+        });
+
+        let ctx = format!("block_len {block_len}");
+        assert!(survivor.outcome.is_completed(), "{ctx}: survivor must complete");
+        let solo = tm.generate(&[5], 8, NumericsMode::DesktopF32);
+        assert_eq!(survivor.tokens, solo, "{ctx}: organic cancel perturbed the survivor");
+
+        let victim = report
+            .sessions
+            .iter()
+            .find(|s| s.request.id == 0)
+            .expect("victim session accounted for");
+        assert_eq!(
+            victim.outcome,
+            SessionOutcome::Cancelled,
+            "{ctx}: dropped stream must cancel the lane"
+        );
+        // cancelled at an iteration boundary: whatever ran is a solo prefix
+        let solo_victim = tm.generate(&[3], 40, NumericsMode::DesktopF32);
+        assert!(
+            victim.generated.len() < 40,
+            "{ctx}: victim ran to completion despite the dropped stream"
+        );
+        assert_eq!(
+            victim.generated,
+            solo_victim[..victim.generated.len()],
+            "{ctx}: victim's partial output diverged from its solo prefix"
+        );
+        assert_eq!(report.metrics.requests_cancelled, 1, "{ctx}");
+        assert_pool_reclaimed(&report);
+    }
+}
+
+#[test]
+fn cancel_then_reuse_lane_admits_queued_request_bit_exact() {
+    // 2 lanes, 3 requests: the victim's disconnect frees its lane and
+    // the queued third request must ride the recycled slot to a
+    // bit-exact completion (reset_for_reuse left no stale KV behind).
+    let tm = model();
+    let mut o = opts(2, NumericsMode::DesktopF32, 3);
+    o.faults = Some(FaultPlan::parse("disconnect@r0:s1").expect("spec parses"));
+    let server = CpuServer::new(&tm, o);
+    let (report, finished) = server.serve_continuous(|handle| {
+        let pending: Vec<_> = (0..3u64)
+            .map(|i| {
+                handle
+                    .submit(req(i, vec![1 + i as u32], 8))
+                    .expect("engine accepts while the handle is live")
+            })
+            .collect();
+        pending.into_iter().map(|p| p.wait()).collect::<Vec<_>>()
+    });
+
+    assert_eq!(finished.len(), 3);
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    for fin in &finished {
+        let solo = tm.generate(&[1 + fin.id as u32], 8, NumericsMode::DesktopF32);
+        if fin.id == 0 {
+            assert_eq!(fin.outcome, SessionOutcome::Cancelled);
+            assert_eq!(fin.tokens, solo[..1], "pre-cancel token diverged");
+        } else {
+            assert!(fin.outcome.is_completed(), "request {} must complete", fin.id);
+            assert_eq!(fin.tokens, solo, "request {} perturbed", fin.id);
+        }
+    }
+    assert_pool_reclaimed(&report);
+}
